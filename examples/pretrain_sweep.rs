@@ -1,0 +1,31 @@
+//! Pre-training sweep: regenerate the paper's core training artifacts —
+//! Table II, Table III, Table IV and Figure 4 — in one run, writing text
+//! and CSV under results/.
+//!
+//!   cargo run --release --example pretrain_sweep
+
+use llm_perf_lab::report::pretrain;
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("results")?;
+    let t0 = std::time::Instant::now();
+
+    let t2 = pretrain::table2();
+    println!("{}", t2.render());
+    std::fs::write("results/pretrain_table2.csv", t2.to_csv())?;
+
+    let f4 = pretrain::figure4();
+    println!("{}", f4.render());
+    std::fs::write("results/pretrain_figure4.csv", f4.to_csv())?;
+
+    for (i, t) in pretrain::table3().iter().enumerate() {
+        println!("{}", t.render());
+        std::fs::write(format!("results/pretrain_table3_{i}.csv"), t.to_csv())?;
+    }
+    for (i, t) in pretrain::table4().iter().enumerate() {
+        println!("{}", t.render());
+        std::fs::write(format!("results/pretrain_table4_{i}.csv"), t.to_csv())?;
+    }
+    println!("done in {:.1}s; CSVs under results/", t0.elapsed().as_secs_f64());
+    Ok(())
+}

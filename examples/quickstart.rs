@@ -1,0 +1,40 @@
+//! Quickstart: the three things llm-perf-lab does, in 60 seconds.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. price one pre-training configuration on a simulated platform,
+//! 2. run one serving-benchmark cell (vLLM-style engine, burst workload),
+//! 3. regenerate a paper table.
+
+use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::report;
+use llm_perf_lab::serve::{simulate, EngineSpec};
+use llm_perf_lab::train::simulate_step;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. one training-step cell of Table III
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let m = Method::parse("F+Z3").unwrap();
+    let r = simulate_step(&plat, &cfg, &m,
+                          TrainWorkload { seq_len: 350, batch_size: 1 });
+    println!("[pretrain] {} / {} / {}: {:.0} tokens/s, {:.1} GB/GPU",
+             plat.id.label(), cfg.name, m, r.tokens_per_s,
+             r.mem.gpu_total() / 1e9);
+
+    // --- 2. one serving cell of Figure 6
+    let wl = ServeWorkload { n_requests: 200, input_len: 512, output_len: 128,
+                             burst: true };
+    let sim = simulate(&plat, &cfg, &EngineSpec::lightllm(), &wl).unwrap();
+    println!("[serve]    LightLLM on A800: {:.0} output tokens/s, p50 latency {:.1}s",
+             sim.throughput(), sim.latency_cdf().quantile(0.5));
+
+    // --- 3. a whole paper table
+    for t in report::table(2, 100)? {
+        println!("\n{}", t.render());
+    }
+    println!("next: `llmperf report-all`, `llmperf train`, `llmperf serve` \
+              (see README)");
+    Ok(())
+}

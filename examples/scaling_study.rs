@@ -1,0 +1,28 @@
+//! Scaling study (Figure 4 extended): data-parallel efficiency from 1 to
+//! 8 GPUs for several methods on every platform — shows how the
+//! communication/straggler model shapes scaling.
+//!
+//!   cargo run --release --example scaling_study
+
+use llm_perf_lab::config::{LlamaConfig, Method, TrainWorkload};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::train::scaling::{scaling_efficiency, scaling_series};
+
+fn main() {
+    let cfg = LlamaConfig::llama2_7b();
+    let wl = TrainWorkload { seq_len: 350, batch_size: 2 };
+    println!("{:<20} {:<10} {:>10} {:>10} {:>10} {:>10} {:>8}",
+             "platform", "method", "1 GPU", "2", "4", "8", "eff");
+    for id in PlatformId::ALL {
+        let plat = Platform::get(id);
+        for label in ["Q", "Z3", "L"] {
+            let m = Method::parse(label).unwrap();
+            let s = scaling_series(&plat, &cfg, &m, wl);
+            let pick = |n: u32| s.iter().find(|(g, _)| *g == n)
+                .map(|(_, v)| format!("{v:.0}")).unwrap_or("-".into());
+            println!("{:<20} {:<10} {:>10} {:>10} {:>10} {:>10} {:>7.1}%",
+                     id.label(), label, pick(1), pick(2), pick(4), pick(8),
+                     scaling_efficiency(&s) * 100.0);
+        }
+    }
+}

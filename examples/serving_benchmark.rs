@@ -1,0 +1,48 @@
+//! Real serving benchmark: the threaded router + continuous batcher over
+//! PJRT, exercised with a burst of concurrent clients — the real-compute
+//! counterpart of Figure 6/7.
+//!
+//!   make artifacts && cargo run --release --example serving_benchmark -- \
+//!       [requests] [max_new] [model]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use llm_perf_lab::engine::Server;
+use llm_perf_lab::util::stats::Cdf;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let max_new: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let model = args.get(3).cloned().unwrap_or_else(|| "tiny".to_string());
+
+    let server = Arc::new(Server::start("artifacts", &model)?);
+    println!("server up (model '{model}'); dispatching {n} requests in a burst");
+
+    // burst: all clients submit at t=0 from separate threads (the paper's
+    // asyncio dispatch pattern)
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..n {
+        let srv = Arc::clone(&server);
+        clients.push(std::thread::spawn(move || {
+            let prompt: Vec<i32> = (0..48).map(|t| ((t * 7 + i as i64) % 512) as i32).collect();
+            let pending = srv.submit(prompt, max_new, i).expect("submit");
+            pending.wait().expect("generation")
+        }));
+    }
+    let outs: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    let makespan = t0.elapsed().as_secs_f64();
+
+    let total_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    let lat = Cdf::new(outs.iter().map(|o| o.latency).collect());
+    let ttft = Cdf::new(outs.iter().map(|o| o.ttft).collect());
+    println!("completed {} requests / {} output tokens in {:.2}s", outs.len(),
+             total_tokens, makespan);
+    println!("throughput: {:.1} output tokens/s", total_tokens as f64 / makespan);
+    println!("latency  p50 {:.3}s  p90 {:.3}s  p100 {:.3}s",
+             lat.quantile(0.5), lat.quantile(0.9), lat.quantile(1.0));
+    println!("ttft     p50 {:.3}s  p90 {:.3}s", ttft.quantile(0.5), ttft.quantile(0.9));
+    Ok(())
+}

@@ -1,0 +1,229 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Python runs ONCE, at build time (``make artifacts``), and never on the
+request path.  The interchange format is **HLO text**, not a serialized
+``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  manifest.txt           line-based manifest the Rust side parses
+  params_<model>.bin     initial parameters, raw little-endian f32,
+                         concatenated in model.PARAM_NAMES order
+  <model>_<entry>.hlo.txt        model entry points
+  micro_<name>.hlo.txt           operator microbenchmarks (GEMM sweep,
+                                 attention naive/flash, rmsnorm, rope, …)
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--models micro,tiny]
+                             [--with-m100]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.flash_attention import flash_attention_fwd_impl
+from .kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Manifest:
+    def __init__(self):
+        self.lines = [f"# llm-perf-lab artifact manifest v{MANIFEST_VERSION}"]
+
+    def add(self, kind: str, **kv):
+        parts = [kind] + [f"{k}={v}" for k, v in kv.items()]
+        self.lines.append(" ".join(parts))
+
+    def write(self, path: str):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def write_params(cfg: M.ModelConfig, out_dir: str, manifest: Manifest, seed: int = 0):
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    path = os.path.join(out_dir, f"params_{cfg.name}.bin")
+    offset = 0
+    with open(path, "wb") as f:
+        for name, p in zip(M.PARAM_NAMES, params):
+            data = bytes(jnp.asarray(p, jnp.float32).tobytes())
+            shape = ",".join(str(int(s)) for s in p.shape)
+            manifest.add("param", model=cfg.name, name=name, dtype="f32",
+                         shape=shape, offset=offset, nbytes=len(data))
+            f.write(data)
+            offset += len(data)
+    return params
+
+
+def emit_model(cfg: M.ModelConfig, out_dir: str, manifest: Manifest):
+    t0 = time.time()
+    shapes = cfg.param_shapes()
+    p_specs = [spec(shapes[n]) for n in M.PARAM_NAMES]
+    cshape = M.cache_shape(cfg)
+
+    manifest.add(
+        "config", model=cfg.name, vocab=cfg.vocab, d_model=cfg.d_model,
+        n_layers=cfg.n_layers, n_heads=cfg.n_heads, d_ff=cfg.d_ff,
+        head_dim=cfg.head_dim, seq=cfg.seq, train_batch=cfg.train_batch,
+        prompt_len=cfg.prompt_len, max_seq=cfg.max_seq,
+        dec_batch=cfg.dec_batch, params=cfg.param_count())
+
+    def emit(entry, fn, args, n_out):
+        fname = f"{cfg.name}_{entry}.hlo.txt"
+        text = lower_fn(fn, args)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.add("hlo", model=cfg.name, entry=entry, file=fname,
+                     inputs=len(args), outputs=n_out)
+        print(f"  {fname}: {len(text)//1024} KiB, {len(args)} in / {n_out} out")
+
+    tok = spec((cfg.train_batch, cfg.seq), jnp.int32)
+
+    # forward: params, tokens -> logits
+    emit("forward", lambda *a: (M.forward(cfg, list(a[:M.NUM_PARAMS]), a[-1]),),
+         p_specs + [tok], 1)
+
+    # train_step: params, m, v, step, lr, tokens -> params', m', v', step', loss
+    def ts(*a):
+        n = M.NUM_PARAMS
+        params, m, v = list(a[:n]), list(a[n:2 * n]), list(a[2 * n:3 * n])
+        step, lr, tokens = a[3 * n], a[3 * n + 1], a[3 * n + 2]
+        np_, nm, nv, ns, loss = M.train_step(cfg, params, m, v, step, lr, tokens)
+        return tuple(np_) + tuple(nm) + tuple(nv) + (ns, loss)
+
+    emit("train_step", ts,
+         p_specs * 3 + [spec(()), spec(()), tok], 3 * M.NUM_PARAMS + 2)
+
+    # insert_request: params, kc, vc, slot, prompt, prompt_len -> kc', vc', logits
+    def ins(*a):
+        n = M.NUM_PARAMS
+        return M.insert_request(cfg, list(a[:n]), a[n], a[n + 1], a[n + 2],
+                                a[n + 3], a[n + 4])
+
+    emit("insert_request", ins,
+         p_specs + [spec(cshape), spec(cshape), spec((), jnp.int32),
+                    spec((cfg.prompt_len,), jnp.int32), spec((), jnp.int32)], 3)
+
+    # decode_step: params, kc, vc, tokens, positions -> logits, kc', vc'
+    def dec(*a):
+        n = M.NUM_PARAMS
+        return M.decode_step(cfg, list(a[:n]), a[n], a[n + 1], a[n + 2], a[n + 3])
+
+    emit("decode_step", dec,
+         p_specs + [spec(cshape), spec(cshape),
+                    spec((cfg.dec_batch,), jnp.int32),
+                    spec((cfg.dec_batch,), jnp.int32)], 3)
+
+    print(f"  [{cfg.name}] lowered in {time.time() - t0:.1f}s "
+          f"({cfg.param_count() / 1e6:.1f}M params)")
+
+
+# ------------------------------------------------------------ microbenches
+
+def emit_micro(out_dir: str, manifest: Manifest):
+    """Operator microbenchmarks for calibrate/ and Tables VIII/XII, Fig 11."""
+
+    def emit(name, fn, args, **meta):
+        fname = f"micro_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(lower_fn(fn, args))
+        manifest.add("micro", name=name, file=fname, **meta)
+
+    # GEMM sweep (Fig. 11, Table XII): M × (N, K) grid + unaligned-M variants.
+    # CPU-scale shapes; the 13-offset mirrors the paper's "magic number 13".
+    for n, k in [(1024, 1024), (688, 256), (256, 256)]:
+        for m in [128, 256, 512, 1024]:
+            for off, tag in [(0, ""), (13, "u")]:
+                mm = m + off
+                emit(f"gemm{tag}_m{mm}_n{n}_k{k}",
+                     lambda a, b: (a @ b,),
+                     [spec((mm, k)), spec((k, n))],
+                     op="gemm", m=mm, n=n, k=k, flops=2 * mm * n * k)
+
+    # Attention: naive vs flash (Table VIII), sweep sequence length.
+    for s in [128, 256, 512]:
+        b, h, d = 1, 8, 64
+        qkv = [spec((b, h, s, d))] * 3
+        emit(f"attn_naive_s{s}",
+             lambda q, k, v: (ref.attention(q, k, v, causal=True),), qkv,
+             op="attn_naive", b=b, h=h, s=s, d=d)
+        emit(f"attn_flash_s{s}",
+             lambda q, k, v: (flash_attention_fwd_impl(q, k, v, True),), qkv,
+             op="attn_flash", b=b, h=h, s=s, d=d)
+
+    # Element-wise / norm / rope operators (Table VI module shares).
+    n_rows, d = 2048, 1024
+    emit("rmsnorm_ref", lambda x, w: (ref.rmsnorm(x, w),),
+         [spec((n_rows, d)), spec((d,))], op="rmsnorm_ref", rows=n_rows, d=d)
+    emit("rmsnorm_pallas", lambda x, w: (pallas_rmsnorm(x, w),),
+         [spec((n_rows, d)), spec((d,))], op="rmsnorm_pallas", rows=n_rows, d=d)
+    emit("rope", lambda x: (ref.apply_rope(x, jnp.arange(512)),),
+         [spec((8, 8, 512, 64))], op="rope", b=8, h=8, s=512, d=64)
+    emit("silu", lambda x: (ref.silu(x),), [spec((n_rows, d))],
+         op="silu", rows=n_rows, d=d)
+    emit("add", lambda x, y: (x + y,), [spec((n_rows, d))] * 2,
+         op="add", rows=n_rows, d=d)
+    emit("softmax", lambda x: (jax.nn.softmax(x, axis=-1),),
+         [spec((64, 512, 512))], op="softmax", rows=64 * 512, d=512)
+    print(f"  micro ops lowered")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default="micro,tiny",
+                    help="comma-separated preset names to lower")
+    ap.add_argument("--with-m100", action="store_true",
+                    help="also lower the ~100M-param e2e model (large params.bin)")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = Manifest()
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    if args.with_m100 and "m100" not in names:
+        names.append("m100")
+    for name in names:
+        cfg = M.PRESETS[name]
+        print(f"[aot] lowering model '{name}'")
+        write_params(cfg, out_dir, manifest)
+        emit_model(cfg, out_dir, manifest)
+
+    print("[aot] lowering microbenchmarks")
+    emit_micro(out_dir, manifest)
+    manifest.write(os.path.join(out_dir, "manifest.txt"))
+    print(f"[aot] wrote {out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracle."""
+
+from . import flash_attention, ref, rmsnorm  # noqa: F401

@@ -1,0 +1,169 @@
+"""L1: FlashAttention as a Pallas kernel (the paper's Table VIII subject).
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernel's
+HBM↔SRAM tiling with threadblocks becomes an HBM↔VMEM schedule expressed
+through ``BlockSpec``: each program instance owns one (block_q × d) query
+tile and streams (block_k × d) key/value tiles through VMEM while keeping
+the online-softmax state (m, l, acc) in registers/VMEM scratch.  The IO
+complexity is the FlashAttention one — O(S²·d/M) HBM traffic with M the
+VMEM budget — and the matmuls inside the tile target the MXU.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md); interpret mode lowers to plain HLO so the
+kernel runs anywhere, including the Rust PJRT client.
+
+The backward pass is a custom_vjp implemented with the standard flash
+backward algebra in pure jnp (recompute p from q,k,v — no stored S×S
+attention matrix in the forward residuals' critical path).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, kv_blocks: int,
+                  scale: float, causal: bool, kv_len: int):
+    """One program instance: one (block_q, d) query tile of one (batch*head)."""
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+    bq, d = q.shape
+    qi = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)  # global query positions
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.ds(ki * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(ki * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (bq, bk) — MXU tile matmul
+        k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, ref.NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((bq,), ref.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    # Causal: query tile qi never attends past k block (qi+1)*bq — skip the rest.
+    if causal:
+        hi = jnp.minimum(((qi + 1) * bq + block_k - 1) // block_k, kv_blocks)
+    else:
+        hi = kv_blocks
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (padded queries)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention_fwd_impl(q, k, v, causal: bool = True,
+                             block_q: int = DEFAULT_BLOCK_Q,
+                             block_k: int = DEFAULT_BLOCK_K,
+                             interpret: bool = True):
+    """Pallas forward. q,k,v: (B, H, S, D) f32.  Returns (B, H, S, D)."""
+    b, h, s, d = q.shape
+    assert k.shape == v.shape == (b, h, s, d), "flash_attention: q/k/v mismatch"
+    scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    qf = _pad_to(q.reshape(b * h, s, d), 1, block_q)
+    kf = _pad_to(k.reshape(b * h, s, d), 1, block_k)
+    vf = _pad_to(v.reshape(b * h, s, d), 1, block_k)
+    sq, sk = qf.shape[1], kf.shape[1]
+    grid = (b * h, sq // block_q)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_k=block_k,
+        kv_blocks=sk // block_k,
+        scale=scale,
+        causal=causal,
+        kv_len=s,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, sk, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :s, :].reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    """Flash attention with a flash-algebra backward (custom_vjp)."""
+    return flash_attention_fwd_impl(q, k, v, causal)
+
+
+def _fwd(q, k, v, causal):
+    o = flash_attention_fwd_impl(q, k, v, causal)
+    return o, (q, k, v)
+
+
+def _bwd(causal, res, do):
+    """Standard flash backward: recompute p; no S×S residual stored."""
+    q, k, v = res
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        s_len, k_len = q.shape[-2], k.shape[-2]
+        q_pos = jnp.arange(s_len)[:, None]
+        k_pos = jnp.arange(k_len)[None, :]
+        s = jnp.where(k_pos <= q_pos, s, ref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dof = do.astype(jnp.float32)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, v.astype(jnp.float32))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32)) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int, itemsize: int = 4) -> int:
+    """Modeled VMEM footprint of one program instance (DESIGN.md §Perf L1)."""
+    q_tile = block_q * d
+    kv_tiles = 2 * block_k * d
+    state = block_q * (d + 2)  # acc + (m, l)
+    out = block_q * d
+    return (q_tile + kv_tiles + state + out) * itemsize
+
+
+def hbm_traffic_bytes(s: int, d: int, block_q: int, itemsize: int = 4) -> int:
+    """Modeled HBM traffic per head: Q+O once, K+V once per query tile."""
+    q_blocks = -(-s // block_q)
+    return itemsize * (2 * s * d + q_blocks * 2 * s * d)

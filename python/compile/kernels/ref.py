@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracle for every kernel in this package.
+
+These are the "naive" implementations in the paper's terms (Table VIII
+compares naive attention against FlashAttention).  They are the ground
+truth for pytest/hypothesis checks of the Pallas kernels and for the
+autodiff (custom_vjp backward) rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, causal: bool = True, kv_len=None, scale=None):
+    """Naive attention.  q,k,v: (..., S, D) with matching leading dims.
+
+    ``kv_len``: optional int32 scalar/array — keys at index >= kv_len are
+    masked (used for padded prefill and KV-cache decode).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    s_len, k_len = q.shape[-2], k.shape[-2]
+    if causal:
+        q_pos = jnp.arange(s_len)[:, None] + (k_len - s_len)
+        k_pos = jnp.arange(k_len)[None, :]
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+    if kv_len is not None:
+        k_pos = jnp.arange(k_len)
+        s = jnp.where(k_pos[None, :] < kv_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    """RMS normalization over the last axis (Zhang & Sennrich, 2019)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    """Llama MLP: down( silu(x @ gate) * (x @ up) )."""
+    return (silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def rope_freqs(dim: int, theta: float = 10000.0):
+    """Inverse frequencies for rotary embedding, shape (dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2).astype(jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Rotary position embedding (rotate-half convention).
+
+    x: (..., S, D) with D even; positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    assert d % 2 == 0, "rope head dim must be even"
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits, targets):
+    """Mean cross-entropy; logits (..., V), targets (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,297 @@
+"""L2: Llama2-style decoder-only model in JAX (build-time only).
+
+The model follows the paper's §II-A / §III-B module inventory exactly:
+Embedding → N × LlamaDecoderLayer(RMSNorm, QKV proj + RoPE, attention,
+O proj, SwiGLU MLP, RMSNorm) → final RMSNorm → LM head.  Attention is the
+L1 Pallas flash kernel (custom_vjp) so it lowers into the same HLO that
+the Rust runtime executes.
+
+Parameters are a fixed-order list of 12 stacked arrays (layers scanned
+with lax.scan) so the Rust side can feed PJRT buffers positionally:
+
+    0 embed      (V, d)         6 w_down  (L, ff, d)
+    1 wq (L,d,d) 7 w_up    (L, d, ff)
+    2 wk (L,d,d) 8 rms_attn(L, d)
+    3 wv (L,d,d) 9 rms_mlp (L, d)
+    4 wo (L,d,d) 10 final_norm (d,)
+    5 w_gate (L, d, ff)          11 lm_head (d, V)
+
+Entry points lowered by aot.py (all pure, all static-shape):
+  forward(params, tokens)                      -> logits
+  train_step(params, m, v, step, lr, tokens)   -> (params', m', v', step', loss)
+  insert_request(params, kc, vc, slot, prompt, prompt_len) -> (kc', vc', last_logits)
+  decode_step(params, kc, vc, tokens, positions) -> (logits, kc', vc')
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+
+PARAM_NAMES = [
+    "embed", "wq", "wk", "wv", "wo", "w_gate", "w_down", "w_up",
+    "rms_attn", "rms_mlp", "final_norm", "lm_head",
+]
+NUM_PARAMS = len(PARAM_NAMES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model + workload shape description (mirrored in Rust config/)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int            # training sequence length
+    train_batch: int
+    prompt_len: int     # serving: padded prefill length
+    max_seq: int        # serving: KV-cache capacity per slot
+    dec_batch: int      # serving: decode slots
+    rope_theta: float = 10000.0
+    use_flash: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        v, d, l, ff = self.vocab, self.d_model, self.n_layers, self.d_ff
+        return {
+            "embed": (v, d),
+            "wq": (l, d, d), "wk": (l, d, d), "wv": (l, d, d), "wo": (l, d, d),
+            "w_gate": (l, d, ff), "w_down": (l, ff, d), "w_up": (l, d, ff),
+            "rms_attn": (l, d), "rms_mlp": (l, d),
+            "final_norm": (d,), "lm_head": (d, v),
+        }
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for s in self.param_shapes().values())
+
+
+PRESETS = {
+    # test-size model: fast enough for hypothesis sweeps
+    "micro": ModelConfig("micro", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                         d_ff=176, seq=32, train_batch=4, prompt_len=16,
+                         max_seq=64, dec_batch=4),
+    # default artifact: the end-to-end train/serve demo model
+    "tiny": ModelConfig("tiny", vocab=2048, d_model=256, n_layers=4, n_heads=8,
+                        d_ff=688, seq=128, train_batch=8, prompt_len=64,
+                        max_seq=512, dec_batch=8),
+    # ~100M-parameter transformer for the e2e training validation
+    "m100": ModelConfig("m100", vocab=8192, d_model=768, n_layers=12, n_heads=12,
+                        d_ff=2048, seq=256, train_batch=4, prompt_len=64,
+                        max_seq=512, dec_batch=4),
+}
+
+
+def init_params(cfg: ModelConfig, key) -> List[jax.Array]:
+    """Normal(0, 0.02) init, ones for norms — returned in PARAM_NAMES order."""
+    shapes = cfg.param_shapes()
+    params = []
+    for name in PARAM_NAMES:
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.startswith("rms") or name == "final_norm":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return params
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    if cfg.use_flash:
+        return flash_attention(q, k, v, True)
+    return ref.attention(q, k, v, causal=True)
+
+
+def _decoder_layer(cfg: ModelConfig, h, layer, positions):
+    """One LlamaDecoderLayer.  h: (B, S, d)."""
+    wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m = layer
+    x = ref.rmsnorm(h, rms_a)
+    q = ref.apply_rope(_split_heads(x @ wq, cfg.n_heads), positions, cfg.rope_theta)
+    k = ref.apply_rope(_split_heads(x @ wk, cfg.n_heads), positions, cfg.rope_theta)
+    v = _split_heads(x @ wv, cfg.n_heads)
+    attn = _merge_heads(_attention(cfg, q, k, v)) @ wo
+    h = h + attn
+    x = ref.rmsnorm(h, rms_m)
+    return h + ref.swiglu_mlp(x, w_gate, w_up, w_down)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], tokens) -> jax.Array:
+    """Full forward pass.  tokens: (B, S) int32 → logits (B, S, V)."""
+    embed, wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m, fnorm, head = params
+    b, s = tokens.shape
+    h = embed[tokens]
+    # shape (1, 1, S): broadcasts against (B, H, S, D) inside apply_rope
+    positions = jnp.arange(s, dtype=jnp.int32)[None, None, :]
+
+    def body(h, layer):
+        return _decoder_layer(cfg, h, layer, positions), None
+
+    h, _ = jax.lax.scan(body, h, (wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m))
+    h = ref.rmsnorm(h, fnorm)
+    return h @ head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Next-token causal-LM cross entropy over tokens (B, S)."""
+    logits = forward(cfg, params, tokens)
+    return ref.softmax_xent(logits[:, :-1, :], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------- training
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, lr, tokens):
+    """One AdamW-free Adam step.  All state passed in/out positionally."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, step, loss
+
+
+def init_opt_state(params):
+    zeros = [jnp.zeros_like(p) for p in params]
+    return zeros, [jnp.zeros_like(p) for p in params], jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- serving
+
+def cache_shape(cfg: ModelConfig):
+    return (cfg.n_layers, cfg.dec_batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+def init_cache(cfg: ModelConfig):
+    shape = cache_shape(cfg)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def insert_request(cfg: ModelConfig, params, k_cache, v_cache, slot, prompt, prompt_len):
+    """Prefill one request into cache slot ``slot``.
+
+    prompt: (prompt_len_padded,) int32, right-padded.  Runs a full B=1
+    forward, writes K/V for positions [0, cfg.prompt_len) into the slot
+    (padded tail positions carry garbage keys but are masked at decode by
+    ``positions``), and returns the logits at position prompt_len-1.
+    """
+    embed, wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m, fnorm, head = params
+    p = cfg.prompt_len
+    h = embed[prompt][None, :, :]  # (1, P, d)
+    positions = jnp.arange(p, dtype=jnp.int32)[None, None, :]
+
+    def body(h, layer):
+        wq_l, wk_l, wv_l, wo_l, wg_l, wd_l, wu_l, ra_l, rm_l = layer
+        x = ref.rmsnorm(h, ra_l)
+        q = ref.apply_rope(_split_heads(x @ wq_l, cfg.n_heads), positions, cfg.rope_theta)
+        k = ref.apply_rope(_split_heads(x @ wk_l, cfg.n_heads), positions, cfg.rope_theta)
+        v = _split_heads(x @ wv_l, cfg.n_heads)
+        # Right-padded prompt + causal mask means real query rows never see
+        # the padded tail, and padded K/V slots are overwritten sequentially
+        # by decode before they can be attended — plain causal attention
+        # (the Pallas flash kernel) is exact here.
+        attn = _attention(cfg, q, k, v)
+        h = h + _merge_heads(attn) @ wo_l
+        x = ref.rmsnorm(h, rm_l)
+        h = h + ref.swiglu_mlp(x, wg_l, wu_l, wd_l)
+        return h, (k[0], v[0])  # (H, P, dh)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m))
+    h = ref.rmsnorm(h, fnorm)
+    last = jax.lax.dynamic_slice(
+        h[0], (prompt_len.astype(jnp.int32) - 1, jnp.zeros((), jnp.int32)),
+        (1, cfg.d_model))[0]
+    logits = last @ head  # (V,)
+
+    # scatter the (L, H, P, dh) prefill K/V into cache slot
+    pad = cfg.max_seq - p
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0)))[:, None]
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0)))[:, None]
+    zero = jnp.zeros((), jnp.int32)
+    idx = (zero, slot.astype(jnp.int32), zero, zero, zero)
+    mask = (jnp.arange(cfg.max_seq) < prompt_len)[None, None, None, :, None]
+    old_k = jax.lax.dynamic_slice(
+        k_cache, idx, (cfg.n_layers, 1, cfg.n_heads, cfg.max_seq, cfg.head_dim))
+    old_v = jax.lax.dynamic_slice(
+        v_cache, idx, (cfg.n_layers, 1, cfg.n_heads, cfg.max_seq, cfg.head_dim))
+    k_cache = jax.lax.dynamic_update_slice(k_cache, jnp.where(mask, ks, old_k), idx)
+    v_cache = jax.lax.dynamic_update_slice(v_cache, jnp.where(mask, vs, old_v), idx)
+    return k_cache, v_cache, logits
+
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, tokens, positions):
+    """One decode iteration over all slots.
+
+    tokens: (B,) int32 current token per slot; positions: (B,) int32 index
+    the token occupies.  Inactive slots just decode garbage (masked out on
+    the Rust side) — the batch shape is static, as in a real continuous
+    batcher's padded decode batch.
+    Returns (logits (B, V), k_cache', v_cache').
+    """
+    embed, wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m, fnorm, head = params
+    bsz = cfg.dec_batch
+    h = embed[tokens][:, None, :]  # (B, 1, d)
+    pos_b = positions[:, None, None]  # (B, 1, 1) -> broadcasts over heads
+
+    def body(h, layer):
+        wq_l, wk_l, wv_l, wo_l, wg_l, wd_l, wu_l, ra_l, rm_l, kc_l, vc_l = layer
+        x = ref.rmsnorm(h, ra_l)
+        q = ref.apply_rope(_split_heads(x @ wq_l, cfg.n_heads), pos_b, cfg.rope_theta)
+        k = ref.apply_rope(_split_heads(x @ wk_l, cfg.n_heads), pos_b, cfg.rope_theta)
+        v = _split_heads(x @ wv_l, cfg.n_heads)  # (B, H, 1, dh)
+
+        def upd(cache_b, new_b, p):
+            return jax.lax.dynamic_update_slice(cache_b, new_b, (0, p, 0))
+
+        kc_l = jax.vmap(upd)(kc_l, k, positions)  # (B, H, S, dh)
+        vc_l = jax.vmap(upd)(vc_l, v, positions)
+        # attend over cache with per-slot kv_len = position+1
+        scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kc_l) * scale
+        k_pos = jnp.arange(cfg.max_seq)[None, None, None, :]
+        s = jnp.where(k_pos <= positions[:, None, None, None], s, ref.NEG_INF)
+        p_attn = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", p_attn, vc_l)
+        h = h + _merge_heads(attn) @ wo_l
+        x = ref.rmsnorm(h, rm_l)
+        h = h + ref.swiglu_mlp(x, wg_l, wu_l, wd_l)
+        return h, (kc_l, vc_l)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h,
+        (wq, wk, wv, wo, w_gate, w_down, w_up, rms_a, rms_m, k_cache, v_cache))
+    h = ref.rmsnorm(h, fnorm)
+    logits = h[:, 0, :] @ head  # (B, V)
+    assert logits.shape == (bsz, cfg.vocab)
+    return logits, new_k, new_v

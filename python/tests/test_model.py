@@ -1,0 +1,127 @@
+"""L2 model correctness: shapes, training dynamics, prefill/decode vs forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["micro"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(jax.random.PRNGKey(1), (CFG.train_batch, CFG.seq),
+                              0, CFG.vocab, jnp.int32)
+
+
+def test_param_shapes_and_count(params):
+    shapes = CFG.param_shapes()
+    assert len(params) == M.NUM_PARAMS
+    for name, p in zip(M.PARAM_NAMES, params):
+        assert p.shape == shapes[name], name
+    total = sum(int(np.prod(p.shape)) for p in params)
+    assert total == CFG.param_count()
+
+
+def test_forward_shape_and_finite(params, tokens):
+    logits = M.forward(CFG, params, tokens)
+    assert logits.shape == (CFG.train_batch, CFG.seq, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_forward_flash_matches_ref_attention(params, tokens):
+    """The Pallas flash path and the naive path must agree end-to-end."""
+    import dataclasses
+    cfg_ref = dataclasses.replace(CFG, use_flash=False)
+    a = M.forward(CFG, params, tokens)
+    b = M.forward(cfg_ref, params, tokens)
+    np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    loss = M.loss_fn(CFG, params, tokens)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_train_step_decreases_loss(params):
+    # overfit a single repeated batch: loss must drop monotonically-ish
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, CFG.seq),
+                                0, CFG.vocab, jnp.int32)
+    m, v, step = M.init_opt_state(params)
+    p = [jnp.array(x) for x in params]
+    step_fn = jax.jit(lambda p, m, v, s, t: M.train_step(CFG, p, m, v, s, 1e-3, t))
+    losses = []
+    for _ in range(8):
+        p, m, v, step, loss = step_fn(p, m, v, step, tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_train_step_updates_all_params(params, tokens):
+    m, v, step = M.init_opt_state(params)
+    new_p, _, _, new_step, loss = M.train_step(CFG, params, m, v, step, 1e-3, tokens)
+    assert float(new_step) == 1.0
+    assert np.isfinite(float(loss))
+    for name, old, new in zip(M.PARAM_NAMES, params, new_p):
+        assert not np.allclose(old, new), f"{name} did not update"
+
+
+def test_prefill_decode_matches_forward(params):
+    """Teacher-forced decode over the cache must reproduce forward logits."""
+    b = CFG.dec_batch
+    p_len = CFG.prompt_len
+    total = p_len + 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, total), 0, CFG.vocab,
+                              jnp.int32)
+    # reference: full forward over the first `total` tokens
+    full = M.forward(CFG, params, toks)
+
+    kc, vc = M.init_cache(CFG)
+    last_logits = []
+    for slot in range(b):
+        kc, vc, lg = M.insert_request(
+            CFG, params, kc, vc, jnp.int32(slot), toks[slot, :p_len],
+            jnp.int32(p_len))
+        last_logits.append(lg)
+    # prefill logits at position p_len-1 match forward
+    np.testing.assert_allclose(
+        np.stack(last_logits), np.asarray(full[:, p_len - 1, :]),
+        atol=2e-3, rtol=2e-3)
+
+    # teacher-forced decode for the remaining positions
+    for t in range(4):
+        pos = jnp.full((b,), p_len + t, jnp.int32)
+        cur = toks[:, p_len + t]
+        logits, kc, vc = M.decode_step(CFG, params, kc, vc, cur, pos)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, p_len + t, :]),
+            atol=2e-3, rtol=2e-3)
+
+
+def test_decode_slots_independent(params):
+    """Writing one slot must not disturb another slot's cache."""
+    kc, vc = M.init_cache(CFG)
+    prompt = jnp.arange(CFG.prompt_len, dtype=jnp.int32) % CFG.vocab
+    kc1, vc1, _ = M.insert_request(CFG, params, kc, vc, jnp.int32(0), prompt,
+                                   jnp.int32(CFG.prompt_len))
+    kc2, vc2, _ = M.insert_request(CFG, params, kc1, vc1, jnp.int32(1),
+                                   prompt[::-1], jnp.int32(CFG.prompt_len))
+    np.testing.assert_array_equal(np.asarray(kc2[:, 0]), np.asarray(kc1[:, 0]))
+    assert not np.allclose(np.asarray(kc2[:, 1]), np.asarray(kc1[:, 1]))
+
+
+def test_presets_well_formed():
+    for name, cfg in M.PRESETS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.head_dim % 2 == 0, name
+        assert cfg.prompt_len < cfg.max_seq, name
+    assert 80e6 < M.PRESETS["m100"].param_count() < 120e6

@@ -1,0 +1,22 @@
+//! One bench per paper table and figure: times the regeneration of every
+//! experiment artifact (deliverable (d): the harness that reprints each
+//! table/figure, here under the wall clock).  `cargo bench` runs this.
+
+include!("harness.rs");
+
+use llm_perf_lab::report;
+
+fn main() {
+    section("paper tables (regeneration wall time)");
+    for n in 2..=16u32 {
+        bench(&format!("table {n:>2}"), 150, || {
+            std::hint::black_box(report::table(n, 40).unwrap());
+        });
+    }
+    section("paper figures (regeneration wall time)");
+    for n in 4..=15u32 {
+        bench(&format!("figure {n:>2}"), 150, || {
+            std::hint::black_box(report::figure(n, 40).unwrap());
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Real-PJRT benchmarks: decode-step / prefill / train-step latency of
+//! the AOT artifacts, and the engine's end-to-end request throughput.
+//! Needs `make artifacts`; skips gracefully if they are missing.
+
+include!("harness.rs");
+
+use llm_perf_lab::engine::{EngineCore, GenRequest};
+use llm_perf_lab::trainer::Trainer;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("bench_runtime: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let model = std::env::var("LLMPERF_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+
+    section("real engine (PJRT CPU)");
+    let mut core = EngineCore::new("artifacts", &model).expect("engine");
+    let info = core.info.clone();
+    // fill all slots once, then measure the steady-state decode iteration
+    let reqs: Vec<GenRequest> = (0..core.n_slots() as u64)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: (0..info.prompt_len as i32).map(|t| t % info.vocab as i32).collect(),
+            max_new: usize::MAX / 2, // never finish during the bench
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    for r in &reqs {
+        core.admit(r).expect("admit");
+    }
+    println!("{:<44} {:>12}", format!("prefill x{} (batch fill)", reqs.len()),
+             fmt_time(t0.elapsed().as_secs_f64() / reqs.len() as f64));
+    let med = bench(&format!("decode_step batch={}", core.n_slots()), 2000, || {
+        core.step().expect("step");
+    });
+    println!("{:<44} {:>12.1} tokens/s", "  -> decode throughput",
+             core.n_slots() as f64 / med);
+
+    section("real trainer (PJRT CPU)");
+    let mut tr = Trainer::new("artifacts", &model, 1e-3, 7).expect("trainer");
+    let med = bench("train_step", 3000, || {
+        tr.step().expect("train step");
+    });
+    println!("{:<44} {:>12.1} tokens/s", "  -> training throughput",
+             (tr.info.train_batch * tr.info.seq) as f64 / med);
+}

@@ -1,0 +1,76 @@
+//! Hot-path benchmarks for the simulators (L3 perf targets, DESIGN.md
+//! §Perf): training-step pricing, serving event loop, KV allocators,
+//! collective cost model.  Run with `cargo bench`.
+
+include!("harness.rs");
+
+use llm_perf_lab::comm::{coll_time, Collective};
+use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
+use llm_perf_lab::hw::{Link, Platform, PlatformId};
+use llm_perf_lab::serve::kv_cache::PagedKvCache;
+use llm_perf_lab::serve::token_kv::TokenKv;
+use llm_perf_lab::serve::{simulate, EngineSpec};
+use llm_perf_lab::train::simulate_step;
+
+fn main() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg7 = LlamaConfig::llama2_7b();
+    let wl = TrainWorkload { seq_len: 350, batch_size: 1 };
+
+    section("training-step simulator");
+    for label in ["Naive", "F+Z3", "F+R+Z3+O", "L+F+R+Z2"] {
+        let m = Method::parse(label).unwrap();
+        bench(&format!("simulate_step 7B {label}"), 300, || {
+            std::hint::black_box(simulate_step(&plat, &cfg7, &m, wl));
+        });
+    }
+
+    section("serving simulator (event loop throughput)");
+    for (ename, engine) in [("vllm", EngineSpec::vllm()),
+                            ("lightllm", EngineSpec::lightllm())] {
+        let swl = ServeWorkload { n_requests: 100, input_len: 512, output_len: 64,
+                                  burst: true };
+        let med = bench(&format!("serve sim 7B/A800 {ename} 100 req"), 1000, || {
+            std::hint::black_box(simulate(&plat, &cfg7, &engine, &swl));
+        });
+        let sim_tokens = 100.0 * (512.0 + 64.0);
+        println!("{:<44} {:>12.0} simulated tokens/s", "  -> event throughput",
+                 sim_tokens / med);
+    }
+
+    section("KV allocators");
+    bench("paged kv: admit+grow+release x1000 seqs", 300, || {
+        let mut kv = PagedKvCache::new(10_000_000, 16);
+        for id in 0..1000u64 {
+            kv.admit(id, 512);
+            for t in 513..=576 {
+                kv.append_token(id, t);
+            }
+        }
+        for id in 0..1000u64 {
+            kv.release(id);
+        }
+    });
+    bench("token kv: admit+grow+release x1000 seqs", 300, || {
+        let mut kv = TokenKv::new(10_000_000);
+        for id in 0..1000u64 {
+            kv.admit(id, 512);
+            for t in 513..=576 {
+                kv.append_token(id, t);
+            }
+        }
+        for id in 0..1000u64 {
+            kv.release(id);
+        }
+    });
+
+    section("collective cost model");
+    let link = Link::nvlink_a800();
+    bench("coll_time AllReduce sweep x100", 200, || {
+        let mut acc = 0.0;
+        for e in 10..40 {
+            acc += coll_time(&link, Collective::AllReduce, (1u64 << (e % 33)) as f64, 8);
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,50 @@
+// Minimal benchmark harness (the vendored crate set has no criterion).
+// Prints criterion-style lines: name, median, spread, throughput.
+// Used via include!() from each bench binary.
+
+use std::time::Instant;
+
+/// Measure `f` by running batches until ~`budget_ms` elapsed; report the
+/// per-iteration median over batches.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> f64 {
+    // warmup + batch sizing
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let per_batch = ((0.01 / once) as usize).clamp(1, 10_000);
+    let deadline = Instant::now() + std::time::Duration::from_millis(budget_ms);
+    let mut samples = Vec::new();
+    while Instant::now() < deadline || samples.len() < 3 {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / per_batch as f64);
+        if samples.len() >= 200 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let lo = samples[samples.len() / 10];
+    let hi = samples[samples.len() - 1 - samples.len() / 10];
+    println!("{name:<44} {:>12}  [{} .. {}]",
+             fmt_time(med), fmt_time(lo), fmt_time(hi));
+    med
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,89 @@
+//! Hand-rolled CLI argument parsing (no clap in the vendored crate set).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, --key value flags.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl Iterator<Item = String>) -> Cli {
+        let mut cli = Cli::default();
+        let mut it = args.peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                cli.flags.insert(key.to_string(), val);
+            } else if cli.command.is_empty() {
+                cli.command = a;
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        cli
+    }
+
+    pub fn from_env() -> Cli {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_u64(&self, key: &str, default: u64) -> u64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f32(&self, key: &str, default: f32) -> f32 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = parse("table 3 --requests 200 --out results");
+        assert_eq!(c.command, "table");
+        assert_eq!(c.positional, vec!["3"]);
+        assert_eq!(c.flag_u64("requests", 0), 200);
+        assert_eq!(c.flag_or("out", "x"), "results");
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let c = parse("train --verbose --steps 10");
+        assert!(c.has("verbose"));
+        assert_eq!(c.flag_u64("steps", 0), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse("serve");
+        assert_eq!(c.flag_u64("requests", 16), 16);
+        assert_eq!(c.flag_f32("lr", 1e-3), 1e-3);
+    }
+}

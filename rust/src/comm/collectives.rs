@@ -1,0 +1,147 @@
+//! α-β cost models for the NCCL collectives the paper measures.
+//!
+//! Ring algorithms (NCCL's default at these scales):
+//!   AllReduce:     2·(n-1)/n · bytes / link_bw   + 2·(n-1)·α
+//!   AllGather:       (n-1)/n · bytes / link_bw   +   (n-1)·α
+//!   ReduceScatter:   (n-1)/n · bytes / link_bw   +   (n-1)·α
+//!   Reduce (tree):   bytes / link_bw · ceil(log2 n)/adjust + log2(n)·α
+//!   Broadcast:       same shape as Reduce.
+//!
+//! `bytes` is the *full* tensor size (what the caller owns per rank);
+//! the (n-1)/n factors are the standard ring busbw corrections, so the
+//! modeled throughput curves saturate exactly like the paper's Fig. 13–15.
+
+use crate::hw::Link;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Reduce,
+    Broadcast,
+}
+
+impl Collective {
+    pub const ALL: [Collective; 5] = [
+        Collective::AllReduce,
+        Collective::AllGather,
+        Collective::ReduceScatter,
+        Collective::Reduce,
+        Collective::Broadcast,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Collective::AllReduce => "AllReduce",
+            Collective::AllGather => "AllGather",
+            Collective::ReduceScatter => "ReduceScatter",
+            Collective::Reduce => "Reduce",
+            Collective::Broadcast => "Broadcast",
+        }
+    }
+}
+
+/// Time for one collective over `n` ranks moving `bytes` (full tensor size).
+pub fn coll_time(link: &Link, op: Collective, bytes: f64, n: u32) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let alpha = link.latency;
+    let beta = bytes / link.bw;
+    match op {
+        Collective::AllReduce => 2.0 * (nf - 1.0) / nf * beta + 2.0 * (nf - 1.0) * alpha,
+        Collective::AllGather | Collective::ReduceScatter => {
+            (nf - 1.0) / nf * beta + (nf - 1.0) * alpha
+        }
+        Collective::Reduce | Collective::Broadcast => {
+            let hops = (nf).log2().ceil();
+            beta + hops * alpha
+        }
+    }
+}
+
+/// "Bus bandwidth" in NCCL's reporting convention: algo_bytes/time scaled
+/// so peak equals link bandwidth — what Fig. 13–15 plot on the y axis.
+pub fn bus_bandwidth(link: &Link, op: Collective, bytes: f64, n: u32) -> f64 {
+    let t = coll_time(link, op, bytes, n);
+    if t <= 0.0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let factor = match op {
+        Collective::AllReduce => 2.0 * (nf - 1.0) / nf,
+        Collective::AllGather | Collective::ReduceScatter => (nf - 1.0) / nf,
+        Collective::Reduce | Collective::Broadcast => 1.0,
+    };
+    bytes * factor / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Link;
+
+    fn nvl() -> Link {
+        Link::nvlink_a800()
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        for op in Collective::ALL {
+            assert_eq!(coll_time(&nvl(), op, 1e9, 1), 0.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_twice_allgather_asymptotically() {
+        let l = nvl();
+        let big = 4e9;
+        let ar = coll_time(&l, Collective::AllReduce, big, 8);
+        let ag = coll_time(&l, Collective::AllGather, big, 8);
+        assert!((ar / ag - 2.0).abs() < 0.05, "ar/ag = {}", ar / ag);
+    }
+
+    #[test]
+    fn time_monotone_in_bytes_and_ranks() {
+        let l = nvl();
+        let mut prev = 0.0;
+        for exp in 20..33 {
+            let t = coll_time(&l, Collective::AllReduce, (1u64 << exp) as f64, 8);
+            assert!(t > prev);
+            prev = t;
+        }
+        let t2 = coll_time(&l, Collective::AllReduce, 1e9, 2);
+        let t8 = coll_time(&l, Collective::AllReduce, 1e9, 8);
+        assert!(t8 > t2);
+    }
+
+    #[test]
+    fn bus_bw_saturates_to_link_bw() {
+        let l = nvl();
+        for op in [Collective::AllReduce, Collective::AllGather, Collective::ReduceScatter] {
+            let bw = bus_bandwidth(&l, op, 8e9, 8);
+            assert!(bw > 0.9 * l.bw && bw <= l.bw, "{}: {bw}", op.label());
+        }
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let l = nvl();
+        let bw_small = bus_bandwidth(&l, Collective::AllGather, 4096.0, 8);
+        let bw_big = bus_bandwidth(&l, Collective::AllGather, 1e9, 8);
+        assert!(bw_small < 0.05 * bw_big);
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_fig13() {
+        // Fig. 13/14: 3090 with NVLink significantly outperforms without
+        let nvl3090 = Link::nvlink_3090();
+        let pcie = Link::pcie4(true);
+        let b = 1e8;
+        let t_nvl = coll_time(&nvl3090, Collective::AllGather, b, 8);
+        let t_pcie = coll_time(&pcie, Collective::AllGather, b, 8);
+        assert!(t_pcie / t_nvl > 1.5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Collective-communication substrate (paper §VII-C).
+//!
+//! ZeRO-2 adds Reduce, ZeRO-3 swaps it for ReduceScatter, both use
+//! AllGather for parameter updates, and plain data parallelism AllReduces
+//! gradients — the simulator issues exactly these primitives and this
+//! module prices them with ring/tree α-β cost models over the platform
+//! fabric (`hw::Link`).
+
+pub mod collectives;
+pub mod sweep;
+
+pub use collectives::{coll_time, Collective};

@@ -1,0 +1,51 @@
+//! Data-size sweeps of the collectives — the series behind Fig. 13–15.
+
+use super::collectives::{bus_bandwidth, coll_time, Collective};
+use crate::hw::Link;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub bytes: f64,
+    pub latency: f64,
+    pub bus_bw: f64,
+}
+
+/// Sweep a collective over message sizes on a link with `n` ranks.
+pub fn sweep(link: &Link, op: Collective, n: u32, sizes: &[f64]) -> Vec<SweepPoint> {
+    sizes
+        .iter()
+        .map(|&bytes| SweepPoint {
+            bytes,
+            latency: coll_time(link, op, bytes, n),
+            bus_bw: bus_bandwidth(link, op, bytes, n),
+        })
+        .collect()
+}
+
+/// Log2-spaced sizes 1 KiB .. 4 GiB, the x-axis of the paper's figures.
+pub fn default_sizes() -> Vec<f64> {
+    (10..=32).map(|e| (1u64 << e) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::Link;
+
+    #[test]
+    fn sweep_is_monotone_in_latency() {
+        let pts = sweep(&Link::nvlink_a800(), Collective::ReduceScatter, 8, &default_sizes());
+        for w in pts.windows(2) {
+            assert!(w[1].latency > w[0].latency);
+            assert!(w[1].bus_bw >= w[0].bus_bw);
+        }
+    }
+
+    #[test]
+    fn sweep_length_matches_sizes() {
+        let sizes = default_sizes();
+        let pts = sweep(&Link::pcie4(true), Collective::AllGather, 8, &sizes);
+        assert_eq!(pts.len(), sizes.len());
+    }
+}

@@ -1,0 +1,173 @@
+//! Optimization-technique grammar: the paper's method labels
+//! ("Naive", "Z2+O", "F+R+Z3+O", "L+F+R+Z2", "QL", …) parsed into a
+//! structured `Method` the simulators consume.
+
+use std::fmt;
+
+/// ZeRO sharding stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ZeroStage {
+    #[default]
+    None,
+    /// optimizer-state partitioning
+    Z1,
+    /// + gradient partitioning (extra Reduce in backward)
+    Z2,
+    /// + parameter partitioning (ReduceScatter + AllGather)
+    Z3,
+}
+
+/// Fine-tuning mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Tuning {
+    /// full-parameter pre-training / fine-tuning
+    #[default]
+    Full,
+    /// LoRA adapters, frozen bf16 base
+    Lora { rank: u64 },
+    /// QLoRA: LoRA + NF4-quantized frozen base
+    QLora { rank: u64 },
+}
+
+/// One cell of the paper's method grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Method {
+    pub zero: ZeroStage,
+    /// offloading: Z2+O offloads optimizer state, Z3+O also parameters
+    pub offload: bool,
+    /// activation recomputation
+    pub recompute: bool,
+    /// FlashAttention
+    pub flash: bool,
+    /// 4-bit (NF4, double-quantized) weights
+    pub quant: bool,
+    pub tuning: Tuning,
+}
+
+impl Method {
+    pub fn naive() -> Self {
+        Method::default()
+    }
+
+    /// Parse a paper-style label: "+"-separated tokens from
+    /// {L, QL, Z2, Z3, O, R, F, Q, Naive}.  Order-insensitive.
+    pub fn parse(label: &str) -> Option<Method> {
+        let mut m = Method::default();
+        for tok in label.split('+') {
+            match tok.trim().to_ascii_uppercase().as_str() {
+                "NAIVE" | "" => {}
+                "Z1" => m.zero = ZeroStage::Z1,
+                "Z2" => m.zero = ZeroStage::Z2,
+                "Z3" => m.zero = ZeroStage::Z3,
+                "O" => m.offload = true,
+                "R" => m.recompute = true,
+                "F" => m.flash = true,
+                "Q" => m.quant = true,
+                "L" => m.tuning = Tuning::Lora { rank: 64 },
+                "QL" => m.tuning = Tuning::QLora { rank: 64 },
+                _ => return None,
+            }
+        }
+        // offloading requires a ZeRO stage to shard what it offloads
+        if m.offload && m.zero == ZeroStage::None && !matches!(m.tuning, Tuning::Full) {
+            // LoRA tables use L+Z2+O etc., still zero-gated; keep as-is
+        }
+        Some(m)
+    }
+
+    /// The Table III / IV row set for pre-training.
+    pub fn pretrain_grid() -> Vec<(&'static str, Method)> {
+        [
+            "Naive", "Z2", "Z2+O", "Z3", "Z3+O", "Q", "R", "F", "R+Z2",
+            "R+Z2+O", "R+Z3", "R+Z3+O", "R+Q", "R+F", "F+Z2", "F+Z2+O",
+            "F+Z3", "F+Z3+O", "F+R+Z2", "F+R+Z2+O", "F+R+Z3", "F+R+Z3+O",
+        ]
+        .iter()
+        .map(|&l| (l, Method::parse(l).unwrap()))
+        .collect()
+    }
+
+    /// The Table IX row set for fine-tuning (7B block).
+    pub fn finetune_grid() -> Vec<(&'static str, Method)> {
+        [
+            "L", "QL", "L+R", "QL+R", "L+F", "QL+F", "L+Z2", "L+Z2+O",
+            "L+Z3", "L+Z3+O", "QL+Z2", "QL+Z2+O", "L+F+R", "QL+F+R",
+            "L+F+R+Z2", "L+F+R+Z2+O", "L+F+R+Z3", "L+F+R+Z3+O",
+        ]
+        .iter()
+        .map(|&l| (l, Method::parse(l).unwrap()))
+        .collect()
+    }
+
+    pub fn is_peft(&self) -> bool {
+        !matches!(self.tuning, Tuning::Full)
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<&str> = Vec::new();
+        match self.tuning {
+            Tuning::Lora { .. } => parts.push("L"),
+            Tuning::QLora { .. } => parts.push("QL"),
+            Tuning::Full => {}
+        }
+        if self.flash { parts.push("F"); }
+        if self.recompute { parts.push("R"); }
+        if self.quant { parts.push("Q"); }
+        match self.zero {
+            ZeroStage::Z1 => parts.push("Z1"),
+            ZeroStage::Z2 => parts.push("Z2"),
+            ZeroStage::Z3 => parts.push("Z3"),
+            ZeroStage::None => {}
+        }
+        if self.offload { parts.push("O"); }
+        if parts.is_empty() { parts.push("Naive"); }
+        write!(f, "{}", parts.join("+"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paper_labels() {
+        let m = Method::parse("F+R+Z3+O").unwrap();
+        assert!(m.flash && m.recompute && m.offload);
+        assert_eq!(m.zero, ZeroStage::Z3);
+        assert_eq!(m.tuning, Tuning::Full);
+
+        let ql = Method::parse("QL+F+R").unwrap();
+        assert!(matches!(ql.tuning, Tuning::QLora { rank: 64 }));
+        assert!(ql.flash && ql.recompute);
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(Method::parse("Z9").is_none());
+        assert!(Method::parse("F+X").is_none());
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for (label, m) in Method::pretrain_grid() {
+            let shown = m.to_string();
+            let reparsed = Method::parse(&shown).unwrap();
+            assert_eq!(m, reparsed, "label {label} -> {shown}");
+        }
+    }
+
+    #[test]
+    fn grids_match_paper_row_counts() {
+        assert_eq!(Method::pretrain_grid().len(), 22); // Table III 7B rows
+        assert_eq!(Method::finetune_grid().len(), 18); // Table IX 7B rows
+    }
+
+    #[test]
+    fn naive_is_all_off() {
+        let m = Method::parse("Naive").unwrap();
+        assert_eq!(m, Method::default());
+        assert_eq!(m.to_string(), "Naive");
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration layer: model architectures, optimization-method grammar,
+//! and workload descriptions shared by all simulators and reports.
+
+pub mod method;
+pub mod model;
+pub mod workload;
+
+pub use method::{Method, Tuning, ZeroStage};
+pub use model::LlamaConfig;
+pub use workload::{ServeWorkload, TrainWorkload};

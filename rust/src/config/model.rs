@@ -1,0 +1,118 @@
+//! Model architecture configs: the paper's Llama2 7B/13B/70B plus the
+//! small real-compute presets mirrored from python/compile/model.py.
+
+/// Llama-family decoder-only architecture description.
+#[derive(Debug, Clone)]
+pub struct LlamaConfig {
+    pub name: &'static str,
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    /// KV heads (grouped-query attention: 70B uses 8)
+    pub n_kv_heads: u64,
+    pub d_ff: u64,
+    /// maximum position embedding range
+    pub max_pos: u64,
+}
+
+impl LlamaConfig {
+    pub fn head_dim(&self) -> u64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (matches the analytical formula the paper's
+    /// model sizes are named after).
+    pub fn param_count(&self) -> f64 {
+        let d = self.d_model as f64;
+        let ff = self.d_ff as f64;
+        let v = self.vocab as f64;
+        let kv = (self.n_kv_heads * self.head_dim()) as f64;
+        let per_layer = d * d        // wq
+            + 2.0 * d * kv           // wk, wv
+            + d * d                  // wo
+            + 3.0 * d * ff           // gate, up, down
+            + 2.0 * d;               // two rmsnorms
+        self.n_layers as f64 * per_layer + 2.0 * v * d + d
+    }
+
+    /// Llama2-7B (Touvron et al. 2023, Table 1).
+    pub fn llama2_7b() -> Self {
+        LlamaConfig {
+            name: "Llama2-7B", vocab: 32000, d_model: 4096, n_layers: 32,
+            n_heads: 32, n_kv_heads: 32, d_ff: 11008, max_pos: 4096,
+        }
+    }
+
+    /// Llama2-13B.
+    pub fn llama2_13b() -> Self {
+        LlamaConfig {
+            name: "Llama2-13B", vocab: 32000, d_model: 5120, n_layers: 40,
+            n_heads: 40, n_kv_heads: 40, d_ff: 13824, max_pos: 4096,
+        }
+    }
+
+    /// Llama2-70B (GQA with 8 KV heads).
+    pub fn llama2_70b() -> Self {
+        LlamaConfig {
+            name: "Llama2-70B", vocab: 32000, d_model: 8192, n_layers: 80,
+            n_heads: 64, n_kv_heads: 8, d_ff: 28672, max_pos: 4096,
+        }
+    }
+
+    /// The three paper models.
+    pub fn paper_models() -> Vec<LlamaConfig> {
+        vec![Self::llama2_7b(), Self::llama2_13b(), Self::llama2_70b()]
+    }
+
+    /// Mirror of python PRESETS["tiny"] — the real-compute demo model.
+    pub fn tiny() -> Self {
+        LlamaConfig {
+            name: "tiny", vocab: 2048, d_model: 256, n_layers: 4,
+            n_heads: 8, n_kv_heads: 8, d_ff: 688, max_pos: 512,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "7b" | "llama2-7b" => Some(Self::llama2_7b()),
+            "13b" | "llama2-13b" => Some(Self::llama2_13b()),
+            "70b" | "llama2-70b" => Some(Self::llama2_70b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_names() {
+        assert!((LlamaConfig::llama2_7b().param_count() / 1e9 - 6.74).abs() < 0.1);
+        assert!((LlamaConfig::llama2_13b().param_count() / 1e9 - 13.0).abs() < 0.3);
+        assert!((LlamaConfig::llama2_70b().param_count() / 1e9 - 69.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn gqa_only_on_70b() {
+        assert_eq!(LlamaConfig::llama2_7b().n_kv_heads, 32);
+        assert_eq!(LlamaConfig::llama2_70b().n_kv_heads, 8);
+    }
+
+    #[test]
+    fn by_name_parses() {
+        assert!(LlamaConfig::by_name("7b").is_some());
+        assert!(LlamaConfig::by_name("LLAMA2-70B").is_some());
+        assert!(LlamaConfig::by_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in LlamaConfig::paper_models() {
+            assert_eq!(m.d_model % m.n_heads, 0, "{}", m.name);
+            assert_eq!(m.head_dim() % 2, 0);
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Workload descriptions (paper §III "Datasets").
+//!
+//! Pre-training / fine-tuning use the alpaca-derived sequence length of
+//! 350 tokens; serving uses the burst workload of 1000 requests × 512
+//! input tokens with a per-platform fixed "max generated tokens".
+
+/// Training workload: synthetic batch of fixed-length sequences.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainWorkload {
+    pub seq_len: u64,
+    pub batch_size: u64,
+}
+
+impl TrainWorkload {
+    /// The paper's default: alpaca-average 350 tokens, batch 1.
+    pub fn paper_default() -> Self {
+        TrainWorkload { seq_len: 350, batch_size: 1 }
+    }
+
+    pub fn with_batch(mut self, bs: u64) -> Self {
+        self.batch_size = bs;
+        self
+    }
+
+    pub fn tokens_per_step_per_gpu(&self) -> f64 {
+        (self.seq_len * self.batch_size) as f64
+    }
+}
+
+/// Serving workload: the §III burst benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeWorkload {
+    pub n_requests: u64,
+    pub input_len: u64,
+    pub output_len: u64,
+    /// all requests arrive at t=0 ("dispatched in a burst pattern")
+    pub burst: bool,
+}
+
+impl ServeWorkload {
+    /// 1000 synthetic sentences × 512 input tokens.
+    pub fn paper_default(output_len: u64) -> Self {
+        ServeWorkload { n_requests: 1000, input_len: 512, output_len, burst: true }
+    }
+
+    pub fn total_output_tokens(&self) -> f64 {
+        (self.n_requests * self.output_len) as f64
+    }
+
+    pub fn total_tokens(&self) -> f64 {
+        (self.n_requests * (self.input_len + self.output_len)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let t = TrainWorkload::paper_default();
+        assert_eq!((t.seq_len, t.batch_size), (350, 1));
+        let s = ServeWorkload::paper_default(64);
+        assert_eq!(s.n_requests, 1000);
+        assert_eq!(s.input_len, 512);
+        assert_eq!(s.total_output_tokens(), 64_000.0);
+        assert_eq!(s.total_tokens(), 576_000.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! The real serving engine core: continuous batching over the AOT
+//! `insert_request` / `decode_step` HLO executables.
+//!
+//! This is the L3 coordinator's request path: Rust owns the slot table,
+//! the KV cache state, admission, sampling and completion; the only
+//! compute is PJRT executions of the JAX/Pallas-lowered artifacts.
+//! Python is never invoked.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): arguments are passed as *borrowed*
+//! literals — parameters are materialized once at startup and never
+//! copied on the Rust side; per-step host work is the KV-cache tuple
+//! unpack that PJRT's tuple-output convention forces.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::runtime::client::{i32_literal, i32_scalar, Runtime};
+use crate::runtime::ModelInfo;
+
+/// A generation job.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// seconds from submission to first generated token
+    pub ttft: f64,
+    /// seconds from submission to completion
+    pub latency: f64,
+}
+
+struct Slot {
+    id: u64,
+    submitted: Instant,
+    first_token: Option<f64>,
+    generated: Vec<i32>,
+    max_new: usize,
+    /// next position to write in the KV cache
+    pos: i32,
+    cur_token: i32,
+}
+
+/// Synchronous continuous-batching engine (the threaded server in
+/// `server.rs` drives one of these).
+pub struct EngineCore {
+    pub info: ModelInfo,
+    rt: Runtime,
+    insert_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    params: Vec<Literal>,
+    k_cache: Literal,
+    v_cache: Literal,
+    slots: Vec<Option<Slot>>,
+    /// counters
+    pub decode_steps: u64,
+    pub prefills: u64,
+    epoch: Instant,
+}
+
+fn zeros_literal(dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, dims, &vec![0u8; n * 4])
+        .map_err(|e| anyhow!("zeros literal: {e}"))
+}
+
+impl EngineCore {
+    pub fn new(artifact_dir: &str, model: &str) -> Result<EngineCore> {
+        let rt = Runtime::open(artifact_dir)?;
+        let info = rt.model_info(model)?;
+        let insert_exe = rt.compile_entry(model, "insert_request")?;
+        let decode_exe = rt.compile_entry(model, "decode_step")?;
+        let params = rt.load_params(model)?;
+        let dims = [info.n_layers as usize, info.dec_batch as usize,
+                    info.n_heads as usize, info.max_seq as usize,
+                    info.head_dim as usize];
+        let k_cache = zeros_literal(&dims)?;
+        let v_cache = zeros_literal(&dims)?;
+        let n_slots = info.dec_batch as usize;
+        Ok(EngineCore {
+            info, rt, insert_exe, decode_exe, params,
+            k_cache, v_cache,
+            slots: (0..n_slots).map(|_| None).collect(),
+            decode_steps: 0,
+            prefills: 0,
+            epoch: Instant::now(),
+        })
+    }
+
+    /// Replace the parameters (e.g. with trainer output).
+    pub fn set_params(&mut self, params: Vec<Literal>) -> Result<()> {
+        if params.len() != self.params.len() {
+            return Err(anyhow!("expected {} params, got {}", self.params.len(), params.len()));
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.len() - self.free_slots()
+    }
+
+    fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    /// Admit one request into a free slot (prefill).  Errors if full.
+    pub fn admit(&mut self, req: &GenRequest) -> Result<()> {
+        let slot_idx = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free slot"))?;
+        let p = self.info.prompt_len as usize;
+        let mut prompt: Vec<i32> = req.prompt.iter().copied().take(p).collect();
+        let prompt_len = prompt.len().max(1);
+        prompt.resize(p, 0); // right-pad (masked by causal+sequential decode)
+
+        let slot_lit = i32_scalar(slot_idx as i32);
+        let prompt_lit = i32_literal(&prompt, &[p as i64])?;
+        let len_lit = i32_scalar(prompt_len as i32);
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.params.len() + 5);
+        args.extend(self.params.iter());
+        args.push(&self.k_cache);
+        args.push(&self.v_cache);
+        args.push(&slot_lit);
+        args.push(&prompt_lit);
+        args.push(&len_lit);
+
+        let mut out = self.rt.run(&self.insert_exe, &args)?;
+        if out.len() != 3 {
+            return Err(anyhow!("insert_request returned {} outputs", out.len()));
+        }
+        let logits = out.pop().unwrap();
+        self.v_cache = out.pop().unwrap();
+        self.k_cache = out.pop().unwrap();
+        let logits_v: Vec<f32> = logits.to_vec().map_err(|e| anyhow!("logits: {e}"))?;
+        let first = Self::argmax(&logits_v);
+        self.prefills += 1;
+
+        self.slots[slot_idx] = Some(Slot {
+            id: req.id,
+            submitted: Instant::now(),
+            first_token: None,
+            generated: vec![first],
+            max_new: req.max_new.max(1),
+            pos: prompt_len as i32,
+            cur_token: first,
+        });
+        Ok(())
+    }
+
+    /// One decode iteration over all active slots.  Returns completions.
+    pub fn step(&mut self) -> Result<Vec<GenOutput>> {
+        if self.active() == 0 {
+            return Ok(Vec::new());
+        }
+        let b = self.slots.len();
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.cur_token;
+                positions[i] = s.pos;
+            }
+        }
+        let tokens_lit = i32_literal(&tokens, &[b as i64])?;
+        let pos_lit = i32_literal(&positions, &[b as i64])?;
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.params.len() + 4);
+        args.extend(self.params.iter());
+        args.push(&self.k_cache);
+        args.push(&self.v_cache);
+        args.push(&tokens_lit);
+        args.push(&pos_lit);
+
+        let mut out = self.rt.run(&self.decode_exe, &args)?;
+        if out.len() != 3 {
+            return Err(anyhow!("decode_step returned {} outputs", out.len()));
+        }
+        self.v_cache = out.pop().unwrap();
+        self.k_cache = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        let flat: Vec<f32> = logits.to_vec().map_err(|e| anyhow!("logits: {e}"))?;
+        let vocab = self.info.vocab as usize;
+        self.decode_steps += 1;
+
+        let mut done = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            let next = Self::argmax(&flat[i * vocab..(i + 1) * vocab]);
+            if s.first_token.is_none() {
+                s.first_token = Some(s.submitted.elapsed().as_secs_f64());
+            }
+            s.generated.push(next);
+            s.cur_token = next;
+            s.pos += 1;
+            let out_of_room = s.pos as u64 >= self.info.max_seq;
+            if s.generated.len() >= s.max_new || out_of_room {
+                let latency = s.submitted.elapsed().as_secs_f64();
+                done.push(GenOutput {
+                    id: s.id,
+                    tokens: std::mem::take(&mut s.generated),
+                    ttft: s.first_token.unwrap_or(latency),
+                    latency,
+                });
+                *slot = None;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Drive a whole batch of requests to completion (continuous batching:
+    /// new requests are admitted as slots free up).
+    pub fn run_batch(&mut self, reqs: &[GenRequest]) -> Result<Vec<GenOutput>> {
+        let mut waiting: std::collections::VecDeque<&GenRequest> = reqs.iter().collect();
+        let mut outs = Vec::with_capacity(reqs.len());
+        while !waiting.is_empty() || self.active() > 0 {
+            while self.free_slots() > 0 && !waiting.is_empty() {
+                let r = waiting.pop_front().unwrap();
+                self.admit(r)?;
+            }
+            outs.extend(self.step()?);
+        }
+        Ok(outs)
+    }
+
+    pub fn uptime(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}

@@ -1,0 +1,10 @@
+//! The *real* serving engine (not the simulator): Rust continuous
+//! batcher + slot-table KV management over the AOT-compiled
+//! prefill/decode HLO artifacts.  `core` is the synchronous engine,
+//! `server` the threaded request router on top.
+
+pub mod core;
+pub mod server;
+
+pub use core::{EngineCore, GenOutput, GenRequest};
+pub use server::{Pending, Server};

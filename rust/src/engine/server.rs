@@ -1,0 +1,150 @@
+//! Threaded serving front-end: request router + continuous batcher over
+//! one `EngineCore` worker (std threads + mpsc — see DESIGN.md
+//! §Dependencies for why not tokio).
+//!
+//! Architecture mirrors the vllm-project/router split: clients submit
+//! jobs to a bounded queue; a scheduler thread owns the engine state and
+//! interleaves admissions with decode iterations; completions are routed
+//! back to per-request channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::core::{EngineCore, GenOutput, GenRequest};
+
+enum Job {
+    Generate(GenRequest, Sender<GenOutput>),
+    Shutdown,
+}
+
+/// Handle to the running server.
+pub struct Server {
+    tx: Sender<Job>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// A pending generation future.
+pub struct Pending {
+    rx: Receiver<GenOutput>,
+}
+
+impl Pending {
+    /// Block until the generation completes.
+    pub fn wait(self) -> Result<GenOutput> {
+        self.rx.recv().map_err(|_| anyhow!("engine dropped the request"))
+    }
+}
+
+impl Server {
+    /// Spawn the scheduler thread; the engine (whose PJRT handles are not
+    /// Send) is constructed *inside* the thread and init errors are
+    /// reported back synchronously.
+    pub fn start(artifact_dir: &str, model: &str) -> Result<Server> {
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let dir = artifact_dir.to_string();
+        let model = model.to_string();
+        let worker = std::thread::Builder::new()
+            .name("llmperf-engine".into())
+            .spawn(move || {
+                let mut core = match EngineCore::new(&dir, &model) {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                scheduler_loop(&mut core, rx)
+            })
+            .map_err(|e| anyhow!("spawn: {e}"))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server { tx, worker: Some(worker) }),
+            Ok(Err(e)) => Err(anyhow!("engine init failed: {e}")),
+            Err(_) => Err(anyhow!("engine thread died during init")),
+        }
+    }
+
+    /// Submit a generation request; returns a waitable handle.
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize, id: u64) -> Result<Pending> {
+        let (otx, orx) = channel();
+        self.tx
+            .send(Job::Generate(GenRequest { id, prompt, max_new }, otx))
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        Ok(Pending { rx: orx })
+    }
+
+    /// Stop the scheduler after draining in-flight work.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn scheduler_loop(core: &mut EngineCore, rx: Receiver<Job>) {
+    let mut waiting: std::collections::VecDeque<(GenRequest, Sender<GenOutput>)> =
+        Default::default();
+    let mut inflight: std::collections::HashMap<u64, Sender<GenOutput>> = Default::default();
+    let mut draining = false;
+
+    loop {
+        // Pull whatever is queued without blocking, unless fully idle.
+        if waiting.is_empty() && core.active() == 0 {
+            if draining {
+                break;
+            }
+            match rx.recv() {
+                Ok(Job::Generate(req, tx)) => waiting.push_back((req, tx)),
+                Ok(Job::Shutdown) | Err(_) => break,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Job::Generate(req, tx)) => waiting.push_back((req, tx)),
+                Ok(Job::Shutdown) => draining = true,
+                Err(_) => break,
+            }
+        }
+
+        // Admit while slots are free (continuous batching).
+        while core.free_slots() > 0 && !waiting.is_empty() {
+            let (req, tx) = waiting.pop_front().unwrap();
+            let id = req.id;
+            match core.admit(&req) {
+                Ok(()) => {
+                    inflight.insert(id, tx);
+                }
+                Err(_) => {
+                    // report failure by dropping the sender (receiver errors)
+                }
+            }
+        }
+
+        // One decode iteration; route completions.
+        match core.step() {
+            Ok(done) => {
+                for out in done {
+                    if let Some(tx) = inflight.remove(&out.id) {
+                        let _ = tx.send(out);
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}

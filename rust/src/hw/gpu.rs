@@ -1,0 +1,131 @@
+//! GPU device models, instantiated with public specifications of the three
+//! GPUs in the paper's Table I.
+//!
+//! Peak numbers are vendor datasheet values; *achievable* rates come from
+//! the efficiency models in `ops/` (GEMM tile/wave quantization, kernel
+//! launch overhead), which is where the paper's "peak %" measurements
+//! (Table XII, Fig. 11) live.
+
+/// Data types that matter for the paper's experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    Int8,
+    Nf4,
+}
+
+impl Dtype {
+    /// Bytes per element (NF4 counts 0.5 — two elements per byte).
+    pub fn bytes(self) -> f64 {
+        match self {
+            Dtype::F32 => 4.0,
+            Dtype::Bf16 => 2.0,
+            Dtype::Int8 => 1.0,
+            Dtype::Nf4 => 0.5,
+        }
+    }
+}
+
+/// One GPU's capability envelope.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// device memory, bytes
+    pub mem_bytes: f64,
+    /// dense bf16/fp16 tensor-core peak, FLOP/s
+    pub flops_bf16: f64,
+    /// fp32 (CUDA-core) peak, FLOP/s
+    pub flops_f32: f64,
+    /// HBM/GDDR bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// number of SMs (wave-quantization granularity)
+    pub sms: u32,
+    /// tensor-core tile granularity along each GEMM dim (paper §VII-A:
+    /// "integer multiples of the TensorCore compute scale")
+    pub tc_tile: u32,
+    /// per-kernel launch overhead, seconds (python+driver+launch)
+    pub kernel_overhead: f64,
+}
+
+impl GpuSpec {
+    /// Peak FLOP/s for the dtype the matmul accumulates in.
+    pub fn peak_flops(&self, dt: Dtype) -> f64 {
+        match dt {
+            Dtype::F32 => self.flops_f32,
+            // int8/nf4 paths dequantize into bf16 tensor-core math
+            _ => self.flops_bf16,
+        }
+    }
+
+    /// Nvidia A800-80G SXM (A100 silicon, NVLink capped at 400 GB/s).
+    pub fn a800() -> Self {
+        GpuSpec {
+            name: "A800-80G",
+            mem_bytes: 80e9,
+            flops_bf16: 312e12,
+            flops_f32: 19.5e12,
+            mem_bw: 2039e9,
+            sms: 108,
+            tc_tile: 16,
+            kernel_overhead: 4.5e-6,
+        }
+    }
+
+    /// Nvidia GeForce RTX 4090 24G (Ada, no NVLink, no P2P).
+    pub fn rtx4090() -> Self {
+        GpuSpec {
+            name: "RTX4090-24G",
+            mem_bytes: 24e9,
+            flops_bf16: 165.2e12,
+            flops_f32: 82.6e12,
+            mem_bw: 1008e9,
+            sms: 128,
+            tc_tile: 16,
+            kernel_overhead: 4.0e-6,
+        }
+    }
+
+    /// Nvidia GeForce RTX 3090 24G (Ampere consumer, optional NVLink pair).
+    pub fn rtx3090() -> Self {
+        GpuSpec {
+            name: "RTX3090-24G",
+            mem_bytes: 24e9,
+            flops_bf16: 71e12,
+            flops_f32: 35.6e12,
+            mem_bw: 936e9,
+            sms: 82,
+            tc_tile: 16,
+            kernel_overhead: 5.0e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(Dtype::F32.bytes(), 4.0);
+        assert_eq!(Dtype::Bf16.bytes(), 2.0);
+        assert_eq!(Dtype::Nf4.bytes(), 0.5);
+    }
+
+    #[test]
+    fn spec_ordering_matches_table1() {
+        let (a, r4, r3) = (GpuSpec::a800(), GpuSpec::rtx4090(), GpuSpec::rtx3090());
+        // A800 fastest bf16, 3090 slowest; A800 has by far the most memory
+        assert!(a.flops_bf16 > r4.flops_bf16 && r4.flops_bf16 > r3.flops_bf16);
+        assert!(a.mem_bytes > 3.0 * r4.mem_bytes);
+        assert!(a.mem_bw > r4.mem_bw && r4.mem_bw > r3.mem_bw);
+    }
+
+    #[test]
+    fn peak_flops_dtype_routing() {
+        let g = GpuSpec::a800();
+        assert_eq!(g.peak_flops(Dtype::Bf16), g.flops_bf16);
+        assert_eq!(g.peak_flops(Dtype::F32), g.flops_f32);
+        assert_eq!(g.peak_flops(Dtype::Nf4), g.flops_bf16);
+    }
+}

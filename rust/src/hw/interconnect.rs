@@ -1,0 +1,119 @@
+//! Device-to-device interconnect models (NVLink vs PCIe), the variable the
+//! paper isolates with its RTX3090 w/ and w/o NVLink columns and the
+//! `NCCL_P2P_DISABLE=1` RTX4090 caveat (§III).
+
+/// Link technology between GPUs in one server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// direct GPU-GPU mesh (A800 NVSwitch, 3090 pairwise bridge)
+    NvLink,
+    /// through the PCIe root complex; optionally without P2P (bounce
+    /// through host memory — the RTX4090 NCCL_P2P_DISABLE case)
+    Pcie { p2p: bool },
+}
+
+/// Point-to-point link between two devices.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub kind: LinkKind,
+    /// effective per-direction bandwidth, bytes/s
+    pub bw: f64,
+    /// per-message latency (software + wire), seconds
+    pub latency: f64,
+}
+
+impl Link {
+    /// A800 HGX-style NVLink fabric (400 GB/s aggregate per GPU; per-peer
+    /// effective unidirectional bandwidth after protocol overhead).
+    pub fn nvlink_a800() -> Self {
+        Link { kind: LinkKind::NvLink, bw: 200e9, latency: 6e-6 }
+    }
+
+    /// RTX3090 NVLink bridge: 112.5 GB/s bidirectional but pairs only —
+    /// 8-GPU rings cross PCIe between pairs, so the effective collective
+    /// bandwidth is far below the bridge number.
+    pub fn nvlink_3090() -> Self {
+        Link { kind: LinkKind::NvLink, bw: 12e9, latency: 8e-6 }
+    }
+
+    /// PCIe 4.0 x16 through a shared root complex: what an 8-GPU ring
+    /// actually sustains per direction.  With P2P disabled (the paper's
+    /// RTX4090 NCCL workaround) every hop bounces through host memory.
+    pub fn pcie4(p2p: bool) -> Self {
+        let bw = if p2p { 7e9 } else { 5e9 };
+        // p2p disabled: every message bounces through host memory — the
+        // per-collective setup cost balloons (it dominates the RTX4090's
+        // decode-iteration latency in Fig. 9, where TP issues 2 small
+        // AllReduces per layer per token)
+        Link { kind: LinkKind::Pcie { p2p }, bw, latency: if p2p { 12e-6 } else { 250e-6 } }
+    }
+
+    /// Time to move `bytes` point-to-point.
+    pub fn xfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bw
+    }
+}
+
+/// Host link (CPU RAM ↔ GPU) used by offloading and memcopy benches.
+#[derive(Debug, Clone)]
+pub struct HostLink {
+    /// host-to-device bandwidth, bytes/s
+    pub h2d_bw: f64,
+    /// device-to-host bandwidth, bytes/s
+    pub d2h_bw: f64,
+    /// cudaMemcpy startup latency, seconds (dominates small copies — Fig. 12)
+    pub latency: f64,
+}
+
+impl HostLink {
+    pub fn pcie4_pinned() -> Self {
+        HostLink { h2d_bw: 25e9, d2h_bw: 22e9, latency: 9e-6 }
+    }
+
+    pub fn h2d_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.h2d_bw
+    }
+
+    pub fn d2h_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.d2h_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvlink_beats_pcie() {
+        assert!(Link::nvlink_a800().bw > Link::pcie4(true).bw);
+        assert!(Link::nvlink_3090().bw > Link::pcie4(true).bw);
+        assert!(Link::pcie4(true).bw > Link::pcie4(false).bw);
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let l = Link::pcie4(true);
+        let t_small = l.xfer_time(1024.0);
+        assert!(l.latency / t_small > 0.95);
+        let t_big = l.xfer_time(1e9);
+        assert!(l.latency / t_big < 0.01);
+    }
+
+    #[test]
+    fn host_link_asymmetric() {
+        let h = HostLink::pcie4_pinned();
+        assert!(h.h2d_bw >= h.d2h_bw);
+        assert!(h.h2d_time(1e9) < h.d2h_time(1e9));
+    }
+
+    #[test]
+    fn xfer_time_monotone_in_bytes() {
+        let l = Link::nvlink_a800();
+        let mut prev = 0.0;
+        for exp in 10..32 {
+            let t = l.xfer_time((1u64 << exp) as f64);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Host↔device memory-copy cost model (paper §VII-B, Fig. 12, Table XIV).
+//!
+//! "For smaller data sizes, the startup time tends to be dominant, while
+//! for larger data sizes, bandwidth becomes increasingly crucial" — an
+//! α-β model with a pinned-memory bandwidth ceiling captures exactly that.
+
+use super::interconnect::HostLink;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    H2D,
+    D2H,
+}
+
+/// One modeled memcopy: latency + size/bandwidth.
+pub fn copy_time(link: &HostLink, dir: Dir, bytes: f64) -> f64 {
+    match dir {
+        Dir::H2D => link.h2d_time(bytes),
+        Dir::D2H => link.d2h_time(bytes),
+    }
+}
+
+/// Effective throughput (bytes/s) achieved for a copy of `bytes`.
+pub fn copy_throughput(link: &HostLink, dir: Dir, bytes: f64) -> f64 {
+    bytes / copy_time(link, dir, bytes)
+}
+
+/// Sweep (size → latency, throughput) series, the two panels of Fig. 12.
+pub fn sweep(link: &HostLink, dir: Dir, sizes: &[f64]) -> Vec<(f64, f64, f64)> {
+    sizes
+        .iter()
+        .map(|&b| (b, copy_time(link, dir, b), copy_throughput(link, dir, b)))
+        .collect()
+}
+
+/// Log-spaced sizes from 1 KiB to 1 GiB (Fig. 12's x-axis).
+pub fn default_sizes() -> Vec<f64> {
+    (10..=30).map(|e| (1u64 << e) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> HostLink {
+        HostLink::pcie4_pinned()
+    }
+
+    #[test]
+    fn throughput_saturates_at_bandwidth() {
+        let l = link();
+        let tp = copy_throughput(&l, Dir::H2D, 1e9);
+        assert!(tp > 0.9 * l.h2d_bw && tp <= l.h2d_bw);
+    }
+
+    #[test]
+    fn small_copies_latency_bound() {
+        let l = link();
+        let tp = copy_throughput(&l, Dir::H2D, 1024.0);
+        assert!(tp < 0.01 * l.h2d_bw, "small copy should be far from peak");
+    }
+
+    #[test]
+    fn h2d_and_d2h_similar_but_asymmetric() {
+        // Fig. 12: "throughput and latency for uploading and offloading are
+        // similar"; pinned D2H slightly slower.
+        let l = link();
+        let up = copy_time(&l, Dir::H2D, 1e8);
+        let down = copy_time(&l, Dir::D2H, 1e8);
+        assert!(down >= up);
+        assert!(down / up < 1.5);
+    }
+
+    #[test]
+    fn sweep_throughput_monotone() {
+        let l = link();
+        let s = sweep(&l, Dir::H2D, &default_sizes());
+        for w in s.windows(2) {
+            assert!(w[1].2 >= w[0].2, "throughput must rise with size");
+        }
+    }
+}

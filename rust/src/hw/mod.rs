@@ -1,0 +1,15 @@
+//! Simulated hardware substrate: the three 8-GPU platforms of Table I.
+//!
+//! The paper measured physical A800 / RTX4090 / RTX3090 servers; we model
+//! them from public specs (DESIGN.md substitution table).  Everything
+//! downstream (ops/, comm/, train/, serve/) computes *time* and *bytes*
+//! against these envelopes.
+
+pub mod gpu;
+pub mod interconnect;
+pub mod memcopy;
+pub mod platform;
+
+pub use gpu::{Dtype, GpuSpec};
+pub use interconnect::{HostLink, Link, LinkKind};
+pub use platform::{Platform, PlatformId};

@@ -1,0 +1,35 @@
+//! # llm-perf-lab
+//!
+//! A Rust + JAX + Pallas reproduction of *"Dissecting the Runtime
+//! Performance of the Training, Fine-tuning, and Inference of Large
+//! Language Models"* (Zhang, Liu, et al., 2023).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — benchmark coordinator: simulated 8-GPU
+//!   platforms, training/fine-tuning/serving simulators, a *real*
+//!   threaded serving engine and training loop over PJRT, and report
+//!   generators for every table and figure in the paper.
+//! * **L2 (python/compile/model.py)** — JAX Llama-style model, AOT-lowered
+//!   to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas flash-attention + RMSNorm
+//!   kernels (interpret mode), called from L2.
+//!
+//! Python never runs at request time: `runtime/` loads `artifacts/*.hlo.txt`
+//! into the PJRT CPU client and everything else is Rust.
+
+pub mod calibrate;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod engine;
+pub mod finetune;
+pub mod hw;
+pub mod memory;
+pub mod model;
+pub mod ops;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod train;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,227 @@
+//! `llmperf` — the L3 benchmark coordinator CLI.
+//!
+//! Subcommands (see README):
+//!   table N | figure N | report-all      — regenerate paper tables/figures
+//!   sim-pretrain | sim-serve             — one simulator cell
+//!   train | serve | calibrate            — the *real* PJRT paths
+//!   info                                 — environment summary
+
+use anyhow::{anyhow, Result};
+use llm_perf_lab::cli::Cli;
+use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
+use llm_perf_lab::engine::{EngineCore, GenRequest};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::report;
+use llm_perf_lab::runtime::Runtime;
+use llm_perf_lab::serve::EngineSpec;
+use llm_perf_lab::train::simulate_step;
+use llm_perf_lab::trainer::Trainer;
+use llm_perf_lab::util::stats::Cdf;
+
+const USAGE: &str = "\
+llmperf — benchmark lab for 'Dissecting the Runtime Performance of LLMs'
+
+paper reproduction:
+  table <2..16>              print a paper table (our numbers + paper refs)
+  figure <4..15>             print a paper figure's series
+  report-all [--out results] [--requests N]   regenerate everything
+
+simulators:
+  sim-pretrain --model 7b --platform a800 --method F+Z3 [--bs 1]
+  sim-serve    --model 7b --platform a800 --engine vllm [--requests 1000]
+
+real PJRT paths (need `make artifacts`):
+  train     [--model tiny] [--steps 100] [--lr 1e-3] [--csv results/loss.csv]
+  serve     [--model tiny] [--requests 16] [--max-new 32]
+  calibrate [--reps 5]     measure the AOT operator microbenchmarks
+  info                     platform + manifest summary
+";
+
+fn main() {
+    let cli = Cli::from_env();
+    if let Err(e) = run(&cli) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(cli: &Cli) -> String {
+    cli.flag_or("artifacts", "artifacts")
+}
+
+fn run(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "table" => {
+            let n: u32 = cli.positional.first()
+                .ok_or_else(|| anyhow!("usage: llmperf table <2..16>"))?.parse()?;
+            for t in report::table(n, cli.flag_u64("requests", 200))? {
+                println!("{}", t.render());
+            }
+        }
+        "figure" => {
+            let n: u32 = cli.positional.first()
+                .ok_or_else(|| anyhow!("usage: llmperf figure <4..15>"))?.parse()?;
+            for t in report::figure(n, cli.flag_u64("requests", 200))? {
+                println!("{}", t.render());
+            }
+        }
+        "report-all" => {
+            let out = cli.flag_or("out", "results");
+            let n = cli.flag_u64("requests", 200);
+            let t0 = std::time::Instant::now();
+            let written = report::report_all(&out, n)?;
+            println!("wrote {} reports to {}/ in {:.1}s",
+                     written.len(), out, t0.elapsed().as_secs_f64());
+        }
+        "sim-pretrain" => {
+            let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
+                .ok_or_else(|| anyhow!("unknown model"))?;
+            let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
+                .map(Platform::get)
+                .ok_or_else(|| anyhow!("unknown platform"))?;
+            let m = Method::parse(&cli.flag_or("method", "Naive"))
+                .ok_or_else(|| anyhow!("bad method label"))?;
+            let wl = TrainWorkload { seq_len: cli.flag_u64("seq", 350),
+                                     batch_size: cli.flag_u64("bs", 1) };
+            let r = simulate_step(&plat, &cfg, &m, wl);
+            if r.is_oom() {
+                println!("{} / {} / {}: OOM ({:?}; would need {:.1} GB GPU, {:.1} GB host)",
+                         plat.id.label(), cfg.name, m, r.fit,
+                         r.mem.gpu_total() / 1e9, r.mem.host_bytes / 1e9);
+            } else {
+                println!("{} / {} / {} @ bs={}:", plat.id.label(), cfg.name, m, wl.batch_size);
+                println!("  step      {:>9.1} ms", r.step_time * 1e3);
+                println!("  fwd       {:>9.1} ms   bwd {:>9.1} ms", r.fwd * 1e3, r.bwd * 1e3);
+                println!("  comm      {:>9.1} ms exposed ({:.1} ms total)",
+                         r.comm_exposed * 1e3, r.comm_total * 1e3);
+                println!("  optimizer {:>9.1} ms   offload {:>9.1} ms",
+                         r.optimizer * 1e3, r.offload * 1e3);
+                println!("  memory    {:>9.1} GB/GPU ({:.1} GB host)",
+                         r.mem.gpu_total() / 1e9, r.mem.host_bytes / 1e9);
+                println!("  throughput {:.0} tokens/s", r.tokens_per_s);
+            }
+        }
+        "sim-serve" => {
+            let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
+                .ok_or_else(|| anyhow!("unknown model"))?;
+            let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
+                .map(Platform::get)
+                .ok_or_else(|| anyhow!("unknown platform"))?;
+            let engine = match cli.flag_or("engine", "vllm").as_str() {
+                "vllm" => EngineSpec::vllm(),
+                "tgi" => EngineSpec::tgi(),
+                "lightllm" => EngineSpec::lightllm(),
+                other => return Err(anyhow!("unknown engine '{other}'")),
+            };
+            let wl = ServeWorkload {
+                n_requests: cli.flag_u64("requests", 1000),
+                input_len: cli.flag_u64("input", 512),
+                output_len: cli.flag_u64("output", 128),
+                burst: true,
+            };
+            match llm_perf_lab::serve::simulate(&plat, &cfg, &engine, &wl) {
+                None => println!("{} / {} / {}: OOM (cannot deploy)",
+                                 plat.id.label(), cfg.name, engine.name),
+                Some(r) => {
+                    let cdf = r.latency_cdf();
+                    println!("{} / {} / {}: {} requests", plat.id.label(), cfg.name,
+                             engine.name, wl.n_requests);
+                    println!("  throughput {:.0} output tokens/s, makespan {:.1}s",
+                             r.throughput(), r.makespan);
+                    println!("  latency p50 {:.1}s  p90 {:.1}s  p100 {:.1}s",
+                             cdf.quantile(0.5), cdf.quantile(0.9), cdf.quantile(1.0));
+                    println!("  iters: {} decode / {} prefill, {} preemptions",
+                             r.decode_iters, r.prefill_iters, r.preemptions);
+                }
+            }
+        }
+        "train" => {
+            let model = cli.flag_or("model", "tiny");
+            let steps = cli.flag_u64("steps", 100);
+            let mut tr = Trainer::new(&artifacts_dir(cli), &model,
+                                      cli.flag_f32("lr", 1e-3), 42)?;
+            println!("training '{model}' ({:.1}M params) for {steps} steps, \
+                      batch {} x seq {}",
+                     tr.info.params as f64 / 1e6, tr.info.train_batch, tr.info.seq);
+            tr.run(steps, cli.flag_u64("log-every", 10))?;
+            let first = tr.history.first().map(|l| l.loss).unwrap_or(0.0);
+            let last = tr.history.last().map(|l| l.loss).unwrap_or(0.0);
+            println!("loss: {first:.4} -> {last:.4}");
+            if let Some(csv) = cli.flag("csv") {
+                tr.write_csv(csv)?;
+                println!("loss curve written to {csv}");
+            }
+        }
+        "serve" => {
+            let model = cli.flag_or("model", "tiny");
+            let n = cli.flag_u64("requests", 16);
+            let max_new = cli.flag_u64("max-new", 32) as usize;
+            let mut core = EngineCore::new(&artifacts_dir(cli), &model)?;
+            println!("engine up: model '{model}', {} slots, prompt_len {}",
+                     core.n_slots(), core.info.prompt_len);
+            let reqs: Vec<GenRequest> = (0..n)
+                .map(|i| GenRequest {
+                    id: i,
+                    prompt: (0..core.info.prompt_len as i32)
+                        .map(|t| (t * 7 + i as i32) % core.info.vocab as i32)
+                        .collect(),
+                    max_new,
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let outs = core.run_batch(&reqs)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let total_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+            let cdf = Cdf::new(outs.iter().map(|o| o.latency).collect());
+            println!("served {} requests / {} tokens in {:.2}s \
+                      ({:.1} output tokens/s)", outs.len(), total_tokens, dt,
+                     total_tokens as f64 / dt);
+            println!("latency p50 {:.3}s p90 {:.3}s p100 {:.3}s  \
+                      ({} decode iters, {} prefills)",
+                     cdf.quantile(0.5), cdf.quantile(0.9), cdf.quantile(1.0),
+                     core.decode_steps, core.prefills);
+        }
+        "calibrate" => {
+            let rt = Runtime::open(artifacts_dir(cli))?;
+            let reps = cli.flag_u64("reps", 5) as usize;
+            println!("timing {} micro kernels ({} reps each) on the PJRT CPU backend",
+                     rt.manifest.micros.len(), reps);
+            let timings = llm_perf_lab::calibrate::calibrate_all(&rt, reps)?;
+            for t in &timings {
+                match t.gflops() {
+                    Some(g) => println!("  {:<28} {:>10.3} ms  {:>8.2} GFLOP/s",
+                                        t.name, t.seconds * 1e3, g),
+                    None => println!("  {:<28} {:>10.3} ms", t.name, t.seconds * 1e3),
+                }
+            }
+            println!("\nflash/naive attention speedup (CPU-measured):");
+            for (s, ratio) in llm_perf_lab::calibrate::attention_ratios(&timings) {
+                println!("  seq {s:>5}: naive/flash = {ratio:.2}x");
+            }
+        }
+        "info" => {
+            println!("platforms:");
+            for p in Platform::all() {
+                println!("  {:<20} {}x {} | {:.0} GB | fabric {:.0} GB/s",
+                         p.id.label(), p.n_gpus, p.gpu.name,
+                         p.gpu.mem_bytes / 1e9, p.fabric.bw / 1e9);
+            }
+            println!("models:");
+            for m in LlamaConfig::paper_models() {
+                println!("  {:<12} {:.1}B params, d={}, L={}, heads={}/{}",
+                         m.name, m.param_count() / 1e9, m.d_model, m.n_layers,
+                         m.n_heads, m.n_kv_heads);
+            }
+            if let Ok(rt) = Runtime::open(artifacts_dir(cli)) {
+                println!("artifacts: {} models, {} entries, {} micro kernels",
+                         rt.manifest.models.len(), rt.manifest.hlos.len(),
+                         rt.manifest.micros.len());
+            } else {
+                println!("artifacts: not built (run `make artifacts`)");
+            }
+        }
+        "" | "help" | "--help" => print!("{USAGE}"),
+        other => return Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Serving-side memory accounting: model weights + KV-cache budget.
+//!
+//! The KV budget is what differentiates the three engines on the same GPU
+//! (§VI): how much of it a scheduler can actually *use* depends on its
+//! allocator (paged blocks vs token granularity vs contiguous), modeled in
+//! serve/kv_cache.rs and serve/token_kv.rs.
+
+use crate::config::LlamaConfig;
+use crate::hw::{Dtype, Platform};
+
+/// Bytes of KV cache for one token (all layers, both K and V).
+pub fn kv_bytes_per_token(cfg: &LlamaConfig, dt: Dtype) -> f64 {
+    2.0 * cfg.n_layers as f64 * (cfg.n_kv_heads * cfg.head_dim()) as f64 * dt.bytes()
+}
+
+/// Serving memory layout on one tensor-parallel group.
+#[derive(Debug, Clone)]
+pub struct ServeMemory {
+    /// weight bytes per GPU (TP-sharded)
+    pub weights_per_gpu: f64,
+    /// KV-cache pool bytes per GPU after weights + overhead + headroom
+    pub kv_pool_per_gpu: f64,
+    /// whole-group token capacity of the pool
+    pub kv_token_capacity: u64,
+}
+
+/// Compute the serving memory plan; `tp` = tensor-parallel degree,
+/// `gpu_mem_util` = fraction of GPU memory the engine lets itself use
+/// (vLLM's gpu_memory_utilization knob; engines differ).
+pub fn serve_memory(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    tp: u32,
+    dt: Dtype,
+    gpu_mem_util: f64,
+) -> ServeMemory {
+    let weights_per_gpu = cfg.param_count() * dt.bytes() / tp as f64;
+    let budget = plat.gpu.mem_bytes * gpu_mem_util - plat.base_overhead;
+    let kv_pool = (budget - weights_per_gpu).max(0.0);
+    let per_tok = kv_bytes_per_token(cfg, dt) / tp as f64;
+    let capacity = if per_tok > 0.0 { (kv_pool / per_tok) as u64 } else { 0 };
+    ServeMemory { weights_per_gpu, kv_pool_per_gpu: kv_pool, kv_token_capacity: capacity }
+}
+
+/// Smallest TP degree whose shards fit, or None if even TP=8 OOMs
+/// (TGI × Llama2-70B × 24 GB in Fig. 6).
+pub fn min_tp_that_fits(plat: &Platform, cfg: &LlamaConfig, dt: Dtype,
+                        gpu_mem_util: f64, min_kv_tokens: u64) -> Option<u32> {
+    for tp in [1u32, 2, 4, 8] {
+        if tp > plat.n_gpus {
+            break;
+        }
+        let m = serve_memory(plat, cfg, tp, dt, gpu_mem_util);
+        if m.kv_pool_per_gpu > 0.0 && m.kv_token_capacity >= min_kv_tokens {
+            return Some(tp);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn kv_per_token_7b_half_mb() {
+        // 7B bf16: 2·32·4096·2 = 512 KiB/token — the well-known figure
+        let b = kv_bytes_per_token(&LlamaConfig::llama2_7b(), Dtype::Bf16);
+        assert_eq!(b, 524288.0);
+    }
+
+    #[test]
+    fn gqa_70b_kv_smaller_per_layer() {
+        let b70 = kv_bytes_per_token(&LlamaConfig::llama2_70b(), Dtype::Bf16);
+        let b7 = kv_bytes_per_token(&LlamaConfig::llama2_7b(), Dtype::Bf16);
+        // 70B has 2.5× layers but 8× fewer kv heads: per-token KV is similar
+        assert!(b70 < 2.0 * b7);
+    }
+
+    #[test]
+    fn a800_fits_7b_tp1_with_huge_pool() {
+        let p = Platform::get(PlatformId::A800);
+        let m = serve_memory(&p, &LlamaConfig::llama2_7b(), 1, Dtype::Bf16, 0.9);
+        assert!(m.kv_pool_per_gpu > 40e9);
+        assert!(m.kv_token_capacity > 80_000);
+    }
+
+    #[test]
+    fn rtx_needs_tp_for_13b() {
+        let p = Platform::get(PlatformId::Rtx3090Nvl);
+        let cfg = LlamaConfig::llama2_13b();
+        assert!(serve_memory(&p, &cfg, 1, Dtype::Bf16, 0.9).kv_token_capacity < 1000);
+        let tp = min_tp_that_fits(&p, &cfg, Dtype::Bf16, 0.9, 20_000).unwrap();
+        assert!(tp >= 2);
+    }
+
+    #[test]
+    fn seventy_b_oom_on_24gb_low_util() {
+        // TGI's conservative memory manager (util 0.8) cannot host 70B on
+        // 8×24 GB — the Fig. 6 OOM note
+        let p = Platform::get(PlatformId::Rtx4090);
+        let cfg = LlamaConfig::llama2_70b();
+        assert_eq!(min_tp_that_fits(&p, &cfg, Dtype::Bf16, 0.8, 40_000), None);
+    }
+}

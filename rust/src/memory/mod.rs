@@ -1,0 +1,8 @@
+//! Memory accounting: training-state partitioning (ZeRO/offload/quant/
+//! recompute/PEFT) and serving-side weight + KV budgets.
+
+pub mod kv;
+pub mod training;
+
+pub use kv::{kv_bytes_per_token, serve_memory, ServeMemory};
+pub use training::{activation_bytes, check_fit, training_memory, Fit, MemoryBreakdown};

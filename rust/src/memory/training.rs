@@ -1,0 +1,347 @@
+//! Training-memory accounting under ZeRO × offload × quantization ×
+//! recomputation × PEFT — the "M (GB)" columns and OOM cells of
+//! Tables II, III, IV, IX.
+//!
+//! Mixed-precision (bf16) Adam training per parameter:
+//!   weights 2 B, gradients 2 B, optimizer m+v in fp32 8 B, fp32 master 4 B
+//! (the ZeRO paper's 16 B/param budget).  ZeRO-1/2/3 divide the optimizer /
+//! gradient / weight terms by the DP degree; offload moves them to host
+//! RAM; NF4 quantization shrinks frozen weights to 0.5 B (+3% quantization
+//! constants); LoRA freezes the base (no grads/optimizer for it) and adds
+//! rank-r adapters.
+
+use crate::config::{LlamaConfig, Method, Tuning, ZeroStage};
+use crate::hw::Platform;
+
+/// Bytes per parameter for each state component.  The paper "loads the
+/// model weight into bf16 by default"; the Adam states observed in its
+/// memory numbers are bf16 too (w2 + g2 + m2 + v2 ≈ 8 B/param gives the
+/// measured 66.7 GB for Naive 7B; fp32 states would OOM the A800).
+pub const W_BYTES: f64 = 2.0;
+pub const G_BYTES: f64 = 2.0;
+pub const OPT_BYTES: f64 = 4.0; // bf16 m + v
+
+/// Where each state component lives after partitioning/offload.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryBreakdown {
+    /// per-GPU bytes
+    pub weights: f64,
+    pub grads: f64,
+    pub optimizer: f64,
+    pub activations: f64,
+    /// allocator / fragmentation / comm buffers
+    pub buffers: f64,
+    /// framework + context overhead
+    pub overhead: f64,
+    /// bytes placed in host RAM by offloading (whole job, not per GPU)
+    pub host_bytes: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn gpu_total(&self) -> f64 {
+        self.weights + self.grads + self.optimizer + self.activations
+            + self.buffers + self.overhead
+    }
+}
+
+/// LoRA adapter parameter count: two rank-r matrices on every linear in
+/// attention + MLP (the PEFT default targets q,k,v,o + gate,up,down).
+pub fn lora_params(cfg: &LlamaConfig, rank: u64) -> f64 {
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    let kv = (cfg.n_kv_heads * cfg.head_dim()) as f64;
+    let r = rank as f64;
+    let per_layer = r * (d + d)        // q
+        + 2.0 * r * (d + kv)           // k, v
+        + r * (d + d)                  // o
+        + 2.0 * r * (d + ff)           // gate, up
+        + r * (ff + d);                // down
+    cfg.n_layers as f64 * per_layer
+}
+
+/// Activation bytes per GPU for one step (bf16), without recomputation:
+/// every decoder layer stores its intermediate tensors for backward.
+pub fn activation_bytes(cfg: &LlamaConfig, batch: u64, seq: u64, flash: bool,
+                        recompute: bool) -> f64 {
+    let b = batch as f64;
+    let s = seq as f64;
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    let h = cfg.n_heads as f64;
+    let l = cfg.n_layers as f64;
+    // per layer (Korthikanti et al. 2022, bf16): attention input, QKV,
+    // softmax output (unless flash), MLP intermediates, norms
+    let attn_scores = if flash { 0.0 } else { 2.0 * h * s * s * b };
+    let per_layer = 2.0 * b * s * (
+            4.0 * d      // ln-in, q, k, v (k/v folded for GQA ≈ upper bound)
+            + 2.0 * d    // attn out, residual
+            + 3.0 * ff   // gate, up, silu-prod
+            + 2.0 * d    // ln2 + mlp out
+        ) + attn_scores;
+    let logits = 2.0 * b * s * (cfg.vocab as f64); // head input + logits
+    if recompute {
+        // only layer-boundary activations are kept (checkpoint per layer)
+        2.0 * b * s * d * l + logits
+    } else {
+        per_layer * l + logits
+    }
+}
+
+/// Per-GPU memory breakdown for a pre-training / fine-tuning method.
+pub fn training_memory(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    m: &Method,
+    batch: u64,
+    seq: u64,
+) -> MemoryBreakdown {
+    let n = plat.n_gpus as f64;
+    let p = cfg.param_count();
+    let mut out = MemoryBreakdown { overhead: plat.base_overhead, ..Default::default() };
+
+    // --- trainable vs frozen parameter split
+    let (frozen_p, train_p) = match m.tuning {
+        Tuning::Full => (0.0, p),
+        Tuning::Lora { rank } | Tuning::QLora { rank } => (p, lora_params(cfg, rank)),
+    };
+
+    // --- trainable split under "Q" pre-training: 4-bit double-quantized
+    // base per Dettmers et al. — the base is frozen (quantized tensors
+    // cannot accumulate grads); only norms/head-scale params train, which
+    // is also why the paper warns Q "may lead to convergence failure".
+    let (frozen_p, train_p) = if m.quant && matches!(m.tuning, Tuning::Full) {
+        (p, 0.02 * p)
+    } else {
+        (frozen_p, train_p)
+    };
+
+    // --- frozen / full weights on GPU
+    let w_bytes_per_param = if m.quant || matches!(m.tuning, Tuning::QLora { .. }) {
+        0.5 * 1.03 // NF4 + double-quantization constants
+    } else {
+        W_BYTES
+    };
+    let mut weights = frozen_p * w_bytes_per_param + train_p * W_BYTES;
+    if m.quant || matches!(m.tuning, Tuning::QLora { .. }) {
+        weights += 1.5e9 * (p / 7e9).min(4.0); // dequantization workspace
+    }
+    // ZeRO-3 shards weights across GPUs — frozen LoRA bases included
+    // (DeepSpeed partitions all module parameters); quantized bases are
+    // not shardable (bitsandbytes tensors), hence no QL+Z3 rows in the
+    // paper's tables.
+    let z3_shardable = !m.quant && !matches!(m.tuning, Tuning::QLora { .. });
+    if m.zero == ZeroStage::Z3 && z3_shardable {
+        // shard + live-parameter gather window (stage3_max_live_parameters)
+        weights = p * W_BYTES / n + (2e9f64).min(p * W_BYTES);
+        if m.offload {
+            if matches!(m.tuning, Tuning::Full) {
+                // parameters live in pinned host RAM, paged in per layer
+                out.host_bytes += p * W_BYTES;
+                weights = (2e9f64).min(p * W_BYTES);
+            } else {
+                // PEFT: frozen base stays GPU-sharded (only the tiny
+                // adapter optimizer offloads); smaller gather window
+                weights = p * W_BYTES / n + (0.5e9f64).min(p * W_BYTES);
+            }
+        }
+    }
+    out.weights = weights;
+
+    // --- gradients: peak includes transient working buffers
+    let grads = match (m.zero, matches!(m.tuning, Tuning::Full) && !m.quant) {
+        // PEFT / quantized-base: tiny trainable set, no bucketing games
+        (_, false) => train_p * G_BYTES,
+        // plain DDP holds the full gradient through backward
+        (ZeroStage::None, true) => train_p * G_BYTES,
+        // Z1/Z2/Z3 reduce per bucket and free: shard + one bucket
+        (ZeroStage::Z1 | ZeroStage::Z2 | ZeroStage::Z3, true) => {
+            train_p * G_BYTES / n + 0.5e9
+        }
+    };
+    out.grads = grads;
+
+    // --- optimizer state (trainable params only)
+    let mut opt = train_p * OPT_BYTES;
+    if m.zero != ZeroStage::None {
+        opt /= n;
+    }
+    if m.offload {
+        out.host_bytes += opt * n; // all shards pinned in host RAM
+        opt *= 0.1; // transient working buffers only
+    }
+    out.optimizer = opt;
+
+    // --- activations
+    out.activations = activation_bytes(cfg, batch, seq, m.flash, m.recompute);
+
+    // --- allocator/comm buffers: fraction of resident state + a floor.
+    // ZeRO/offload pin extra staging buffers proportional to what they
+    // manage AND to available headroom — the paper explicitly notes the
+    // same method takes more memory on A800 "because memory are pinned…
+    // based on available physical memory which is larger on A800".
+    let resident = out.weights + out.grads + out.optimizer + out.activations;
+    let headroom_factor = (plat.gpu.mem_bytes / 24e9).min(4.0);
+    let mut buffers = 0.05 * resident + 0.4e9;
+    // PEFT runs hand DeepSpeed only the adapters — no greedy pinning of
+    // the (frozen) bulk; full-FT ZeRO/offload pins proportionally to what
+    // it manages and to available headroom.
+    if (m.zero != ZeroStage::None || m.offload) && !m.is_peft() {
+        buffers += 0.18 * headroom_factor * resident;
+    }
+    out.buffers = buffers;
+    out
+}
+
+/// Does this configuration fit?  (paper's "-" cells)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fit {
+    Ok,
+    OomGpu,
+    OomHost,
+}
+
+pub fn check_fit(plat: &Platform, mem: &MemoryBreakdown) -> Fit {
+    if mem.gpu_total() > plat.gpu.mem_bytes {
+        Fit::OomGpu
+    } else if mem.host_bytes > plat.usable_cpu_mem() {
+        Fit::OomHost
+    } else {
+        Fit::Ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::hw::PlatformId;
+
+    fn a800() -> Platform {
+        Platform::get(PlatformId::A800)
+    }
+
+    fn mem(label: &str, model: &LlamaConfig, plat: &Platform, bs: u64) -> MemoryBreakdown {
+        training_memory(plat, model, &Method::parse(label).unwrap(), bs, 350)
+    }
+
+    #[test]
+    fn naive_7b_fits_a800_not_rtx() {
+        let m7 = LlamaConfig::llama2_7b();
+        let a = mem("Naive", &m7, &a800(), 1);
+        assert_eq!(check_fit(&a800(), &a), Fit::Ok);
+        // paper Table III: Naive ≈ 66.7 GB/GPU on A800
+        let gb = a.gpu_total() / 1e9;
+        assert!(gb > 50.0 && gb < 80.0, "naive 7B = {gb:.1} GB");
+        let r4 = Platform::get(PlatformId::Rtx4090);
+        assert_eq!(check_fit(&r4, &mem("Naive", &m7, &r4, 1)), Fit::OomGpu);
+    }
+
+    #[test]
+    fn zero_ladder_monotone() {
+        // Z2 < Naive; Z3 < Z2; offload smallest (paper Table III ordering)
+        let m7 = LlamaConfig::llama2_7b();
+        let p = a800();
+        let naive = mem("Naive", &m7, &p, 1).gpu_total();
+        let z2 = mem("Z2", &m7, &p, 1).gpu_total();
+        let z3 = mem("Z3", &m7, &p, 1).gpu_total();
+        let z3o = mem("Z3+O", &m7, &p, 1).gpu_total();
+        assert!(z2 < naive, "Z2 {z2} !< naive {naive}");
+        assert!(z3 < z2);
+        assert!(z3o < z3);
+        // paper: Z2 ≈ 57% of naive
+        let ratio = z2 / naive;
+        assert!(ratio > 0.4 && ratio < 0.8, "Z2/naive = {ratio:.2}");
+    }
+
+    #[test]
+    fn z3_offload_rtx_runs_7b() {
+        // Table III: Z3+O is the only full-FT 7B row alive on 24 GB GPUs
+        let m7 = LlamaConfig::llama2_7b();
+        for id in [PlatformId::Rtx4090, PlatformId::Rtx3090Nvl] {
+            let p = Platform::get(id);
+            let z3o = mem("Z3+O", &m7, &p, 1);
+            assert_eq!(check_fit(&p, &z3o), Fit::Ok, "{:?}", id);
+            let z2 = mem("Z2", &m7, &p, 1);
+            assert_eq!(check_fit(&p, &z2), Fit::OomGpu, "{:?}", id);
+        }
+    }
+
+    #[test]
+    fn quant_shrinks_to_single_digit_gb() {
+        // Table III: Q ≈ 9.8-10.1 GB on every platform
+        let m7 = LlamaConfig::llama2_7b();
+        let q = mem("Q", &m7, &a800(), 1);
+        let gb = q.gpu_total() / 1e9;
+        assert!(gb > 4.0 && gb < 16.0, "quant 7B = {gb:.1} GB");
+    }
+
+    #[test]
+    fn recompute_helps_more_at_large_batch() {
+        let m7 = LlamaConfig::llama2_7b();
+        let small_save = mem("Naive", &m7, &a800(), 1).activations
+            - mem("R", &m7, &a800(), 1).activations;
+        let big_save = mem("Naive", &m7, &a800(), 32).activations
+            - mem("R", &m7, &a800(), 32).activations;
+        assert!(big_save > 20.0 * small_save);
+    }
+
+    #[test]
+    fn lora_much_smaller_than_full() {
+        let m7 = LlamaConfig::llama2_7b();
+        let full = mem("Naive", &m7, &a800(), 1).gpu_total();
+        let lora = mem("L", &m7, &a800(), 1).gpu_total();
+        let qlora = mem("QL", &m7, &a800(), 1).gpu_total();
+        assert!(lora < 0.5 * full);
+        // paper Table IX: QLoRA ≈ 13.7 GB vs LoRA 22.7 GB
+        assert!(qlora < 0.8 * lora, "ql {qlora} vs l {lora}");
+    }
+
+    #[test]
+    fn lora_param_count_sane() {
+        // rank-64 adapters on 7B ≈ 160M params (public PEFT numbers)
+        let p = lora_params(&LlamaConfig::llama2_7b(), 64);
+        assert!(p > 5e7 && p < 4e8, "lora params {p}");
+    }
+
+    #[test]
+    fn offload_host_demand_scales_and_gates() {
+        // 13B Z3+O pins ~78 GB host RAM: still fits the 128 GB 3090 box
+        // (Table III shows it running there)…
+        let p3 = Platform::get(PlatformId::Rtx3090Nvl);
+        let z3o_13 = mem("Z3+O", &LlamaConfig::llama2_13b(), &p3, 1);
+        assert!(z3o_13.host_bytes > 50e9);
+        assert_eq!(check_fit(&p3, &z3o_13), Fit::Ok);
+        // …but 70B full-FT Z3+O overflows (grad working set on GPU and/or
+        // pinned host states) — the paper's "at most a 30B model" claim
+        let z3o_70 = mem("Z3+O", &LlamaConfig::llama2_70b(), &p3, 1);
+        assert_ne!(check_fit(&p3, &z3o_70), Fit::Ok);
+    }
+
+    #[test]
+    fn lora_z3_offload_fits_70b_on_24gb() {
+        // Table IX: L+F+R+Z3+O runs Llama2-70B on RTX4090/3090 (~13 GB)
+        let m70 = LlamaConfig::llama2_70b();
+        for id in [PlatformId::Rtx4090, PlatformId::Rtx3090Nvl] {
+            let p = Platform::get(id);
+            let m = mem("L+F+R+Z3+O", &m70, &p, 1);
+            assert_eq!(check_fit(&p, &m), Fit::Ok, "{:?}: {:.1} GB", id,
+                       m.gpu_total() / 1e9);
+            assert!(m.gpu_total() < 24e9);
+        }
+    }
+
+    #[test]
+    fn zero_does_not_touch_activations() {
+        let m7 = LlamaConfig::llama2_7b();
+        let a = mem("Naive", &m7, &a800(), 4).activations;
+        let b = mem("Z3", &m7, &a800(), 4).activations;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gpu_total_is_component_sum() {
+        let m = mem("F+R+Z3+O", &LlamaConfig::llama2_13b(), &a800(), 8);
+        let sum = m.weights + m.grads + m.optimizer + m.activations + m.buffers + m.overhead;
+        assert!((m.gpu_total() - sum).abs() < 1.0);
+    }
+}

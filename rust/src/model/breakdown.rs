@@ -1,0 +1,106 @@
+//! Module-wise time breakdowns — the data behind Tables V, VI, VII,
+//! VIII, XIII and Figure 5.
+
+use super::modules::{backward_modules, forward_modules, ModuleKind, ModuleOps};
+use crate::config::LlamaConfig;
+use crate::hw::GpuSpec;
+use crate::ops::{total_time, Op};
+
+/// Per-module timing entry.
+#[derive(Debug, Clone)]
+pub struct ModuleTime {
+    pub kind: ModuleKind,
+    pub seconds: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+fn times(gpu: &GpuSpec, mods: &[ModuleOps]) -> Vec<ModuleTime> {
+    mods.iter()
+        .map(|m| ModuleTime {
+            kind: m.kind,
+            seconds: total_time(gpu, &m.ops),
+            flops: m.ops.iter().map(Op::flops).sum(),
+            bytes: m.ops.iter().map(Op::bytes).sum(),
+        })
+        .collect()
+}
+
+/// Forward-phase module times (Table VI left half).
+pub fn forward_breakdown(
+    gpu: &GpuSpec, cfg: &LlamaConfig, batch: u64, seq: u64, quant: bool, flash: bool,
+) -> Vec<ModuleTime> {
+    times(gpu, &forward_modules(cfg, batch, seq, quant, flash))
+}
+
+/// Backward-phase module times (Table VI right half, before comm).
+pub fn backward_breakdown(
+    gpu: &GpuSpec, cfg: &LlamaConfig, batch: u64, seq: u64, quant: bool, flash: bool,
+) -> Vec<ModuleTime> {
+    times(gpu, &backward_modules(cfg, batch, seq, quant, flash))
+}
+
+/// Total compute seconds of a breakdown.
+pub fn total(b: &[ModuleTime]) -> f64 {
+    b.iter().map(|m| m.seconds).sum()
+}
+
+/// Share (%) of each module in a breakdown.
+pub fn percentages(b: &[ModuleTime]) -> Vec<(ModuleKind, f64)> {
+    let t = total(b).max(1e-18);
+    b.iter().map(|m| (m.kind, m.seconds / t * 100.0)).collect()
+}
+
+/// Fraction of time spent in GEMM-backed ops (Table XIII).
+pub fn gemm_fraction(gpu: &GpuSpec, mods: &[ModuleOps]) -> f64 {
+    let mut gemm = 0.0;
+    let mut all = 0.0;
+    for m in mods {
+        for op in &m.ops {
+            let t = crate::ops::op_time(gpu, op);
+            all += t;
+            if matches!(op, Op::Gemm(_) | Op::FusedGemm { .. }) {
+                gemm += t;
+            }
+        }
+    }
+    if all <= 0.0 { 0.0 } else { gemm / all }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LlamaConfig;
+    use crate::hw::GpuSpec;
+    use crate::model::modules::forward_modules;
+
+    #[test]
+    fn percentages_sum_to_100() {
+        let b = forward_breakdown(&GpuSpec::a800(), &LlamaConfig::llama2_7b(),
+                                  2, 350, false, false);
+        let sum: f64 = percentages(&b).iter().map(|(_, p)| p).sum();
+        assert!((sum - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table13_gemm_fraction_over_half() {
+        // paper: GEMM kernels are >60% of fwd and bwd time
+        let cfg = LlamaConfig::llama2_7b();
+        let gpu = GpuSpec::a800();
+        let frac = gemm_fraction(&gpu, &forward_modules(&cfg, 2, 350, false, false));
+        assert!(frac > 0.5 && frac < 0.92, "gemm fraction {frac}");
+    }
+
+    #[test]
+    fn fig5_shares_stable_across_batch() {
+        // paper Fig. 5: module shares barely move from BS 2 to BS 32
+        let cfg = LlamaConfig::llama2_7b();
+        let gpu = GpuSpec::a800();
+        let b2 = percentages(&forward_breakdown(&gpu, &cfg, 2, 350, false, false));
+        let b32 = percentages(&forward_breakdown(&gpu, &cfg, 32, 350, false, false));
+        for ((k2, p2), (k32, p32)) in b2.iter().zip(&b32) {
+            assert_eq!(k2, k32);
+            assert!((p2 - p32).abs() < 12.0, "{:?}: {p2:.1}% vs {p32:.1}%", k2);
+        }
+    }
+}

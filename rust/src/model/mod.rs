@@ -1,0 +1,8 @@
+//! Analytical Llama2 model: module tree (paper §III-B), op decomposition,
+//! and the module-wise time breakdowns of §IV-B / §VI-B.
+
+pub mod breakdown;
+pub mod modules;
+
+pub use breakdown::{backward_breakdown, forward_breakdown, ModuleTime};
+pub use modules::{backward_modules, decode_modules, forward_modules, ModuleKind, ModuleOps};

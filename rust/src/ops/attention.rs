@@ -1,0 +1,166 @@
+//! Attention-operator cost: naive (Bmm0 + Softmax + Bmm1, materializing
+//! the S×S score matrix in HBM) vs FlashAttention (fused, IO-aware).
+//!
+//! Paper §IV-C: "FlashAttention fuses the operations of QKᵀ, softmax, PV
+//! and a few element-wise operations into one kernel, using more accesses
+//! to the low-latency high-bandwidth GPU SRAM and reducing accesses to
+//! the high-latency low-bandwidth GPU DRAM" — Table VIII measures 34.9%
+//! fwd / 24.7% bwd improvements, the ratio our model must land near.
+
+use super::gemm::Gemm;
+use super::op::{op_time, Op};
+use crate::hw::{Dtype, GpuSpec};
+
+/// One attention invocation over (batch, heads, q_len, kv_len, head_dim).
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShape {
+    pub batch: u64,
+    pub heads: u64,
+    pub q_len: u64,
+    pub kv_len: u64,
+    pub head_dim: u64,
+}
+
+impl AttnShape {
+    pub fn square(batch: u64, heads: u64, seq: u64, head_dim: u64) -> Self {
+        AttnShape { batch, heads, q_len: seq, kv_len: seq, head_dim }
+    }
+
+    fn bh(&self) -> u64 {
+        self.batch * self.heads
+    }
+
+    /// FLOPs of QKᵀ + PV (2 batched GEMMs).
+    pub fn flops(&self) -> f64 {
+        2.0 * 2.0 * self.bh() as f64 * self.q_len as f64 * self.kv_len as f64
+            * self.head_dim as f64
+    }
+}
+
+/// Naive attention decomposed into the ops the paper's Table VI names:
+/// Bmm0 (QKᵀ), Softmax, Bmm1 (PV) — the S×S score matrix hits HBM twice.
+pub fn naive_ops(s: &AttnShape, dt: Dtype) -> Vec<Op> {
+    let bh = s.bh();
+    // batched GEMMs are issued per bh-group; fold batch into M
+    let bmm0 = Gemm {
+        m: bh * s.q_len,
+        n: s.kv_len,
+        k: s.head_dim,
+        weight_dtype: dt,
+        act_dtype: dt,
+    };
+    let scores = bh as f64 * s.q_len as f64 * s.kv_len as f64;
+    let softmax = Op::ew(scores, dt, 3.0, 5.0); // read, max/sum pass, write
+    let bmm1 = Gemm {
+        m: bh * s.q_len,
+        n: s.head_dim,
+        k: s.kv_len,
+        weight_dtype: dt,
+        act_dtype: dt,
+    };
+    vec![Op::Gemm(bmm0), softmax, Op::Gemm(bmm1)]
+}
+
+/// Flash attention as one fused op: same FLOPs, HBM traffic only for
+/// Q, K, V, O (+ K/V re-reads per query tile), no S×S materialization.
+pub fn flash_op(s: &AttnShape, dt: Dtype, block_q: u64) -> Op {
+    let bh = s.bh() as f64;
+    let qo = 2.0 * bh * s.q_len as f64 * s.head_dim as f64;
+    let q_tiles = s.q_len.div_ceil(block_q) as f64;
+    let kv = 2.0 * bh * s.kv_len as f64 * s.head_dim as f64 * q_tiles;
+    Op::Gemm(Gemm {
+        // express as an equivalent GEMM so the roofline applies; fold the
+        // fused-kernel efficiency into K-depth by using head_dim-scale K
+        m: (bh * s.q_len as f64) as u64,
+        n: s.kv_len,
+        k: 2 * s.head_dim, // both matmuls share the fused mainloop
+        weight_dtype: dt,
+        act_dtype: dt,
+    })
+    .with_bytes_override((qo + kv) * dt.bytes())
+}
+
+impl Op {
+    /// Attach an explicit HBM-byte count (fused kernels move less than the
+    /// sum of their parts — the whole point of FlashAttention).
+    pub fn with_bytes_override(self, bytes: f64) -> Op {
+        match self {
+            Op::Gemm(g) => Op::FusedGemm { gemm: g, bytes },
+            other => other,
+        }
+    }
+}
+
+/// Efficiency knobs for the fused kernel: it reaches less of peak than a
+/// pure GEMM (softmax + masking in the mainloop, online-rescale traffic),
+/// calibrated so the modeled fwd improvement lands near Table VIII's 34.9%.
+pub const FUSED_EFF_MULT_MIN: f64 = 0.25;
+pub const FUSED_EFF_MULT_RANGE: f64 = 0.45;
+
+/// Fused-kernel efficiency multiplier grows with kv_len: short sequences
+/// leave the kernel occupancy-bound (paper's 34.9% at s=350), long ones
+/// approach published FlashAttention efficiencies (~60-70% of peak).
+pub fn fused_eff_mult(kv_len: u64) -> f64 {
+    FUSED_EFF_MULT_MIN + FUSED_EFF_MULT_RANGE * kv_len as f64 / (kv_len as f64 + 1024.0)
+}
+/// The fused mainloop streams over kv_len, so its pipeline depth is long
+/// regardless of the equivalent-GEMM K = 2·head_dim.
+pub const FUSED_PIPELINE_K: u64 = 1024;
+
+/// Wall time of naive attention.
+pub fn naive_time(gpu: &GpuSpec, s: &AttnShape, dt: Dtype) -> f64 {
+    naive_ops(s, dt).iter().map(|o| op_time(gpu, o)).sum()
+}
+
+/// Wall time of flash attention.
+pub fn flash_time(gpu: &GpuSpec, s: &AttnShape, dt: Dtype) -> f64 {
+    op_time(gpu, &flash_op(s, dt, 128))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GpuSpec;
+
+    fn shape_7b(batch: u64, seq: u64) -> AttnShape {
+        AttnShape::square(batch, 32, seq, 128)
+    }
+
+    #[test]
+    fn flash_faster_than_naive() {
+        let gpu = GpuSpec::a800();
+        for (b, s) in [(2, 350), (8, 512), (32, 350)] {
+            let n = naive_time(&gpu, &shape_7b(b, s), Dtype::Bf16);
+            let f = flash_time(&gpu, &shape_7b(b, s), Dtype::Bf16);
+            assert!(f < n, "flash {f} !< naive {n} at b={b} s={s}");
+        }
+    }
+
+    #[test]
+    fn table8_improvement_band() {
+        // paper: fwd improvement 34.9% at 7B scale (b=2, s=350)
+        let gpu = GpuSpec::a800();
+        let s = shape_7b(2, 350);
+        let n = naive_time(&gpu, &s, Dtype::Bf16);
+        let f = flash_time(&gpu, &s, Dtype::Bf16);
+        let improvement = (n - f) / n * 100.0;
+        assert!(improvement > 15.0 && improvement < 70.0, "improvement {improvement:.1}%");
+    }
+
+    #[test]
+    fn flash_advantage_does_not_degrade_with_seq() {
+        let gpu = GpuSpec::a800();
+        let r1 = naive_time(&gpu, &shape_7b(1, 512), Dtype::Bf16)
+            / flash_time(&gpu, &shape_7b(1, 512), Dtype::Bf16);
+        let r2 = naive_time(&gpu, &shape_7b(1, 4096), Dtype::Bf16)
+            / flash_time(&gpu, &shape_7b(1, 4096), Dtype::Bf16);
+        assert!(r1 > 1.0 && r2 > 1.0, "flash must win at both lengths");
+        assert!(r2 > 0.7 * r1, "flash gap collapsed: {r1} vs {r2}");
+    }
+
+    #[test]
+    fn flops_count_matches_formula() {
+        let s = AttnShape::square(2, 4, 128, 64);
+        assert_eq!(s.flops(), 2.0 * 2.0 * 8.0 * 128.0 * 128.0 * 64.0);
+    }
+}

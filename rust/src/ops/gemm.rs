@@ -1,0 +1,198 @@
+//! GEMM performance model (paper §VII-A: Table XII, Table XIII, Fig. 11).
+//!
+//! Achieved fraction of peak = tile quantization × wave quantization ×
+//! K-depth pipeline factor, and the kernel runs at
+//! max(compute time, memory time) + launch overhead (roofline).
+//!
+//! This reproduces the paper's observations:
+//!  * small M (= batch·seq) ⇒ low peak % (Table XII: 66.6% at M=666 vs
+//!    79.4% at M=10624);
+//!  * M that is an integer multiple of the tensor-core scale beats
+//!    unaligned M (Fig. 11's unaligned_N11008_K4096 curve);
+//!  * "blindly increasing batch size does not always yield improved
+//!    peak" — wave quantization oscillates;
+//!  * once M is large, bigger N·K raises peak.
+
+use crate::hw::{Dtype, GpuSpec};
+
+/// Modeled GEMM: C[M,N] = A[M,K] · B[K,N].
+#[derive(Debug, Clone, Copy)]
+pub struct Gemm {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// dtype of the weight/B operand (quantization shrinks its bytes)
+    pub weight_dtype: Dtype,
+    /// dtype of activations / accumulation math
+    pub act_dtype: Dtype,
+}
+
+impl Gemm {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        Gemm { m, n, k, weight_dtype: Dtype::Bf16, act_dtype: Dtype::Bf16 }
+    }
+
+    pub fn with_weight_dtype(mut self, dt: Dtype) -> Self {
+        self.weight_dtype = dt;
+        self
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// HBM traffic: read A, B; write C (ignores cache reuse of tiles,
+    /// which the efficiency factor absorbs).
+    pub fn bytes(&self) -> f64 {
+        let a = self.m as f64 * self.k as f64 * self.act_dtype.bytes();
+        let b = self.k as f64 * self.n as f64 * self.weight_dtype.bytes();
+        let c = self.m as f64 * self.n as f64 * self.act_dtype.bytes();
+        a + b + c
+    }
+}
+
+/// Internal kernel tiling the efficiency model assumes (A100-class cuBLAS
+/// default tile; also the MXU 128-lane granularity on TPU — DESIGN.md
+/// §Hardware-Adaptation).
+const TILE_M: u64 = 128;
+const TILE_N: u64 = 128;
+/// Below this K the mainloop can't hide latencies.
+const K_HALF_EFF: f64 = 256.0;
+/// Empirical ceiling: even huge aligned GEMMs top out below peak
+/// (the paper's "still lower than the ideal value of 90%").
+const MAX_EFF: f64 = 0.88;
+/// Fraction of tensor-core peak a streaming (GEMV-style) kernel can reach:
+/// cuBLAS falls back to these for skinny M, where the GEMM is weight-read
+/// bound rather than tile-math bound.
+const STREAM_PEAK_FRAC: f64 = 0.08;
+
+fn dim_util(size: u64, tile: u64) -> f64 {
+    let padded = size.div_ceil(tile) * tile;
+    size as f64 / padded as f64
+}
+
+/// Fraction of tensor-core peak this GEMM achieves.
+pub fn efficiency(gpu: &GpuSpec, g: &Gemm) -> f64 {
+    // tile quantization: padding waste along M and N
+    let tq = dim_util(g.m, TILE_M).max(dim_util(g.m, g.tc_pad())) * dim_util(g.n, TILE_N);
+    // tensor-core alignment: unaligned M forces a slow-path epilogue
+    let align = if g.m % g.tc_pad() == 0 { 1.0 } else { 0.9 };
+    // wave quantization: last wave of thread blocks underfills the SMs
+    let tiles = g.m.div_ceil(TILE_M) * g.n.div_ceil(TILE_N);
+    let waves = tiles.div_ceil(gpu.sms as u64);
+    let wq = tiles as f64 / (waves * gpu.sms as u64) as f64;
+    // K-depth: short mainloops can't hide memory latency
+    let kd = g.k as f64 / (g.k as f64 + K_HALF_EFF);
+    MAX_EFF * tq * align * (0.5 + 0.5 * wq) * kd
+}
+
+impl Gemm {
+    fn tc_pad(&self) -> u64 {
+        16
+    }
+}
+
+/// Wall time of the GEMM on a GPU: the library picks the better of the
+/// tensor-core tiled kernel and a streaming (GEMV-style) kernel, so skinny
+/// decode GEMMs are priced as weight-read-bound, not tile-quantized.
+pub fn gemm_time(gpu: &GpuSpec, g: &Gemm) -> f64 {
+    let eff = efficiency(gpu, g);
+    let t_memory = g.bytes() / gpu.mem_bw;
+    // tensor-core tiled kernel
+    let t_tc = (g.flops() / (gpu.peak_flops(g.act_dtype) * eff)).max(t_memory);
+    // streaming kernel: saturates HBM, capped at a small compute rate
+    let t_stream = (g.bytes() * 1.05 / gpu.mem_bw)
+        .max(g.flops() / (gpu.peak_flops(g.act_dtype) * STREAM_PEAK_FRAC));
+    t_tc.min(t_stream) + gpu.kernel_overhead
+}
+
+/// Achieved TFLOP/s (Fig. 11's y-axis).
+pub fn achieved_tflops(gpu: &GpuSpec, g: &Gemm) -> f64 {
+    g.flops() / gemm_time(gpu, g) / 1e12
+}
+
+/// Achieved percent of dtype peak (Table XII's "Peak(%)").
+pub fn peak_pct(gpu: &GpuSpec, g: &Gemm) -> f64 {
+    achieved_tflops(gpu, g) * 1e12 / gpu.peak_flops(g.act_dtype) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::GpuSpec;
+
+    fn a800() -> GpuSpec {
+        GpuSpec::a800()
+    }
+
+    #[test]
+    fn table12_shape_small_m_less_efficient() {
+        // Naive: (666, 11008, 4096) vs Recompute: (10624, 11008, 4096)
+        let naive = Gemm::new(666, 11008, 4096);
+        let recomp = Gemm::new(10624, 11008, 4096);
+        let (pn, pr) = (peak_pct(&a800(), &naive), peak_pct(&a800(), &recomp));
+        assert!(pn < pr, "naive {pn:.1}% !< recompute {pr:.1}%");
+        // paper: 66.6% vs 79.4%; we require the same regime (55-90%)
+        assert!(pn > 40.0 && pn < 80.0, "naive peak {pn:.1}%");
+        assert!(pr > 65.0 && pr < 90.0, "recompute peak {pr:.1}%");
+    }
+
+    #[test]
+    fn fig11_unaligned_m_slower() {
+        let gpu = a800();
+        for m in [4096u64, 8192, 12288] {
+            let aligned = achieved_tflops(&gpu, &Gemm::new(m, 11008, 4096));
+            let unaligned = achieved_tflops(&gpu, &Gemm::new(m + 13, 11008, 4096));
+            assert!(aligned > unaligned, "m={m}");
+        }
+    }
+
+    #[test]
+    fn fig11_bigger_nk_higher_peak_at_large_m() {
+        let gpu = a800();
+        let small = achieved_tflops(&gpu, &Gemm::new(16384, 4096, 4096));
+        let big = achieved_tflops(&gpu, &Gemm::new(16384, 16384, 16384));
+        assert!(big > small);
+    }
+
+    #[test]
+    fn quantized_weights_speed_up_memory_bound_gemm() {
+        // decode-like GEMM: M tiny => weight-read bound; NF4 wins ~4x.
+        let gpu = a800();
+        let bf16 = Gemm::new(8, 4096, 4096);
+        let nf4 = Gemm::new(8, 4096, 4096).with_weight_dtype(Dtype::Nf4);
+        let (tb, tq) = (gemm_time(&gpu, &bf16), gemm_time(&gpu, &nf4));
+        assert!(tq < tb, "nf4 {tq} !< bf16 {tb}");
+        assert!(tb / tq > 2.0, "expected larger speedup: {}", tb / tq);
+    }
+
+    #[test]
+    fn skinny_gemm_is_memory_bound() {
+        // streaming path: time ≈ bytes / bandwidth for M=8
+        let gpu = a800();
+        let g = Gemm::new(8, 4096, 4096);
+        let t = gemm_time(&gpu, &g);
+        let t_mem = g.bytes() / gpu.mem_bw;
+        assert!(t < 3.0 * t_mem + gpu.kernel_overhead * 2.0, "t={t} t_mem={t_mem}");
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        let gpu = a800();
+        for m in [1u64, 17, 128, 666, 4096, 16397] {
+            for nk in [(256u64, 256u64), (4096, 4096), (11008, 4096)] {
+                let e = efficiency(&gpu, &Gemm::new(m, nk.0, nk.1));
+                assert!(e > 0.0 && e <= MAX_EFF, "eff {e} at m={m} nk={nk:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn time_scales_linearly_at_large_m() {
+        let gpu = a800();
+        let t1 = gemm_time(&gpu, &Gemm::new(8192, 4096, 4096));
+        let t2 = gemm_time(&gpu, &Gemm::new(16384, 4096, 4096));
+        let ratio = t2 / t1;
+        assert!(ratio > 1.8 && ratio < 2.2, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Operator-level cost models: GEMM roofline + efficiency (Fig. 11,
+//! Tables XII/XIII), naive vs flash attention (Table VIII), element-wise
+//! ops.  Constants are cross-checked against real kernels measured through
+//! the PJRT runtime by `calibrate/`.
+
+pub mod attention;
+pub mod gemm;
+pub mod op;
+
+pub use attention::AttnShape;
+pub use gemm::{achieved_tflops, efficiency, gemm_time, peak_pct, Gemm};
+pub use op::{op_time, total_time, Op};

@@ -1,0 +1,88 @@
+//! Fine-tuning report: Table IX (LoRA/QLoRA × technique grid × platforms).
+
+use crate::config::{LlamaConfig, Method, TrainWorkload};
+use crate::finetune::{finetune_step, seventy_b_methods};
+use crate::hw::{Platform, PlatformId};
+use crate::util::table::{f0, f1, oom, Table};
+
+fn wl() -> TrainWorkload {
+    TrainWorkload { seq_len: 350, batch_size: 1 }
+}
+
+/// Paper A800 reference (tokens/s) for selected 7B rows.
+pub fn paper_table9_a800_7b(label: &str) -> Option<&'static str> {
+    [
+        ("L", "14216"), ("QL", "7631"), ("L+R", "11202"), ("QL+R", "5186"),
+        ("L+F", "17182"), ("QL+F", "9792"), ("L+Z2", "15734"), ("L+Z2+O", "9152"),
+        ("L+Z3", "2846"), ("L+Z3+O", "1878"), ("QL+Z2", "10074"), ("QL+Z2+O", "6700"),
+        ("L+F+R", "12906"), ("QL+F+R", "6864"), ("L+F+R+Z2", "12730"),
+        ("L+F+R+Z2+O", "8001"), ("L+F+R+Z3", "2395"), ("L+F+R+Z3+O", "1691"),
+    ]
+    .iter()
+    .find(|(l, _)| *l == label)
+    .map(|(_, v)| *v)
+}
+
+/// Table IX: fine-tuning grid for 7B, 13B and the 70B combined rows.
+pub fn table9() -> Vec<Table> {
+    let mut out = Vec::new();
+    for (model_label, cfg, methods) in [
+        ("7B", LlamaConfig::llama2_7b(), Method::finetune_grid()),
+        ("13B", LlamaConfig::llama2_13b(), Method::finetune_grid()),
+        ("70B", LlamaConfig::llama2_70b(), seventy_b_methods()),
+    ] {
+        let mut t = Table::new(
+            &format!("Table IX — fine-tuning Llama2-{model_label}, BS 1, seq 350, r=64 \
+                      ([paper] = A800 reference for 7B)"),
+            &["Method", "A800 tok/s", "[paper]", "A800 GB", "RTX4090 tok/s",
+              "RTX4090 GB", "3090nvl tok/s", "3090nvl GB", "3090 tok/s", "3090 GB"],
+        ).align_left(0);
+        for (label, m) in methods {
+            let mut cells = vec![label.to_string()];
+            for (i, id) in PlatformId::ALL.iter().enumerate() {
+                let r = finetune_step(&Platform::get(*id), &cfg, &m, wl());
+                if r.is_oom() {
+                    cells.push(oom());
+                    if i == 0 {
+                        cells.push(if model_label == "7B" {
+                            paper_table9_a800_7b(label)
+                                .map(|p| format!("[{p}]")).unwrap_or(oom())
+                        } else { oom() });
+                    }
+                    cells.push(oom());
+                } else {
+                    cells.push(f0(r.tokens_per_s));
+                    if i == 0 {
+                        cells.push(if model_label == "7B" {
+                            paper_table9_a800_7b(label)
+                                .map(|p| format!("[{p}]")).unwrap_or(oom())
+                        } else { oom() });
+                    }
+                    cells.push(f1(r.mem.gpu_total() / 1e9));
+                }
+            }
+            t.row(cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_three_model_blocks() {
+        let ts = table9();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].n_rows(), 18); // 7B rows
+        assert_eq!(ts[2].n_rows(), 5);  // 70B combined rows
+    }
+
+    #[test]
+    fn paper_refs_resolve() {
+        assert_eq!(paper_table9_a800_7b("L"), Some("14216"));
+        assert_eq!(paper_table9_a800_7b("nope"), None);
+    }
+}

@@ -1,0 +1,258 @@
+//! Microbenchmark reports (§VII): Fig. 11 + Tables XII/XIII (GEMM),
+//! Fig. 12 + Table XIV (memcopy), Figs. 13-15 + Tables XV/XVI (comm).
+
+use crate::comm::collectives::bus_bandwidth;
+use crate::comm::sweep::{default_sizes as comm_sizes, sweep};
+use crate::comm::Collective;
+use crate::config::{LlamaConfig, Method, TrainWorkload};
+use crate::hw::memcopy::{copy_throughput, copy_time, default_sizes as mc_sizes, Dir};
+use crate::hw::{Link, Platform, PlatformId};
+use crate::model::breakdown::gemm_fraction;
+use crate::model::modules::{backward_modules, forward_modules};
+use crate::ops::{achieved_tflops, peak_pct, Gemm};
+use crate::train::maxbatch::max_batch;
+use crate::train::simulate_step;
+use crate::train::StepReport;
+
+/// Run a method at the largest batch ≤ 32 that fits (the paper's "BS 32"
+/// settings exceed some configs' own max batch — see Table IV).
+fn at_max_batch(plat: &Platform, cfg: &LlamaConfig, m: &Method)
+    -> Option<(u64, StepReport)> {
+    max_batch(plat, cfg, m, 350, 32)
+}
+use crate::util::fmt;
+use crate::util::table::{f1, f2, f3ish, Table};
+
+fn a800() -> Platform {
+    Platform::get(PlatformId::A800)
+}
+
+/// Figure 11: GEMM achieved TFLOPS vs M for the paper's (N,K) configs.
+pub fn figure11() -> Table {
+    let gpu = a800().gpu;
+    let mut t = Table::new(
+        "Figure 11 — GEMM TFLOPS vs M on A800 (aligned vs unaligned M; \
+         paper: aligned beats unaligned, larger N/K raises the plateau)",
+        &["M", "N4096 K4096", "N11008 K4096", "N16384 K16384", "unaligned N11008 K4096"],
+    );
+    let mut m = 4096u64;
+    while m <= 16384 {
+        t.row(vec![
+            m.to_string(),
+            f1(achieved_tflops(&gpu, &Gemm::new(m, 4096, 4096))),
+            f1(achieved_tflops(&gpu, &Gemm::new(m, 11008, 4096))),
+            f1(achieved_tflops(&gpu, &Gemm::new(m, 16384, 16384))),
+            f1(achieved_tflops(&gpu, &Gemm::new(m + 13, 11008, 4096))),
+        ]);
+        m += 2048;
+    }
+    t
+}
+
+/// Table XII: the first MLP GEMM, naive vs recomputation shapes.
+pub fn table12() -> Table {
+    let gpu = a800().gpu;
+    let naive = Gemm::new(666, 11008, 4096);
+    let recomp = Gemm::new(10624, 11008, 4096);
+    let mut t = Table::new(
+        "Table XII — first MLP GEMM, naive vs recompute \
+         (paper: 0.289ms/66.6% vs 3.870ms/79.4%)",
+        &["", "Shape (M,N,K)", "Time (ms)", "Peak (%)"],
+    ).align_left(0).align_left(1);
+    for (name, g) in [("Naive", naive), ("Recomputation", recomp)] {
+        t.row(vec![name.into(), format!("{},{},{}", g.m, g.n, g.k),
+                   f2(crate::ops::gemm_time(&gpu, &g) * 1e3),
+                   f1(peak_pct(&gpu, &g))]);
+    }
+    t
+}
+
+/// Table XIII: GEMM share of fwd/bwd, naive vs recomputation batches.
+pub fn table13() -> Table {
+    let cfg = LlamaConfig::llama2_7b();
+    let gpu = a800().gpu;
+    let mut t = Table::new(
+        "Table XIII — GEMM-kernel share of compute \
+         (paper: >60% in all four cells)",
+        &["", "Forward", "Backward"],
+    ).align_left(0);
+    for (name, bs) in [("Naive (BS 2)", 2u64), ("Recomputation (BS 32)", 32)] {
+        let f = gemm_fraction(&gpu, &forward_modules(&cfg, bs, 350, false, false));
+        let b = gemm_fraction(&gpu, &backward_modules(&cfg, bs, 350, false, false));
+        t.row(vec![name.into(), format!("{:.1}%", f * 100.0), format!("{:.1}%", b * 100.0)]);
+    }
+    t
+}
+
+/// Table XIV: memory-copy share of offloaded iterations (BS 32).
+pub fn table14() -> Table {
+    let plat = a800();
+    let mut t = Table::new(
+        "Table XIV — memcopy per offloaded iteration, BS 32 \
+         (paper: Z2 7B 0.596s/4.9%, Z3 13B 1.56s/6.7% — minor impact)",
+        &["Method", "Model", "BS", "Memcopy (s/iter)", "Share (%)"],
+    ).align_left(0).align_left(1);
+    for (label, mname, cfg) in [
+        ("Z2+O", "Llama2-7B", LlamaConfig::llama2_7b()),
+        ("Z2+O", "Llama2-13B", LlamaConfig::llama2_13b()),
+        ("Z3+O", "Llama2-7B", LlamaConfig::llama2_7b()),
+        ("Z3+O", "Llama2-13B", LlamaConfig::llama2_13b()),
+    ] {
+        let m = Method::parse(label).unwrap();
+        match at_max_batch(&plat, &cfg, &m) {
+            Some((bs, r)) => t.row(vec![label.into(), mname.into(), bs.to_string(),
+                                        f2(r.memcopy),
+                                        f1(r.memcopy / r.step_time * 100.0)]),
+            None => t.row(vec![label.into(), mname.into(), "-".into(), "-".into(),
+                               "-".into()]),
+        }
+    }
+    t
+}
+
+/// Figure 12: H2D/D2H latency + throughput vs size (A800 host link).
+pub fn figure12() -> Table {
+    let link = a800().host;
+    let mut t = Table::new(
+        "Figure 12 — host<->device copy on A800 (paper: startup dominates \
+         small sizes, bandwidth dominates large)",
+        &["Size", "H2D lat", "H2D GB/s", "D2H lat", "D2H GB/s"],
+    ).align_left(0);
+    for &b in mc_sizes().iter().step_by(2) {
+        t.row(vec![
+            fmt::bytes(b),
+            fmt::seconds(copy_time(&link, Dir::H2D, b)),
+            f2(copy_throughput(&link, Dir::H2D, b) / 1e9),
+            fmt::seconds(copy_time(&link, Dir::D2H, b)),
+            f2(copy_throughput(&link, Dir::D2H, b) / 1e9),
+        ]);
+    }
+    t
+}
+
+fn comm_figure(title: &str, links: &[(&str, Link)], op: Collective) -> Table {
+    let mut header: Vec<String> = vec!["Size".to_string()];
+    for (name, _) in links {
+        header.push(format!("{name} lat"));
+        header.push(format!("{name} busbw GB/s"));
+    }
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hrefs).align_left(0);
+    for &b in comm_sizes().iter().step_by(3) {
+        let mut row = vec![fmt::bytes(b)];
+        for (_, link) in links {
+            let pts = sweep(link, op, 8, &[b]);
+            row.push(fmt::seconds(pts[0].latency));
+            row.push(f2(pts[0].bus_bw / 1e9));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Figure 13: AllGather on RTX3090 with vs without NVLink.
+pub fn figure13() -> Table {
+    comm_figure(
+        "Figure 13 — AllGather, RTX3090 w/ vs w/o NVLink (paper: NVLink \
+         significantly outperforms)",
+        &[("NVLink", Link::nvlink_3090()), ("PCIe", Link::pcie4(true))],
+        Collective::AllGather,
+    )
+}
+
+/// Figure 14: ReduceScatter on RTX3090 with vs without NVLink.
+pub fn figure14() -> Table {
+    comm_figure(
+        "Figure 14 — ReduceScatter, RTX3090 w/ vs w/o NVLink",
+        &[("NVLink", Link::nvlink_3090()), ("PCIe", Link::pcie4(true))],
+        Collective::ReduceScatter,
+    )
+}
+
+/// Figure 15: AllGather / ReduceScatter / Reduce throughput on A800.
+pub fn figure15() -> Table {
+    let link = a800().fabric;
+    let mut t = Table::new(
+        "Figure 15 — collective bus bandwidth on A800 vs message size",
+        &["Size", "AllGather GB/s", "ReduceScatter GB/s", "Reduce GB/s"],
+    ).align_left(0);
+    for &b in comm_sizes().iter().step_by(3) {
+        t.row(vec![
+            fmt::bytes(b),
+            f2(bus_bandwidth(&link, Collective::AllGather, b, 8) / 1e9),
+            f2(bus_bandwidth(&link, Collective::ReduceScatter, b, 8) / 1e9),
+            f2(bus_bandwidth(&link, Collective::Reduce, b, 8) / 1e9),
+        ]);
+    }
+    t
+}
+
+/// Table XV: AllReduce share per method (Naive/F/R/R+F at BS 32).
+pub fn table15() -> Table {
+    let plat = a800();
+    let cfg = LlamaConfig::llama2_7b();
+    let mut t = Table::new(
+        "Table XV — gradient AllReduce per iteration, 7B BS 32 \
+         (paper: Naive 0.24s/45%, R 0.86s/25.3%, R+F 0.69s/20.4%)",
+        &["Method", "BS", "Comm (s/iter)", "Share (%)"],
+    ).align_left(0);
+    for label in ["Naive", "F", "R", "R+F"] {
+        let m = Method::parse(label).unwrap();
+        match at_max_batch(&plat, &cfg, &m) {
+            Some((bs, r)) => t.row(vec![label.into(), bs.to_string(),
+                                        f3ish(r.comm_total),
+                                        f1(r.comm_total / r.step_time * 100.0)]),
+            None => t.row(vec![label.into(), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    t
+}
+
+/// Table XVI: communication-kernel time per iteration for ZeRO stages.
+pub fn table16() -> Table {
+    let plat = a800();
+    let mut t = Table::new(
+        "Table XVI — ZeRO communication kernels per iteration, BS 32 \
+         (paper: Z2 7B 4.25s/41.8%, Z3 13B 2.79s/11.9%)",
+        &["Method", "Model", "BS", "Comm (s/iter)", "Share (%)"],
+    ).align_left(0).align_left(1);
+    for (label, mname, cfg) in [
+        ("Z2", "Llama2-7B", LlamaConfig::llama2_7b()),
+        ("Z2", "Llama2-13B", LlamaConfig::llama2_13b()),
+        ("Z3", "Llama2-7B", LlamaConfig::llama2_7b()),
+        ("Z3", "Llama2-13B", LlamaConfig::llama2_13b()),
+    ] {
+        let m = Method::parse(label).unwrap();
+        match at_max_batch(&plat, &cfg, &m) {
+            Some((bs, r)) => t.row(vec![label.into(), mname.into(), bs.to_string(),
+                                        f3ish(r.comm_total),
+                                        f1(r.comm_total / r.step_time * 100.0)]),
+            None => t.row(vec![label.into(), mname.into(), "-".into(), "-".into(),
+                               "-".into()]),
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_micro_reports_render() {
+        for t in [figure11(), table12(), table13(), table14(), figure12(),
+                  figure13(), figure14(), figure15(), table15(), table16()] {
+            assert!(!t.is_empty(), "{}", t.title);
+        }
+    }
+
+    #[test]
+    fn fig11_unaligned_column_lower() {
+        let s = figure11();
+        // spot check via the model directly
+        let gpu = a800().gpu;
+        assert!(achieved_tflops(&gpu, &Gemm::new(8192, 11008, 4096))
+            > achieved_tflops(&gpu, &Gemm::new(8205, 11008, 4096)));
+        assert!(s.n_rows() >= 6);
+    }
+}

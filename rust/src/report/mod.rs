@@ -1,0 +1,118 @@
+//! Report generators: one function per paper table and figure
+//! (DESIGN.md experiment index).  `llmperf table N` / `llmperf figure N`
+//! print them; `report_all` writes text + CSV under results/.
+
+pub mod finetune;
+pub mod micro;
+pub mod modulewise;
+pub mod pretrain;
+pub mod serve;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::LlamaConfig;
+use crate::hw::PlatformId;
+use crate::serve::EngineSpec;
+use crate::util::table::Table;
+
+/// All tables for one paper table number.
+pub fn table(n: u32, n_requests: u64) -> Result<Vec<Table>> {
+    Ok(match n {
+        2 => vec![pretrain::table2()],
+        3 => pretrain::table3(),
+        4 => pretrain::table4(),
+        5 => vec![modulewise::table5()],
+        6 => vec![modulewise::table6()],
+        7 => vec![modulewise::table7()],
+        8 => vec![modulewise::table8()],
+        9 => finetune::table9(),
+        10 => vec![serve::table10()],
+        11 => vec![serve::table11()],
+        12 => vec![micro::table12()],
+        13 => vec![micro::table13()],
+        14 => vec![micro::table14()],
+        15 => vec![micro::table15()],
+        16 => vec![micro::table16()],
+        _ => return Err(anyhow!("paper has Tables II–XVI (2-16); got {n}")),
+    })
+    .map(|t| { let _ = n_requests; t })
+}
+
+/// All tables for one paper figure number.
+pub fn figure(n: u32, n_requests: u64) -> Result<Vec<Table>> {
+    Ok(match n {
+        4 => vec![pretrain::figure4()],
+        5 => vec![modulewise::figure5()],
+        6 => vec![serve::figure6(n_requests)],
+        7 => vec![
+            serve::figure7(PlatformId::A800, &LlamaConfig::llama2_7b(), n_requests),
+            serve::figure7(PlatformId::Rtx3090Nvl, &LlamaConfig::llama2_7b(), n_requests),
+        ],
+        8 => vec![serve::figure8(&EngineSpec::vllm(), &LlamaConfig::llama2_13b(), n_requests),
+                  serve::figure8(&EngineSpec::tgi(), &LlamaConfig::llama2_13b(), n_requests)],
+        9 => vec![
+            serve::figure7(PlatformId::Rtx4090, &LlamaConfig::llama2_7b(), n_requests),
+            serve::figure7(PlatformId::A800, &LlamaConfig::llama2_13b(), n_requests),
+            serve::figure7(PlatformId::Rtx3090Nvl, &LlamaConfig::llama2_13b(), n_requests),
+        ],
+        10 => vec![
+            serve::figure8(&EngineSpec::lightllm(), &LlamaConfig::llama2_7b(), n_requests),
+            serve::figure8(&EngineSpec::tgi(), &LlamaConfig::llama2_7b(), n_requests),
+            serve::figure8(&EngineSpec::vllm(), &LlamaConfig::llama2_7b(), n_requests),
+        ],
+        11 => vec![micro::figure11()],
+        12 => vec![micro::figure12()],
+        13 => vec![micro::figure13()],
+        14 => vec![micro::figure14()],
+        15 => vec![micro::figure15()],
+        _ => return Err(anyhow!("paper has Figures 4-15; got {n}")),
+    })
+}
+
+/// Regenerate every table and figure into `out_dir` (text + CSV).
+pub fn report_all(out_dir: &str, n_requests: u64) -> Result<Vec<String>> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut written = Vec::new();
+    for n in 2..=16u32 {
+        for (i, t) in table(n, n_requests)?.iter().enumerate() {
+            let stem = format!("{out_dir}/table{n:02}_{i}");
+            std::fs::write(format!("{stem}.txt"), t.render())?;
+            std::fs::write(format!("{stem}.csv"), t.to_csv())?;
+            written.push(stem);
+        }
+    }
+    for n in 4..=15u32 {
+        for (i, t) in figure(n, n_requests)?.iter().enumerate() {
+            let stem = format!("{out_dir}/figure{n:02}_{i}");
+            std::fs::write(format!("{stem}.txt"), t.render())?;
+            std::fs::write(format!("{stem}.csv"), t.to_csv())?;
+            written.push(stem);
+        }
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_table_id_resolves() {
+        for n in 2..=16 {
+            let ts = table(n, 40).unwrap();
+            assert!(!ts.is_empty(), "table {n}");
+        }
+        assert!(table(1, 40).is_err());
+        assert!(table(17, 40).is_err());
+    }
+
+    #[test]
+    fn every_figure_id_resolves() {
+        for n in 4..=15 {
+            let ts = figure(n, 40).unwrap();
+            assert!(!ts.is_empty(), "figure {n}");
+        }
+        assert!(figure(3, 40).is_err());
+        assert!(figure(16, 40).is_err());
+    }
+}

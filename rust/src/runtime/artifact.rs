@@ -1,0 +1,221 @@
+//! Artifact manifest parsing: the line-based `manifest.txt` that
+//! `python/compile/aot.py` writes next to the HLO text files and
+//! `params_<model>.bin` blobs.  (No JSON: the vendored crate set has no
+//! serde — DESIGN.md §Dependencies.)
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One model's static configuration (mirror of python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub d_ff: u64,
+    pub head_dim: u64,
+    pub seq: u64,
+    pub train_batch: u64,
+    pub prompt_len: u64,
+    pub max_seq: u64,
+    pub dec_batch: u64,
+    pub params: u64,
+}
+
+/// One parameter tensor inside params_<model>.bin.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub model: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One lowered HLO entry point.
+#[derive(Debug, Clone)]
+pub struct HloInfo {
+    pub model: String,
+    pub entry: String,
+    pub file: String,
+    pub inputs: usize,
+    pub outputs: usize,
+}
+
+/// One operator microbenchmark artifact.
+#[derive(Debug, Clone)]
+pub struct MicroInfo {
+    pub name: String,
+    pub file: String,
+    pub meta: HashMap<String, String>,
+}
+
+/// Parsed manifest + artifact directory handle.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelInfo>,
+    pub params: Vec<ParamInfo>,
+    pub hlos: Vec<HloInfo>,
+    pub micros: Vec<MicroInfo>,
+}
+
+fn kv_map(parts: &[&str]) -> HashMap<String, String> {
+    parts
+        .iter()
+        .filter_map(|p| p.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn get<'a>(m: &'a HashMap<String, String>, k: &str) -> Result<&'a str> {
+    m.get(k).map(|s| s.as_str()).ok_or_else(|| anyhow!("manifest: missing key '{k}'"))
+}
+
+fn get_u64(m: &HashMap<String, String>, k: &str) -> Result<u64> {
+    get(m, k)?.parse().with_context(|| format!("manifest: bad u64 for '{k}'"))
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut man = Manifest { dir, models: vec![], params: vec![], hlos: vec![], micros: vec![] };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let kv = kv_map(&parts[1..]);
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match parts[0] {
+                "config" => man.models.push(ModelInfo {
+                    name: get(&kv, "model").with_context(ctx)?.to_string(),
+                    vocab: get_u64(&kv, "vocab")?,
+                    d_model: get_u64(&kv, "d_model")?,
+                    n_layers: get_u64(&kv, "n_layers")?,
+                    n_heads: get_u64(&kv, "n_heads")?,
+                    d_ff: get_u64(&kv, "d_ff")?,
+                    head_dim: get_u64(&kv, "head_dim")?,
+                    seq: get_u64(&kv, "seq")?,
+                    train_batch: get_u64(&kv, "train_batch")?,
+                    prompt_len: get_u64(&kv, "prompt_len")?,
+                    max_seq: get_u64(&kv, "max_seq")?,
+                    dec_batch: get_u64(&kv, "dec_batch")?,
+                    params: get_u64(&kv, "params")?,
+                }),
+                "param" => man.params.push(ParamInfo {
+                    model: get(&kv, "model").with_context(ctx)?.to_string(),
+                    name: get(&kv, "name").with_context(ctx)?.to_string(),
+                    shape: get(&kv, "shape")
+                        .with_context(ctx)?
+                        .split(',')
+                        .map(|d| d.parse().map_err(|e| anyhow!("bad shape dim: {e}")))
+                        .collect::<Result<Vec<usize>>>()?,
+                    offset: get_u64(&kv, "offset")? as usize,
+                    nbytes: get_u64(&kv, "nbytes")? as usize,
+                }),
+                "hlo" => man.hlos.push(HloInfo {
+                    model: get(&kv, "model").with_context(ctx)?.to_string(),
+                    entry: get(&kv, "entry").with_context(ctx)?.to_string(),
+                    file: get(&kv, "file").with_context(ctx)?.to_string(),
+                    inputs: get_u64(&kv, "inputs")? as usize,
+                    outputs: get_u64(&kv, "outputs")? as usize,
+                }),
+                "micro" => man.micros.push(MicroInfo {
+                    name: get(&kv, "name").with_context(ctx)?.to_string(),
+                    file: get(&kv, "file").with_context(ctx)?.to_string(),
+                    meta: kv,
+                }),
+                other => bail!("manifest line {}: unknown record '{other}'", lineno + 1),
+            }
+        }
+        Ok(man)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.iter().find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn hlo(&self, model: &str, entry: &str) -> Result<&HloInfo> {
+        self.hlos.iter().find(|h| h.model == model && h.entry == entry)
+            .ok_or_else(|| anyhow!("hlo '{model}/{entry}' not in manifest"))
+    }
+
+    pub fn micro(&self, name: &str) -> Result<&MicroInfo> {
+        self.micros.iter().find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("micro '{name}' not in manifest"))
+    }
+
+    /// Params of one model, in python PARAM_NAMES order.
+    pub fn model_params(&self, model: &str) -> Vec<&ParamInfo> {
+        self.params.iter().filter(|p| p.model == model).collect()
+    }
+
+    /// Read the raw f32 parameter blob for a model.
+    pub fn read_params_bin(&self, model: &str) -> Result<Vec<u8>> {
+        let path = self.dir.join(format!("params_{model}.bin"));
+        fs::read(&path).with_context(|| format!("reading {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# llm-perf-lab artifact manifest v1
+config model=tiny vocab=2048 d_model=256 n_layers=4 n_heads=8 d_ff=688 head_dim=32 seq=128 train_batch=8 prompt_len=64 max_seq=512 dec_batch=8 params=4242
+param model=tiny name=embed dtype=f32 shape=2048,256 offset=0 nbytes=2097152
+param model=tiny name=wq dtype=f32 shape=4,256,256 offset=2097152 nbytes=1048576
+hlo model=tiny entry=decode_step file=tiny_decode_step.hlo.txt inputs=16 outputs=3
+micro name=gemm_m128_n256_k256 file=micro_gemm.hlo.txt op=gemm m=128 n=256 k=256 flops=16777216
+";
+
+    #[test]
+    fn parses_all_record_kinds() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.hlos.len(), 1);
+        assert_eq!(m.micros.len(), 1);
+        let cfg = m.model("tiny").unwrap();
+        assert_eq!(cfg.d_model, 256);
+        assert_eq!(m.hlo("tiny", "decode_step").unwrap().inputs, 16);
+        assert_eq!(m.micro("gemm_m128_n256_k256").unwrap().meta["m"], "128");
+        assert_eq!(m.model_params("tiny").len(), 2);
+        assert_eq!(m.model_params("tiny")[1].shape, vec![4, 256, 256]);
+    }
+
+    #[test]
+    fn unknown_record_rejected() {
+        assert!(Manifest::parse("bogus a=1", PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.hlo("tiny", "nope").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = Manifest::parse("# hi\n\n# there\n", PathBuf::from("/tmp")).unwrap();
+        assert!(m.models.is_empty());
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime: load AOT HLO text artifacts, compile once, execute from
+//! Rust.  Python never appears here — this is the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* (not serialized
+//! proto — xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids),
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`; outputs arrive as one tuple literal (verified empirically:
+//! PJRT does not untuple here even with return_tuple=False).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::{Manifest, ModelInfo};
+
+/// The runtime: one PJRT CPU client + the artifact manifest.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory and start a PJRT CPU client.
+    pub fn open(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Runtime { client, manifest })
+    }
+
+    fn compile_file(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Compile a model entry point ("forward", "train_step",
+    /// "insert_request", "decode_step").
+    pub fn compile_entry(&self, model: &str, entry: &str) -> Result<PjRtLoadedExecutable> {
+        let info = self.manifest.hlo(model, entry)?;
+        self.compile_file(&info.file.clone())
+    }
+
+    /// Compile an operator microbenchmark.
+    pub fn compile_micro(&self, name: &str) -> Result<PjRtLoadedExecutable> {
+        let info = self.manifest.micro(name)?;
+        self.compile_file(&info.file.clone())
+    }
+
+    pub fn model_info(&self, model: &str) -> Result<ModelInfo> {
+        Ok(self.manifest.model(model)?.clone())
+    }
+
+    /// Load a model's initial parameters from params_<model>.bin as f32
+    /// literals in python PARAM_NAMES order.
+    pub fn load_params(&self, model: &str) -> Result<Vec<Literal>> {
+        let blob = self.manifest.read_params_bin(model)?;
+        let mut out = Vec::new();
+        for p in self.manifest.model_params(model) {
+            let end = p.offset + p.nbytes;
+            if end > blob.len() {
+                return Err(anyhow!("param {} out of range in params_{model}.bin", p.name));
+            }
+            let lit = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32, &p.shape, &blob[p.offset..end])
+                .map_err(|e| anyhow!("literal for {}: {e}", p.name))?;
+            out.push(lit);
+        }
+        if out.is_empty() {
+            return Err(anyhow!("no params for model '{model}'"));
+        }
+        Ok(out)
+    }
+
+    /// Upload literals to device buffers (stay resident across calls).
+    pub fn to_buffers(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        lits.iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("upload: {e}"))
+            })
+            .collect()
+    }
+
+    /// Execute with borrowed literal inputs (no host-side copies of the
+    /// arguments); unpack the single tuple output.
+    pub fn run(&self, exe: &PjRtLoadedExecutable, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let out = exe.execute::<&Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
+        Self::unpack(out)
+    }
+
+    /// Execute with owned literal inputs.
+    pub fn run_owned(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+        let out = exe.execute::<Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
+        Self::unpack(out)
+    }
+
+    /// Execute with device-resident buffers; unpack the tuple output.
+    pub fn run_b(&self, exe: &PjRtLoadedExecutable, args: &[PjRtBuffer]) -> Result<Vec<Literal>> {
+        let out = exe.execute_b::<PjRtBuffer>(args).map_err(|e| anyhow!("execute_b: {e}"))?;
+        Self::unpack(out)
+    }
+
+    fn unpack(out: Vec<Vec<PjRtBuffer>>) -> Result<Vec<Literal>> {
+        let buf = out
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("executable returned no outputs"))?;
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("download: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(values: &[i32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(values)
+        .reshape(dims)
+        .map_err(|e| anyhow!("i32 literal: {e}"))
+}
+
+/// Build an f32 literal of the given shape.
+pub fn f32_literal(values: &[f32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(values)
+        .reshape(dims)
+        .map_err(|e| anyhow!("f32 literal: {e}"))
+}
+
+/// Build an f32 scalar literal.
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Build an i32 scalar literal.
+pub fn i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs — they
+    // need `make artifacts` to have run.  Pure helpers are tested here.
+    use super::*;
+
+    #[test]
+    fn literal_builders_shape() {
+        let l = i32_literal(&[1, 2, 3, 4], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let f = f32_literal(&[0.5; 6], &[2, 3]).unwrap();
+        assert_eq!(f.element_count(), 6);
+        assert_eq!(f32_scalar(1.5).element_count(), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact manifest + compiled-executable management.
+//! The only bridge between the Rust coordinator and the AOT-lowered
+//! JAX/Pallas compute (DESIGN.md three-layer architecture).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{HloInfo, Manifest, MicroInfo, ModelInfo, ParamInfo};
+pub use client::Runtime;

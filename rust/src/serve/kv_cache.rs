@@ -1,0 +1,149 @@
+//! Paged KV-cache block manager (vLLM's PagedAttention allocator).
+//!
+//! KV memory is split into fixed-size blocks; a sequence holds
+//! ceil(tokens/block) blocks, so the internal waste is ≤ block-1 tokens
+//! per sequence — the fragmentation story of Kwon et al. that the paper's
+//! §II-D summarizes.
+
+use std::collections::HashMap;
+
+/// Paged block allocator.  Tracks per-sequence block lists by token count.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pub block_tokens: u64,
+    pub total_blocks: u64,
+    free_blocks: u64,
+    seqs: HashMap<u64, u64>, // seq id -> allocated blocks
+}
+
+impl PagedKvCache {
+    pub fn new(capacity_tokens: u64, block_tokens: u64) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = capacity_tokens / block_tokens;
+        PagedKvCache { block_tokens, total_blocks, free_blocks: total_blocks,
+                       seqs: HashMap::new() }
+    }
+
+    fn blocks_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Admit a sequence with `tokens` of prompt KV.  Fails without side
+    /// effects if the pool can't hold it.
+    pub fn admit(&mut self, seq: u64, tokens: u64) -> bool {
+        let need = self.blocks_for(tokens.max(1));
+        if need > self.free_blocks || self.seqs.contains_key(&seq) {
+            return false;
+        }
+        self.free_blocks -= need;
+        self.seqs.insert(seq, need);
+        true
+    }
+
+    /// Grow a sequence by one token; may need one more block.
+    pub fn append_token(&mut self, seq: u64, new_total_tokens: u64) -> bool {
+        let Some(blocks) = self.seqs.get_mut(&seq) else { return false };
+        let need = new_total_tokens.div_ceil(self.block_tokens);
+        if need > *blocks {
+            if self.free_blocks == 0 {
+                return false;
+            }
+            self.free_blocks -= 1;
+            *blocks += 1;
+        }
+        true
+    }
+
+    pub fn release(&mut self, seq: u64) {
+        if let Some(blocks) = self.seqs.remove(&seq) {
+            self.free_blocks += blocks;
+        }
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        self.free_blocks * self.block_tokens
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.total_blocks - self.free_blocks
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Internal fragmentation in tokens given per-seq true token counts.
+    pub fn waste(&self, true_tokens: &HashMap<u64, u64>) -> u64 {
+        self.seqs
+            .iter()
+            .map(|(id, blocks)| {
+                let used = true_tokens.get(id).copied().unwrap_or(0);
+                blocks * self.block_tokens - used.min(blocks * self.block_tokens)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        assert_eq!(kv.total_blocks, 64);
+        assert!(kv.admit(1, 100)); // 7 blocks
+        assert_eq!(kv.used_blocks(), 7);
+        kv.release(1);
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn admit_fails_without_side_effects_when_full() {
+        let mut kv = PagedKvCache::new(160, 16); // 10 blocks
+        assert!(kv.admit(1, 100)); // 7 blocks
+        assert!(!kv.admit(2, 100)); // would need 7, only 3 free
+        assert_eq!(kv.used_blocks(), 7);
+        assert!(kv.admit(3, 48)); // 3 blocks fit
+    }
+
+    #[test]
+    fn append_allocates_block_at_boundary() {
+        let mut kv = PagedKvCache::new(64, 16);
+        assert!(kv.admit(1, 16)); // exactly 1 block
+        assert!(kv.append_token(1, 17)); // needs block 2
+        assert_eq!(kv.used_blocks(), 2);
+        for t in 18..=32 {
+            assert!(kv.append_token(1, t));
+        }
+        assert_eq!(kv.used_blocks(), 2);
+    }
+
+    #[test]
+    fn append_fails_when_exhausted() {
+        let mut kv = PagedKvCache::new(32, 16);
+        assert!(kv.admit(1, 16));
+        assert!(kv.admit(2, 16));
+        assert!(!kv.append_token(1, 17));
+    }
+
+    #[test]
+    fn waste_bounded_by_block_size() {
+        let mut kv = PagedKvCache::new(4096, 16);
+        let mut truth = HashMap::new();
+        for (id, toks) in [(1u64, 17u64), (2, 31), (3, 16)] {
+            assert!(kv.admit(id, toks));
+            truth.insert(id, toks);
+        }
+        let w = kv.waste(&truth);
+        assert_eq!(w, 15 + 1 + 0);
+        assert!(w < 16 * 3);
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        assert!(kv.admit(1, 10));
+        assert!(!kv.admit(1, 10));
+    }
+}

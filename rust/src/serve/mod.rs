@@ -1,0 +1,12 @@
+//! Serving substrate (paper §VI): three engine policies (TGI / vLLM /
+//! LightLLM), two KV allocators (paged, token-level) plus reserve-max,
+//! and a discrete-event continuous-batching simulator.
+
+pub mod engine;
+pub mod kv_cache;
+pub mod request;
+pub mod sim;
+pub mod token_kv;
+
+pub use engine::{DeployPlan, EngineSpec, KvPolicy};
+pub use sim::{simulate, SimResult};

@@ -1,0 +1,81 @@
+//! Serving request model and per-request metrics.
+
+/// One inference request (the paper's workload: 512 input tokens, fixed
+/// max-generated length, burst arrival).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input_len: u64,
+    pub output_len: u64,
+    /// arrival time (0.0 for the burst benchmark)
+    pub arrival: f64,
+}
+
+/// Completion record.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub finish: f64,
+    /// end-to-end latency (finish - arrival) — what Figures 7-10 CDF
+    pub latency: f64,
+    /// time until first output token
+    pub ttft: f64,
+    pub output_tokens: u64,
+}
+
+/// Live state of an admitted request inside the engine.
+#[derive(Debug, Clone)]
+pub struct RunningSeq {
+    pub id: u64,
+    pub arrival: f64,
+    pub prompt_len: u64,
+    pub target_output: u64,
+    pub generated: u64,
+    pub first_token_at: Option<f64>,
+}
+
+impl RunningSeq {
+    pub fn new(r: &Request) -> Self {
+        RunningSeq {
+            id: r.id,
+            arrival: r.arrival,
+            prompt_len: r.input_len,
+            target_output: r.output_len,
+            generated: 0,
+            first_token_at: None,
+        }
+    }
+
+    /// Current context length (prompt + generated so far).
+    pub fn context(&self) -> u64 {
+        self.prompt_len + self.generated
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.target_output
+    }
+
+    /// Total KV tokens this sequence will ever need.
+    pub fn max_tokens(&self) -> u64 {
+        self.prompt_len + self.target_output
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_seq_lifecycle() {
+        let r = Request { id: 1, input_len: 512, output_len: 4, arrival: 0.0 };
+        let mut s = RunningSeq::new(&r);
+        assert_eq!(s.context(), 512);
+        assert!(!s.done());
+        for _ in 0..4 {
+            s.generated += 1;
+        }
+        assert!(s.done());
+        assert_eq!(s.context(), 516);
+        assert_eq!(s.max_tokens(), 516);
+    }
+}

@@ -1,0 +1,91 @@
+//! Maximum-batch-size search (paper Table IV: "maximizing the batch size
+//! to get the maximum throughput").
+
+use crate::config::{LlamaConfig, Method, TrainWorkload};
+use crate::hw::Platform;
+
+use super::step::{simulate_step, StepReport};
+
+/// Batch sizes the paper sweeps (powers of two up to 64).
+pub const CANDIDATE_BS: [u64; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// Find the largest batch size that fits and its step report.
+pub fn max_batch(plat: &Platform, cfg: &LlamaConfig, m: &Method, seq: u64,
+                 cap: u64) -> Option<(u64, StepReport)> {
+    let mut best: Option<(u64, StepReport)> = None;
+    for &bs in CANDIDATE_BS.iter().filter(|&&b| b <= cap) {
+        let r = simulate_step(plat, cfg, m, TrainWorkload { seq_len: seq, batch_size: bs });
+        if !r.is_oom() {
+            best = Some((bs, r));
+        } else {
+            break; // memory is monotone in batch size
+        }
+    }
+    best
+}
+
+/// Find the batch size with the highest throughput (may be below max
+/// memory-fit when comm/offload dominates — matches Table IV's mixed BS).
+pub fn best_throughput(plat: &Platform, cfg: &LlamaConfig, m: &Method, seq: u64,
+                       cap: u64) -> Option<(u64, StepReport)> {
+    let mut best: Option<(u64, StepReport)> = None;
+    for &bs in CANDIDATE_BS.iter().filter(|&&b| b <= cap) {
+        let r = simulate_step(plat, cfg, m, TrainWorkload { seq_len: seq, batch_size: bs });
+        if r.is_oom() {
+            break;
+        }
+        if best.as_ref().map(|(_, b)| r.tokens_per_s > b.tokens_per_s).unwrap_or(true) {
+            best = Some((bs, r));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn recompute_raises_max_batch() {
+        // paper §IV-C: "recomputation can increase the batch size from 2
+        // to 32 at its largest"
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let naive = max_batch(&plat, &cfg, &Method::parse("Naive").unwrap(), 350, 128)
+            .map(|(b, _)| b).unwrap_or(0);
+        let rec = max_batch(&plat, &cfg, &Method::parse("R+Z3").unwrap(), 350, 128)
+            .map(|(b, _)| b).unwrap_or(0);
+        assert!(rec >= 4 * naive.max(1), "naive {naive} vs recompute {rec}");
+    }
+
+    #[test]
+    fn max_batch_throughput_beats_bs1() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let m = Method::parse("Z3").unwrap();
+        let (bs, r) = max_batch(&plat, &cfg, &m, 350, 128).unwrap();
+        assert!(bs >= 4);
+        let r1 = simulate_step(&plat, &cfg, &m,
+                               TrainWorkload { seq_len: 350, batch_size: 1 });
+        assert!(r.tokens_per_s > 2.0 * r1.tokens_per_s);
+    }
+
+    #[test]
+    fn oom_methods_have_no_max_batch() {
+        let plat = Platform::get(PlatformId::Rtx4090);
+        let cfg = LlamaConfig::llama2_7b();
+        assert!(max_batch(&plat, &cfg, &Method::parse("Naive").unwrap(), 350, 128)
+            .is_none());
+    }
+
+    #[test]
+    fn best_throughput_not_above_max_fit() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let m = Method::parse("Z2").unwrap();
+        let (bs_max, _) = max_batch(&plat, &cfg, &m, 350, 128).unwrap();
+        let (bs_best, _) = best_throughput(&plat, &cfg, &m, 350, 128).unwrap();
+        assert!(bs_best <= bs_max);
+    }
+}

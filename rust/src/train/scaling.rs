@@ -1,0 +1,99 @@
+//! GPU scaling efficiency (paper Fig. 4): data-parallel throughput of
+//! quantized Llama2-7B training from 1 to 8 GPUs on each platform.
+
+use crate::comm::{coll_time, Collective};
+use crate::config::{LlamaConfig, Method, TrainWorkload};
+use crate::hw::Platform;
+use crate::model::breakdown::total;
+use crate::model::{backward_breakdown, forward_breakdown};
+
+use super::step::{simulate_step, DDP_OVERLAP};
+
+/// Throughput (tokens/s) of DP training on `n` of the platform's GPUs.
+pub fn throughput_at_scale(plat: &Platform, cfg: &LlamaConfig, m: &Method,
+                           wl: TrainWorkload, n: u32) -> f64 {
+    let mut p = plat.clone();
+    p.n_gpus = n;
+    // keep the offload CPU budget proportional: fewer ranks contend less
+    p.cpu_adam_rate = plat.cpu_adam_rate;
+    simulate_step(&p, cfg, m, wl).tokens_per_s
+}
+
+/// One Fig. 4 series: (n_gpus, tokens/s) for n = 1..=8.
+pub fn scaling_series(plat: &Platform, cfg: &LlamaConfig, m: &Method,
+                      wl: TrainWorkload) -> Vec<(u32, f64)> {
+    (1..=plat.n_gpus).map(|n| (n, throughput_at_scale(plat, cfg, m, wl, n))).collect()
+}
+
+/// Scaling efficiency: T(n) / (n · T(1)).
+pub fn scaling_efficiency(series: &[(u32, f64)]) -> f64 {
+    let t1 = series.iter().find(|(n, _)| *n == 1).map(|(_, t)| *t).unwrap_or(0.0);
+    let (n_max, t_max) = series.last().copied().unwrap_or((1, 0.0));
+    if t1 <= 0.0 { return 0.0; }
+    t_max / (n_max as f64 * t1)
+}
+
+/// Pure-communication scaling loss for reference (gradient AllReduce cost
+/// at each scale) — used in the Fig. 4 commentary.
+pub fn comm_cost_at_scale(plat: &Platform, cfg: &LlamaConfig, n: u32) -> f64 {
+    coll_time(&plat.fabric, Collective::AllReduce, cfg.param_count() * 2.0, n)
+}
+
+/// Compute-only step time (the linear-scaling baseline).
+pub fn compute_time(plat: &Platform, cfg: &LlamaConfig, wl: TrainWorkload) -> f64 {
+    total(&forward_breakdown(&plat.gpu, cfg, wl.batch_size, wl.seq_len, true, false))
+        + total(&backward_breakdown(&plat.gpu, cfg, wl.batch_size, wl.seq_len, true, false))
+}
+
+/// The overlap fraction the Fig. 4 model assumes (re-exported for report).
+pub fn overlap() -> f64 {
+    DDP_OVERLAP
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    fn series(id: PlatformId) -> Vec<(u32, f64)> {
+        scaling_series(
+            &Platform::get(id), &LlamaConfig::llama2_7b(),
+            &Method::parse("Q").unwrap(),
+            TrainWorkload { seq_len: 350, batch_size: 2 })
+    }
+
+    #[test]
+    fn throughput_increases_with_gpus() {
+        for id in [PlatformId::A800, PlatformId::Rtx3090Nvl] {
+            let s = series(id);
+            for w in s.windows(2) {
+                assert!(w[1].1 > w[0].1, "{id:?}: {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_a800_scales_near_linear() {
+        let eff = scaling_efficiency(&series(PlatformId::A800));
+        assert!(eff > 0.9, "A800 scaling efficiency {eff:.2}");
+    }
+
+    #[test]
+    fn fig4_platform_ordering() {
+        // paper: A800 ≈ linear > RTX4090 (90.8%) > RTX3090 (85.9%);
+        // NVLink helps the 3090 by ~10%
+        let a = scaling_efficiency(&series(PlatformId::A800));
+        let r3n = scaling_efficiency(&series(PlatformId::Rtx3090Nvl));
+        let r3 = scaling_efficiency(&series(PlatformId::Rtx3090));
+        assert!(a > r3n, "a800 {a:.2} !> 3090nvl {r3n:.2}");
+        assert!(r3n > r3, "nvlink must help: {r3n:.2} !> {r3:.2}");
+    }
+
+    #[test]
+    fn efficiency_bounded_by_one() {
+        for id in PlatformId::ALL {
+            let e = scaling_efficiency(&series(id));
+            assert!(e > 0.2 && e <= 1.02, "{id:?}: {e}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Real training loop: drives the AOT `train_step` HLO from Rust over a
+//! synthetic corpus and logs the loss curve (the end-to-end validation
+//! required by DESIGN.md — recorded in EXPERIMENTS.md).
+//!
+//! No Python at runtime: parameters come from `params_<model>.bin`,
+//! optimizer state is initialized as zero literals, and every step is one
+//! PJRT execution returning (params', m', v', step', loss).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::runtime::client::{f32_scalar, i32_literal, Runtime};
+use crate::runtime::ModelInfo;
+use crate::util::rng::Rng;
+
+/// Synthetic corpus: a noisy affine bigram map — next = (31·cur + 17) mod V
+/// with an ε of uniform restarts.  Learnable by a small decoder in a few
+/// hundred steps, so the loss curve demonstrably falls from ln(V).
+pub struct Corpus {
+    vocab: u64,
+    rng: Rng,
+    noise: f64,
+}
+
+impl Corpus {
+    pub fn new(vocab: u64, seed: u64) -> Corpus {
+        Corpus { vocab, rng: Rng::new(seed), noise: 0.1 }
+    }
+
+    /// Sample a (batch, seq) token matrix, flattened row-major.
+    pub fn batch(&mut self, batch: u64, seq: u64) -> Vec<i32> {
+        let mut out = Vec::with_capacity((batch * seq) as usize);
+        for _ in 0..batch {
+            let mut cur = self.rng.range(0, self.vocab);
+            for _ in 0..seq {
+                out.push(cur as i32);
+                cur = if self.rng.f64() < self.noise {
+                    self.rng.range(0, self.vocab)
+                } else {
+                    (cur * 31 + 17) % self.vocab
+                };
+            }
+        }
+        out
+    }
+}
+
+/// One logged training step.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: u64,
+    pub loss: f32,
+    pub seconds: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Trainer state: compiled step + parameters + Adam state as literals.
+pub struct Trainer {
+    rt: Runtime,
+    pub info: ModelInfo,
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
+    step: Literal,
+    lr: f32,
+    corpus: Corpus,
+    pub history: Vec<StepLog>,
+}
+
+fn zeros_like(params: &[Literal]) -> Result<Vec<Literal>> {
+    params
+        .iter()
+        .map(|p| {
+            let shape = p.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let n: usize = dims.iter().product();
+            Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32, &dims, &vec![0u8; n * 4])
+                .map_err(|e| anyhow!("zeros: {e}"))
+        })
+        .collect()
+}
+
+impl Trainer {
+    pub fn new(artifact_dir: &str, model: &str, lr: f32, seed: u64) -> Result<Trainer> {
+        let rt = Runtime::open(artifact_dir)?;
+        let info = rt.model_info(model)?;
+        let exe = rt.compile_entry(model, "train_step")?;
+        let params = rt.load_params(model)?;
+        let m = zeros_like(&params)?;
+        let v = zeros_like(&params)?;
+        let corpus = Corpus::new(info.vocab, seed);
+        Ok(Trainer {
+            rt, exe, params, m, v,
+            step: f32_scalar(0.0),
+            lr,
+            corpus,
+            history: Vec::new(),
+            info,
+        })
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let b = self.info.train_batch;
+        let s = self.info.seq;
+        let tokens = self.corpus.batch(b, s);
+        let tokens_lit = i32_literal(&tokens, &[b as i64, s as i64])?;
+        let lr_lit = f32_scalar(self.lr);
+
+        let n = self.params.len();
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * n + 3);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&self.step);
+        args.push(&lr_lit);
+        args.push(&tokens_lit);
+
+        let t0 = Instant::now();
+        let mut out = self.rt.run(&self.exe, &args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        if out.len() != 3 * n + 2 {
+            return Err(anyhow!("train_step returned {} outputs (want {})",
+                               out.len(), 3 * n + 2));
+        }
+        let loss_lit = out.pop().unwrap();
+        let step_lit = out.pop().unwrap();
+        let v_new = out.split_off(2 * n);
+        let m_new = out.split_off(n);
+        self.params = out;
+        self.m = m_new;
+        self.v = v_new;
+        self.step = step_lit;
+        let loss: f32 = loss_lit
+            .get_first_element()
+            .map_err(|e| anyhow!("loss readback: {e}"))?;
+        let log = StepLog {
+            step: self.history.len() as u64 + 1,
+            loss,
+            seconds: dt,
+            tokens_per_s: (b * s) as f64 / dt,
+        };
+        self.history.push(log);
+        Ok(loss)
+    }
+
+    /// Run `n` steps, optionally printing progress every `log_every`.
+    pub fn run(&mut self, n: u64, log_every: u64) -> Result<()> {
+        for i in 0..n {
+            let loss = self.step()?;
+            if log_every > 0 && (i + 1) % log_every == 0 {
+                let last = self.history.last().unwrap();
+                println!("step {:>5}  loss {:.4}  {:.0} tokens/s",
+                         i + 1, loss, last.tokens_per_s);
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the current parameters (e.g. to hand to the engine).
+    pub fn take_params(self) -> Vec<Literal> {
+        self.params
+    }
+
+    /// Write the loss curve as CSV.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut s = String::from("step,loss,seconds,tokens_per_s\n");
+        for l in &self.history {
+            s.push_str(&format!("{},{},{:.6},{:.1}\n",
+                                l.step, l.loss, l.seconds, l.tokens_per_s));
+        }
+        std::fs::write(path, s).map_err(|e| anyhow!("writing {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_mostly_follows_bigram_map() {
+        let mut c = Corpus::new(256, 1);
+        let toks = c.batch(4, 64);
+        let mut hits = 0;
+        let mut total = 0;
+        for row in toks.chunks(64) {
+            for w in row.windows(2) {
+                total += 1;
+                if w[1] as u64 == (w[0] as u64 * 31 + 17) % 256 {
+                    hits += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.8, "bigram structure too weak: {frac}");
+    }
+
+    #[test]
+    fn corpus_tokens_in_range() {
+        let mut c = Corpus::new(100, 2);
+        for t in c.batch(2, 50) {
+            assert!((0..100).contains(&t));
+        }
+    }
+}

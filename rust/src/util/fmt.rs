@@ -1,0 +1,81 @@
+//! Human-readable formatting of byte sizes, rates and durations.
+
+/// Format a byte count with binary units ("12.5 GiB").
+pub fn bytes(n: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n;
+    let mut u = 0;
+    while v.abs() >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 { format!("{v:.0} {}", UNITS[u]) } else { format!("{v:.1} {}", UNITS[u]) }
+}
+
+/// Gigabytes (decimal GB, as the paper reports memory).
+pub fn gb(bytes: f64) -> f64 {
+    bytes / 1e9
+}
+
+/// Format a duration in seconds adaptively ("1.24 ms", "3.1 s").
+pub fn seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Format a rate ("13.5 GB/s").
+pub fn rate(bytes_per_s: f64) -> String {
+    if bytes_per_s >= 1e9 {
+        format!("{:.1} GB/s", bytes_per_s / 1e9)
+    } else if bytes_per_s >= 1e6 {
+        format!("{:.1} MB/s", bytes_per_s / 1e6)
+    } else {
+        format!("{:.1} KB/s", bytes_per_s / 1e3)
+    }
+}
+
+/// Format a large count compactly ("7B", "13.5M", "1.2K").
+pub fn count(n: f64) -> String {
+    let a = n.abs();
+    if a >= 1e9 {
+        format!("{:.1}B", n / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.1}M", n / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512.0), "512 B");
+        assert_eq!(bytes(2048.0), "2.0 KiB");
+        assert_eq!(bytes(80.0 * 1024.0 * 1024.0 * 1024.0), "80.0 GiB");
+    }
+
+    #[test]
+    fn seconds_adaptive() {
+        assert!(seconds(1.5e-3).contains("ms"));
+        assert!(seconds(2.0).contains("s"));
+        assert!(seconds(5e-7).contains("ns"));
+    }
+
+    #[test]
+    fn count_compact() {
+        assert_eq!(count(7e9), "7.0B");
+        assert_eq!(count(350.0), "350");
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic RNG, statistics/CDFs, table rendering,
+//! human-readable formatting.  No external dependencies (see DESIGN.md
+//! §Dependencies — the vendored crate set is minimal).
+
+pub mod fmt;
+pub mod rng;
+pub mod stats;
+pub mod table;

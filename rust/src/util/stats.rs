@@ -1,0 +1,143 @@
+//! Summary statistics and empirical CDFs (Figures 7–10 are latency CDFs).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { return 0.0; }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 { return 0.0; }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 100].  Input need not be sorted.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() { return 0.0; }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over already-sorted data.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() { return 0.0; }
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi { v[lo] } else { v[lo] + (pos - lo as f64) * (v[hi] - v[lo]) }
+}
+
+/// Empirical CDF evaluated at fixed probability grid points.
+#[derive(Debug, Clone)]
+pub struct Cdf {
+    /// sorted sample values
+    pub sorted: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn new(mut xs: Vec<f64>) -> Self {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { sorted: xs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Value below which fraction `p` (0..=1) of samples fall.
+    pub fn quantile(&self, p: f64) -> f64 {
+        percentile_sorted(&self.sorted, p * 100.0)
+    }
+
+    /// P(X <= x).
+    pub fn prob_le(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() { return 0.0; }
+        let n = self.sorted.partition_point(|&v| v <= x);
+        n as f64 / self.sorted.len() as f64
+    }
+
+    /// (value, cumulative probability) pairs at `n` evenly spaced quantiles —
+    /// the series plotted in the paper's Figures 7–10.
+    pub fn series(&self, n: usize) -> Vec<(f64, f64)> {
+        (1..=n)
+            .map(|i| {
+                let p = i as f64 / n as f64;
+                (self.quantile(p), p)
+            })
+            .collect()
+    }
+}
+
+/// Throughput (units/s) from a total and a duration in seconds.
+pub fn throughput(total_units: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 { 0.0 } else { total_units / seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_quantile_prob_roundtrip() {
+        let cdf = Cdf::new((1..=100).map(|i| i as f64).collect());
+        assert!((cdf.quantile(0.5) - 50.5).abs() < 1.0);
+        assert!((cdf.prob_le(50.0) - 0.5).abs() < 0.01);
+        assert_eq!(cdf.prob_le(1000.0), 1.0);
+        assert_eq!(cdf.prob_le(0.0), 0.0);
+    }
+
+    #[test]
+    fn cdf_series_monotone() {
+        let cdf = Cdf::new(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        let s = cdf.series(10);
+        for w in s.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+    }
+
+    #[test]
+    fn cdf_prob_le_is_monotone_property() {
+        // randomized property: CDF must be monotone non-decreasing
+        let mut rng = crate::util::rng::Rng::new(42);
+        let xs: Vec<f64> = (0..200).map(|_| rng.f64() * 100.0).collect();
+        let cdf = Cdf::new(xs);
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let p = cdf.prob_le(i as f64);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn throughput_basics() {
+        assert!((throughput(1000.0, 2.0) - 500.0).abs() < 1e-12);
+        assert_eq!(throughput(1000.0, 0.0), 0.0);
+    }
+}

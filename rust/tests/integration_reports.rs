@@ -1,0 +1,168 @@
+//! Cross-module integration: the full report pipeline reproduces the
+//! paper's *qualitative findings* (the eight conclusions of §I) from the
+//! composed simulators — the repo-level acceptance tests.
+
+use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::report;
+use llm_perf_lab::serve::{simulate, EngineSpec};
+use llm_perf_lab::train::maxbatch::max_batch;
+use llm_perf_lab::train::{simulate_step, simulate_step_megatron};
+
+fn wl1() -> TrainWorkload {
+    TrainWorkload { seq_len: 350, batch_size: 1 }
+}
+
+/// Finding (1): "DeepSpeed achieves higher throughput than Megatron-LM"
+/// (at the max-batch operating point both systems would actually use).
+#[test]
+fn finding1_deepspeed_beats_megatron_at_scale() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let ds = max_batch(&plat, &cfg, &Method::naive(), 350, 64).unwrap().1;
+    let meg = simulate_step_megatron(&plat, &cfg, 1,
+                                     TrainWorkload { seq_len: 350, batch_size: 32 });
+    assert!(ds.tokens_per_s > meg.tokens_per_s);
+}
+
+/// Finding (2): ZeRO saves memory; sub-4-GPU cases can OOM.
+#[test]
+fn finding2_zero_memory_savings() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let naive = simulate_step(&plat, &cfg, &Method::naive(), wl1());
+    let z2 = simulate_step(&plat, &cfg, &Method::parse("Z2").unwrap(), wl1());
+    assert!(z2.mem.gpu_total() < 0.75 * naive.mem.gpu_total());
+    // shrink the DP group: the per-GPU share grows back
+    let mut small = plat.clone();
+    small.n_gpus = 2;
+    let z2_small = simulate_step(&small, &cfg, &Method::parse("Z2").unwrap(), wl1());
+    assert!(z2_small.mem.gpu_total() > z2.mem.gpu_total());
+}
+
+/// Finding (3): offloading reduces memory but slows training drastically.
+#[test]
+fn finding3_offload_tradeoff() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let z3 = simulate_step(&plat, &cfg, &Method::parse("Z3").unwrap(), wl1());
+    let z3o = simulate_step(&plat, &cfg, &Method::parse("Z3+O").unwrap(), wl1());
+    assert!(z3o.mem.gpu_total() < z3.mem.gpu_total());
+    assert!(z3o.tokens_per_s < 0.25 * z3.tokens_per_s);
+}
+
+/// Finding (4): recomputation only pays off combined with other methods
+/// (at BS=1 it saves little; its value is enabling large batches).
+#[test]
+fn finding4_recompute_needs_company() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let naive = simulate_step(&plat, &cfg, &Method::naive(), wl1());
+    let r = simulate_step(&plat, &cfg, &Method::parse("R").unwrap(), wl1());
+    let saved = naive.mem.gpu_total() - r.mem.gpu_total();
+    assert!(saved < 0.1 * naive.mem.gpu_total(),
+            "BS=1 activation savings should be minor");
+    let (bs_naive, _) = max_batch(&plat, &cfg, &Method::naive(), 350, 128).unwrap();
+    let (bs_r3, _) = max_batch(&plat, &cfg, &Method::parse("R+Z3").unwrap(), 350, 128)
+        .unwrap();
+    assert!(bs_r3 >= 4 * bs_naive);
+}
+
+/// Finding (5): quantization is the fastest method on every platform.
+#[test]
+fn finding5_quant_fastest_everywhere() {
+    let cfg = LlamaConfig::llama2_7b();
+    for id in PlatformId::ALL {
+        let plat = Platform::get(id);
+        let q = simulate_step(&plat, &cfg, &Method::parse("Q").unwrap(), wl1());
+        assert!(!q.is_oom(), "{id:?}");
+        for label in ["Naive", "Z2", "Z3", "Z3+O"] {
+            let other = simulate_step(&plat, &cfg, &Method::parse(label).unwrap(), wl1());
+            if !other.is_oom() {
+                assert!(q.tokens_per_s > other.tokens_per_s,
+                        "{id:?}: Q {:.0} !> {label} {:.0}",
+                        q.tokens_per_s, other.tokens_per_s);
+            }
+        }
+    }
+}
+
+/// Finding (6): FlashAttention accelerates training and composes with
+/// memory-efficient methods.
+#[test]
+fn finding6_flash_composes() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    for base in ["Naive", "Z2", "Z3"] {
+        let with_f = format!("F+{base}").replace("F+Naive", "F");
+        let a = simulate_step(&plat, &cfg, &Method::parse(base).unwrap(), wl1());
+        let b = simulate_step(&plat, &cfg, &Method::parse(&with_f).unwrap(), wl1());
+        assert!(b.tokens_per_s >= a.tokens_per_s, "{base}");
+    }
+}
+
+/// Finding (7): PEFT lets consumer devices train models they otherwise
+/// could not touch.
+#[test]
+fn finding7_peft_unlocks_consumer_gpus() {
+    let cfg = LlamaConfig::llama2_13b();
+    let plat = Platform::get(PlatformId::Rtx3090Nvl);
+    let full = simulate_step(&plat, &cfg, &Method::naive(), wl1());
+    assert!(full.is_oom());
+    let ql = simulate_step(&plat, &cfg, &Method::parse("QL").unwrap(), wl1());
+    assert!(!ql.is_oom());
+    assert!(ql.tokens_per_s > 100.0);
+}
+
+/// Finding (8): LightLLM tops A800 throughput; TGI leads on 24 GB GPUs.
+#[test]
+fn finding8_serving_winners_by_platform() {
+    let cfg = LlamaConfig::llama2_7b();
+    let wl = ServeWorkload { n_requests: 150, input_len: 512, output_len: 128,
+                             burst: true };
+    let tput = |id: PlatformId, e: &EngineSpec| {
+        simulate(&Platform::get(id), &cfg, e, &wl).map(|r| r.throughput())
+    };
+    let (t, v, l) = (EngineSpec::tgi(), EngineSpec::vllm(), EngineSpec::lightllm());
+    let a800_l = tput(PlatformId::A800, &l).unwrap();
+    assert!(a800_l > tput(PlatformId::A800, &v).unwrap());
+    assert!(a800_l > tput(PlatformId::A800, &t).unwrap());
+    let r3_t = tput(PlatformId::Rtx3090Nvl, &t).unwrap();
+    assert!(r3_t > 0.9 * tput(PlatformId::Rtx3090Nvl, &v).unwrap());
+}
+
+/// The full report pipeline runs end to end and writes every artifact.
+#[test]
+fn report_all_writes_every_table_and_figure() {
+    let dir = std::env::temp_dir().join("llmperf_report_test");
+    let dir = dir.to_str().unwrap();
+    let written = report::report_all(dir, 30).unwrap();
+    // 15 tables (some multi-part) + 12 figures (some multi-part)
+    assert!(written.len() >= 27, "only {} artifacts", written.len());
+    for stem in &written {
+        let txt = std::fs::read_to_string(format!("{stem}.txt")).unwrap();
+        assert!(txt.contains('|'), "{stem} has no table body");
+        let csv = std::fs::read_to_string(format!("{stem}.csv")).unwrap();
+        assert!(csv.lines().count() >= 2, "{stem} csv empty");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Latency ordering (Figs. 7/8): TGI lowest on A800; A800 lowest overall.
+#[test]
+fn latency_orderings() {
+    let cfg = LlamaConfig::llama2_7b();
+    let wl = ServeWorkload { n_requests: 120, input_len: 512, output_len: 128,
+                             burst: true };
+    let a800 = Platform::get(PlatformId::A800);
+    let med = |e: &EngineSpec| {
+        simulate(&a800, &cfg, e, &wl).unwrap().latency_cdf().quantile(0.5)
+    };
+    let tgi = med(&EngineSpec::tgi());
+    let vllm = med(&EngineSpec::vllm());
+    assert!(tgi < vllm, "TGI median {tgi:.1}s !< vLLM {vllm:.1}s");
+    // cross-platform: A800 beats the consumer boxes for the same engine
+    let r3 = simulate(&Platform::get(PlatformId::Rtx3090Nvl), &cfg,
+                      &EngineSpec::vllm(), &wl).unwrap();
+    assert!(vllm < r3.latency_cdf().quantile(0.5));
+}

@@ -1,0 +1,159 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//! These need `make artifacts` (micro + tiny models); they are skipped
+//! with a clear message if the artifacts are missing.
+
+use llm_perf_lab::engine::{EngineCore, GenRequest, Server};
+use llm_perf_lab::runtime::Runtime;
+use llm_perf_lab::trainer::Trainer;
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.txt").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn manifest_loads_and_entries_compile() {
+    if !artifacts_ready() { return; }
+    let rt = Runtime::open("artifacts").unwrap();
+    assert!(rt.manifest.models.iter().any(|m| m.name == "micro"));
+    for entry in ["forward", "train_step", "insert_request", "decode_step"] {
+        rt.compile_entry("micro", entry)
+            .unwrap_or_else(|e| panic!("compile micro/{entry}: {e}"));
+    }
+}
+
+#[test]
+fn params_match_manifest_count() {
+    if !artifacts_ready() { return; }
+    let rt = Runtime::open("artifacts").unwrap();
+    let params = rt.load_params("micro").unwrap();
+    assert_eq!(params.len(), 12, "python PARAM_NAMES order has 12 tensors");
+    let total: usize = params.iter().map(|p| p.element_count()).sum();
+    assert_eq!(total as u64, rt.model_info("micro").unwrap().params);
+}
+
+#[test]
+fn forward_runs_and_logits_shape() {
+    if !artifacts_ready() { return; }
+    let rt = Runtime::open("artifacts").unwrap();
+    let info = rt.model_info("micro").unwrap();
+    let exe = rt.compile_entry("micro", "forward").unwrap();
+    let params = rt.load_params("micro").unwrap();
+    let tokens: Vec<i32> = (0..(info.train_batch * info.seq) as i32)
+        .map(|t| t % info.vocab as i32)
+        .collect();
+    let tok = llm_perf_lab::runtime::client::i32_literal(
+        &tokens, &[info.train_batch as i64, info.seq as i64]).unwrap();
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&tok);
+    let out = rt.run(&exe, &args).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].element_count() as u64,
+               info.train_batch * info.seq * info.vocab);
+    let logits: Vec<f32> = out[0].to_vec().unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn trainer_reduces_loss_micro() {
+    if !artifacts_ready() { return; }
+    let mut tr = Trainer::new("artifacts", "micro", 2e-3, 1).unwrap();
+    let initial_expected = (tr.info.vocab as f32).ln();
+    let first = tr.step().unwrap();
+    assert!((first - initial_expected).abs() < 1.0,
+            "first loss {first} should be near ln(V)={initial_expected}");
+    for _ in 0..24 {
+        tr.step().unwrap();
+    }
+    let last = tr.history.last().unwrap().loss;
+    assert!(last < first - 0.3, "loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn engine_generates_deterministically() {
+    if !artifacts_ready() { return; }
+    let run_once = || {
+        let mut core = EngineCore::new("artifacts", "micro").unwrap();
+        let req = GenRequest { id: 0, prompt: vec![1, 2, 3, 4, 5], max_new: 8 };
+        let outs = core.run_batch(std::slice::from_ref(&req)).unwrap();
+        outs[0].tokens.clone()
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a, b, "greedy decoding must be deterministic");
+    assert_eq!(a.len(), 8);
+}
+
+#[test]
+fn engine_continuous_batching_oversubscribed() {
+    if !artifacts_ready() { return; }
+    let mut core = EngineCore::new("artifacts", "micro").unwrap();
+    let n = core.n_slots() * 3; // more requests than slots
+    let reqs: Vec<GenRequest> = (0..n as u64)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: vec![(i % 200) as i32 + 1; 6],
+            max_new: 5,
+        })
+        .collect();
+    let outs = core.run_batch(&reqs).unwrap();
+    assert_eq!(outs.len(), n);
+    for o in &outs {
+        assert_eq!(o.tokens.len(), 5);
+        assert!(o.ttft <= o.latency);
+    }
+}
+
+#[test]
+fn decode_matches_forward_teacher_forced() {
+    // the real-runtime counterpart of the python prefill/decode test:
+    // greedy continuation from insert_request must equal running decode
+    // steps one by one (state is carried entirely in the Rust-owned cache)
+    if !artifacts_ready() { return; }
+    let mut c1 = EngineCore::new("artifacts", "micro").unwrap();
+    let prompt: Vec<i32> = (1..=10).collect();
+    let req = GenRequest { id: 7, prompt: prompt.clone(), max_new: 6 };
+    let o1 = c1.run_batch(std::slice::from_ref(&req)).unwrap();
+    // same request admitted alongside others must produce identical tokens
+    let mut c2 = EngineCore::new("artifacts", "micro").unwrap();
+    let mut reqs = vec![GenRequest { id: 0, prompt: vec![42; 8], max_new: 6 }];
+    reqs.push(req);
+    let o2 = c2.run_batch(&reqs).unwrap();
+    let t1 = &o1[0].tokens;
+    let t2 = &o2.iter().find(|o| o.id == 7).unwrap().tokens;
+    assert_eq!(t1, t2, "slot isolation: co-batching must not change output");
+}
+
+#[test]
+fn threaded_server_serves_burst() {
+    if !artifacts_ready() { return; }
+    let server = std::sync::Arc::new(Server::start("artifacts", "micro").unwrap());
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let s = std::sync::Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            s.submit(vec![(i as i32) + 1; 5], 4, i).unwrap().wait().unwrap()
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(outs.len(), 6);
+    for o in outs {
+        assert_eq!(o.tokens.len(), 4);
+    }
+}
+
+#[test]
+fn calibration_micro_kernels_run() {
+    if !artifacts_ready() { return; }
+    let rt = Runtime::open("artifacts").unwrap();
+    // one representative of each op family
+    for name in ["gemm_m128_n256_k256", "attn_naive_s128", "attn_flash_s128",
+                 "rmsnorm_pallas", "rope", "softmax"] {
+        let t = llm_perf_lab::calibrate::time_micro(&rt, name, 2)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(t.seconds > 0.0 && t.seconds < 30.0, "{name}: {}", t.seconds);
+    }
+}

@@ -1,0 +1,205 @@
+//! Randomized property tests (proptest-style, self-rolled on util::rng)
+//! over the coordinator invariants DESIGN.md calls out: KV allocation,
+//! scheduler conservation, memory accounting, cost-model monotonicity.
+
+use std::collections::HashMap;
+
+use llm_perf_lab::comm::{coll_time, Collective};
+use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
+use llm_perf_lab::hw::{Link, Platform, PlatformId};
+use llm_perf_lab::memory::{check_fit, training_memory, Fit};
+use llm_perf_lab::serve::kv_cache::PagedKvCache;
+use llm_perf_lab::serve::token_kv::TokenKv;
+use llm_perf_lab::serve::{simulate, EngineSpec};
+use llm_perf_lab::train::simulate_step;
+use llm_perf_lab::util::rng::Rng;
+
+const CASES: usize = 60;
+
+#[test]
+fn paged_kv_never_leaks_or_double_frees() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let capacity = rng.range(1_000, 100_000);
+        let block = *[1u64, 8, 16, 64].get(rng.index(4)).unwrap();
+        let mut kv = PagedKvCache::new(capacity, block);
+        let total = kv.total_blocks;
+        let mut live: HashMap<u64, u64> = HashMap::new();
+        for op in 0..300 {
+            match rng.index(3) {
+                0 => {
+                    let id = rng.range(0, 50);
+                    let toks = rng.range(1, 2000);
+                    if kv.admit(id, toks) {
+                        assert!(!live.contains_key(&id), "case {case} op {op}: double admit");
+                        live.insert(id, toks);
+                    }
+                }
+                1 => {
+                    if let Some((&id, &t)) = live.iter().next() {
+                        if kv.append_token(id, t + 1) {
+                            live.insert(id, t + 1);
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&id) = live.keys().next() {
+                        kv.release(id);
+                        live.remove(&id);
+                    }
+                }
+            }
+            // invariant: used blocks == sum of ceil(tokens/block) of live seqs
+            let expect: u64 = live.values().map(|t| t.div_ceil(block)).sum();
+            assert_eq!(kv.used_blocks(), expect, "case {case} op {op}");
+            assert!(kv.used_blocks() <= total);
+        }
+        for id in live.keys().copied().collect::<Vec<_>>() {
+            kv.release(id);
+        }
+        assert_eq!(kv.used_blocks(), 0, "case {case}: leak after release-all");
+    }
+}
+
+#[test]
+fn token_kv_exact_accounting_under_churn() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..CASES {
+        let capacity = rng.range(1_000, 50_000);
+        let mut kv = TokenKv::new(capacity);
+        let mut live: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..300 {
+            match rng.index(3) {
+                0 => {
+                    let id = rng.range(0, 40);
+                    let toks = rng.range(1, 1500);
+                    if kv.admit(id, toks) {
+                        live.insert(id, toks);
+                    }
+                }
+                1 => {
+                    if let Some((&id, &t)) = live.iter().next() {
+                        if kv.append_token(id, t + 1) {
+                            live.insert(id, t + 1);
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&id) = live.keys().next() {
+                        kv.release(id);
+                        live.remove(&id);
+                    }
+                }
+            }
+            let used: u64 = live.values().sum();
+            assert_eq!(kv.free_tokens(), capacity - used);
+        }
+    }
+}
+
+#[test]
+fn serving_sim_conserves_requests_and_tokens() {
+    let mut rng = Rng::new(0xCAFE);
+    let engines = EngineSpec::all();
+    for case in 0..12 {
+        let n = rng.range(20, 200);
+        let out_len = rng.range(8, 96);
+        let wl = ServeWorkload { n_requests: n, input_len: rng.range(64, 600),
+                                 output_len: out_len, burst: true };
+        let cfg = if rng.index(2) == 0 { LlamaConfig::llama2_7b() }
+                  else { LlamaConfig::llama2_13b() };
+        let plat = Platform::get(PlatformId::A800);
+        let e = &engines[rng.index(engines.len())];
+        let r = simulate(&plat, &cfg, e, &wl).expect("deployable on A800");
+        // conservation: every request completes exactly once with its tokens
+        assert_eq!(r.completions.len() as u64, n, "case {case} ({})", e.name);
+        assert_eq!(r.output_tokens, n * out_len);
+        let mut seen: Vec<u64> = r.completions.iter().map(|c| c.id).collect();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len() as u64, n, "duplicate completions");
+        // causality: latency ≥ ttft > 0, finish within makespan
+        for c in &r.completions {
+            assert!(c.latency >= c.ttft && c.ttft >= 0.0);
+            assert!(c.finish <= r.makespan + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn training_memory_monotone_in_batch_and_model() {
+    let mut rng = Rng::new(0xAB);
+    let grid = Method::pretrain_grid();
+    let plat = Platform::get(PlatformId::A800);
+    for _ in 0..CASES {
+        let (_, m) = grid[rng.index(grid.len())];
+        let bs = rng.range(1, 32);
+        let m7a = training_memory(&plat, &LlamaConfig::llama2_7b(), &m, bs, 350);
+        let m7b = training_memory(&plat, &LlamaConfig::llama2_7b(), &m, bs + 8, 350);
+        assert!(m7b.gpu_total() >= m7a.gpu_total(),
+                "memory must grow with batch ({m})");
+        let m13 = training_memory(&plat, &LlamaConfig::llama2_13b(), &m, bs, 350);
+        assert!(m13.gpu_total() > m7a.gpu_total(),
+                "13B must outweigh 7B ({m})");
+    }
+}
+
+#[test]
+fn step_time_monotone_in_batch_when_fitting() {
+    let mut rng = Rng::new(0x51);
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    for _ in 0..30 {
+        let m = Method::parse(["Q", "Z3", "L", "F+Z3"][rng.index(4)]).unwrap();
+        let bs = rng.range(1, 8);
+        let a = simulate_step(&plat, &cfg, &m, TrainWorkload { seq_len: 350, batch_size: bs });
+        let b = simulate_step(&plat, &cfg, &m, TrainWorkload { seq_len: 350, batch_size: bs * 2 });
+        if a.is_oom() || b.is_oom() {
+            continue;
+        }
+        assert!(b.step_time > a.step_time, "{m} bs {bs}");
+        // throughput should not fall off a cliff when doubling batch
+        assert!(b.tokens_per_s > 0.8 * a.tokens_per_s, "{m} bs {bs}");
+    }
+}
+
+#[test]
+fn collective_cost_monotone_in_size_and_ranks() {
+    let mut rng = Rng::new(0x77);
+    let links = [Link::nvlink_a800(), Link::nvlink_3090(), Link::pcie4(true),
+                 Link::pcie4(false)];
+    for _ in 0..CASES {
+        let link = &links[rng.index(links.len())];
+        let op = Collective::ALL[rng.index(5)];
+        let bytes = (1u64 << rng.range(10, 32)) as f64;
+        let n = [2u32, 4, 8][rng.index(3)] as u32;
+        let t = coll_time(link, op, bytes, n);
+        assert!(t > 0.0);
+        assert!(coll_time(link, op, bytes * 2.0, n) > t, "{op:?} size");
+        assert!(coll_time(link, op, bytes, n * 2) >= t * 0.99, "{op:?} ranks");
+    }
+}
+
+#[test]
+fn oom_verdicts_are_batch_monotone() {
+    // once a config OOMs at batch b, it must OOM at every larger batch
+    let mut rng = Rng::new(0x99);
+    for _ in 0..CASES {
+        let plat = Platform::get([PlatformId::Rtx4090, PlatformId::Rtx3090Nvl]
+            [rng.index(2)]);
+        let grid = Method::pretrain_grid();
+        let (_, m) = grid[rng.index(grid.len())];
+        let cfg = LlamaConfig::llama2_7b();
+        let mut oomed = false;
+        for bs in [1u64, 2, 4, 8, 16, 32] {
+            let mem = training_memory(&plat, &cfg, &m, bs, 350);
+            let fit = check_fit(&plat, &mem);
+            if oomed {
+                assert_ne!(fit, Fit::Ok, "{m} at bs {bs} un-OOMed");
+            }
+            if fit != Fit::Ok {
+                oomed = true;
+            }
+        }
+    }
+}
