@@ -10,6 +10,9 @@ pub enum LinkKind {
     /// through the PCIe root complex; optionally without P2P (bounce
     /// through host memory — the RTX4090 NCCL_P2P_DISABLE case)
     Pcie { p2p: bool },
+    /// inter-node RDMA fabric (the hop a multi-node `ParallelPlan` axis
+    /// pays when its group spans servers)
+    Infiniband,
 }
 
 /// Point-to-point link between two devices.
@@ -46,6 +49,15 @@ impl Link {
         // decode-iteration latency in Fig. 9, where TP issues 2 small
         // AllReduces per layer per token)
         Link { kind: LinkKind::Pcie { p2p }, bw, latency: if p2p { 12e-6 } else { 250e-6 } }
+    }
+
+    /// HDR InfiniBand NIC per node (200 Gb/s ≈ 25 GB/s raw; effective
+    /// per-direction bandwidth after RDMA/protocol overhead).  The
+    /// inter-node hop of `hw::Topology` — roughly an order of magnitude
+    /// slower than the A800's NVLink, which is why plan axes that span
+    /// nodes should carry the least traffic.
+    pub fn infiniband() -> Self {
+        Link { kind: LinkKind::Infiniband, bw: 23e9, latency: 7e-6 }
     }
 
     /// Time to move `bytes` point-to-point.

@@ -9,7 +9,9 @@ pub mod gpu;
 pub mod interconnect;
 pub mod memcopy;
 pub mod platform;
+pub mod topology;
 
 pub use gpu::{Dtype, GpuSpec};
 pub use interconnect::{HostLink, Link, LinkKind};
 pub use platform::{Platform, PlatformId};
+pub use topology::Topology;

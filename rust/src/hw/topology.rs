@@ -1,0 +1,101 @@
+//! Hierarchical interconnect topology: intra-node fabric + inter-node
+//! InfiniBand.
+//!
+//! The paper's platforms are single 8-GPU servers, so every collective
+//! runs on the node fabric.  A `ParallelPlan` axis whose group spans
+//! nodes, however, must be priced on the slower inter-node hop — that is
+//! the one decision this type owns (`link_for_group`).  Multi-node
+//! topologies open the 70B training scenarios the paper could not run.
+
+use super::interconnect::Link;
+use super::platform::Platform;
+
+/// GPUs arranged as `n_nodes` servers of `gpus_per_node`, ranks laid out
+/// node-major (rank = node * gpus_per_node + local).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub gpus_per_node: u32,
+    pub n_nodes: u32,
+    /// intra-node GPU-GPU fabric (NVLink / PCIe, from `Platform`)
+    pub intra: Link,
+    /// inter-node link (InfiniBand NIC per node)
+    pub inter: Link,
+}
+
+impl Topology {
+    /// The paper's setting: one server, every collective on the fabric.
+    pub fn single_node(plat: &Platform) -> Self {
+        Topology {
+            gpus_per_node: plat.n_gpus,
+            n_nodes: 1,
+            intra: plat.fabric.clone(),
+            inter: Link::infiniband(),
+        }
+    }
+
+    /// `n_nodes` copies of the platform, IB-connected — the scale-out
+    /// scenario a plan sweep explores for 70B training.
+    pub fn multi_node(plat: &Platform, n_nodes: u32) -> Self {
+        assert!(n_nodes >= 1, "need at least one node");
+        Topology { n_nodes, ..Topology::single_node(plat) }
+    }
+
+    /// Total GPU count (the world a `ParallelPlan` must fill).
+    pub fn n_gpus(&self) -> u32 {
+        self.gpus_per_node * self.n_nodes
+    }
+
+    /// The link a collective over a group of `size` ranks spaced `stride`
+    /// apart must be priced on: with node-major rank layout the group's
+    /// footprint is `size * stride` consecutive ranks, so it crosses a
+    /// node boundary — and pays the inter-node hop — iff that footprint
+    /// exceeds one node.
+    pub fn link_for_group(&self, size: u32, stride: u32) -> &Link {
+        if size <= 1 {
+            return &self.intra;
+        }
+        if size.saturating_mul(stride) > self.gpus_per_node {
+            &self.inter
+        } else {
+            &self.intra
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    fn a800() -> Platform {
+        Platform::get(PlatformId::A800)
+    }
+
+    #[test]
+    fn single_node_never_crosses() {
+        let t = Topology::single_node(&a800());
+        assert_eq!(t.n_gpus(), 8);
+        for (size, stride) in [(1u32, 1u32), (2, 1), (8, 1), (2, 4), (4, 2)] {
+            let l = t.link_for_group(size, stride);
+            assert!((l.bw - t.intra.bw).abs() < 1.0, "{size}x{stride}");
+        }
+    }
+
+    #[test]
+    fn spanning_groups_pay_the_ib_hop() {
+        let t = Topology::multi_node(&a800(), 4);
+        assert_eq!(t.n_gpus(), 32);
+        // a TP group inside one node stays on NVLink
+        assert!((t.link_for_group(8, 1).bw - t.intra.bw).abs() < 1.0);
+        // a DP group strided past the node boundary crosses IB
+        assert!((t.link_for_group(4, 8).bw - t.inter.bw).abs() < 1.0);
+        // IB is the slower hop on an A800 box
+        assert!(t.inter.bw < t.intra.bw);
+    }
+
+    #[test]
+    fn single_rank_groups_are_local() {
+        let t = Topology::multi_node(&a800(), 2);
+        assert!((t.link_for_group(1, 16).bw - t.intra.bw).abs() < 1.0);
+    }
+}

@@ -15,21 +15,36 @@
 //!   kernels (interpret mode), called from L2.
 //!
 //! Python never runs at request time: `runtime/` loads `artifacts/*.hlo.txt`
-//! into the PJRT CPU client and everything else is Rust.
+//! into the PJRT CPU client and everything else is Rust.  The PJRT-backed
+//! modules (`runtime/`, `engine/`, `trainer/`, `calibrate/`) are gated
+//! behind the optional `xla` cargo feature; the default build is the
+//! dependency-free simulator core.
+//!
+//! Cross-cutting: `parallel/` holds the `ParallelPlan` (TP×PP×DP)
+//! subsystem — the single source of sharding truth for the training,
+//! fine-tuning, and serving simulators (DESIGN.md §Parallelism).
 
-pub mod calibrate;
 pub mod cli;
 pub mod comm;
 pub mod config;
-pub mod engine;
 pub mod finetune;
 pub mod hw;
 pub mod memory;
 pub mod model;
 pub mod ops;
+pub mod parallel;
 pub mod report;
-pub mod runtime;
 pub mod serve;
 pub mod train;
-pub mod trainer;
 pub mod util;
+
+// The real PJRT-backed paths need the `xla` (and `anyhow`) crates; the
+// default build is the dependency-free simulator core (see Cargo.toml).
+#[cfg(feature = "xla")]
+pub mod calibrate;
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(feature = "xla")]
+pub mod runtime;
+#[cfg(feature = "xla")]
+pub mod trainer;

@@ -3,20 +3,18 @@
 //! Subcommands (see README):
 //!   table N | figure N | report-all      — regenerate paper tables/figures
 //!   sim-pretrain | sim-serve             — one simulator cell
-//!   train | serve | calibrate            — the *real* PJRT paths
+//!   sweep-parallel                       — TP×PP×DP plan comparison
+//!   train | serve | calibrate            — the *real* PJRT paths (`xla` feature)
 //!   info                                 — environment summary
 
-use anyhow::{anyhow, Result};
 use llm_perf_lab::cli::Cli;
 use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
-use llm_perf_lab::engine::{EngineCore, GenRequest};
-use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::err;
+use llm_perf_lab::hw::{Platform, PlatformId, Topology};
 use llm_perf_lab::report;
-use llm_perf_lab::runtime::Runtime;
 use llm_perf_lab::serve::EngineSpec;
 use llm_perf_lab::train::simulate_step;
-use llm_perf_lab::trainer::Trainer;
-use llm_perf_lab::util::stats::Cdf;
+use llm_perf_lab::util::error::Result;
 
 const USAGE: &str = "\
 llmperf — benchmark lab for 'Dissecting the Runtime Performance of LLMs'
@@ -27,10 +25,14 @@ paper reproduction:
   report-all [--out results] [--requests N]   regenerate everything
 
 simulators:
-  sim-pretrain --model 7b --platform a800 --method F+Z3 [--bs 1]
-  sim-serve    --model 7b --platform a800 --engine vllm [--requests 1000]
+  sim-pretrain   --model 7b --platform a800 --method F+Z3 [--bs 1]
+  sim-serve      --model 7b --platform a800 --engine vllm [--requests 1000]
+  sweep-parallel [--model 70b] [--platform a800] [--nodes 1] [--bs 8] [--seq 350]
+                 rank every valid TP x PP x DP plan (step time, tokens/s,
+                 1F1B bubble, memory fit); --nodes > 1 spans IB-connected
+                 copies of the platform
 
-real PJRT paths (need `make artifacts`):
+real PJRT paths (need `make artifacts` and a build with --features xla):
   train     [--model tiny] [--steps 100] [--lr 1e-3] [--csv results/loss.csv]
   serve     [--model tiny] [--requests 16] [--max-new 32]
   calibrate [--reps 5]     measure the AOT operator microbenchmarks
@@ -45,22 +47,18 @@ fn main() {
     }
 }
 
-fn artifacts_dir(cli: &Cli) -> String {
-    cli.flag_or("artifacts", "artifacts")
-}
-
 fn run(cli: &Cli) -> Result<()> {
     match cli.command.as_str() {
         "table" => {
             let n: u32 = cli.positional.first()
-                .ok_or_else(|| anyhow!("usage: llmperf table <2..16>"))?.parse()?;
+                .ok_or_else(|| err!("usage: llmperf table <2..16>"))?.parse()?;
             for t in report::table(n, cli.flag_u64("requests", 200))? {
                 println!("{}", t.render());
             }
         }
         "figure" => {
             let n: u32 = cli.positional.first()
-                .ok_or_else(|| anyhow!("usage: llmperf figure <4..15>"))?.parse()?;
+                .ok_or_else(|| err!("usage: llmperf figure <4..15>"))?.parse()?;
             for t in report::figure(n, cli.flag_u64("requests", 200))? {
                 println!("{}", t.render());
             }
@@ -75,12 +73,12 @@ fn run(cli: &Cli) -> Result<()> {
         }
         "sim-pretrain" => {
             let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
-                .ok_or_else(|| anyhow!("unknown model"))?;
+                .ok_or_else(|| err!("unknown model"))?;
             let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
                 .map(Platform::get)
-                .ok_or_else(|| anyhow!("unknown platform"))?;
+                .ok_or_else(|| err!("unknown platform"))?;
             let m = Method::parse(&cli.flag_or("method", "Naive"))
-                .ok_or_else(|| anyhow!("bad method label"))?;
+                .ok_or_else(|| err!("bad method label"))?;
             let wl = TrainWorkload { seq_len: cli.flag_u64("seq", 350),
                                      batch_size: cli.flag_u64("bs", 1) };
             let r = simulate_step(&plat, &cfg, &m, wl);
@@ -101,17 +99,32 @@ fn run(cli: &Cli) -> Result<()> {
                 println!("  throughput {:.0} tokens/s", r.tokens_per_s);
             }
         }
-        "sim-serve" => {
-            let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
-                .ok_or_else(|| anyhow!("unknown model"))?;
+        "sweep-parallel" | "sweep" => {
+            let cfg = LlamaConfig::by_name(&cli.flag_or("model", "70b"))
+                .ok_or_else(|| err!("unknown model"))?;
             let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
                 .map(Platform::get)
-                .ok_or_else(|| anyhow!("unknown platform"))?;
+                .ok_or_else(|| err!("unknown platform"))?;
+            let nodes = cli.flag_u64("nodes", 1) as u32;
+            if nodes == 0 {
+                return Err(err!("--nodes must be >= 1"));
+            }
+            let topo = Topology::multi_node(&plat, nodes);
+            let wl = TrainWorkload { seq_len: cli.flag_u64("seq", 350),
+                                     batch_size: cli.flag_u64("bs", 8) };
+            println!("{}", report::parallel::parallel_sweep(&plat, &topo, &cfg, wl).render());
+        }
+        "sim-serve" => {
+            let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
+                .ok_or_else(|| err!("unknown model"))?;
+            let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
+                .map(Platform::get)
+                .ok_or_else(|| err!("unknown platform"))?;
             let engine = match cli.flag_or("engine", "vllm").as_str() {
                 "vllm" => EngineSpec::vllm(),
                 "tgi" => EngineSpec::tgi(),
                 "lightllm" => EngineSpec::lightllm(),
-                other => return Err(anyhow!("unknown engine '{other}'")),
+                other => return Err(err!("unknown engine '{other}'")),
             };
             let wl = ServeWorkload {
                 n_requests: cli.flag_u64("requests", 1000),
@@ -135,69 +148,13 @@ fn run(cli: &Cli) -> Result<()> {
                 }
             }
         }
-        "train" => {
-            let model = cli.flag_or("model", "tiny");
-            let steps = cli.flag_u64("steps", 100);
-            let mut tr = Trainer::new(&artifacts_dir(cli), &model,
-                                      cli.flag_f32("lr", 1e-3), 42)?;
-            println!("training '{model}' ({:.1}M params) for {steps} steps, \
-                      batch {} x seq {}",
-                     tr.info.params as f64 / 1e6, tr.info.train_batch, tr.info.seq);
-            tr.run(steps, cli.flag_u64("log-every", 10))?;
-            let first = tr.history.first().map(|l| l.loss).unwrap_or(0.0);
-            let last = tr.history.last().map(|l| l.loss).unwrap_or(0.0);
-            println!("loss: {first:.4} -> {last:.4}");
-            if let Some(csv) = cli.flag("csv") {
-                tr.write_csv(csv)?;
-                println!("loss curve written to {csv}");
-            }
-        }
-        "serve" => {
-            let model = cli.flag_or("model", "tiny");
-            let n = cli.flag_u64("requests", 16);
-            let max_new = cli.flag_u64("max-new", 32) as usize;
-            let mut core = EngineCore::new(&artifacts_dir(cli), &model)?;
-            println!("engine up: model '{model}', {} slots, prompt_len {}",
-                     core.n_slots(), core.info.prompt_len);
-            let reqs: Vec<GenRequest> = (0..n)
-                .map(|i| GenRequest {
-                    id: i,
-                    prompt: (0..core.info.prompt_len as i32)
-                        .map(|t| (t * 7 + i as i32) % core.info.vocab as i32)
-                        .collect(),
-                    max_new,
-                })
-                .collect();
-            let t0 = std::time::Instant::now();
-            let outs = core.run_batch(&reqs)?;
-            let dt = t0.elapsed().as_secs_f64();
-            let total_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
-            let cdf = Cdf::new(outs.iter().map(|o| o.latency).collect());
-            println!("served {} requests / {} tokens in {:.2}s \
-                      ({:.1} output tokens/s)", outs.len(), total_tokens, dt,
-                     total_tokens as f64 / dt);
-            println!("latency p50 {:.3}s p90 {:.3}s p100 {:.3}s  \
-                      ({} decode iters, {} prefills)",
-                     cdf.quantile(0.5), cdf.quantile(0.9), cdf.quantile(1.0),
-                     core.decode_steps, core.prefills);
-        }
-        "calibrate" => {
-            let rt = Runtime::open(artifacts_dir(cli))?;
-            let reps = cli.flag_u64("reps", 5) as usize;
-            println!("timing {} micro kernels ({} reps each) on the PJRT CPU backend",
-                     rt.manifest.micros.len(), reps);
-            let timings = llm_perf_lab::calibrate::calibrate_all(&rt, reps)?;
-            for t in &timings {
-                match t.gflops() {
-                    Some(g) => println!("  {:<28} {:>10.3} ms  {:>8.2} GFLOP/s",
-                                        t.name, t.seconds * 1e3, g),
-                    None => println!("  {:<28} {:>10.3} ms", t.name, t.seconds * 1e3),
-                }
-            }
-            println!("\nflash/naive attention speedup (CPU-measured):");
-            for (s, ratio) in llm_perf_lab::calibrate::attention_ratios(&timings) {
-                println!("  seq {s:>5}: naive/flash = {ratio:.2}x");
-            }
+        "train" | "serve" | "calibrate" => {
+            #[cfg(feature = "xla")]
+            real::dispatch(cli)?;
+            #[cfg(not(feature = "xla"))]
+            return Err(err!("'{}' drives the real PJRT runtime — rebuild with \
+                             `cargo build --features xla` (see Cargo.toml)",
+                            cli.command));
         }
         "info" => {
             println!("platforms:");
@@ -212,16 +169,118 @@ fn run(cli: &Cli) -> Result<()> {
                          m.name, m.param_count() / 1e9, m.d_model, m.n_layers,
                          m.n_heads, m.n_kv_heads);
             }
-            if let Ok(rt) = Runtime::open(artifacts_dir(cli)) {
-                println!("artifacts: {} models, {} entries, {} micro kernels",
-                         rt.manifest.models.len(), rt.manifest.hlos.len(),
-                         rt.manifest.micros.len());
-            } else {
-                println!("artifacts: not built (run `make artifacts`)");
-            }
+            #[cfg(feature = "xla")]
+            real::artifacts_info(cli);
+            #[cfg(not(feature = "xla"))]
+            println!("artifacts: unavailable (built without the 'xla' feature)");
         }
         "" | "help" | "--help" => print!("{USAGE}"),
-        other => return Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+        other => return Err(err!("unknown command '{other}'\n\n{USAGE}")),
     }
     Ok(())
+}
+
+/// The real PJRT paths: only compiled when the `xla` feature (and its
+/// crates) are available.
+#[cfg(feature = "xla")]
+mod real {
+    use super::*;
+    use llm_perf_lab::err;
+    use llm_perf_lab::engine::{EngineCore, GenRequest};
+    use llm_perf_lab::runtime::Runtime;
+    use llm_perf_lab::trainer::Trainer;
+    use llm_perf_lab::util::stats::Cdf;
+
+    fn artifacts_dir(cli: &Cli) -> String {
+        cli.flag_or("artifacts", "artifacts")
+    }
+
+    pub fn dispatch(cli: &Cli) -> Result<()> {
+        match cli.command.as_str() {
+            "train" => train(cli),
+            "serve" => serve(cli),
+            "calibrate" => calibrate(cli),
+            other => Err(err!("not a PJRT command: '{other}'")),
+        }
+    }
+
+    fn train(cli: &Cli) -> Result<()> {
+        let model = cli.flag_or("model", "tiny");
+        let steps = cli.flag_u64("steps", 100);
+        let mut tr = Trainer::new(&artifacts_dir(cli), &model,
+                                  cli.flag_f32("lr", 1e-3), 42)?;
+        println!("training '{model}' ({:.1}M params) for {steps} steps, \
+                  batch {} x seq {}",
+                 tr.info.params as f64 / 1e6, tr.info.train_batch, tr.info.seq);
+        tr.run(steps, cli.flag_u64("log-every", 10))?;
+        let first = tr.history.first().map(|l| l.loss).unwrap_or(0.0);
+        let last = tr.history.last().map(|l| l.loss).unwrap_or(0.0);
+        println!("loss: {first:.4} -> {last:.4}");
+        if let Some(csv) = cli.flag("csv") {
+            tr.write_csv(csv)?;
+            println!("loss curve written to {csv}");
+        }
+        Ok(())
+    }
+
+    fn serve(cli: &Cli) -> Result<()> {
+        let model = cli.flag_or("model", "tiny");
+        let n = cli.flag_u64("requests", 16);
+        let max_new = cli.flag_u64("max-new", 32) as usize;
+        let mut core = EngineCore::new(&artifacts_dir(cli), &model)?;
+        println!("engine up: model '{model}', {} slots, prompt_len {}",
+                 core.n_slots(), core.info.prompt_len);
+        let reqs: Vec<GenRequest> = (0..n)
+            .map(|i| GenRequest {
+                id: i,
+                prompt: (0..core.info.prompt_len as i32)
+                    .map(|t| (t * 7 + i as i32) % core.info.vocab as i32)
+                    .collect(),
+                max_new,
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let outs = core.run_batch(&reqs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let total_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+        let cdf = Cdf::new(outs.iter().map(|o| o.latency).collect());
+        println!("served {} requests / {} tokens in {:.2}s \
+                  ({:.1} output tokens/s)", outs.len(), total_tokens, dt,
+                 total_tokens as f64 / dt);
+        println!("latency p50 {:.3}s p90 {:.3}s p100 {:.3}s  \
+                  ({} decode iters, {} prefills)",
+                 cdf.quantile(0.5), cdf.quantile(0.9), cdf.quantile(1.0),
+                 core.decode_steps, core.prefills);
+        Ok(())
+    }
+
+    fn calibrate(cli: &Cli) -> Result<()> {
+        let rt = Runtime::open(artifacts_dir(cli))?;
+        let reps = cli.flag_u64("reps", 5) as usize;
+        println!("timing {} micro kernels ({} reps each) on the PJRT CPU backend",
+                 rt.manifest.micros.len(), reps);
+        let timings = llm_perf_lab::calibrate::calibrate_all(&rt, reps)?;
+        for t in &timings {
+            match t.gflops() {
+                Some(g) => println!("  {:<28} {:>10.3} ms  {:>8.2} GFLOP/s",
+                                    t.name, t.seconds * 1e3, g),
+                None => println!("  {:<28} {:>10.3} ms", t.name, t.seconds * 1e3),
+            }
+        }
+        println!("\nflash/naive attention speedup (CPU-measured):");
+        for (s, ratio) in llm_perf_lab::calibrate::attention_ratios(&timings) {
+            println!("  seq {s:>5}: naive/flash = {ratio:.2}x");
+        }
+        Ok(())
+    }
+
+    pub fn artifacts_info(cli: &Cli) {
+        if let Ok(rt) = Runtime::open(artifacts_dir(cli)) {
+            println!("artifacts: {} models, {} entries, {} micro kernels",
+                     rt.manifest.models.len(), rt.manifest.hlos.len(),
+                     rt.manifest.micros.len());
+        } else {
+            println!("artifacts: not built (run `make artifacts`)");
+        }
+    }
 }

@@ -3,10 +3,13 @@
 //! The KV budget is what differentiates the three engines on the same GPU
 //! (§VI): how much of it a scheduler can actually *use* depends on its
 //! allocator (paged blocks vs token granularity vs contiguous), modeled in
-//! serve/kv_cache.rs and serve/token_kv.rs.
+//! serve/kv_cache.rs and serve/token_kv.rs.  Sharding goes through
+//! `ParallelPlan` — weights split over the model grid, KV over the TP
+//! group.
 
 use crate::config::LlamaConfig;
 use crate::hw::{Dtype, Platform};
+use crate::parallel::ParallelPlan;
 
 /// Bytes of KV cache for one token (all layers, both K and V).
 pub fn kv_bytes_per_token(cfg: &LlamaConfig, dt: Dtype) -> f64 {
@@ -16,7 +19,7 @@ pub fn kv_bytes_per_token(cfg: &LlamaConfig, dt: Dtype) -> f64 {
 /// Serving memory layout on one tensor-parallel group.
 #[derive(Debug, Clone)]
 pub struct ServeMemory {
-    /// weight bytes per GPU (TP-sharded)
+    /// weight bytes per GPU (plan-sharded)
     pub weights_per_gpu: f64,
     /// KV-cache pool bytes per GPU after weights + overhead + headroom
     pub kv_pool_per_gpu: f64,
@@ -24,44 +27,52 @@ pub struct ServeMemory {
     pub kv_token_capacity: u64,
 }
 
-/// Compute the serving memory plan; `tp` = tensor-parallel degree,
-/// `gpu_mem_util` = fraction of GPU memory the engine lets itself use
-/// (vLLM's gpu_memory_utilization knob; engines differ).
+/// Compute the serving memory plan; `plan` = the deployment's parallelism
+/// (engines use TP-only plans), `gpu_mem_util` = fraction of GPU memory
+/// the engine lets itself use (vLLM's gpu_memory_utilization knob).
 pub fn serve_memory(
     plat: &Platform,
     cfg: &LlamaConfig,
-    tp: u32,
+    plan: &ParallelPlan,
     dt: Dtype,
     gpu_mem_util: f64,
 ) -> ServeMemory {
-    let weights_per_gpu = cfg.param_count() * dt.bytes() / tp as f64;
+    let weights_per_gpu = plan.model_shard(cfg.param_count() * dt.bytes());
     let budget = plat.gpu.mem_bytes * gpu_mem_util - plat.base_overhead;
     let kv_pool = (budget - weights_per_gpu).max(0.0);
-    let per_tok = kv_bytes_per_token(cfg, dt) / tp as f64;
+    let per_tok = plan.kv_shard(kv_bytes_per_token(cfg, dt));
     let capacity = if per_tok > 0.0 { (kv_pool / per_tok) as u64 } else { 0 };
     ServeMemory { weights_per_gpu, kv_pool_per_gpu: kv_pool, kv_token_capacity: capacity }
 }
 
-/// Smallest TP degree whose shards fit, or None if even TP=8 OOMs
-/// (TGI × Llama2-70B × 24 GB in Fig. 6).
-pub fn min_tp_that_fits(plat: &Platform, cfg: &LlamaConfig, dt: Dtype,
-                        gpu_mem_util: f64, min_kv_tokens: u64) -> Option<u32> {
-    for tp in [1u32, 2, 4, 8] {
-        if tp > plat.n_gpus {
-            break;
-        }
-        let m = serve_memory(plat, cfg, tp, dt, gpu_mem_util);
+/// Smallest TP-only deployment plan whose shards fit with a usable KV
+/// pool, or None if even the whole box OOMs (TGI × Llama2-70B × 24 GB in
+/// Fig. 6).
+pub fn min_serving_plan(plat: &Platform, cfg: &LlamaConfig, dt: Dtype,
+                        gpu_mem_util: f64, min_kv_tokens: u64) -> Option<ParallelPlan> {
+    for plan in ParallelPlan::serving_candidates(plat.n_gpus) {
+        let m = serve_memory(plat, cfg, &plan, dt, gpu_mem_util);
         if m.kv_pool_per_gpu > 0.0 && m.kv_token_capacity >= min_kv_tokens {
-            return Some(tp);
+            return Some(plan);
         }
     }
     None
+}
+
+/// Back-compat scalar view of [`min_serving_plan`].
+pub fn min_tp_that_fits(plat: &Platform, cfg: &LlamaConfig, dt: Dtype,
+                        gpu_mem_util: f64, min_kv_tokens: u64) -> Option<u32> {
+    min_serving_plan(plat, cfg, dt, gpu_mem_util, min_kv_tokens).map(|p| p.tp)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hw::PlatformId;
+
+    fn tp(n: u32) -> ParallelPlan {
+        ParallelPlan::tensor_parallel(n)
+    }
 
     #[test]
     fn kv_per_token_7b_half_mb() {
@@ -81,7 +92,7 @@ mod tests {
     #[test]
     fn a800_fits_7b_tp1_with_huge_pool() {
         let p = Platform::get(PlatformId::A800);
-        let m = serve_memory(&p, &LlamaConfig::llama2_7b(), 1, Dtype::Bf16, 0.9);
+        let m = serve_memory(&p, &LlamaConfig::llama2_7b(), &tp(1), Dtype::Bf16, 0.9);
         assert!(m.kv_pool_per_gpu > 40e9);
         assert!(m.kv_token_capacity > 80_000);
     }
@@ -90,9 +101,11 @@ mod tests {
     fn rtx_needs_tp_for_13b() {
         let p = Platform::get(PlatformId::Rtx3090Nvl);
         let cfg = LlamaConfig::llama2_13b();
-        assert!(serve_memory(&p, &cfg, 1, Dtype::Bf16, 0.9).kv_token_capacity < 1000);
-        let tp = min_tp_that_fits(&p, &cfg, Dtype::Bf16, 0.9, 20_000).unwrap();
-        assert!(tp >= 2);
+        assert!(serve_memory(&p, &cfg, &tp(1), Dtype::Bf16, 0.9).kv_token_capacity < 1000);
+        let plan = min_serving_plan(&p, &cfg, Dtype::Bf16, 0.9, 20_000).unwrap();
+        assert!(plan.tp >= 2);
+        assert_eq!((plan.pp, plan.dp), (1, 1));
+        assert_eq!(min_tp_that_fits(&p, &cfg, Dtype::Bf16, 0.9, 20_000), Some(plan.tp));
     }
 
     #[test]
@@ -102,5 +115,16 @@ mod tests {
         let p = Platform::get(PlatformId::Rtx4090);
         let cfg = LlamaConfig::llama2_70b();
         assert_eq!(min_tp_that_fits(&p, &cfg, Dtype::Bf16, 0.8, 40_000), None);
+    }
+
+    #[test]
+    fn sharding_scales_capacity_superlinearly() {
+        // doubling TP halves per-GPU weights AND halves per-GPU per-token
+        // KV, so group capacity more than doubles on weight-bound boxes
+        let p = Platform::get(PlatformId::Rtx3090Nvl);
+        let cfg = LlamaConfig::llama2_13b();
+        let c2 = serve_memory(&p, &cfg, &tp(2), Dtype::Bf16, 0.9).kv_token_capacity;
+        let c4 = serve_memory(&p, &cfg, &tp(4), Dtype::Bf16, 0.9).kv_token_capacity;
+        assert!(c4 > 2 * c2, "tp4 {c4} !> 2×tp2 {c2}");
     }
 }

@@ -4,5 +4,6 @@
 pub mod kv;
 pub mod training;
 
-pub use kv::{kv_bytes_per_token, serve_memory, ServeMemory};
-pub use training::{activation_bytes, check_fit, training_memory, Fit, MemoryBreakdown};
+pub use kv::{kv_bytes_per_token, min_serving_plan, serve_memory, ServeMemory};
+pub use training::{activation_bytes, check_fit, training_memory, training_memory_plan,
+                   Fit, MemoryBreakdown};

@@ -12,6 +12,7 @@
 
 use crate::config::{LlamaConfig, Method, Tuning, ZeroStage};
 use crate::hw::Platform;
+use crate::parallel::ParallelPlan;
 
 /// Bytes per parameter for each state component.  The paper "loads the
 /// model weight into bf16 by default"; the Adam states observed in its
@@ -87,7 +88,8 @@ pub fn activation_bytes(cfg: &LlamaConfig, batch: u64, seq: u64, flash: bool,
     }
 }
 
-/// Per-GPU memory breakdown for a pre-training / fine-tuning method.
+/// Per-GPU memory breakdown for a pre-training / fine-tuning method on
+/// the platform's full DP world (the paper's DeepSpeed setting).
 pub fn training_memory(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -95,7 +97,22 @@ pub fn training_memory(
     batch: u64,
     seq: u64,
 ) -> MemoryBreakdown {
-    let n = plat.n_gpus as f64;
+    training_memory_plan(plat, cfg, m, batch, seq,
+                         &ParallelPlan::data_parallel(plat.n_gpus))
+}
+
+/// Plan-aware breakdown: ZeRO partitioning follows the plan's DP axis
+/// (the DeepSpeed path is DP-only, so tp = pp = 1 here).
+pub fn training_memory_plan(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    m: &Method,
+    batch: u64,
+    seq: u64,
+    plan: &ParallelPlan,
+) -> MemoryBreakdown {
+    debug_assert!(plan.tp == 1 && plan.pp == 1,
+                  "DeepSpeed/ZeRO memory model is DP-only");
     let p = cfg.param_count();
     let mut out = MemoryBreakdown { overhead: plat.base_overhead, ..Default::default() };
 
@@ -132,7 +149,7 @@ pub fn training_memory(
     let z3_shardable = !m.quant && !matches!(m.tuning, Tuning::QLora { .. });
     if m.zero == ZeroStage::Z3 && z3_shardable {
         // shard + live-parameter gather window (stage3_max_live_parameters)
-        weights = p * W_BYTES / n + (2e9f64).min(p * W_BYTES);
+        weights = plan.dp_shard(p * W_BYTES) + (2e9f64).min(p * W_BYTES);
         if m.offload {
             if matches!(m.tuning, Tuning::Full) {
                 // parameters live in pinned host RAM, paged in per layer
@@ -141,7 +158,7 @@ pub fn training_memory(
             } else {
                 // PEFT: frozen base stays GPU-sharded (only the tiny
                 // adapter optimizer offloads); smaller gather window
-                weights = p * W_BYTES / n + (0.5e9f64).min(p * W_BYTES);
+                weights = plan.dp_shard(p * W_BYTES) + (0.5e9f64).min(p * W_BYTES);
             }
         }
     }
@@ -155,7 +172,7 @@ pub fn training_memory(
         (ZeroStage::None, true) => train_p * G_BYTES,
         // Z1/Z2/Z3 reduce per bucket and free: shard + one bucket
         (ZeroStage::Z1 | ZeroStage::Z2 | ZeroStage::Z3, true) => {
-            train_p * G_BYTES / n + 0.5e9
+            plan.dp_shard(train_p * G_BYTES) + 0.5e9
         }
     };
     out.grads = grads;
@@ -163,10 +180,10 @@ pub fn training_memory(
     // --- optimizer state (trainable params only)
     let mut opt = train_p * OPT_BYTES;
     if m.zero != ZeroStage::None {
-        opt /= n;
+        opt = plan.dp_shard(opt);
     }
     if m.offload {
-        out.host_bytes += opt * n; // all shards pinned in host RAM
+        out.host_bytes += opt * plan.dp as f64; // all shards pinned in host RAM
         opt *= 0.1; // transient working buffers only
     }
     out.optimizer = opt;

@@ -1,0 +1,127 @@
+//! Plan-aware communication pricing: which interconnect each axis's
+//! collectives cross.
+//!
+//! With the Megatron rank layout (TP stride 1, DP stride tp, PP stride
+//! tp·dp) an axis group's footprint decides its link: TP always fits in a
+//! node (validation enforces it), DP crosses to InfiniBand once tp·dp
+//! exceeds a node, and PP — the thinnest traffic — takes the inter-node
+//! hop first.  `PlanCost` resolves the link once per call so the
+//! simulators never touch `Platform::fabric` directly for plan traffic.
+
+use crate::comm::{coll_time, Collective};
+use crate::hw::{Link, Topology};
+
+use super::plan::ParallelPlan;
+
+/// One parallelism axis of a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    Tensor,
+    Data,
+    Pipeline,
+}
+
+/// Communication-cost context for a plan on a topology.
+#[derive(Debug, Clone)]
+pub struct PlanCost<'a> {
+    pub plan: &'a ParallelPlan,
+    pub topo: &'a Topology,
+}
+
+impl<'a> PlanCost<'a> {
+    pub fn new(plan: &'a ParallelPlan, topo: &'a Topology) -> Self {
+        PlanCost { plan, topo }
+    }
+
+    /// (group size, rank stride) of an axis under the Megatron layout.
+    pub fn group(&self, axis: Axis) -> (u32, u32) {
+        match axis {
+            Axis::Tensor => (self.plan.tp, 1),
+            Axis::Data => (self.plan.dp, self.plan.tp),
+            Axis::Pipeline => (self.plan.pp, self.plan.tp * self.plan.dp),
+        }
+    }
+
+    /// The interconnect this axis's collectives are priced on.
+    pub fn link(&self, axis: Axis) -> &Link {
+        let (size, stride) = self.group(axis);
+        self.topo.link_for_group(size, stride)
+    }
+
+    /// Time of one collective over the axis group (full-tensor `bytes`).
+    pub fn coll(&self, axis: Axis, op: Collective, bytes: f64) -> f64 {
+        let (size, _) = self.group(axis);
+        coll_time(self.link(axis), op, bytes, size)
+    }
+
+    /// Collective priced on a bandwidth-derated copy of the axis link —
+    /// ZeRO's bucketed fp32 collectives achieve only a fraction of the
+    /// fabric bandwidth (`train::step::ZERO_COMM_BW_FACTOR`).
+    pub fn coll_derated(&self, axis: Axis, op: Collective, bytes: f64, bw_factor: f64) -> f64 {
+        let (size, _) = self.group(axis);
+        let mut link = self.link(axis).clone();
+        link.bw *= bw_factor;
+        coll_time(&link, op, bytes, size)
+    }
+
+    /// Point-to-point transfer along the axis (pipeline stage boundary).
+    pub fn p2p(&self, axis: Axis, bytes: f64) -> f64 {
+        let (size, _) = self.group(axis);
+        if size <= 1 {
+            return 0.0;
+        }
+        self.link(axis).xfer_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Platform, PlatformId};
+
+    #[test]
+    fn single_node_axes_all_price_on_fabric() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let plan = ParallelPlan::new(2, 2, 2);
+        let cost = PlanCost::new(&plan, &topo);
+        for axis in [Axis::Tensor, Axis::Data, Axis::Pipeline] {
+            assert!((cost.link(axis).bw - plat.fabric.bw).abs() < 1.0);
+        }
+        // and the AllReduce matches the raw collective model
+        let t = cost.coll(Axis::Tensor, Collective::AllReduce, 1e8);
+        assert!((t - coll_time(&plat.fabric, Collective::AllReduce, 1e8, 2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_node_puts_pipeline_on_ib_before_tp() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::multi_node(&plat, 4);
+        let plan = ParallelPlan::new(8, 4, 1); // 32 ranks: TP in-node, PP across
+        let cost = PlanCost::new(&plan, &topo);
+        assert!((cost.link(Axis::Tensor).bw - topo.intra.bw).abs() < 1.0);
+        assert!((cost.link(Axis::Pipeline).bw - topo.inter.bw).abs() < 1.0);
+    }
+
+    #[test]
+    fn dp_crossing_nodes_costs_more() {
+        let plat = Platform::get(PlatformId::A800);
+        let single = Topology::single_node(&plat);
+        let multi = Topology::multi_node(&plat, 2);
+        let p8 = ParallelPlan::new(1, 1, 8);
+        let p16 = ParallelPlan::new(1, 1, 16);
+        let t_in = PlanCost::new(&p8, &single).coll(Axis::Data, Collective::AllReduce, 1e9);
+        let t_out = PlanCost::new(&p16, &multi).coll(Axis::Data, Collective::AllReduce, 1e9);
+        assert!(t_out > t_in, "IB AllReduce {t_out} !> NVLink {t_in}");
+    }
+
+    #[test]
+    fn p2p_zero_without_the_axis() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let plan = ParallelPlan::data_parallel(8);
+        let cost = PlanCost::new(&plan, &topo);
+        assert_eq!(cost.p2p(Axis::Pipeline, 1e6), 0.0);
+        assert!(cost.p2p(Axis::Data, 1e6) > 0.0);
+    }
+}

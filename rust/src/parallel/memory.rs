@@ -1,0 +1,145 @@
+//! Plan-sharded memory accounting.
+//!
+//! Splits each training-state component along its plan axis — weights and
+//! gradients over tp·pp, the (fp32-master) distributed optimizer over all
+//! ranks, activations over TP with the 1F1B in-flight window under
+//! pipelining — and guarantees the shards tile the unsharded totals
+//! exactly (the property the plan tests pin).
+
+use crate::config::{LlamaConfig, TrainWorkload};
+use crate::hw::Platform;
+use crate::memory::training::{G_BYTES, OPT_BYTES, W_BYTES};
+use crate::memory::{activation_bytes, MemoryBreakdown};
+
+use super::pipeline::PipelineSchedule;
+use super::plan::ParallelPlan;
+
+/// Per-GPU persistent-state shards under a plan (Megatron layout:
+/// model states over tp·pp, optimizer + fp32 master over every rank).
+#[derive(Debug, Clone, Copy)]
+pub struct StateShards {
+    pub weights: f64,
+    pub grads: f64,
+    pub optimizer: f64,
+}
+
+impl StateShards {
+    /// Unsharded totals the shards must tile back to.
+    pub fn unsharded(cfg: &LlamaConfig) -> (f64, f64, f64) {
+        let p = cfg.param_count();
+        (p * W_BYTES, p * G_BYTES, p * (OPT_BYTES + 8.0))
+    }
+}
+
+/// Shard the model's training state per the plan.
+pub fn state_shards(cfg: &LlamaConfig, plan: &ParallelPlan) -> StateShards {
+    let (w, g, o) = StateShards::unsharded(cfg);
+    StateShards {
+        weights: plan.model_shard(w),
+        grads: plan.model_shard(g),
+        optimizer: plan.full_shard(o),
+    }
+}
+
+/// Per-GPU activation bytes under the plan: TP divides every tensor;
+/// with a pipeline, one stage holds 1/pp of the layers for up to the
+/// 1F1B in-flight window of micro-batches (each 1/m of the global batch).
+pub fn activation_shard(
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    wl: TrainWorkload,
+    discount: f64,
+) -> f64 {
+    let full = activation_bytes(cfg, wl.batch_size, wl.seq_len, false, false) * discount;
+    let sched = PipelineSchedule::one_f_one_b(plan, wl);
+    if plan.pp > 1 {
+        full / (plan.tp as f64 * plan.pp as f64 * sched.micro_batches as f64)
+            * sched.in_flight() as f64
+    } else {
+        full / plan.tp as f64
+    }
+}
+
+/// Megatron-style per-GPU memory breakdown for a plan
+/// (`discount` = the stack's activation-footprint factor, e.g.
+/// `train::megatron::MEGATRON_ACT_DISCOUNT`).
+pub fn megatron_memory(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    wl: TrainWorkload,
+    discount: f64,
+) -> MemoryBreakdown {
+    let s = state_shards(cfg, plan);
+    let act = activation_shard(cfg, plan, wl, discount);
+    MemoryBreakdown {
+        weights: s.weights,
+        grads: s.grads,
+        optimizer: s.optimizer,
+        activations: act,
+        buffers: 0.05 * (s.weights + s.grads + s.optimizer + act) + 0.6e9,
+        overhead: plat.base_overhead,
+        host_bytes: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Platform, PlatformId, Topology};
+
+    fn wl(bs: u64) -> TrainWorkload {
+        TrainWorkload { seq_len: 350, batch_size: bs }
+    }
+
+    #[test]
+    fn shards_tile_the_unsharded_total() {
+        let cfg = LlamaConfig::llama2_13b();
+        let (w, g, o) = StateShards::unsharded(&cfg);
+        for plan in [ParallelPlan::new(2, 2, 2), ParallelPlan::new(8, 1, 1),
+                     ParallelPlan::new(1, 4, 2), ParallelPlan::data_parallel(8)] {
+            let s = state_shards(&cfg, &plan);
+            let grid = plan.model_shard_degree() as f64;
+            assert!((s.weights * grid - w).abs() < 1.0, "{plan}");
+            assert!((s.grads * grid - g).abs() < 1.0, "{plan}");
+            assert!((s.optimizer * plan.world() as f64 - o).abs() < 1.0, "{plan}");
+        }
+    }
+
+    #[test]
+    fn pipeline_shrinks_activations_per_gpu() {
+        let cfg = LlamaConfig::llama2_7b();
+        let a_pp1 = activation_shard(&cfg, &ParallelPlan::new(1, 1, 8), wl(8), 1.0);
+        let a_pp4 = activation_shard(&cfg, &ParallelPlan::new(1, 4, 2), wl(8), 1.0);
+        // pp=4, m=8: in-flight 4 of 8 micro-batches over 1/4 of the layers
+        assert!(a_pp4 < a_pp1, "pp4 {a_pp4} !< pp1 {a_pp1}");
+        assert!((a_pp4 - a_pp1 / 4.0 / 8.0 * 4.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn megatron_memory_matches_components() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let plan = ParallelPlan::new(2, 2, 2);
+        let m = megatron_memory(&plat, &cfg, &plan, wl(8), 0.35);
+        let sum = m.weights + m.grads + m.optimizer + m.activations + m.buffers + m.overhead;
+        assert!((m.gpu_total() - sum).abs() < 1.0);
+        assert_eq!(m.host_bytes, 0.0);
+    }
+
+    #[test]
+    fn multi_node_opens_70b() {
+        // single 8-GPU A800 node cannot hold 70B training state …
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_70b();
+        let single = megatron_memory(&plat, &cfg, &ParallelPlan::new(8, 1, 1), wl(8), 0.35);
+        assert!(single.gpu_total() > plat.gpu.mem_bytes);
+        // … but 4 IB-connected nodes (TP8 × PP4) fit it
+        let topo = Topology::multi_node(&plat, 4);
+        let plan = ParallelPlan::new(8, 4, 1);
+        assert!(plan.validate(&topo, &cfg).is_ok());
+        let multi = megatron_memory(&plat, &cfg, &plan, wl(8), 0.35);
+        assert!(multi.gpu_total() < plat.gpu.mem_bytes,
+                "70B on 32 GPUs = {:.1} GB/GPU", multi.gpu_total() / 1e9);
+    }
+}

@@ -1,0 +1,24 @@
+//! First-class TP × PP × DP parallelism (the "which configuration"
+//! subsystem the paper's end-user findings motivate).
+//!
+//! * `plan` — the `ParallelPlan` descriptor: validation against a
+//!   `hw::Topology`, design-space enumeration, and every sharding helper
+//!   (the single place degree division is allowed).
+//! * `cost` — which interconnect each axis's collectives cross.
+//! * `memory` — plan-sharded weights/grads/optimizer/activation budgets.
+//! * `pipeline` — the 1F1B bubble model `(pp-1)/(m+pp-1)`.
+//!
+//! Consumers: `train::step` (ZeRO = DP-axis behavior), `train::megatron`
+//! (TP shards + per-layer AllReduce placement + pipeline stretch),
+//! `serve` (engine DeployPlans), `memory` (sharded budgets), and
+//! `report::parallel` (the sweep table / `llmperf sweep-parallel`).
+
+pub mod cost;
+pub mod memory;
+pub mod pipeline;
+pub mod plan;
+
+pub use cost::{Axis, PlanCost};
+pub use memory::{activation_shard, megatron_memory, state_shards, StateShards};
+pub use pipeline::{bubble_fraction, PipelineSchedule};
+pub use plan::{ParallelPlan, PlanError};

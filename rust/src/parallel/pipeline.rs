@@ -1,0 +1,101 @@
+//! 1F1B pipeline-schedule model.
+//!
+//! A pp-stage pipeline running m micro-batches completes in
+//! (m + pp - 1) stage-slots of which (pp - 1) are bubble on every rank:
+//!   bubble fraction = (pp - 1) / (m + pp - 1)
+//! (GPipe/1F1B have the same bubble; 1F1B is what bounds the activation
+//! working set to ≤ pp in-flight micro-batches, which the sharded memory
+//! model uses).
+
+use crate::config::TrainWorkload;
+
+use super::plan::ParallelPlan;
+
+/// Idle fraction of each rank's timeline spent in pipeline fill/drain.
+pub fn bubble_fraction(pp: u32, micro_batches: u64) -> f64 {
+    if pp <= 1 {
+        return 0.0;
+    }
+    let m = micro_batches.max(1) as f64;
+    (pp as f64 - 1.0) / (m + pp as f64 - 1.0)
+}
+
+/// A resolved 1F1B schedule for one plan + workload.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineSchedule {
+    pub pp: u32,
+    /// micro-batch count m; 1 when there is no pipeline (the whole batch
+    /// runs as one pass)
+    pub micro_batches: u64,
+}
+
+impl PipelineSchedule {
+    /// Micro-batch count from the workload: one sample per micro-batch
+    /// (Megatron's default granularity), no micro-batching at pp=1.
+    pub fn one_f_one_b(plan: &ParallelPlan, wl: TrainWorkload) -> Self {
+        let m = if plan.pp > 1 { wl.batch_size.max(1) } else { 1 };
+        PipelineSchedule { pp: plan.pp, micro_batches: m }
+    }
+
+    pub fn bubble_fraction(&self) -> f64 {
+        bubble_fraction(self.pp, self.micro_batches)
+    }
+
+    /// Wall-clock stretch over perfectly-overlapped compute:
+    /// (m + pp - 1) / m = 1 / (1 - bubble).
+    pub fn stretch(&self) -> f64 {
+        1.0 / (1.0 - self.bubble_fraction())
+    }
+
+    /// Micro-batches resident per stage at peak (1F1B working set).
+    pub fn in_flight(&self) -> u64 {
+        self.micro_batches.min(self.pp as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(bs: u64) -> TrainWorkload {
+        TrainWorkload { seq_len: 350, batch_size: bs }
+    }
+
+    #[test]
+    fn no_pipeline_no_bubble() {
+        assert_eq!(bubble_fraction(1, 1), 0.0);
+        assert_eq!(bubble_fraction(1, 64), 0.0);
+        let s = PipelineSchedule::one_f_one_b(&ParallelPlan::new(2, 1, 4), wl(32));
+        assert_eq!(s.bubble_fraction(), 0.0);
+        assert_eq!(s.stretch(), 1.0);
+        assert_eq!(s.micro_batches, 1);
+    }
+
+    #[test]
+    fn bubble_matches_closed_form() {
+        // pp=4, m=8: (4-1)/(8+4-1) = 3/11
+        assert!((bubble_fraction(4, 8) - 3.0 / 11.0).abs() < 1e-12);
+        let s = PipelineSchedule::one_f_one_b(&ParallelPlan::new(1, 4, 2), wl(8));
+        assert!((s.bubble_fraction() - 3.0 / 11.0).abs() < 1e-12);
+        assert!((s.stretch() - 11.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bubble_shrinks_with_micro_batches() {
+        let mut prev = 1.0;
+        for m in [1u64, 2, 4, 8, 16, 64, 256] {
+            let b = bubble_fraction(4, m);
+            assert!(b < prev, "m={m}: {b} !< {prev}");
+            assert!(b > 0.0 && b < 1.0);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn in_flight_capped_by_stages() {
+        let s = PipelineSchedule { pp: 4, micro_batches: 32 };
+        assert_eq!(s.in_flight(), 4);
+        let s2 = PipelineSchedule { pp: 8, micro_batches: 2 };
+        assert_eq!(s2.in_flight(), 2);
+    }
+}

@@ -1,0 +1,281 @@
+//! `ParallelPlan` — the crate's single source of sharding truth.
+//!
+//! Every simulator that divides model state, activations, or KV across
+//! devices does it through a plan's helpers; the degree arithmetic lives
+//! here and nowhere else.  Rank layout convention (Megatron-LM order):
+//! tensor-parallel ranks innermost (stride 1), data-parallel next
+//! (stride tp), pipeline stages outermost (stride tp·dp) — so TP stays on
+//! the fast intra-node fabric and only the thin pipeline P2P traffic
+//! crosses nodes when a plan spans servers.
+
+use crate::config::LlamaConfig;
+use crate::hw::Topology;
+
+/// TP × PP × DP parallelism descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelPlan {
+    /// tensor-parallel degree (intra-layer sharding)
+    pub tp: u32,
+    /// pipeline-parallel degree (layer partitioning into stages)
+    pub pp: u32,
+    /// data-parallel degree (replica count)
+    pub dp: u32,
+}
+
+/// Why a plan is invalid for a (topology, model) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanError {
+    /// some degree is zero
+    ZeroDegree,
+    /// tp·pp·dp != the topology's GPU count
+    WorldMismatch { world: u32, n_gpus: u32 },
+    /// a TP group cannot span the inter-node link (per-layer AllReduces
+    /// would crawl); tp must fit inside one node
+    TpSpansNodes { tp: u32, gpus_per_node: u32 },
+    /// tp must evenly split the attention heads
+    TpHeads { tp: u32, n_heads: u64 },
+    /// more pipeline stages than layers
+    PpLayers { pp: u32, n_layers: u64 },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::ZeroDegree => write!(f, "plan has a zero degree"),
+            PlanError::WorldMismatch { world, n_gpus } => {
+                write!(f, "tp*pp*dp = {world} does not fill {n_gpus} GPUs")
+            }
+            PlanError::TpSpansNodes { tp, gpus_per_node } => {
+                write!(f, "tp={tp} spans nodes (only {gpus_per_node} GPUs/node)")
+            }
+            PlanError::TpHeads { tp, n_heads } => {
+                write!(f, "tp={tp} does not divide {n_heads} attention heads")
+            }
+            PlanError::PpLayers { pp, n_layers } => {
+                write!(f, "pp={pp} exceeds {n_layers} layers")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl ParallelPlan {
+    pub fn new(tp: u32, pp: u32, dp: u32) -> Self {
+        ParallelPlan { tp, pp, dp }
+    }
+
+    /// Pure data parallelism over `n` ranks — the DeepSpeed/ZeRO path.
+    pub fn data_parallel(n: u32) -> Self {
+        ParallelPlan { tp: 1, pp: 1, dp: n.max(1) }
+    }
+
+    /// Pure tensor parallelism — a serving engine's TP group.
+    pub fn tensor_parallel(tp: u32) -> Self {
+        ParallelPlan { tp: tp.max(1), pp: 1, dp: 1 }
+    }
+
+    /// Total ranks the plan occupies.
+    pub fn world(&self) -> u32 {
+        self.tp * self.pp * self.dp
+    }
+
+    /// How many ways the model itself (weights/grads) is split.
+    pub fn model_shard_degree(&self) -> u32 {
+        self.tp * self.pp
+    }
+
+    /// "TP2·PP2·DP2" — sweep-table label.
+    pub fn label(&self) -> String {
+        format!("TP{}·PP{}·DP{}", self.tp, self.pp, self.dp)
+    }
+
+    /// Full validation against a topology and model architecture.
+    pub fn validate(&self, topo: &Topology, cfg: &LlamaConfig) -> Result<(), PlanError> {
+        if self.tp == 0 || self.pp == 0 || self.dp == 0 {
+            return Err(PlanError::ZeroDegree);
+        }
+        if self.world() != topo.n_gpus() {
+            return Err(PlanError::WorldMismatch { world: self.world(), n_gpus: topo.n_gpus() });
+        }
+        if self.tp > topo.gpus_per_node {
+            return Err(PlanError::TpSpansNodes { tp: self.tp, gpus_per_node: topo.gpus_per_node });
+        }
+        if cfg.n_heads % self.tp as u64 != 0 {
+            return Err(PlanError::TpHeads { tp: self.tp, n_heads: cfg.n_heads });
+        }
+        if self.pp as u64 > cfg.n_layers {
+            return Err(PlanError::PpLayers { pp: self.pp, n_layers: cfg.n_layers });
+        }
+        Ok(())
+    }
+
+    /// Every valid plan for (topology, model): tp over powers of two
+    /// (matching NCCL/Megatron practice), pp over the remaining divisors,
+    /// dp filling the rest — the paper-motivated TP×PP×DP design space.
+    pub fn enumerate(topo: &Topology, cfg: &LlamaConfig) -> Vec<ParallelPlan> {
+        let n = topo.n_gpus();
+        let mut out = Vec::new();
+        let mut tp = 1u32;
+        while tp <= n {
+            if n % tp == 0 {
+                let rest = n / tp;
+                for pp in 1..=rest {
+                    if rest % pp != 0 {
+                        continue;
+                    }
+                    let plan = ParallelPlan::new(tp, pp, rest / pp);
+                    if plan.validate(topo, cfg).is_ok() {
+                        out.push(plan);
+                    }
+                }
+            }
+            tp = tp.saturating_mul(2);
+        }
+        out
+    }
+
+    /// Serving deployments occupy `tp` of the box's GPUs (the engines
+    /// pick the smallest group that fits): TP-only candidates in
+    /// ascending size, [1, 2, 4, … ≤ n_gpus].
+    pub fn serving_candidates(n_gpus: u32) -> Vec<ParallelPlan> {
+        let mut out = Vec::new();
+        let mut tp = 1u32;
+        while tp <= n_gpus {
+            out.push(ParallelPlan::tensor_parallel(tp));
+            tp = tp.saturating_mul(2);
+        }
+        out
+    }
+
+    // ---- sharding helpers: the only place degree division is allowed ----
+
+    /// Per-GPU share of model state split across tp·pp (weights, grads).
+    pub fn model_shard(&self, bytes: f64) -> f64 {
+        bytes / self.model_shard_degree() as f64
+    }
+
+    /// Per-GPU share of DP-partitioned state (ZeRO shards, distributed
+    /// optimizer along the DP axis).
+    pub fn dp_shard(&self, bytes: f64) -> f64 {
+        bytes / self.dp as f64
+    }
+
+    /// Per-GPU share of state split across every rank (Megatron's
+    /// distributed optimizer: tp·pp·dp ways).
+    pub fn full_shard(&self, bytes: f64) -> f64 {
+        bytes / self.world() as f64
+    }
+
+    /// Per-GPU share of the KV cache (split across the TP group).
+    pub fn kv_shard(&self, bytes: f64) -> f64 {
+        bytes / self.tp as f64
+    }
+
+    /// Compute shrink factor per GPU: 1/(tp·pp) of the model's FLOPs.
+    pub fn compute_shard(&self) -> f64 {
+        1.0 / self.model_shard_degree() as f64
+    }
+
+    /// A column/row-parallel tensor dimension after TP sharding.
+    pub fn shard_dim(&self, dim: u64) -> u64 {
+        (dim / self.tp as u64).max(1)
+    }
+
+    /// Layers resident on one pipeline stage (ceiling division).
+    pub fn shard_layers(&self, n_layers: u64) -> u64 {
+        let pp = self.pp as u64;
+        (n_layers + pp - 1) / pp
+    }
+
+    /// The TP-sharded architecture a single GPU executes: d_ff, heads and
+    /// KV heads divide; d_model stays (column/row parallel splits the
+    /// inner dimension).
+    pub fn shard_config(&self, cfg: &LlamaConfig) -> LlamaConfig {
+        let mut shard = cfg.clone();
+        shard.d_ff = self.shard_dim(cfg.d_ff);
+        shard.n_heads = self.shard_dim(cfg.n_heads);
+        shard.n_kv_heads = self.shard_dim(cfg.n_kv_heads);
+        shard
+    }
+}
+
+impl std::fmt::Display for ParallelPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Platform, PlatformId};
+
+    fn topo8() -> Topology {
+        Topology::single_node(&Platform::get(PlatformId::A800))
+    }
+
+    #[test]
+    fn constructors_and_world() {
+        assert_eq!(ParallelPlan::data_parallel(8), ParallelPlan::new(1, 1, 8));
+        assert_eq!(ParallelPlan::tensor_parallel(4).world(), 4);
+        assert_eq!(ParallelPlan::new(2, 2, 2).world(), 8);
+        assert_eq!(ParallelPlan::new(2, 4, 1).model_shard_degree(), 8);
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let t = topo8();
+        let cfg = LlamaConfig::llama2_7b();
+        assert!(ParallelPlan::new(2, 2, 2).validate(&t, &cfg).is_ok());
+        assert_eq!(ParallelPlan::new(2, 2, 1).validate(&t, &cfg),
+                   Err(PlanError::WorldMismatch { world: 4, n_gpus: 8 }));
+        assert_eq!(ParallelPlan::new(0, 1, 8).validate(&t, &cfg),
+                   Err(PlanError::ZeroDegree));
+        // tp=16 on an 8-GPU node: caught by the node-span rule
+        let t2 = Topology::multi_node(&Platform::get(PlatformId::A800), 2);
+        assert_eq!(ParallelPlan::new(16, 1, 1).validate(&t2, &cfg),
+                   Err(PlanError::TpSpansNodes { tp: 16, gpus_per_node: 8 }));
+    }
+
+    #[test]
+    fn enumerate_fills_the_grid() {
+        let plans = ParallelPlan::enumerate(&topo8(), &LlamaConfig::llama2_7b());
+        // tp1: pp {1,2,4,8}; tp2: pp {1,2,4}; tp4: pp {1,2}; tp8: pp {1}
+        assert_eq!(plans.len(), 10);
+        assert!(plans.iter().all(|p| p.world() == 8));
+        assert!(plans.contains(&ParallelPlan::data_parallel(8)));
+        assert!(plans.iter().any(|p| p.pp > 1));
+    }
+
+    #[test]
+    fn shard_helpers_partition_exactly() {
+        let p = ParallelPlan::new(2, 2, 2);
+        assert_eq!(p.model_shard(16e9) * p.model_shard_degree() as f64, 16e9);
+        assert_eq!(p.full_shard(16e9) * p.world() as f64, 16e9);
+        assert_eq!(p.dp_shard(16e9) * p.dp as f64, 16e9);
+        assert_eq!(p.kv_shard(8e9) * p.tp as f64, 8e9);
+        assert!((p.compute_shard() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_dims_and_layers() {
+        let p = ParallelPlan::new(8, 2, 1);
+        assert_eq!(p.shard_dim(11008), 1376);
+        assert_eq!(p.shard_dim(4), 1); // floors at 1
+        assert_eq!(p.shard_layers(32), 16);
+        assert_eq!(ParallelPlan::new(1, 3, 1).shard_layers(32), 11); // ceil
+        let s = p.shard_config(&LlamaConfig::llama2_70b());
+        assert_eq!(s.n_heads, 8);
+        assert_eq!(s.n_kv_heads, 1);
+        assert_eq!(s.d_model, 8192); // unchanged
+    }
+
+    #[test]
+    fn serving_candidates_power_of_two() {
+        let c = ParallelPlan::serving_candidates(8);
+        let tps: Vec<u32> = c.iter().map(|p| p.tp).collect();
+        assert_eq!(tps, vec![1, 2, 4, 8]);
+        assert!(c.iter().all(|p| p.pp == 1 && p.dp == 1));
+    }
+}

@@ -5,12 +5,13 @@
 pub mod finetune;
 pub mod micro;
 pub mod modulewise;
+pub mod parallel;
 pub mod pretrain;
 pub mod serve;
 
-use anyhow::{anyhow, Result};
-
 use crate::config::LlamaConfig;
+use crate::err;
+use crate::util::error::Result;
 use crate::hw::PlatformId;
 use crate::serve::EngineSpec;
 use crate::util::table::Table;
@@ -33,7 +34,7 @@ pub fn table(n: u32, n_requests: u64) -> Result<Vec<Table>> {
         14 => vec![micro::table14()],
         15 => vec![micro::table15()],
         16 => vec![micro::table16()],
-        _ => return Err(anyhow!("paper has Tables II–XVI (2-16); got {n}")),
+        _ => return Err(err!("paper has Tables II–XVI (2-16); got {n}")),
     })
     .map(|t| { let _ = n_requests; t })
 }
@@ -65,7 +66,7 @@ pub fn figure(n: u32, n_requests: u64) -> Result<Vec<Table>> {
         13 => vec![micro::figure13()],
         14 => vec![micro::figure14()],
         15 => vec![micro::figure15()],
-        _ => return Err(anyhow!("paper has Figures 4-15; got {n}")),
+        _ => return Err(err!("paper has Figures 4-15; got {n}")),
     })
 }
 

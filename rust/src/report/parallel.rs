@@ -1,0 +1,151 @@
+//! Parallel-plan sweep: the "which configuration should I choose" table
+//! the paper's end-user findings motivate (`llmperf sweep-parallel`).
+//!
+//! Enumerates every valid TP×PP×DP plan for a (model, topology,
+//! workload), prices each through the Megatron plan simulator, and ranks
+//! runnable plans by training throughput.  OOM plans still print their
+//! per-GPU memory demand and pipeline bubble so the table shows *why*
+//! a configuration is out, not just that it is.
+
+use crate::config::{LlamaConfig, TrainWorkload};
+use crate::hw::{Platform, Topology};
+use crate::parallel::{ParallelPlan, PipelineSchedule};
+use crate::train::simulate_megatron_plan;
+use crate::util::table::{f0, f1, oom, Table};
+
+/// One evaluated plan (kept public for tests and future reports).
+#[derive(Debug, Clone)]
+pub struct PlanRow {
+    pub plan: ParallelPlan,
+    pub bubble: f64,
+    pub step_time: f64,
+    pub tokens_per_s: f64,
+    pub mem_gb: f64,
+    pub fits: bool,
+}
+
+/// Evaluate every valid plan, best throughput first (OOM plans last).
+pub fn sweep_plans(plat: &Platform, topo: &Topology, cfg: &LlamaConfig,
+                   wl: TrainWorkload) -> Vec<PlanRow> {
+    let mut rows: Vec<PlanRow> = ParallelPlan::enumerate(topo, cfg)
+        .into_iter()
+        .map(|plan| {
+            let r = simulate_megatron_plan(plat, topo, cfg, &plan, wl);
+            let bubble = PipelineSchedule::one_f_one_b(&plan, wl).bubble_fraction();
+            PlanRow {
+                plan,
+                bubble,
+                step_time: r.step_time,
+                tokens_per_s: r.tokens_per_s,
+                mem_gb: r.mem.gpu_total() / 1e9,
+                fits: !r.is_oom(),
+            }
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.fits.cmp(&a.fits)
+            .then(b.tokens_per_s.partial_cmp(&a.tokens_per_s)
+                .unwrap_or(std::cmp::Ordering::Equal))
+    });
+    rows
+}
+
+/// Render the sweep as a report table.
+pub fn parallel_sweep(plat: &Platform, topo: &Topology, cfg: &LlamaConfig,
+                      wl: TrainWorkload) -> Table {
+    let mut t = Table::new(
+        &format!("Parallel-plan sweep — {} training on {} node(s) × {} {} \
+                  (bs {}, seq {}; 1F1B bubble = (pp-1)/(m+pp-1))",
+                 cfg.name, topo.n_nodes, topo.gpus_per_node, plat.gpu.name,
+                 wl.batch_size, wl.seq_len),
+        &["Plan", "TP", "PP", "DP", "Bubble %", "Step (ms)", "Tokens/s",
+          "GB/GPU", "Fit"],
+    ).align_left(0);
+    for r in sweep_plans(plat, topo, cfg, wl) {
+        let (step, tput, fit) = if r.fits {
+            (f1(r.step_time * 1e3), f0(r.tokens_per_s), "ok".to_string())
+        } else {
+            (oom(), oom(), "OOM".to_string())
+        };
+        t.row(vec![
+            r.plan.label(),
+            r.plan.tp.to_string(),
+            r.plan.pp.to_string(),
+            r.plan.dp.to_string(),
+            f1(r.bubble * 100.0),
+            step,
+            tput,
+            f1(r.mem_gb),
+            fit,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    fn wl(bs: u64) -> TrainWorkload {
+        TrainWorkload { seq_len: 350, batch_size: bs }
+    }
+
+    #[test]
+    fn sweep_70b_on_8_gpus_has_pipeline_plans_with_bubble() {
+        // the acceptance scenario: llama-70B on an 8-GPU platform must
+        // show at least one pp>1 plan with a nonzero bubble term
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_70b();
+        let rows = sweep_plans(&plat, &topo, &cfg, wl(8));
+        assert_eq!(rows.len(), 10); // full 8-GPU TP×PP×DP grid
+        assert!(rows.iter().all(|r| r.plan.world() == 8));
+        let piped: Vec<_> = rows.iter().filter(|r| r.plan.pp > 1).collect();
+        assert!(!piped.is_empty());
+        assert!(piped.iter().all(|r| r.bubble > 0.0),
+                "every pp>1 plan carries a bubble");
+        assert!(rows.iter().filter(|r| r.plan.pp == 1).all(|r| r.bubble == 0.0));
+        // and the rendered table carries the bubble column
+        let s = parallel_sweep(&plat, &topo, &cfg, wl(8)).render();
+        assert!(s.contains("Bubble %"));
+        assert!(s.contains("TP1·PP2·DP4") || s.contains("TP2·PP2·DP2"));
+    }
+
+    #[test]
+    fn sweep_ranks_runnable_plans_first() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let rows = sweep_plans(&plat, &topo, &cfg, wl(4));
+        assert!(rows.iter().any(|r| r.fits), "7B must fit an A800 box");
+        // fits-first ordering, descending throughput within the fit block
+        let mut seen_oom = false;
+        let mut prev = f64::INFINITY;
+        for r in &rows {
+            if r.fits {
+                assert!(!seen_oom, "fit row after an OOM row");
+                assert!(r.tokens_per_s <= prev + 1e-9);
+                prev = r.tokens_per_s;
+            } else {
+                seen_oom = true;
+            }
+        }
+    }
+
+    #[test]
+    fn multi_node_sweep_unlocks_70b() {
+        // 4 IB-connected A800 nodes: the sweep must find runnable 70B
+        // plans — the scenario the paper could not measure
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::multi_node(&plat, 4);
+        let cfg = LlamaConfig::llama2_70b();
+        let rows = sweep_plans(&plat, &topo, &cfg, wl(16));
+        assert!(rows.iter().any(|r| r.fits),
+                "no 70B plan fits 32 GPUs: {:?}",
+                rows.iter().map(|r| (r.plan.label(), r.mem_gb)).collect::<Vec<_>>());
+        // single node: nothing fits
+        let single = sweep_plans(&plat, &Topology::single_node(&plat), &cfg, wl(16));
+        assert!(single.iter().all(|r| !r.fits));
+    }
+}

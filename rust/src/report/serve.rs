@@ -2,9 +2,10 @@
 //! Tables X/XI (LightLLM module-wise decode analysis).
 
 use crate::config::{LlamaConfig, ServeWorkload};
-use crate::hw::{Platform, PlatformId};
+use crate::hw::{Platform, PlatformId, Topology};
 use crate::model::modules::{decode_modules, ModuleKind};
 use crate::ops::{op_time, Op};
+use crate::parallel::{Axis, ParallelPlan, PlanCost};
 use crate::serve::engine::DeployPlan;
 use crate::serve::{simulate, EngineSpec};
 use crate::util::table::{f0, f1, f2, oom, Table};
@@ -102,7 +103,10 @@ pub fn table10() -> Table {
     let plat = Platform::get(PlatformId::A800);
     let cfg = LlamaConfig::llama2_7b();
     let e = EngineSpec::lightllm();
-    let plan = e.plan(&plat, &cfg).unwrap_or(DeployPlan { tp: 1, kv_capacity_tokens: 0 });
+    let plan = e.plan(&plat, &cfg).unwrap_or(DeployPlan {
+        parallel: ParallelPlan::tensor_parallel(1),
+        kv_capacity_tokens: 0,
+    });
     let batch = 1024u64;
     let ctx = 512 + 32; // mid-generation context
     let mods = decode_modules(&cfg, batch, ctx, false);
@@ -112,10 +116,12 @@ pub fn table10() -> Table {
         .collect();
     let compute: f64 = times.iter().map(|(_, t)| t).sum();
     // TP comm per iteration + engine overhead ("Other")
-    let comm = if plan.tp > 1 {
+    let comm = if plan.tp() > 1 {
+        let topo = Topology::single_node(&plat);
+        let cost = PlanCost::new(&plan.parallel, &topo);
         2.0 * cfg.n_layers as f64
-            * crate::comm::coll_time(&plat.fabric, crate::comm::Collective::AllReduce,
-                                     batch as f64 * cfg.d_model as f64 * 2.0, plan.tp)
+            * cost.coll(Axis::Tensor, crate::comm::Collective::AllReduce,
+                        batch as f64 * cfg.d_model as f64 * 2.0)
     } else {
         0.0
     };

@@ -18,7 +18,8 @@
 
 use crate::config::LlamaConfig;
 use crate::hw::{Dtype, Platform};
-use crate::memory::kv::{min_tp_that_fits, serve_memory};
+use crate::memory::kv::{min_serving_plan, serve_memory};
+use crate::parallel::ParallelPlan;
 
 /// KV allocator flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,25 +116,33 @@ impl EngineSpec {
         self.iter_overhead * (1.0 - self.async_overlap)
     }
 
-    /// Deployment plan: smallest TP that fits, with the engine's memory
-    /// budget, or None (the Fig. 6 OOM cells).
+    /// Deployment plan: smallest TP group that fits, with the engine's
+    /// memory budget, or None (the Fig. 6 OOM cells).
     pub fn plan(&self, plat: &Platform, cfg: &LlamaConfig) -> Option<DeployPlan> {
         let mut kv_cfg = cfg.clone();
         if self.assume_mha_kv {
             kv_cfg.n_kv_heads = kv_cfg.n_heads; // reserve MHA-sized KV
         }
-        let tp = min_tp_that_fits(plat, &kv_cfg, Dtype::Bf16, self.gpu_mem_util,
-                                  self.min_kv_tokens)?;
-        let mem = serve_memory(plat, &kv_cfg, tp, Dtype::Bf16, self.gpu_mem_util);
-        Some(DeployPlan { tp, kv_capacity_tokens: mem.kv_token_capacity })
+        let parallel = min_serving_plan(plat, &kv_cfg, Dtype::Bf16,
+                                        self.gpu_mem_util, self.min_kv_tokens)?;
+        let mem = serve_memory(plat, &kv_cfg, &parallel, Dtype::Bf16, self.gpu_mem_util);
+        Some(DeployPlan { parallel, kv_capacity_tokens: mem.kv_token_capacity })
     }
 }
 
-/// Resolved deployment: TP degree + whole-group KV token capacity.
+/// Resolved deployment: a (TP-only) `ParallelPlan` + whole-group KV
+/// token capacity.
 #[derive(Debug, Clone, Copy)]
 pub struct DeployPlan {
-    pub tp: u32,
+    pub parallel: ParallelPlan,
     pub kv_capacity_tokens: u64,
+}
+
+impl DeployPlan {
+    /// Tensor-parallel degree of the deployment.
+    pub fn tp(&self) -> u32 {
+        self.parallel.tp
+    }
 }
 
 #[cfg(test)]
@@ -171,9 +180,11 @@ mod tests {
     fn plans_pick_minimal_tp() {
         let plat = Platform::get(PlatformId::A800);
         let p7 = EngineSpec::vllm().plan(&plat, &LlamaConfig::llama2_7b()).unwrap();
-        assert_eq!(p7.tp, 1);
+        assert_eq!(p7.tp(), 1);
         let p70 = EngineSpec::vllm().plan(&plat, &LlamaConfig::llama2_70b()).unwrap();
-        assert!(p70.tp >= 2);
+        assert!(p70.tp() >= 2);
+        // serving deployments are TP-only plans
+        assert_eq!((p70.parallel.pp, p70.parallel.dp), (1, 1));
     }
 
     #[test]
@@ -181,6 +192,6 @@ mod tests {
         let cfg = LlamaConfig::llama2_7b();
         let a = EngineSpec::vllm().plan(&Platform::get(PlatformId::A800), &cfg).unwrap();
         let r = EngineSpec::vllm().plan(&Platform::get(PlatformId::Rtx3090Nvl), &cfg).unwrap();
-        assert!(a.kv_capacity_tokens > 5 * r.kv_capacity_tokens / r.tp as u64);
+        assert!(a.kv_capacity_tokens > 5 * r.kv_capacity_tokens / r.tp() as u64);
     }
 }

@@ -4,12 +4,13 @@
 
 use std::collections::VecDeque;
 
-use crate::comm::{coll_time, Collective};
+use crate::comm::Collective;
 use crate::config::{LlamaConfig, ServeWorkload};
-use crate::hw::{Dtype, Platform};
+use crate::hw::{Dtype, Platform, Topology};
 use crate::model::breakdown::total as mods_total;
 use crate::model::modules::decode_modules;
 use crate::ops::{op_time, Gemm, Op};
+use crate::parallel::{Axis, PlanCost};
 use crate::serve::engine::{DeployPlan, EngineSpec, KvPolicy};
 use crate::serve::kv_cache::PagedKvCache;
 use crate::serve::request::{Completion, Request, RunningSeq};
@@ -29,7 +30,10 @@ impl Kv {
         match self {
             Kv::Paged(p) => p.free_tokens(),
             Kv::Token(t) => t.free_tokens(),
-            Kv::Reserve { capacity, used, .. } => capacity - used,
+            // saturating: `used` can never legally exceed `capacity`, but
+            // a bookkeeping slip must read as an empty pool, not a wrap
+            // to ~u64::MAX free tokens (which would admit unboundedly)
+            Kv::Reserve { capacity, used, .. } => capacity.saturating_sub(*used),
         }
     }
 
@@ -51,7 +55,7 @@ impl Kv {
             Kv::Token(t) => t.admit(seq.id, seq.prompt_len),
             Kv::Reserve { capacity, used, seqs } => {
                 let need = seq.max_tokens();
-                if *used + need > *capacity || seqs.contains_key(&seq.id) {
+                if used.saturating_add(need) > *capacity || seqs.contains_key(&seq.id) {
                     return false;
                 }
                 *used += need;
@@ -75,9 +79,13 @@ impl Kv {
         match self {
             Kv::Paged(p) => p.release(id),
             Kv::Token(t) => t.release(id),
+            // removing the seq entry makes release idempotent: a sequence
+            // that finishes after a preemption already released its
+            // reservation, and the second release must not underflow
+            // `used` (saturating math backstops any residual slip)
             Kv::Reserve { used, seqs, .. } => {
                 if let Some(n) = seqs.remove(&id) {
-                    *used -= n;
+                    *used = used.saturating_sub(n);
                 }
             }
         }
@@ -111,20 +119,16 @@ impl SimResult {
     }
 }
 
-/// Per-GPU decode-iteration compute time under tensor parallelism `tp`,
-/// plus the per-layer activation AllReduces TP requires.
+/// Per-GPU decode-iteration compute time under the deployment's TP
+/// group, plus the per-layer activation AllReduces TP requires.
 pub fn decode_iter_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
                         batch: u64, avg_ctx: u64) -> f64 {
     if batch == 0 {
         return 0.0;
     }
-    // shard the model across tp GPUs: d_ff and heads divide evenly
-    let mut shard = cfg.clone();
-    let tp = plan.tp as u64;
-    shard.d_ff = (cfg.d_ff / tp).max(1);
-    shard.n_heads = (cfg.n_heads / tp).max(1);
-    shard.n_kv_heads = (cfg.n_kv_heads / tp).max(1);
-    // d_model stays (column/row parallel splits the inner dim)
+    // the TP-sharded architecture one GPU executes (d_model stays:
+    // column/row parallel splits the inner dim)
+    let shard = plan.parallel.shard_config(cfg);
     let compute: f64 = mods_total(
         &decode_modules(&shard, batch, avg_ctx.max(1), false)
             .iter()
@@ -137,10 +141,14 @@ pub fn decode_iter_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
             })
             .collect::<Vec<_>>(),
     );
-    let comm = if plan.tp > 1 {
+    let comm = if plan.tp() > 1 {
+        // two AllReduces per layer per token, priced on whatever link the
+        // TP group crosses (Fig. 9's decode-latency story on PCIe boxes)
+        let topo = Topology::single_node(plat);
+        let cost = PlanCost::new(&plan.parallel, &topo);
         let act_bytes = batch as f64 * cfg.d_model as f64 * Dtype::Bf16.bytes();
         2.0 * cfg.n_layers as f64
-            * coll_time(&plat.fabric, Collective::AllReduce, act_bytes, plan.tp)
+            * cost.coll(Axis::Tensor, Collective::AllReduce, act_bytes)
     } else {
         0.0
     };
@@ -154,31 +162,32 @@ pub fn prefill_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
     if tokens == 0 {
         return 0.0;
     }
-    let tp = plan.tp as u64;
+    let par = &plan.parallel;
     let d = cfg.d_model;
-    let ff = cfg.d_ff / tp;
-    let kv = (cfg.n_kv_heads * cfg.head_dim()) / tp;
-    let dh = cfg.d_model / tp.min(cfg.d_model);
-    let _ = dh;
+    let ff = par.shard_dim(cfg.d_ff);
+    let kv = par.shard_dim(cfg.n_kv_heads * cfg.head_dim());
+    let dcol = par.shard_dim(d);
     let mut t = 0.0;
     for _ in 0..cfg.n_layers {
-        for (n, k) in [(d / tp, d), (kv, d), (kv, d), (d, d / tp),
+        for (n, k) in [(dcol, d), (kv, d), (kv, d), (d, dcol),
                        (ff, d), (ff, d), (d, ff)] {
-            t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, n.max(1), k.max(1))));
+            t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, n, k)));
         }
         // fused attention (causal) + norms
         let shape = crate::ops::AttnShape {
-            batch: 1, heads: (cfg.n_heads / tp).max(1), q_len: tokens.min(4096),
+            batch: 1, heads: par.shard_dim(cfg.n_heads), q_len: tokens.min(4096),
             kv_len: tokens.min(4096), head_dim: cfg.head_dim(),
         };
         t += op_time(&plat.gpu, &crate::ops::attention::flash_op(&shape, Dtype::Bf16, 128));
         t += op_time(&plat.gpu, &Op::ew((tokens * d) as f64, Dtype::Bf16, 6.0, 2.0));
     }
     t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, cfg.vocab, d)));
-    let comm = if plan.tp > 1 {
+    let comm = if plan.tp() > 1 {
+        let topo = Topology::single_node(plat);
+        let cost = PlanCost::new(&plan.parallel, &topo);
         let act_bytes = tokens as f64 * d as f64 * 2.0;
         2.0 * cfg.n_layers as f64
-            * coll_time(&plat.fabric, Collective::AllReduce, act_bytes, plan.tp)
+            * cost.coll(Axis::Tensor, Collective::AllReduce, act_bytes)
     } else {
         0.0
     };
@@ -437,5 +446,45 @@ mod tests {
         let cfg = LlamaConfig::llama2_13b();
         let r = simulate(&plat, &cfg, &EngineSpec::vllm(), &wl(300)).unwrap();
         assert_eq!(r.completions.len(), 300);
+    }
+
+    #[test]
+    fn reserve_kv_release_is_exact_and_idempotent() {
+        // regression: ReserveMax accounting must survive the
+        // finish-after-preemption pattern (double release) without
+        // underflowing `used` or leaking the reservation
+        use crate::serve::request::Request;
+        let mut kv = Kv::new(KvPolicy::ReserveMax, 1000);
+        let seq = RunningSeq::new(&Request {
+            id: 7, input_len: 300, output_len: 100, arrival: 0.0,
+        });
+        assert!(kv.admit(&seq));
+        assert_eq!(kv.free_tokens(), 600);
+        assert!(!kv.admit(&seq), "double-admit of a live id must be refused");
+        assert_eq!(kv.free_tokens(), 600, "refused admit must not consume budget");
+        kv.release(seq.id);
+        assert_eq!(kv.free_tokens(), 1000, "release must return the full reservation");
+        kv.release(seq.id); // second release: no-op, no underflow
+        assert_eq!(kv.free_tokens(), 1000);
+        // the slot is reusable after release (re-admission post-preemption)
+        assert!(kv.admit(&seq));
+        assert_eq!(kv.free_tokens(), 600);
+    }
+
+    #[test]
+    fn reserve_kv_never_overadmits() {
+        use crate::serve::request::Request;
+        let mut kv = Kv::new(KvPolicy::ReserveMax, 1000);
+        let mut admitted = 0u64;
+        for id in 0..10 {
+            let seq = RunningSeq::new(&Request {
+                id, input_len: 200, output_len: 100, arrival: 0.0,
+            });
+            if kv.admit(&seq) {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 3); // 3 × 300 ≤ 1000 < 4 × 300
+        assert_eq!(kv.free_tokens(), 100);
     }
 }

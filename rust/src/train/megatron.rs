@@ -9,14 +9,19 @@
 //!    sharded across DP ranks;
 //!  * a less batch-scalable execution path (the paper measures DeepSpeed
 //!    ahead at max batch: 19348 @ BS4 vs 13977 @ BS32).
+//!
+//! All sharding goes through `ParallelPlan`: `simulate_megatron_plan`
+//! takes a full TP×PP×DP plan (pipeline stages priced with the 1F1B
+//! bubble, collectives placed per axis on the topology's links);
+//! `simulate_step_megatron` is the paper's single-node TP×DP view of it.
 
-use crate::comm::{coll_time, Collective};
+use crate::comm::Collective;
 use crate::config::{LlamaConfig, TrainWorkload};
-use crate::hw::Platform;
-use crate::memory::training::OPT_BYTES;
-use crate::memory::{check_fit, Fit, MemoryBreakdown};
+use crate::hw::{Platform, Topology};
+use crate::memory::{check_fit, Fit};
 use crate::model::breakdown::total;
 use crate::model::{backward_breakdown, forward_breakdown};
+use crate::parallel::{megatron_memory, Axis, ParallelPlan, PipelineSchedule, PlanCost};
 
 use super::step::{StepReport, DDP_OVERLAP, OPT_IO_BYTES_PER_PARAM};
 
@@ -33,7 +38,7 @@ pub const MEGATRON_LARGE_BATCH_PENALTY: f64 = 2.2;
 pub const MEGATRON_ACT_DISCOUNT: f64 = 0.35;
 
 /// Simulate one Megatron-LM step with tensor-parallel degree `tp`
-/// (DP degree = n_gpus / tp).
+/// (DP degree = n_gpus / tp) on a single paper platform.
 pub fn simulate_step_megatron(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -41,66 +46,78 @@ pub fn simulate_step_megatron(
     wl: TrainWorkload,
 ) -> StepReport {
     assert!(plat.n_gpus % tp == 0, "tp must divide n_gpus");
-    let dp = plat.n_gpus / tp;
-    let p = cfg.param_count();
+    let plan = ParallelPlan::new(tp, 1, plat.n_gpus / tp);
+    let topo = Topology::single_node(plat);
+    simulate_megatron_plan(plat, &topo, cfg, &plan, wl)
+}
 
-    // --- memory: weights/grads sharded by tp; optimizer distributed
-    // across dp ranks with fp32 master (12 B/param)
-    let w = p * 2.0 / tp as f64;
-    let g = p * 2.0 / tp as f64;
-    let opt = p * (OPT_BYTES + 8.0) / (tp as f64 * dp as f64);
-    let act = crate::memory::activation_bytes(cfg, wl.batch_size, wl.seq_len,
-                                              false, false)
-        * MEGATRON_ACT_DISCOUNT / tp as f64;
-    let mem = MemoryBreakdown {
-        weights: w,
-        grads: g,
-        optimizer: opt,
-        activations: act,
-        buffers: 0.05 * (w + g + opt + act) + 0.6e9,
-        overhead: plat.base_overhead,
-        host_bytes: 0.0,
-    };
+/// Simulate one Megatron-LM step under an arbitrary TP×PP×DP plan on a
+/// (possibly multi-node) topology.
+pub fn simulate_megatron_plan(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    wl: TrainWorkload,
+) -> StepReport {
+    if let Err(e) = plan.validate(topo, cfg) {
+        panic!("invalid ParallelPlan {plan}: {e}");
+    }
+    let p = cfg.param_count();
+    let mem = megatron_memory(plat, cfg, plan, wl, MEGATRON_ACT_DISCOUNT);
     let fit = check_fit(plat, &mem);
     if fit != Fit::Ok {
         return StepReport::oom(mem, fit);
     }
 
-    // --- compute: per-GPU GEMMs shrink by tp; fused kernels cut launches
-    let scale = 1.0 / tp as f64;
+    let cost = PlanCost::new(plan, topo);
+    let sched = PipelineSchedule::one_f_one_b(plan, wl);
+    let m = sched.micro_batches as f64;
+
+    // --- compute: per-GPU GEMMs shrink by tp (width) and pp (depth);
+    // fused kernels cut launches; the 1F1B fill/drain bubble stretches
+    // every rank's timeline by 1/(1-bubble)
+    let scale = plan.compute_shard();
     let fwd_full = total(&forward_breakdown(&plat.gpu, cfg, wl.batch_size,
                                             wl.seq_len, false, false));
     let bwd_full = total(&backward_breakdown(&plat.gpu, cfg, wl.batch_size,
                                              wl.seq_len, false, false));
-    let fwd = fwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
+    let mut fwd = fwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
     let mut bwd = bwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
     // large-batch inefficiency (measured, see const docs)
     let penalty = if wl.batch_size >= 8 { MEGATRON_LARGE_BATCH_PENALTY } else { 1.0 };
-    let fwd = fwd * penalty;
-    bwd *= penalty;
+    fwd *= penalty * sched.stretch();
+    bwd *= penalty * sched.stretch();
 
     // --- communication
     let mut comm_total = 0.0;
-    if tp > 1 {
-        // 2 AllReduce of (b, s, d) activations per layer per direction
-        let act_bytes = (wl.batch_size * wl.seq_len * cfg.d_model) as f64 * 2.0;
-        let per_layer = coll_time(&plat.fabric, Collective::AllReduce, act_bytes, tp);
-        comm_total += 4.0 * cfg.n_layers as f64 * per_layer;
+    let layers_here = plan.shard_layers(cfg.n_layers) as f64;
+    if plan.tp > 1 {
+        // 2 AllReduce of (b, s, d) activations per resident layer per
+        // direction, once per micro-batch, on the TP group's link
+        let act_bytes = (wl.batch_size * wl.seq_len * cfg.d_model) as f64 * 2.0 / m;
+        let per_layer = cost.coll(Axis::Tensor, Collective::AllReduce, act_bytes);
+        comm_total += 4.0 * layers_here * m * per_layer;
     }
-    if dp > 1 {
-        // gradient AllReduce across DP ranks (bf16, well overlapped)
-        comm_total += coll_time(&plat.fabric, Collective::AllReduce,
-                                p * 2.0 / tp as f64, dp);
+    if plan.pp > 1 {
+        // stage-boundary activations: one (micro-b, s, d) tensor out per
+        // micro-batch in fwd and its gradient back in bwd
+        let boundary_bytes = (wl.batch_size * wl.seq_len * cfg.d_model) as f64 * 2.0 / m;
+        comm_total += 2.0 * m * cost.p2p(Axis::Pipeline, boundary_bytes);
+    }
+    if plan.dp > 1 {
+        // gradient AllReduce of this rank's model shard across DP
+        comm_total += cost.coll(Axis::Data, Collective::AllReduce,
+                                plan.model_shard(p * 2.0));
     }
     let comm_exposed = (comm_total - bwd * DDP_OVERLAP).max(0.0);
 
-    // --- distributed optimizer over p/(tp·dp) params at fp32
-    let optimizer = (p / (tp as f64 * dp as f64)) * OPT_IO_BYTES_PER_PARAM
-        / plat.gpu.mem_bw
+    // --- distributed optimizer over the per-rank shard at fp32
+    let optimizer = plan.full_shard(p) * OPT_IO_BYTES_PER_PARAM / plat.gpu.mem_bw
         + 10.0 * crate::ops::op::EAGER_LAUNCH;
 
     let step_time = fwd + bwd + comm_exposed + optimizer;
-    let tokens = wl.tokens_per_step_per_gpu() * dp as f64;
+    let tokens = wl.tokens_per_step_per_gpu() * plan.dp as f64;
     StepReport {
         fwd, bwd, comm_total, comm_exposed, optimizer,
         offload: 0.0, memcopy: 0.0, step_time,
@@ -169,5 +186,36 @@ mod tests {
     #[should_panic(expected = "tp must divide")]
     fn tp_must_divide() {
         simulate_step_megatron(&a800(), &LlamaConfig::llama2_7b(), 3, wl(1));
+    }
+
+    #[test]
+    fn pipeline_plan_pays_a_bubble() {
+        // same 8-way model grid, but the PP plan's compute phases are
+        // stretched by exactly 1/(1-bubble) = (m+pp-1)/m over the pure-TP
+        // plan's (both shard compute 1/8; penalty and discount cancel)
+        let cfg = LlamaConfig::llama2_13b();
+        let topo = Topology::single_node(&a800());
+        let tp8 = simulate_megatron_plan(&a800(), &topo, &cfg,
+                                         &ParallelPlan::new(8, 1, 1), wl(2));
+        let pp4 = simulate_megatron_plan(&a800(), &topo, &cfg,
+                                         &ParallelPlan::new(2, 4, 1), wl(2));
+        assert!(!tp8.is_oom() && !pp4.is_oom());
+        let sched = PipelineSchedule::one_f_one_b(&ParallelPlan::new(2, 4, 1), wl(2));
+        assert!(sched.bubble_fraction() > 0.0);
+        let ratio = pp4.fwd / tp8.fwd;
+        assert!((ratio - sched.stretch()).abs() < 1e-9,
+                "fwd stretch {ratio} != {}", sched.stretch());
+    }
+
+    #[test]
+    fn multi_node_70b_runs_through_plans() {
+        // the scenario the paper could not run: Llama2-70B training on
+        // 4 IB-connected A800 nodes
+        let cfg = LlamaConfig::llama2_70b();
+        let topo = Topology::multi_node(&a800(), 4);
+        let plan = ParallelPlan::new(8, 4, 1);
+        let r = simulate_megatron_plan(&a800(), &topo, &cfg, &plan, wl(16));
+        assert!(!r.is_oom(), "70B should fit on 32 GPUs");
+        assert!(r.tokens_per_s > 0.0 && r.step_time.is_finite());
     }
 }

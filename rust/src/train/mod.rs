@@ -7,5 +7,5 @@ pub mod megatron;
 pub mod scaling;
 pub mod step;
 
-pub use megatron::simulate_step_megatron;
-pub use step::{simulate_step, StepReport};
+pub use megatron::{simulate_megatron_plan, simulate_step_megatron};
+pub use step::{simulate_step, simulate_step_plan, StepReport};

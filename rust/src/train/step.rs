@@ -10,12 +10,13 @@
 //! *measured* behaviour of the paper's software stack, not a free fudge:
 //! the shape tests in this module pin them against the paper's Tables.
 
-use crate::comm::{coll_time, Collective};
+use crate::comm::Collective;
 use crate::config::{LlamaConfig, Method, TrainWorkload, Tuning, ZeroStage};
-use crate::hw::Platform;
-use crate::memory::{check_fit, training_memory, Fit, MemoryBreakdown};
+use crate::hw::{Platform, Topology};
+use crate::memory::{check_fit, training_memory_plan, Fit, MemoryBreakdown};
 use crate::model::breakdown::total;
 use crate::model::{backward_breakdown, forward_breakdown};
+use crate::parallel::{Axis, ParallelPlan, PlanCost};
 
 /// GPU Adam reads/writes w, g, m, v (+ transient copies) through several
 /// unfused element-wise kernels: effective HBM traffic per parameter.
@@ -98,20 +99,40 @@ fn trainable_params(cfg: &LlamaConfig, m: &Method) -> f64 {
     }
 }
 
-/// Simulate one DeepSpeed training step.
+/// Simulate one DeepSpeed training step over the platform's full DP
+/// world (the paper's setting).
 pub fn simulate_step(
     plat: &Platform,
     cfg: &LlamaConfig,
     m: &Method,
     wl: TrainWorkload,
 ) -> StepReport {
-    let mem = training_memory(plat, cfg, m, wl.batch_size, wl.seq_len);
+    let plan = ParallelPlan::data_parallel(plat.n_gpus);
+    let topo = Topology::single_node(plat);
+    simulate_step_plan(plat, &topo, cfg, m, wl, &plan)
+}
+
+/// Plan-aware DeepSpeed step: the ZeRO grid is the DP-axis behavior of
+/// the plan (stage collectives run over — and are sharded by — `plan.dp`,
+/// priced on whatever link the DP group crosses).  The DeepSpeed path has
+/// no intra-layer sharding, so tp = pp = 1.
+pub fn simulate_step_plan(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    m: &Method,
+    wl: TrainWorkload,
+    plan: &ParallelPlan,
+) -> StepReport {
+    debug_assert!(plan.tp == 1 && plan.pp == 1,
+                  "DeepSpeed/ZeRO step model is DP-only");
+    let mem = training_memory_plan(plat, cfg, m, wl.batch_size, wl.seq_len, plan);
     let fit = check_fit(plat, &mem);
     if fit != Fit::Ok {
         return StepReport::oom(mem, fit);
     }
 
-    let n = plat.n_gpus;
+    let cost = PlanCost::new(plan, topo);
     let p = cfg.param_count();
     let train_p = trainable_params(cfg, m);
     let frozen_base = m.is_peft() || m.quant;
@@ -138,34 +159,36 @@ pub fn simulate_step(
         bwd += fwd; // backward re-runs the forward
     }
 
-    // ---- gradient / parameter communication
+    // ---- gradient / parameter communication (DP-axis collectives)
     let grad_bytes = train_p * 2.0;
     let (comm_total, overlap) = match m.zero {
         ZeroStage::None => {
-            (coll_time(&plat.fabric, Collective::AllReduce, grad_bytes, n), DDP_OVERLAP)
+            (cost.coll(Axis::Data, Collective::AllReduce, grad_bytes), DDP_OVERLAP)
         }
         ZeroStage::Z1 => {
-            let slow = slow_link(plat);
-            let t = coll_time(&slow, Collective::AllReduce,
-                              grad_bytes * ZERO_COMM_BYTES_FACTOR, n)
-                + coll_time(&slow, Collective::AllGather, train_p * 2.0, n);
+            let t = cost.coll_derated(Axis::Data, Collective::AllReduce,
+                                      grad_bytes * ZERO_COMM_BYTES_FACTOR,
+                                      ZERO_COMM_BW_FACTOR)
+                + cost.coll_derated(Axis::Data, Collective::AllGather,
+                                    train_p * 2.0, ZERO_COMM_BW_FACTOR);
             (t, ZERO_OVERLAP)
         }
         ZeroStage::Z2 => {
             // paper §II-E: "ZeRO-2 introduces extra Reduce collective
             // communication primitives into the backward process"
-            let slow = slow_link(plat);
-            (coll_time(&slow, Collective::Reduce,
-                       grad_bytes * ZERO_COMM_BYTES_FACTOR, n), ZERO_OVERLAP)
+            (cost.coll_derated(Axis::Data, Collective::Reduce,
+                               grad_bytes * ZERO_COMM_BYTES_FACTOR,
+                               ZERO_COMM_BW_FACTOR), ZERO_OVERLAP)
         }
         ZeroStage::Z3 => {
-            let slow = slow_link(plat);
-            let rs = coll_time(&slow, Collective::ReduceScatter,
-                               grad_bytes * ZERO_COMM_BYTES_FACTOR, n);
+            let rs = cost.coll_derated(Axis::Data, Collective::ReduceScatter,
+                                       grad_bytes * ZERO_COMM_BYTES_FACTOR,
+                                       ZERO_COMM_BW_FACTOR);
             // parameters AllGathered for fwd and again for bwd — for PEFT
             // the (sharded) frozen base is gathered too
             let shard_bytes = p * 2.0;
-            let ag = 2.0 * coll_time(&slow, Collective::AllGather, shard_bytes, n);
+            let ag = 2.0 * cost.coll_derated(Axis::Data, Collective::AllGather,
+                                             shard_bytes, ZERO_COMM_BW_FACTOR);
             // the prefetched portion of the gathers hides under compute —
             // but a frozen (PEFT) base has almost no compute per layer to
             // hide behind, so gathering it is fully exposed (the paper's
@@ -182,7 +205,7 @@ pub fn simulate_step(
     let opt_params_per_gpu = if m.zero == ZeroStage::None {
         train_p
     } else {
-        train_p / n as f64
+        plan.dp_shard(train_p)
     };
     let mut optimizer = if m.offload {
         0.0 // moved to CPU below
@@ -197,8 +220,8 @@ pub fn simulate_step(
     if m.offload {
         let host_bw = plat.host.h2d_bw / plat.host_contention;
         // fp32 gradient shards to host, updated bf16 params back
-        let d2h = train_p * 4.0 / n as f64 / host_bw;
-        let h2d = train_p * 2.0 / n as f64 / host_bw;
+        let d2h = plan.dp_shard(train_p * 4.0) / host_bw;
+        let h2d = plan.dp_shard(train_p * 2.0) / host_bw;
         memcopy += d2h + h2d;
         // CPU Adam over the full trainable set (aggregate rate, all ranks)
         let cpu_adam = train_p / plat.cpu_adam_rate;
@@ -217,21 +240,14 @@ pub fn simulate_step(
     let mut step_time = fwd + bwd + comm_exposed + optimizer + offload;
     // synchronization / straggler cost per extra rank (Fig. 4's sub-linear
     // scaling survives even when the gradient volume is tiny)
-    step_time *= 1.0 + plat.straggler_frac * (n as f64 - 1.0);
-    let tokens = wl.tokens_per_step_per_gpu() * n as f64;
+    step_time *= 1.0 + plat.straggler_frac * (plan.world() as f64 - 1.0);
+    let tokens = wl.tokens_per_step_per_gpu() * plan.dp as f64;
     StepReport {
         fwd, bwd, comm_total, comm_exposed, optimizer, offload, memcopy,
         step_time,
         tokens_per_s: tokens / step_time,
         mem, fit,
     }
-}
-
-/// ZeRO's bucketed collectives run at a fraction of the fabric bandwidth.
-fn slow_link(plat: &Platform) -> crate::hw::Link {
-    let mut l = plat.fabric.clone();
-    l.bw *= ZERO_COMM_BW_FACTOR;
-    l
 }
 
 #[cfg(test)]

@@ -1,0 +1,48 @@
+//! Minimal error plumbing for the dependency-free default build
+//! (DESIGN.md §Dependencies: the simulator core uses no external crates;
+//! `anyhow` is only available behind the `xla` feature).
+//!
+//! `Error` is a boxed trait object, so `?` works on `std` error types
+//! (io, parse, …) and — in `xla`-feature builds — on `anyhow::Error`,
+//! which provides its own conversion into boxed errors.
+
+/// Boxed dynamic error, the crate-wide error currency.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `err!("...")` — format an ad-hoc [`Error`], the `anyhow!` of the
+/// dependency-free build.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::from(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(crate::err!("bad value {}", 42))
+    }
+
+    fn parses() -> Result<u32> {
+        Ok("7".parse::<u32>()?)
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parses().unwrap(), 7);
+        let r: Result<u32> = (|| Ok("x".parse::<u32>()?))();
+        assert!(r.is_err());
+    }
+}

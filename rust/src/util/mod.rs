@@ -2,6 +2,7 @@
 //! human-readable formatting.  No external dependencies (see DESIGN.md
 //! §Dependencies — the vendored crate set is minimal).
 
+pub mod error;
 pub mod fmt;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,140 @@
+//! Property tests for the `parallel/` subsystem: plan enumeration fills
+//! the GPU grid exactly, sharded memory tiles back to the unsharded
+//! totals, the 1F1B bubble behaves, and the plan-based Megatron simulator
+//! reproduces the pre-refactor Table II behavior.
+
+use llm_perf_lab::config::{LlamaConfig, Method, TrainWorkload};
+use llm_perf_lab::hw::{Platform, PlatformId, Topology};
+use llm_perf_lab::parallel::{bubble_fraction, state_shards, ParallelPlan, PipelineSchedule,
+                             StateShards};
+use llm_perf_lab::train::{simulate_megatron_plan, simulate_step, simulate_step_megatron};
+use llm_perf_lab::util::rng::Rng;
+
+fn wl(bs: u64) -> TrainWorkload {
+    TrainWorkload { seq_len: 350, batch_size: bs }
+}
+
+fn a800() -> Platform {
+    Platform::get(PlatformId::A800)
+}
+
+#[test]
+fn every_enumerated_plan_fills_the_world() {
+    for id in PlatformId::ALL {
+        let plat = Platform::get(id);
+        for nodes in [1u32, 2, 4] {
+            let topo = Topology::multi_node(&plat, nodes);
+            for cfg in LlamaConfig::paper_models() {
+                let plans = ParallelPlan::enumerate(&topo, &cfg);
+                assert!(!plans.is_empty(), "{id:?} x{nodes} {}", cfg.name);
+                for p in &plans {
+                    assert_eq!(p.tp * p.pp * p.dp, topo.n_gpus(),
+                               "{id:?} x{nodes} {} {p}", cfg.name);
+                    assert!(p.validate(&topo, &cfg).is_ok());
+                    assert!(p.tp <= topo.gpus_per_node);
+                    assert_eq!(cfg.n_heads % p.tp as u64, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_memory_sums_to_unsharded_total_across_grid() {
+    // summing each rank's shard over the TP×PP grid (and the optimizer
+    // over the full world) recovers the unsharded state exactly
+    let mut rng = Rng::new(0x51AB);
+    let topo = Topology::multi_node(&a800(), 2);
+    for cfg in LlamaConfig::paper_models() {
+        let plans = ParallelPlan::enumerate(&topo, &cfg);
+        for _ in 0..20 {
+            let plan = plans[rng.index(plans.len())];
+            let s = state_shards(&cfg, &plan);
+            let (w, g, o) = StateShards::unsharded(&cfg);
+            let grid = plan.model_shard_degree() as f64;
+            let rel = |a: f64, b: f64| (a - b).abs() / b;
+            assert!(rel(s.weights * grid, w) < 1e-12, "{} {plan}", cfg.name);
+            assert!(rel(s.grads * grid, g) < 1e-12, "{} {plan}", cfg.name);
+            assert!(rel(s.optimizer * plan.world() as f64, o) < 1e-12,
+                    "{} {plan}", cfg.name);
+        }
+    }
+}
+
+#[test]
+fn bubble_zero_without_pipeline_and_shrinks_with_micro_batches() {
+    for m in [1u64, 3, 17, 256] {
+        assert_eq!(bubble_fraction(1, m), 0.0);
+    }
+    for pp in [2u32, 4, 8] {
+        let mut prev = 1.0f64;
+        for m in [1u64, 2, 4, 8, 16, 32, 128, 1024] {
+            let b = bubble_fraction(pp, m);
+            assert!(b > 0.0 && b < 1.0, "pp={pp} m={m}: {b}");
+            assert!(b < prev, "pp={pp} m={m}: bubble must shrink");
+            // exact closed form (pp-1)/(m+pp-1)
+            let expect = (pp as f64 - 1.0) / (m as f64 + pp as f64 - 1.0);
+            assert!((b - expect).abs() < 1e-12);
+            prev = b;
+        }
+    }
+    // schedule view agrees
+    let plan = ParallelPlan::new(1, 4, 2);
+    let s = PipelineSchedule::one_f_one_b(&plan, wl(8));
+    assert!((s.bubble_fraction() - 3.0 / 11.0).abs() < 1e-12);
+}
+
+#[test]
+fn plan_based_megatron_matches_the_tp_entrypoint() {
+    // simulate_step_megatron(tp) must be exactly the TP×DP plan view
+    let topo = Topology::single_node(&a800());
+    let cfg = LlamaConfig::llama2_13b();
+    for tp in [1u32, 2, 4, 8] {
+        for bs in [1u64, 4, 32] {
+            let direct = simulate_step_megatron(&a800(), &cfg, tp, wl(bs));
+            let plan = ParallelPlan::new(tp, 1, 8 / tp);
+            let via_plan = simulate_megatron_plan(&a800(), &topo, &cfg, &plan, wl(bs));
+            assert_eq!(direct.is_oom(), via_plan.is_oom(), "tp{tp} bs{bs}");
+            assert!((direct.mem.gpu_total() - via_plan.mem.gpu_total()).abs() <= 1.0);
+            if direct.is_oom() {
+                continue; // step_time is ∞ on both sides
+            }
+            assert!((direct.step_time - via_plan.step_time).abs() <= 1e-12,
+                    "tp{tp} bs{bs}: {} vs {}", direct.step_time, via_plan.step_time);
+            assert!((direct.tokens_per_s - via_plan.tokens_per_s).abs() <= 1e-9);
+        }
+    }
+}
+
+#[test]
+fn table2_shape_survives_the_refactor() {
+    // the pre-refactor Table II shape checks, through plans:
+    // (a) Megatron beats DeepSpeed at BS=1 on A800
+    let cfg = LlamaConfig::llama2_7b();
+    let meg = simulate_step_megatron(&a800(), &cfg, 1, wl(1));
+    let ds = simulate_step(&a800(), &cfg, &Method::naive(), wl(1));
+    assert!(meg.tokens_per_s > ds.tokens_per_s,
+            "megatron {:.0} !> deepspeed {:.0}", meg.tokens_per_s, ds.tokens_per_s);
+    // (b) Megatron's footprint is smaller at BS=1
+    assert!(meg.mem.gpu_total() < ds.mem.gpu_total());
+    // (c) DeepSpeed wins at its max-batch operating point
+    let meg32 = simulate_step_megatron(&a800(), &cfg, 1, wl(32));
+    let ds4 = simulate_step(&a800(), &cfg, &Method::naive(), wl(4));
+    assert!(ds4.tokens_per_s > meg32.tokens_per_s);
+    // (d) TP cuts weights and adds collective traffic
+    let cfg13 = LlamaConfig::llama2_13b();
+    let tp1 = simulate_step_megatron(&a800(), &cfg13, 1, wl(1));
+    let tp8 = simulate_step_megatron(&a800(), &cfg13, 8, wl(1));
+    assert!(tp8.mem.weights < 0.2 * tp1.mem.weights);
+    assert!(tp8.comm_total > 0.0);
+}
+
+#[test]
+fn serving_deploy_plans_are_parallel_plans() {
+    use llm_perf_lab::serve::EngineSpec;
+    let plat = a800();
+    let p70 = EngineSpec::vllm().plan(&plat, &LlamaConfig::llama2_70b()).unwrap();
+    assert!(p70.tp() >= 2);
+    assert_eq!(p70.parallel.world(), p70.tp());
+    assert_eq!(p70.parallel.tp, p70.tp());
+}
