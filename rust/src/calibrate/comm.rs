@@ -1,0 +1,539 @@
+//! Communication calibration: fit the α-β collective model to NCCL-tests
+//! measurements.
+//!
+//! The simulator prices every collective with the ring/tree α-β model in
+//! `comm::collectives` — `t = A(n)·α + B(n,bytes)·β`, where α is the
+//! per-message latency and β the inverse link bandwidth.  The intra-node
+//! constants are pinned to the paper's Figs. 13–15, but inter-node links
+//! started as public-spec guesses (ROADMAP "Multi-node calibration").
+//! This module closes that gap:
+//!
+//! 1. [`parse_log`] ingests real `all_reduce_perf`-style NCCL-tests
+//!    output (or a minimal JSON schema) across message sizes,
+//! 2. [`fit_alpha_beta`] recovers (α, β) per fabric by weighted least
+//!    squares over every sample, and
+//! 3. the result persists as a `config::TopologyProfile` that
+//!    `hw::Topology` loads, so `ParallelPlan` costing, `sweep-parallel`
+//!    and the train/serve reports all run on measured numbers.
+//!
+//! `report::validate` prints the measured-vs-modeled table — the
+//! multi-node analogue of pinning the single-node model to Figs. 13–15.
+
+use crate::comm::collectives::model_terms;
+use crate::comm::Collective;
+use crate::err;
+use crate::hw::{Link, LinkKind};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One timed collective execution at one message size.
+#[derive(Debug, Clone)]
+pub struct CommSample {
+    /// full tensor size moved by the collective, bytes
+    pub bytes: f64,
+    /// measured wall time for one execution, seconds
+    pub seconds: f64,
+}
+
+/// One parsed NCCL-tests sweep: a collective, its communicator size, and
+/// the timed samples across message sizes.
+#[derive(Debug, Clone)]
+pub struct CommLog {
+    /// which collective the sweep ran
+    pub op: Collective,
+    /// communicator size (ranks = nodes × GPUs/node)
+    pub ranks: u32,
+    /// timed samples, in file order
+    pub samples: Vec<CommSample>,
+    /// where the log came from (file name), for provenance in profiles
+    pub source: String,
+}
+
+impl CommLog {
+    /// Measured bus bandwidth of one sample (NCCL's reporting convention:
+    /// algorithm bytes over time, scaled so peak equals link bandwidth —
+    /// the y axis of Figs. 13–15).
+    pub fn measured_busbw(&self, sample: &CommSample) -> f64 {
+        let (_, b) = model_terms(self.op, self.ranks, sample.bytes);
+        if sample.seconds > 0.0 { b / sample.seconds } else { 0.0 }
+    }
+}
+
+/// A fitted α-β link model plus fit-quality diagnostics.
+#[derive(Debug, Clone)]
+pub struct CommFit {
+    /// per-message latency, seconds (the `Link::latency` it calibrates)
+    pub alpha: f64,
+    /// inverse bandwidth, seconds/byte (`1/Link::bw`)
+    pub beta: f64,
+    /// number of samples the fit consumed
+    pub n_samples: usize,
+    /// mean |modeled − measured| / measured across the samples
+    pub mean_abs_rel_err: f64,
+    /// worst-case relative error across the samples
+    pub max_abs_rel_err: f64,
+}
+
+impl CommFit {
+    /// Effective link bandwidth, bytes/s.
+    pub fn bandwidth(&self) -> f64 {
+        1.0 / self.beta
+    }
+
+    /// The calibrated link this fit describes.
+    pub fn link(&self, kind: LinkKind) -> Link {
+        Link { kind, bw: self.bandwidth(), latency: self.alpha }
+    }
+}
+
+/// Fit (α, β) to every sample of the given logs by weighted least squares.
+///
+/// Each sample contributes one equation `t_i = a_i·α + b_i·β` with weight
+/// `1/t_i²`, i.e. the fit minimizes *relative* residuals — otherwise the
+/// multi-GiB samples would drown the small-message points that carry all
+/// the latency information.  Logs may mix collectives and communicator
+/// sizes as long as they ran on the same fabric.
+pub fn fit_alpha_beta(logs: &[CommLog]) -> Result<CommFit> {
+    let (mut saa, mut sab, mut sbb, mut sat, mut sbt) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    let mut n_samples = 0usize;
+    for log in logs {
+        for s in &log.samples {
+            if s.seconds <= 0.0 || s.bytes <= 0.0 {
+                continue;
+            }
+            let (a, b) = model_terms(log.op, log.ranks, s.bytes);
+            if a == 0.0 && b == 0.0 {
+                continue; // single-rank "collective"
+            }
+            let w = 1.0 / (s.seconds * s.seconds);
+            saa += w * a * a;
+            sab += w * a * b;
+            sbb += w * b * b;
+            sat += w * a * s.seconds;
+            sbt += w * b * s.seconds;
+            n_samples += 1;
+        }
+    }
+    if n_samples < 2 {
+        return Err(err!("fit needs at least 2 samples, got {n_samples}"));
+    }
+    let det = saa * sbb - sab * sab;
+    // relative conditioning guard: a sweep of identical sizes makes the
+    // normal equations rank-1 and (α, β) unidentifiable
+    if !det.is_finite() || det.abs() <= 1e-12 * saa * sbb {
+        return Err(err!(
+            "degenerate fit: samples span too few message sizes to \
+             separate latency from bandwidth"
+        ));
+    }
+    let mut alpha = (sat * sbb - sbt * sab) / det;
+    let mut beta = (saa * sbt - sab * sat) / det;
+    if alpha < 0.0 {
+        // NCCL's LL-protocol fast path can pull small-message times below
+        // the α-β line, driving the unconstrained α negative.  Clamp to
+        // the constrained optimum: α = 0 and β refit alone — not the β
+        // that was solved jointly with the negative α.
+        alpha = 0.0;
+        beta = sbt / sbb;
+    }
+    if beta <= 0.0 || !beta.is_finite() {
+        return Err(err!("fit produced non-positive bandwidth term β={beta}"));
+    }
+
+    let (mut sum_rel, mut max_rel) = (0.0f64, 0.0f64);
+    for log in logs {
+        for s in &log.samples {
+            if s.seconds <= 0.0 || s.bytes <= 0.0 {
+                continue;
+            }
+            let (a, b) = model_terms(log.op, log.ranks, s.bytes);
+            if a == 0.0 && b == 0.0 {
+                continue;
+            }
+            let rel = ((a * alpha + b * beta - s.seconds) / s.seconds).abs();
+            sum_rel += rel;
+            max_rel = max_rel.max(rel);
+        }
+    }
+    Ok(CommFit {
+        alpha,
+        beta,
+        n_samples,
+        mean_abs_rel_err: sum_rel / n_samples as f64,
+        max_abs_rel_err: max_rel,
+    })
+}
+
+/// Parse one NCCL-tests log (text) or calibration-sample file (JSON).
+///
+/// Format is auto-detected: documents starting with `{` use the JSON
+/// schema below, anything else is treated as NCCL-tests console output.
+///
+/// ```json
+/// {
+///   "collective": "all_reduce",
+///   "ranks": 16,
+///   "samples": [{"bytes": 1048576, "time_us": 93.1}]
+/// }
+/// ```
+///
+/// `op`/`ranks` are *fallbacks*: they fill in what the log itself does
+/// not declare (truncated header, missing JSON field).  A value the log
+/// does declare always wins, so one `--op` flag can safely accompany a
+/// mixed batch of logs where only some need the hint.
+pub fn parse_log(
+    text: &str,
+    source: &str,
+    op: Option<Collective>,
+    ranks: Option<u32>,
+) -> Result<CommLog> {
+    let mut log = if text.trim_start().starts_with('{') {
+        parse_json_log(text, source, op)?
+    } else {
+        parse_nccl_text(text, source, op)?
+    };
+    if log.ranks < 2 {
+        log.ranks = ranks.unwrap_or(log.ranks);
+    }
+    if log.ranks < 2 {
+        return Err(err!(
+            "{source}: communicator size not found — pass --ranks \
+             (logs list it as '# Rank N ...' device lines)"
+        ));
+    }
+    if log.samples.is_empty() {
+        return Err(err!("{source}: no data rows found"));
+    }
+    Ok(log)
+}
+
+fn parse_json_log(
+    text: &str,
+    source: &str,
+    fallback_op: Option<Collective>,
+) -> Result<CommLog> {
+    let j = Json::parse(text)?;
+    let op = j
+        .get("collective")
+        .and_then(|v| v.as_str())
+        .and_then(Collective::parse)
+        .or(fallback_op)
+        .ok_or_else(|| err!("{source}: missing/unknown \"collective\" — pass --op"))?;
+    let ranks = j.get("ranks").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+    let mut samples = Vec::new();
+    for s in j
+        .get("samples")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| err!("{source}: missing \"samples\" array"))?
+    {
+        let bytes = s
+            .get("bytes")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| err!("{source}: sample missing \"bytes\""))?;
+        let seconds = match (s.get("time_us"), s.get("seconds")) {
+            (Some(us), _) => {
+                us.as_f64().ok_or_else(|| err!("{source}: bad \"time_us\""))? * 1e-6
+            }
+            (None, Some(sec)) => {
+                sec.as_f64().ok_or_else(|| err!("{source}: bad \"seconds\""))?
+            }
+            (None, None) => {
+                return Err(err!("{source}: sample needs \"time_us\" or \"seconds\""))
+            }
+        };
+        // same positivity filter as the text parser: a zeroed/truncated
+        // sample must not reach the fit or the validation table
+        if bytes > 0.0 && seconds > 0.0 {
+            samples.push(CommSample { bytes, seconds });
+        }
+    }
+    Ok(CommLog { op, ranks, samples, source: source.to_string() })
+}
+
+/// NCCL-tests console output: `#`-prefixed metadata (program name, one
+/// `# Rank N ... Pid ...` line per rank, and the column-name header) then
+/// whitespace-aligned data rows.  Column positions are taken from the
+/// header line so both the 13-column (redop/root) and older layouts work;
+/// the out-of-place trio is used when the log carries both.
+fn parse_nccl_text(
+    text: &str,
+    source: &str,
+    fallback_op: Option<Collective>,
+) -> Result<CommLog> {
+    let mut op: Option<Collective> = None;
+    let mut ranks: u32 = 0;
+    // default nccl-tests layout: size count type redop root time algbw busbw …
+    let (mut col_size, mut col_time) = (0usize, 5usize);
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(meta) = t.strip_prefix('#') {
+            let lower = meta.to_ascii_lowercase();
+            if op.is_none() {
+                op = detect_collective(&lower);
+            }
+            // one "# Rank N Group G Pid P on host device D ..." line per rank
+            if lower.contains(" pid ") && lower.trim_start().starts_with("rank") {
+                ranks += 1;
+            }
+            // the column-name header fixes the field positions
+            let toks: Vec<&str> = meta.split_whitespace().collect();
+            if let (Some(si), Some(ti)) = (
+                toks.iter().position(|w| w.eq_ignore_ascii_case("size")),
+                toks.iter().position(|w| w.eq_ignore_ascii_case("time")),
+            ) {
+                col_size = si;
+                col_time = ti;
+            }
+            continue;
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        if toks.len() <= col_size.max(col_time) {
+            continue;
+        }
+        let bytes: f64 = match toks[col_size].parse() {
+            Ok(b) => b,
+            Err(_) => continue, // not a data row
+        };
+        let time_us: f64 = match toks[col_time].parse() {
+            Ok(t) => t,
+            Err(_) => continue,
+        };
+        if bytes > 0.0 && time_us > 0.0 {
+            samples.push(CommSample { bytes, seconds: time_us * 1e-6 });
+        }
+    }
+    let op = op.or(fallback_op).ok_or_else(|| {
+        err!("{source}: could not detect the collective — pass --op")
+    })?;
+    Ok(CommLog { op, ranks, samples, source: source.to_string() })
+}
+
+fn detect_collective(lower: &str) -> Option<Collective> {
+    // ordered so substrings don't shadow each other ("reduce" last)
+    for (needle, op) in [
+        ("reduce_scatter", Collective::ReduceScatter),
+        ("reducescatter", Collective::ReduceScatter),
+        ("all_reduce", Collective::AllReduce),
+        ("allreduce", Collective::AllReduce),
+        ("all_gather", Collective::AllGather),
+        ("allgather", Collective::AllGather),
+        ("broadcast", Collective::Broadcast),
+        ("reduce", Collective::Reduce),
+    ] {
+        if lower.contains(needle) {
+            return Some(op);
+        }
+    }
+    None
+}
+
+/// Synthesize a sweep from a known (α, β) with multiplicative noise —
+/// ground truth for fitter round-trip tests and demos.
+pub fn synthesize_log(
+    op: Collective,
+    ranks: u32,
+    alpha: f64,
+    beta: f64,
+    sizes: &[f64],
+    noise_frac: f64,
+    seed: u64,
+) -> CommLog {
+    let mut rng = Rng::new(seed);
+    let samples = sizes
+        .iter()
+        .map(|&bytes| {
+            let (a, b) = model_terms(op, ranks, bytes);
+            let noise = 1.0 + noise_frac * (2.0 * rng.f64() - 1.0);
+            CommSample { bytes, seconds: (a * alpha + b * beta) * noise }
+        })
+        .collect();
+    CommLog { op, ranks, samples, source: format!("synthetic-{}", op.label()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::coll_time;
+
+    const SIZES: [f64; 12] = [
+        1024.0, 4096.0, 16384.0, 65536.0, 262144.0, 1048576.0, 4194304.0,
+        16777216.0, 67108864.0, 268435456.0, 1073741824.0, 4294967296.0,
+    ];
+
+    #[test]
+    fn model_terms_mirror_coll_time() {
+        let link = Link { kind: LinkKind::Infiniband, bw: 23e9, latency: 7e-6 };
+        for op in Collective::ALL {
+            for &bytes in &SIZES[..6] {
+                let (a, b) = model_terms(op, 16, bytes);
+                let t = a * link.latency + b / link.bw;
+                assert!(
+                    (t - coll_time(&link, op, bytes, 16)).abs() < 1e-15,
+                    "{} {bytes}",
+                    op.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_fit_recovers_parameters() {
+        let (alpha, beta) = (5e-6, 1.0 / 21e9);
+        let log = synthesize_log(Collective::AllReduce, 16, alpha, beta, &SIZES, 0.0, 1);
+        let fit = fit_alpha_beta(&[log]).unwrap();
+        assert!((fit.alpha / alpha - 1.0).abs() < 1e-9, "alpha {}", fit.alpha);
+        assert!((fit.beta / beta - 1.0).abs() < 1e-9, "beta {}", fit.beta);
+        assert!(fit.mean_abs_rel_err < 1e-9);
+    }
+
+    #[test]
+    fn joint_fit_across_collectives() {
+        let (alpha, beta) = (6.5e-6, 1.0 / 18e9);
+        let logs = vec![
+            synthesize_log(Collective::AllReduce, 16, alpha, beta, &SIZES, 0.02, 2),
+            synthesize_log(Collective::AllGather, 16, alpha, beta, &SIZES, 0.02, 3),
+        ];
+        let fit = fit_alpha_beta(&logs).unwrap();
+        assert!((fit.alpha / alpha - 1.0).abs() < 0.05);
+        assert!((fit.beta / beta - 1.0).abs() < 0.05);
+        assert_eq!(fit.n_samples, 2 * SIZES.len());
+    }
+
+    #[test]
+    fn zero_latency_fabric_clamps_cleanly() {
+        // α = 0 ground truth: the unconstrained solution may dip a hair
+        // negative; the clamp must return α = 0 with β refit, not the β
+        // solved jointly with a negative α
+        let beta = 1.0 / 50e9;
+        let log = synthesize_log(Collective::AllGather, 8, 0.0, beta, &SIZES, 0.0, 9);
+        let fit = fit_alpha_beta(&[log]).unwrap();
+        assert!(fit.alpha >= 0.0 && fit.alpha < 1e-9, "{}", fit.alpha);
+        assert!((fit.beta / beta - 1.0).abs() < 1e-6, "{}", fit.beta);
+    }
+
+    #[test]
+    fn degenerate_single_size_rejected() {
+        let log = synthesize_log(
+            Collective::AllReduce, 8, 5e-6, 1.0 / 20e9, &[1048576.0; 8], 0.0, 4,
+        );
+        assert!(fit_alpha_beta(&[log]).is_err());
+        assert!(fit_alpha_beta(&[]).is_err());
+    }
+
+    #[test]
+    fn json_log_parses() {
+        let text = r#"{
+            "collective": "all_gather",
+            "ranks": 16,
+            "samples": [
+                {"bytes": 1024, "time_us": 12.5},
+                {"bytes": 1048576, "seconds": 0.0001}
+            ]
+        }"#;
+        let log = parse_log(text, "mem.json", None, None).unwrap();
+        assert_eq!(log.op, Collective::AllGather);
+        assert_eq!(log.ranks, 16);
+        assert_eq!(log.samples.len(), 2);
+        assert!((log.samples[0].seconds - 12.5e-6).abs() < 1e-12);
+        assert!((log.samples[1].seconds - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nccl_text_parses_with_header() {
+        let text = "\
+# nThread 1 nGpus 1 minBytes 1024 maxBytes 4294967296 step: 4(factor)
+# Using devices
+#  Rank  0 Group  0 Pid   100 on node01 device  0 [0x07] NVIDIA A800-SXM4-80GB
+#  Rank  1 Group  0 Pid   101 on node01 device  1 [0x0a] NVIDIA A800-SXM4-80GB
+#  Rank  2 Group  0 Pid   200 on node02 device  0 [0x07] NVIDIA A800-SXM4-80GB
+#  Rank  3 Group  0 Pid   201 on node02 device  1 [0x0a] NVIDIA A800-SXM4-80GB
+#
+#       size         count      type   redop    root     time   algbw   busbw #wrong     time   algbw   busbw #wrong
+#        (B)    (elements)                               (us)  (GB/s)  (GB/s)            (us)  (GB/s)  (GB/s)
+        1024           256     float     sum      -1    22.51    0.05    0.07    N/A    22.60    0.05    0.07    N/A
+     1048576        262144     float     sum      -1    97.20   10.79   16.18    N/A    97.45   10.76   16.14    N/A
+# Out of bounds values : 0 OK
+# Avg bus bandwidth    : 8.12
+";
+        // op not in this snippet: pass it explicitly
+        let log =
+            parse_log(text, "ar.txt", Some(Collective::AllReduce), None).unwrap();
+        assert_eq!(log.ranks, 4);
+        assert_eq!(log.samples.len(), 2);
+        assert!((log.samples[0].bytes - 1024.0).abs() < 1e-9);
+        assert!((log.samples[0].seconds - 22.51e-6).abs() < 1e-12);
+        assert!((log.samples[1].seconds - 97.20e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fallback_op_does_not_override_detection() {
+        // one --op flag may accompany a mixed batch: a log that declares
+        // its collective keeps it, the fallback only fills gaps
+        let text = "\
+# Collective test starting: all_gather_perf
+#  Rank  0 Group  0 Pid 1 on n1 device 0
+#  Rank  1 Group  0 Pid 2 on n1 device 1
+#       size count type redop root time algbw busbw #wrong time algbw busbw #wrong
+    1024 256 float none -1 10.0 0.1 0.1 N/A 10.0 0.1 0.1 N/A
+";
+        let log = parse_log(text, "ag.txt", Some(Collective::AllReduce), None).unwrap();
+        assert_eq!(log.op, Collective::AllGather, "declared op wins over fallback");
+        assert_eq!(log.ranks, 2);
+    }
+
+    #[test]
+    fn json_log_honors_fallbacks() {
+        let text = r#"{"samples": [{"bytes": 1024, "time_us": 12.5}]}"#;
+        assert!(parse_log(text, "s.json", None, None).is_err());
+        assert!(parse_log(text, "s.json", Some(Collective::AllReduce), None).is_err());
+        let log =
+            parse_log(text, "s.json", Some(Collective::AllReduce), Some(16)).unwrap();
+        assert_eq!(log.op, Collective::AllReduce);
+        assert_eq!(log.ranks, 16);
+    }
+
+    #[test]
+    fn json_log_drops_non_positive_samples() {
+        // zeroed/truncated rows must not deflate fit or validation stats
+        let text = r#"{"collective": "all_reduce", "ranks": 8, "samples": [
+            {"bytes": 1024, "time_us": 12.5},
+            {"bytes": 1048576, "time_us": 0},
+            {"bytes": 0, "time_us": 9.0}
+        ]}"#;
+        let log = parse_log(text, "z.json", None, None).unwrap();
+        assert_eq!(log.samples.len(), 1);
+        // all-bad samples -> clean per-file "no data rows" error
+        let all_bad = r#"{"collective": "all_reduce", "ranks": 8,
+                          "samples": [{"bytes": 1024, "time_us": 0}]}"#;
+        assert!(parse_log(all_bad, "z.json", None, None).is_err());
+    }
+
+    #[test]
+    fn detect_collective_priority() {
+        assert_eq!(detect_collective("./build/all_reduce_perf -b 1k"),
+                   Some(Collective::AllReduce));
+        assert_eq!(detect_collective("reduce_scatter_perf"),
+                   Some(Collective::ReduceScatter));
+        assert_eq!(detect_collective("running reduce_perf now"),
+                   Some(Collective::Reduce));
+        assert_eq!(detect_collective("nthread 1 ngpus 1"), None);
+    }
+
+    #[test]
+    fn measured_busbw_matches_nccl_convention() {
+        // AllReduce busbw = 2(n-1)/n * S / t
+        let log = CommLog {
+            op: Collective::AllReduce,
+            ranks: 8,
+            samples: vec![CommSample { bytes: 8e9, seconds: 0.1 }],
+            source: "x".into(),
+        };
+        let bw = log.measured_busbw(&log.samples[0]);
+        assert!((bw - 2.0 * 7.0 / 8.0 * 8e9 / 0.1).abs() < 1.0);
+    }
+}

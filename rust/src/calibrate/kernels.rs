@@ -1,0 +1,167 @@
+//! Kernel-side calibration: execute the AOT operator microbenchmarks
+//! through PJRT, time them, and report measured-vs-modeled numbers
+//! (`xla` feature only).
+//!
+//! This grounds the `ops/` cost models: the CPU backend cannot reproduce
+//! GPU absolute times, but *ratios* (flash vs naive attention, aligned vs
+//! unaligned GEMM, rmsnorm fused vs unfused) transfer — see DESIGN.md.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// One timed kernel.
+#[derive(Debug, Clone)]
+pub struct KernelTiming {
+    pub name: String,
+    pub op: String,
+    /// median wall seconds per execution
+    pub seconds: f64,
+    /// FLOPs if the manifest declares them (GEMMs)
+    pub flops: Option<f64>,
+    pub meta: std::collections::HashMap<String, String>,
+}
+
+impl KernelTiming {
+    /// Achieved GFLOP/s, when the manifest declares FLOPs.
+    pub fn gflops(&self) -> Option<f64> {
+        self.flops.map(|f| f / self.seconds / 1e9)
+    }
+}
+
+fn random_f32(rng: &mut Rng, dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, n * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("random literal: {e}"))
+}
+
+/// Input shapes for a micro op, derived from its manifest metadata.
+fn input_dims(meta: &std::collections::HashMap<String, String>) -> Result<Vec<Vec<usize>>> {
+    let get = |k: &str| -> Result<usize> {
+        meta.get(k)
+            .ok_or_else(|| anyhow!("micro missing '{k}'"))?
+            .parse()
+            .map_err(|e| anyhow!("bad '{k}': {e}"))
+    };
+    let op = meta.get("op").map(|s| s.as_str()).unwrap_or("");
+    Ok(match op {
+        "gemm" => {
+            let (m, n, k) = (get("m")?, get("n")?, get("k")?);
+            vec![vec![m, k], vec![k, n]]
+        }
+        "attn_naive" | "attn_flash" => {
+            let (b, h, s, d) = (get("b")?, get("h")?, get("s")?, get("d")?);
+            vec![vec![b, h, s, d]; 3]
+        }
+        "rmsnorm_ref" | "rmsnorm_pallas" => {
+            let (rows, d) = (get("rows")?, get("d")?);
+            vec![vec![rows, d], vec![d]]
+        }
+        "rope" => {
+            let (b, h, s, d) = (get("b")?, get("h")?, get("s")?, get("d")?);
+            vec![vec![b, h, s, d]]
+        }
+        "silu" => vec![vec![get("rows")?, get("d")?]],
+        "add" => vec![vec![get("rows")?, get("d")?]; 2],
+        "softmax" => {
+            // lowered as (64, 512, 512)
+            vec![vec![64, 512, 512]]
+        }
+        other => return Err(anyhow!("unknown micro op '{other}'")),
+    })
+}
+
+/// Time one micro kernel: warmups + `reps` timed runs, median.
+pub fn time_micro(rt: &Runtime, name: &str, reps: usize) -> Result<KernelTiming> {
+    let info = rt.manifest.micro(name)?.clone();
+    let exe = rt.compile_micro(name)?;
+    let mut rng = Rng::new(0xC0FFEE);
+    let inputs: Vec<Literal> = input_dims(&info.meta)?
+        .iter()
+        .map(|dims| random_f32(&mut rng, dims))
+        .collect::<Result<_>>()?;
+    let args: Vec<&Literal> = inputs.iter().collect();
+
+    for _ in 0..2 {
+        rt.run(&exe, &args)?;
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        rt.run(&exe, &args)?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let seconds = times[times.len() / 2];
+    Ok(KernelTiming {
+        name: name.to_string(),
+        op: info.meta.get("op").cloned().unwrap_or_default(),
+        seconds,
+        flops: info.meta.get("flops").and_then(|f| f.parse().ok()),
+        meta: info.meta.clone(),
+    })
+}
+
+/// Time every micro kernel in the manifest.
+pub fn calibrate_all(rt: &Runtime, reps: usize) -> Result<Vec<KernelTiming>> {
+    rt.manifest
+        .micros
+        .iter()
+        .map(|m| time_micro(rt, &m.name, reps))
+        .collect()
+}
+
+/// Measured flash-vs-naive attention ratio per sequence length
+/// (the CPU-measured counterpart of Table VIII).
+pub fn attention_ratios(timings: &[KernelTiming]) -> Vec<(u64, f64)> {
+    let mut out = Vec::new();
+    for t in timings.iter().filter(|t| t.op == "attn_naive") {
+        let s: u64 = t.meta.get("s").and_then(|v| v.parse().ok()).unwrap_or(0);
+        if let Some(flash) = timings.iter().find(|f| {
+            f.op == "attn_flash" && f.meta.get("s") == t.meta.get("s")
+        }) {
+            out.push((s, t.seconds / flash.seconds));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn meta(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn input_dims_per_op() {
+        let g = input_dims(&meta(&[("op", "gemm"), ("m", "8"), ("n", "4"), ("k", "2")]))
+            .unwrap();
+        assert_eq!(g, vec![vec![8, 2], vec![2, 4]]);
+        let a = input_dims(&meta(&[("op", "attn_flash"), ("b", "1"), ("h", "2"),
+                                   ("s", "16"), ("d", "8")])).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0], vec![1, 2, 16, 8]);
+        assert!(input_dims(&meta(&[("op", "wat")])).is_err());
+    }
+
+    #[test]
+    fn gflops_from_flops() {
+        let t = KernelTiming {
+            name: "g".into(), op: "gemm".into(), seconds: 0.5,
+            flops: Some(1e9), meta: Default::default(),
+        };
+        assert!((t.gflops().unwrap() - 2.0).abs() < 1e-12);
+    }
+}

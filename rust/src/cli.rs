@@ -5,12 +5,15 @@ use std::collections::HashMap;
 /// Parsed command line: subcommand, positional args, --key value flags.
 #[derive(Debug, Clone, Default)]
 pub struct Cli {
+    /// the subcommand (first bare argument)
     pub command: String,
+    /// bare arguments after the subcommand
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
 }
 
 impl Cli {
+    /// Parse an argument stream (no program name).
     pub fn parse(args: impl Iterator<Item = String>) -> Cli {
         let mut cli = Cli::default();
         let mut it = args.peekable();
@@ -31,26 +34,32 @@ impl Cli {
         cli
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Cli {
         Cli::parse(std::env::args().skip(1))
     }
 
+    /// The value of `--key`, if present.
     pub fn flag(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default`.
     pub fn flag_or(&self, key: &str, default: &str) -> String {
         self.flag(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as u64, or `default` when absent/unparseable.
     pub fn flag_u64(&self, key: &str, default: u64) -> u64 {
         self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f32, or `default` when absent/unparseable.
     pub fn flag_f32(&self, key: &str, default: f32) -> f32 {
         self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether `--key` was given (boolean flags).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

@@ -13,16 +13,23 @@
 
 use crate::hw::Link;
 
+/// The NCCL collectives the paper's Figs. 13–15 measure.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Collective {
+    /// every rank ends with the elementwise reduction of all inputs
     AllReduce,
+    /// every rank ends with the concatenation of all inputs
     AllGather,
+    /// every rank ends with one reduced shard of the input
     ReduceScatter,
+    /// one root rank ends with the reduction (tree algorithm)
     Reduce,
+    /// one root's buffer is copied to every rank (tree algorithm)
     Broadcast,
 }
 
 impl Collective {
+    /// Every collective, in the paper's figure order.
     pub const ALL: [Collective; 5] = [
         Collective::AllReduce,
         Collective::AllGather,
@@ -31,6 +38,7 @@ impl Collective {
         Collective::Broadcast,
     ];
 
+    /// Human label, as used in report tables ("AllReduce", …).
     pub fn label(self) -> &'static str {
         match self {
             Collective::AllReduce => "AllReduce",
@@ -40,26 +48,51 @@ impl Collective {
             Collective::Broadcast => "Broadcast",
         }
     }
+
+    /// Parse a collective name as it appears in NCCL-tests binaries and
+    /// logs: case-insensitive, underscores optional, with or without the
+    /// `_perf` suffix ("all_reduce_perf", "AllGather", "reducescatter").
+    pub fn parse(s: &str) -> Option<Collective> {
+        let norm: String = s
+            .to_ascii_lowercase()
+            .chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect();
+        let norm = norm.strip_suffix("perf").unwrap_or(&norm);
+        match norm {
+            "allreduce" => Some(Collective::AllReduce),
+            "allgather" => Some(Collective::AllGather),
+            "reducescatter" => Some(Collective::ReduceScatter),
+            "reduce" => Some(Collective::Reduce),
+            "broadcast" | "bcast" => Some(Collective::Broadcast),
+            _ => None,
+        }
+    }
+}
+
+/// The α-β coefficients of one collective execution: completion time is
+/// `a·α + b·β` with α = per-message latency and β = inverse bandwidth.
+/// This is the single place the ring/tree coefficient table lives —
+/// `coll_time` prices with it and `calibrate::comm` fits against it, so
+/// the fitter can never drift from what the simulators charge.
+pub fn model_terms(op: Collective, n: u32, bytes: f64) -> (f64, f64) {
+    if n <= 1 {
+        return (0.0, 0.0);
+    }
+    let nf = n as f64;
+    match op {
+        Collective::AllReduce => (2.0 * (nf - 1.0), 2.0 * (nf - 1.0) / nf * bytes),
+        Collective::AllGather | Collective::ReduceScatter => {
+            (nf - 1.0, (nf - 1.0) / nf * bytes)
+        }
+        Collective::Reduce | Collective::Broadcast => (nf.log2().ceil(), bytes),
+    }
 }
 
 /// Time for one collective over `n` ranks moving `bytes` (full tensor size).
 pub fn coll_time(link: &Link, op: Collective, bytes: f64, n: u32) -> f64 {
-    if n <= 1 {
-        return 0.0;
-    }
-    let nf = n as f64;
-    let alpha = link.latency;
-    let beta = bytes / link.bw;
-    match op {
-        Collective::AllReduce => 2.0 * (nf - 1.0) / nf * beta + 2.0 * (nf - 1.0) * alpha,
-        Collective::AllGather | Collective::ReduceScatter => {
-            (nf - 1.0) / nf * beta + (nf - 1.0) * alpha
-        }
-        Collective::Reduce | Collective::Broadcast => {
-            let hops = (nf).log2().ceil();
-            beta + hops * alpha
-        }
-    }
+    let (a, b) = model_terms(op, n, bytes);
+    a * link.latency + b / link.bw
 }
 
 /// "Bus bandwidth" in NCCL's reporting convention: algo_bytes/time scaled
@@ -69,13 +102,8 @@ pub fn bus_bandwidth(link: &Link, op: Collective, bytes: f64, n: u32) -> f64 {
     if t <= 0.0 {
         return 0.0;
     }
-    let nf = n as f64;
-    let factor = match op {
-        Collective::AllReduce => 2.0 * (nf - 1.0) / nf,
-        Collective::AllGather | Collective::ReduceScatter => (nf - 1.0) / nf,
-        Collective::Reduce | Collective::Broadcast => 1.0,
-    };
-    bytes * factor / t
+    let (_, b) = model_terms(op, n, bytes);
+    b / t
 }
 
 #[cfg(test)]
@@ -132,6 +160,16 @@ mod tests {
         let bw_small = bus_bandwidth(&l, Collective::AllGather, 4096.0, 8);
         let bw_big = bus_bandwidth(&l, Collective::AllGather, 1e9, 8);
         assert!(bw_small < 0.05 * bw_big);
+    }
+
+    #[test]
+    fn parse_accepts_nccl_tests_names() {
+        assert_eq!(Collective::parse("all_reduce_perf"), Some(Collective::AllReduce));
+        assert_eq!(Collective::parse("AllGather"), Some(Collective::AllGather));
+        assert_eq!(Collective::parse("reducescatter"), Some(Collective::ReduceScatter));
+        assert_eq!(Collective::parse("reduce_perf"), Some(Collective::Reduce));
+        assert_eq!(Collective::parse("broadcast"), Some(Collective::Broadcast));
+        assert_eq!(Collective::parse("sendrecv"), None);
     }
 
     #[test]

@@ -6,8 +6,11 @@ use crate::hw::Link;
 /// One sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// message size, bytes
     pub bytes: f64,
+    /// modeled collective completion time, seconds
     pub latency: f64,
+    /// modeled bus bandwidth, bytes/s (Fig. 13-15 y-axis)
     pub bus_bw: f64,
 }
 

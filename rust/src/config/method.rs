@@ -7,6 +7,7 @@ use std::fmt;
 /// ZeRO sharding stage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ZeroStage {
+    /// no ZeRO sharding (plain DDP)
     #[default]
     None,
     /// optimizer-state partitioning
@@ -32,6 +33,7 @@ pub enum Tuning {
 /// One cell of the paper's method grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Method {
+    /// ZeRO sharding stage
     pub zero: ZeroStage,
     /// offloading: Z2+O offloads optimizer state, Z3+O also parameters
     pub offload: bool,
@@ -41,10 +43,12 @@ pub struct Method {
     pub flash: bool,
     /// 4-bit (NF4, double-quantized) weights
     pub quant: bool,
+    /// full-parameter vs PEFT (LoRA / QLoRA) mode
     pub tuning: Tuning,
 }
 
 impl Method {
+    /// The paper's "Naive" baseline: no optimizations at all.
     pub fn naive() -> Self {
         Method::default()
     }
@@ -99,6 +103,7 @@ impl Method {
         .collect()
     }
 
+    /// Whether the method trains adapters instead of full parameters.
     pub fn is_peft(&self) -> bool {
         !matches!(self.tuning, Tuning::Full)
     }
@@ -112,17 +117,27 @@ impl fmt::Display for Method {
             Tuning::QLora { .. } => parts.push("QL"),
             Tuning::Full => {}
         }
-        if self.flash { parts.push("F"); }
-        if self.recompute { parts.push("R"); }
-        if self.quant { parts.push("Q"); }
+        if self.flash {
+            parts.push("F");
+        }
+        if self.recompute {
+            parts.push("R");
+        }
+        if self.quant {
+            parts.push("Q");
+        }
         match self.zero {
             ZeroStage::Z1 => parts.push("Z1"),
             ZeroStage::Z2 => parts.push("Z2"),
             ZeroStage::Z3 => parts.push("Z3"),
             ZeroStage::None => {}
         }
-        if self.offload { parts.push("O"); }
-        if parts.is_empty() { parts.push("Naive"); }
+        if self.offload {
+            parts.push("O");
+        }
+        if parts.is_empty() {
+            parts.push("Naive");
+        }
         write!(f, "{}", parts.join("+"))
     }
 }

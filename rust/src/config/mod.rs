@@ -1,10 +1,13 @@
 //! Configuration layer: model architectures, optimization-method grammar,
-//! and workload descriptions shared by all simulators and reports.
+//! workload descriptions, and persisted calibration profiles shared by
+//! all simulators and reports.
 
 pub mod method;
 pub mod model;
+pub mod profile;
 pub mod workload;
 
 pub use method::{Method, Tuning, ZeroStage};
 pub use model::LlamaConfig;
+pub use profile::{LinkProfile, LinkScope, TopologyProfile};
 pub use workload::{ServeWorkload, TrainWorkload};

@@ -4,19 +4,26 @@
 /// Llama-family decoder-only architecture description.
 #[derive(Debug, Clone)]
 pub struct LlamaConfig {
+    /// display name ("Llama2-7B", …)
     pub name: &'static str,
+    /// vocabulary size
     pub vocab: u64,
+    /// hidden width
     pub d_model: u64,
+    /// decoder-layer count
     pub n_layers: u64,
+    /// attention (query) heads
     pub n_heads: u64,
     /// KV heads (grouped-query attention: 70B uses 8)
     pub n_kv_heads: u64,
+    /// MLP intermediate width
     pub d_ff: u64,
     /// maximum position embedding range
     pub max_pos: u64,
 }
 
 impl LlamaConfig {
+    /// Per-head dimension (d_model / n_heads).
     pub fn head_dim(&self) -> u64 {
         self.d_model / self.n_heads
     }
@@ -73,6 +80,7 @@ impl LlamaConfig {
         }
     }
 
+    /// Look up a model by CLI name ("7b", "13b", "70b", "tiny").
     pub fn by_name(name: &str) -> Option<Self> {
         match name.to_ascii_lowercase().as_str() {
             "7b" | "llama2-7b" => Some(Self::llama2_7b()),

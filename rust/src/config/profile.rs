@@ -1,0 +1,315 @@
+//! Persistable interconnect calibration profiles.
+//!
+//! A [`TopologyProfile`] is the durable output of `llmperf
+//! calibrate-comm`: per-fabric fitted α (latency) and β (inverse
+//! bandwidth) from `calibrate::comm`, stored as a small JSON document so
+//! a cluster measured once keeps pricing plans forever.  Loading one and
+//! calling [`TopologyProfile::apply`] overwrites the matching
+//! `hw::Topology` links, which is the single point where measured
+//! numbers replace the public-spec constants — every `PlanCost`,
+//! `sweep-parallel` ranking and train/serve report downstream of that
+//! topology then runs on calibrated values.
+//!
+//! File format (all numbers human-scale: µs and GB/s):
+//!
+//! ```json
+//! {
+//!   "name": "2node-a800-hdr",
+//!   "version": 1,
+//!   "links": [
+//!     {
+//!       "scope": "inter",
+//!       "alpha_us": 5.21,
+//!       "bw_gbs": 21.4,
+//!       "n_samples": 46,
+//!       "mean_abs_rel_err": 0.031,
+//!       "sources": ["allreduce_2node.txt"]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use crate::err;
+use crate::hw::{Link, Topology};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Which topology link a calibration applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkScope {
+    /// the intra-node GPU-GPU fabric (NVLink / PCIe)
+    Intra,
+    /// the inter-node link (InfiniBand / RoCE NIC per node)
+    Inter,
+}
+
+impl LinkScope {
+    /// Profile-file spelling ("intra" / "inter").
+    pub fn label(self) -> &'static str {
+        match self {
+            LinkScope::Intra => "intra",
+            LinkScope::Inter => "inter",
+        }
+    }
+
+    /// Parse the profile-file spelling.
+    pub fn parse(s: &str) -> Option<LinkScope> {
+        match s.to_ascii_lowercase().as_str() {
+            "intra" | "intra-node" => Some(LinkScope::Intra),
+            "inter" | "inter-node" => Some(LinkScope::Inter),
+            _ => None,
+        }
+    }
+}
+
+/// Fitted α-β parameters for one fabric, plus fit provenance.
+#[derive(Debug, Clone)]
+pub struct LinkProfile {
+    /// which topology link this calibrates
+    pub scope: LinkScope,
+    /// fitted per-message latency α, seconds
+    pub alpha: f64,
+    /// fitted inverse bandwidth β, seconds/byte
+    pub beta: f64,
+    /// how many sweep samples the fit consumed
+    pub n_samples: u64,
+    /// mean |modeled − measured| / measured of the fit
+    pub mean_abs_rel_err: f64,
+    /// log files the fit was computed from
+    pub sources: Vec<String>,
+}
+
+impl LinkProfile {
+    /// Effective link bandwidth, bytes/s.
+    pub fn bandwidth(&self) -> f64 {
+        1.0 / self.beta
+    }
+
+    /// Overwrite a link's α/β with the calibrated values (the link's
+    /// `kind` is preserved — calibration changes numbers, not topology).
+    pub fn apply(&self, link: &mut Link) {
+        link.latency = self.alpha;
+        link.bw = self.bandwidth();
+    }
+}
+
+/// A named set of per-fabric calibrations, persistable as JSON.
+#[derive(Debug, Clone, Default)]
+pub struct TopologyProfile {
+    /// human-chosen profile name (cluster / fabric generation)
+    pub name: String,
+    /// at most one entry per [`LinkScope`]
+    pub links: Vec<LinkProfile>,
+}
+
+impl TopologyProfile {
+    /// An empty profile with the given name.
+    pub fn new(name: &str) -> Self {
+        TopologyProfile { name: name.to_string(), links: Vec::new() }
+    }
+
+    /// The calibration for one scope, if present.
+    pub fn link(&self, scope: LinkScope) -> Option<&LinkProfile> {
+        self.links.iter().find(|l| l.scope == scope)
+    }
+
+    /// Insert a calibration, replacing any existing entry for its scope —
+    /// so re-running `calibrate-comm` against an existing profile updates
+    /// one fabric without losing the other.
+    pub fn upsert(&mut self, profile: LinkProfile) {
+        match self.links.iter_mut().find(|l| l.scope == profile.scope) {
+            Some(slot) => *slot = profile,
+            None => self.links.push(profile),
+        }
+    }
+
+    /// Overwrite the topology links this profile calibrates.
+    pub fn apply(&self, topo: &mut Topology) {
+        if let Some(p) = self.link(LinkScope::Intra) {
+            p.apply(&mut topo.intra);
+        }
+        if let Some(p) = self.link(LinkScope::Inter) {
+            p.apply(&mut topo.inter);
+        }
+    }
+
+    /// Serialize to the documented JSON format.
+    pub fn to_json(&self) -> String {
+        let links = self
+            .links
+            .iter()
+            .map(|l| {
+                Json::Obj(vec![
+                    ("scope".into(), Json::Str(l.scope.label().into())),
+                    ("alpha_us".into(), Json::Num(l.alpha * 1e6)),
+                    ("bw_gbs".into(), Json::Num(l.bandwidth() / 1e9)),
+                    ("n_samples".into(), Json::Num(l.n_samples as f64)),
+                    ("mean_abs_rel_err".into(), Json::Num(l.mean_abs_rel_err)),
+                    (
+                        "sources".into(),
+                        Json::Arr(
+                            l.sources.iter().map(|s| Json::Str(s.clone())).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("version".into(), Json::Num(1.0)),
+            ("links".into(), Json::Arr(links)),
+        ])
+        .render()
+    }
+
+    /// Parse the documented JSON format.
+    pub fn from_json(text: &str) -> Result<TopologyProfile> {
+        let j = Json::parse(text)?;
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err!("profile: missing \"name\""))?
+            .to_string();
+        let mut profile = TopologyProfile { name, links: Vec::new() };
+        for l in j
+            .get("links")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| err!("profile: missing \"links\" array"))?
+        {
+            let scope = l
+                .get("scope")
+                .and_then(|v| v.as_str())
+                .and_then(LinkScope::parse)
+                .ok_or_else(|| err!("profile: link missing/unknown \"scope\""))?;
+            let alpha_us = l
+                .get("alpha_us")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err!("profile: link missing \"alpha_us\""))?;
+            let bw_gbs = l
+                .get("bw_gbs")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err!("profile: link missing \"bw_gbs\""))?;
+            if bw_gbs <= 0.0 || alpha_us < 0.0 {
+                return Err(err!(
+                    "profile: non-physical link ({} µs, {} GB/s)",
+                    alpha_us,
+                    bw_gbs
+                ));
+            }
+            profile.upsert(LinkProfile {
+                scope,
+                alpha: alpha_us * 1e-6,
+                beta: 1.0 / (bw_gbs * 1e9),
+                n_samples: l.get("n_samples").and_then(|v| v.as_u64()).unwrap_or(0),
+                mean_abs_rel_err: l
+                    .get("mean_abs_rel_err")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+                sources: l
+                    .get("sources")
+                    .and_then(|v| v.as_arr())
+                    .map(|xs| {
+                        xs.iter()
+                            .filter_map(|x| x.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(profile)
+    }
+
+    /// Write the profile to a JSON file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Load a profile from a JSON file.
+    pub fn load(path: &str) -> Result<TopologyProfile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("reading profile {path}: {e}"))?;
+        TopologyProfile::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Platform, PlatformId};
+
+    fn sample_profile() -> TopologyProfile {
+        let mut p = TopologyProfile::new("2node-hdr");
+        p.upsert(LinkProfile {
+            scope: LinkScope::Inter,
+            alpha: 5.2e-6,
+            beta: 1.0 / 21.3e9,
+            n_samples: 46,
+            mean_abs_rel_err: 0.031,
+            sources: vec!["allreduce_2node.txt".into()],
+        });
+        p
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let p = sample_profile();
+        let q = TopologyProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(q.name, "2node-hdr");
+        let l = q.link(LinkScope::Inter).unwrap();
+        assert!((l.alpha / 5.2e-6 - 1.0).abs() < 1e-9);
+        assert!((l.bandwidth() / 21.3e9 - 1.0).abs() < 1e-9);
+        assert_eq!(l.n_samples, 46);
+        assert_eq!(l.sources, vec!["allreduce_2node.txt".to_string()]);
+        assert!(q.link(LinkScope::Intra).is_none());
+    }
+
+    #[test]
+    fn apply_overrides_only_calibrated_links() {
+        let plat = Platform::get(PlatformId::A800);
+        let mut topo = Topology::multi_node(&plat, 2);
+        let (intra_bw, inter_bw) = (topo.intra.bw, topo.inter.bw);
+        sample_profile().apply(&mut topo);
+        assert_eq!(topo.intra.bw, intra_bw, "intra untouched");
+        assert!((topo.inter.bw - 21.3e9).abs() < 1.0);
+        assert!((topo.inter.latency - 5.2e-6).abs() < 1e-12);
+        assert!(topo.inter.bw != inter_bw);
+    }
+
+    #[test]
+    fn upsert_replaces_same_scope() {
+        let mut p = sample_profile();
+        p.upsert(LinkProfile {
+            scope: LinkScope::Inter,
+            alpha: 9e-6,
+            beta: 1.0 / 10e9,
+            n_samples: 12,
+            mean_abs_rel_err: 0.1,
+            sources: vec![],
+        });
+        assert_eq!(p.links.len(), 1);
+        assert!((p.link(LinkScope::Inter).unwrap().alpha - 9e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_profiles_rejected() {
+        assert!(TopologyProfile::from_json("{}").is_err());
+        assert!(TopologyProfile::from_json(r#"{"name": "x"}"#).is_err());
+        assert!(TopologyProfile::from_json(
+            r#"{"name": "x", "links": [{"scope": "inter", "alpha_us": 5}]}"#
+        )
+        .is_err());
+        assert!(TopologyProfile::from_json(
+            r#"{"name": "x", "links": [{"scope": "inter", "alpha_us": 5, "bw_gbs": -1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scope_labels_round_trip() {
+        for s in [LinkScope::Intra, LinkScope::Inter] {
+            assert_eq!(LinkScope::parse(s.label()), Some(s));
+        }
+        assert_eq!(LinkScope::parse("nonsense"), None);
+    }
+}

@@ -7,7 +7,9 @@
 /// Training workload: synthetic batch of fixed-length sequences.
 #[derive(Debug, Clone, Copy)]
 pub struct TrainWorkload {
+    /// tokens per sequence
     pub seq_len: u64,
+    /// sequences per step per replica
     pub batch_size: u64,
 }
 
@@ -17,11 +19,13 @@ impl TrainWorkload {
         TrainWorkload { seq_len: 350, batch_size: 1 }
     }
 
+    /// Same workload at a different batch size.
     pub fn with_batch(mut self, bs: u64) -> Self {
         self.batch_size = bs;
         self
     }
 
+    /// Tokens one data-parallel replica consumes per step.
     pub fn tokens_per_step_per_gpu(&self) -> f64 {
         (self.seq_len * self.batch_size) as f64
     }
@@ -30,8 +34,11 @@ impl TrainWorkload {
 /// Serving workload: the §III burst benchmark.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeWorkload {
+    /// total requests in the benchmark
     pub n_requests: u64,
+    /// prompt tokens per request
     pub input_len: u64,
+    /// generated tokens per request
     pub output_len: u64,
     /// all requests arrive at t=0 ("dispatched in a burst pattern")
     pub burst: bool,
@@ -43,10 +50,12 @@ impl ServeWorkload {
         ServeWorkload { n_requests: 1000, input_len: 512, output_len, burst: true }
     }
 
+    /// Output tokens across the whole workload (throughput denominator).
     pub fn total_output_tokens(&self) -> f64 {
         (self.n_requests * self.output_len) as f64
     }
 
+    /// Input + output tokens across the whole workload.
     pub fn total_tokens(&self) -> f64 {
         (self.n_requests * (self.input_len + self.output_len)) as f64
     }

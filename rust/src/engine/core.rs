@@ -74,6 +74,7 @@ fn zeros_literal(dims: &[usize]) -> Result<Literal> {
 }
 
 impl EngineCore {
+    /// Boot an engine over the AOT artifacts of `model`.
     pub fn new(artifact_dir: &str, model: &str) -> Result<EngineCore> {
         let rt = Runtime::open(artifact_dir)?;
         let info = rt.model_info(model)?;
@@ -105,14 +106,17 @@ impl EngineCore {
         Ok(())
     }
 
+    /// Decode-batch slot count.
     pub fn n_slots(&self) -> usize {
         self.slots.len()
     }
 
+    /// Slots currently free.
     pub fn free_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_none()).count()
     }
 
+    /// Sequences currently decoding.
     pub fn active(&self) -> usize {
         self.slots.len() - self.free_slots()
     }
@@ -247,6 +251,7 @@ impl EngineCore {
         Ok(outs)
     }
 
+    /// Seconds since engine boot.
     pub fn uptime(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
     }

@@ -9,9 +9,13 @@
 /// Data types that matter for the paper's experiments.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// 32-bit float (CUDA-core math, fp32 masters)
     F32,
+    /// bfloat16 (the paper's default training/serving dtype)
     Bf16,
+    /// 8-bit integer quantization
     Int8,
+    /// 4-bit NormalFloat (QLoRA's frozen-base quantization)
     Nf4,
 }
 
@@ -30,6 +34,7 @@ impl Dtype {
 /// One GPU's capability envelope.
 #[derive(Debug, Clone)]
 pub struct GpuSpec {
+    /// marketing name ("A800", …)
     pub name: &'static str,
     /// device memory, bytes
     pub mem_bytes: f64,

@@ -18,6 +18,7 @@ pub enum LinkKind {
 /// Point-to-point link between two devices.
 #[derive(Debug, Clone)]
 pub struct Link {
+    /// link technology
     pub kind: LinkKind,
     /// effective per-direction bandwidth, bytes/s
     pub bw: f64,
@@ -78,14 +79,17 @@ pub struct HostLink {
 }
 
 impl HostLink {
+    /// PCIe 4.0 x16 with pinned host memory (all paper platforms).
     pub fn pcie4_pinned() -> Self {
         HostLink { h2d_bw: 25e9, d2h_bw: 22e9, latency: 9e-6 }
     }
 
+    /// Host-to-device copy time.
     pub fn h2d_time(&self, bytes: f64) -> f64 {
         self.latency + bytes / self.h2d_bw
     }
 
+    /// Device-to-host copy time.
     pub fn d2h_time(&self, bytes: f64) -> f64 {
         self.latency + bytes / self.d2h_bw
     }

@@ -6,9 +6,12 @@
 
 use super::interconnect::HostLink;
 
+/// Copy direction over the host link.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dir {
+    /// host to device
     H2D,
+    /// device to host
     D2H,
 }
 

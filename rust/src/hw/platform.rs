@@ -6,16 +6,22 @@ use super::interconnect::{HostLink, Link};
 /// Platform identifier used across reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PlatformId {
+    /// 8x A800-80GB HGX with NVSwitch (the paper's datacenter box)
     A800,
+    /// 8x RTX4090 on PCIe with P2P disabled (the paper's NCCL workaround)
     Rtx4090,
+    /// 8x RTX3090 with pairwise NVLink bridges
     Rtx3090Nvl,
+    /// 8x RTX3090 on PCIe only
     Rtx3090,
 }
 
 impl PlatformId {
+    /// Every modeled platform, in Table I order.
     pub const ALL: [PlatformId; 4] =
         [PlatformId::A800, PlatformId::Rtx4090, PlatformId::Rtx3090Nvl, PlatformId::Rtx3090];
 
+    /// Human-readable platform name (report headers).
     pub fn label(self) -> &'static str {
         match self {
             PlatformId::A800 => "A800",
@@ -25,6 +31,7 @@ impl PlatformId {
         }
     }
 
+    /// Parse a CLI platform name ("a800", "4090", "3090", "3090-pcie").
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "a800" => Some(PlatformId::A800),
@@ -39,10 +46,15 @@ impl PlatformId {
 /// An 8-GPU server: GPUs + intra-node fabric + host memory system.
 #[derive(Debug, Clone)]
 pub struct Platform {
+    /// which platform this is
     pub id: PlatformId,
+    /// the GPU model's compute/memory envelope
     pub gpu: GpuSpec,
+    /// GPUs in the server (8 for every paper platform)
     pub n_gpus: u32,
+    /// intra-node GPU-GPU interconnect
     pub fabric: Link,
+    /// CPU RAM <-> GPU link (offloading, memcopy benches)
     pub host: HostLink,
     /// host DRAM, bytes (Table I: 512 GiB / 512 GB / 128 GB)
     pub cpu_mem_bytes: f64,
@@ -61,6 +73,7 @@ pub struct Platform {
 }
 
 impl Platform {
+    /// The modeled spec of one paper platform (Table I).
     pub fn get(id: PlatformId) -> Self {
         match id {
             PlatformId::A800 => Platform {
@@ -115,6 +128,7 @@ impl Platform {
         }
     }
 
+    /// Every modeled platform.
     pub fn all() -> Vec<Platform> {
         PlatformId::ALL.iter().map(|&id| Platform::get(id)).collect()
     }

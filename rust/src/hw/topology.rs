@@ -14,7 +14,9 @@ use super::platform::Platform;
 /// node-major (rank = node * gpus_per_node + local).
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// GPUs per server
     pub gpus_per_node: u32,
+    /// IB-connected server count
     pub n_nodes: u32,
     /// intra-node GPU-GPU fabric (NVLink / PCIe, from `Platform`)
     pub intra: Link,

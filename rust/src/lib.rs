@@ -22,7 +22,11 @@
 //!
 //! Cross-cutting: `parallel/` holds the `ParallelPlan` (TP×PP×DP)
 //! subsystem — the single source of sharding truth for the training,
-//! fine-tuning, and serving simulators (DESIGN.md §Parallelism).
+//! fine-tuning, and serving simulators (DESIGN.md §Parallelism) — and
+//! `calibrate/comm` fits measured interconnect α-β profiles that replace
+//! the public-spec link constants (README §Calibration).
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod comm;
@@ -38,10 +42,10 @@ pub mod serve;
 pub mod train;
 pub mod util;
 
+pub mod calibrate;
+
 // The real PJRT-backed paths need the `xla` (and `anyhow`) crates; the
 // default build is the dependency-free simulator core (see Cargo.toml).
-#[cfg(feature = "xla")]
-pub mod calibrate;
 #[cfg(feature = "xla")]
 pub mod engine;
 #[cfg(feature = "xla")]

@@ -4,17 +4,24 @@
 //!   table N | figure N | report-all      — regenerate paper tables/figures
 //!   sim-pretrain | sim-serve             — one simulator cell
 //!   sweep-parallel                       — TP×PP×DP plan comparison
+//!   calibrate-comm | validate-comm       — fit/check interconnect α-β profiles
 //!   train | serve | calibrate            — the *real* PJRT paths (`xla` feature)
 //!   info                                 — environment summary
 
+use llm_perf_lab::calibrate::comm::{fit_alpha_beta, parse_log, CommLog};
 use llm_perf_lab::cli::Cli;
-use llm_perf_lab::config::{LlamaConfig, Method, ServeWorkload, TrainWorkload};
+use llm_perf_lab::comm::Collective;
+use llm_perf_lab::config::{
+    LinkProfile, LinkScope, LlamaConfig, Method, ServeWorkload, TopologyProfile,
+    TrainWorkload,
+};
 use llm_perf_lab::err;
-use llm_perf_lab::hw::{Platform, PlatformId, Topology};
+use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
 use llm_perf_lab::serve::EngineSpec;
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
+use llm_perf_lab::util::fmt;
 
 const USAGE: &str = "\
 llmperf — benchmark lab for 'Dissecting the Runtime Performance of LLMs'
@@ -28,9 +35,23 @@ simulators:
   sim-pretrain   --model 7b --platform a800 --method F+Z3 [--bs 1]
   sim-serve      --model 7b --platform a800 --engine vllm [--requests 1000]
   sweep-parallel [--model 70b] [--platform a800] [--nodes 1] [--bs 8] [--seq 350]
+                 [--profile comm_profile.json]
                  rank every valid TP x PP x DP plan (step time, tokens/s,
                  1F1B bubble, memory fit); --nodes > 1 spans IB-connected
-                 copies of the platform
+                 copies of the platform; --profile prices inter/intra links
+                 with calibrated numbers instead of public-spec constants
+
+interconnect calibration (NCCL-tests logs in, measured link models out):
+  calibrate-comm <log...> [--scope inter] [--out comm_profile.json]
+                 [--name NAME] [--op all_reduce] [--ranks N]
+                 parse all_reduce_perf/all_gather_perf sweeps (text or JSON),
+                 fit per-fabric alpha (latency) + beta (1/bandwidth) by
+                 least squares, and write/update a topology profile;
+                 --op/--ranks fill in what a log doesn't declare
+  validate-comm <log...> [--profile comm_profile.json] [--scope inter]
+                 [--platform a800]
+                 print measured-vs-modeled time and busbw per collective
+                 per size, with per-row relative error
 
 real PJRT paths (need `make artifacts` and a build with --features xla):
   train     [--model tiny] [--steps 100] [--lr 1e-3] [--csv results/loss.csv]
@@ -109,11 +130,20 @@ fn run(cli: &Cli) -> Result<()> {
             if nodes == 0 {
                 return Err(err!("--nodes must be >= 1"));
             }
-            let topo = Topology::multi_node(&plat, nodes);
+            let mut topo = Topology::multi_node(&plat, nodes);
+            if let Some(path) = cli.flag("profile") {
+                let prof = TopologyProfile::load(path)?;
+                prof.apply(&mut topo);
+                println!("calibration profile '{}' applied: inter {} @ {}",
+                         prof.name, fmt::rate(topo.inter.bw),
+                         fmt::seconds(topo.inter.latency));
+            }
             let wl = TrainWorkload { seq_len: cli.flag_u64("seq", 350),
                                      batch_size: cli.flag_u64("bs", 8) };
             println!("{}", report::parallel::parallel_sweep(&plat, &topo, &cfg, wl).render());
         }
+        "calibrate-comm" => calibrate_comm(cli)?,
+        "validate-comm" => validate_comm(cli)?,
         "sim-serve" => {
             let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
                 .ok_or_else(|| err!("unknown model"))?;
@@ -177,6 +207,112 @@ fn run(cli: &Cli) -> Result<()> {
         "" | "help" | "--help" => print!("{USAGE}"),
         other => return Err(err!("unknown command '{other}'\n\n{USAGE}")),
     }
+    Ok(())
+}
+
+/// Read and parse every positional argument as an NCCL-tests log (text
+/// or JSON).  `--op` / `--ranks` are fallbacks for logs that don't
+/// declare them — a value the log declares always wins.
+fn read_comm_logs(cli: &Cli) -> Result<Vec<CommLog>> {
+    if cli.positional.is_empty() {
+        return Err(err!("usage: llmperf {} <nccl-log>... (text or JSON; \
+                         see README §Calibration)", cli.command));
+    }
+    let op = match cli.flag("op") {
+        Some(s) => Some(Collective::parse(s)
+            .ok_or_else(|| err!("unknown collective '{s}'"))?),
+        None => None,
+    };
+    let ranks: Option<u32> = match cli.flag("ranks") {
+        Some(v) => Some(v.parse().map_err(|e| err!("bad --ranks '{v}': {e}"))?),
+        None => None,
+    };
+    let mut logs = Vec::new();
+    for path in &cli.positional {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("reading {path}: {e}"))?;
+        let name = std::path::Path::new(path)
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or(path);
+        logs.push(parse_log(&text, name, op, ranks)?);
+    }
+    Ok(logs)
+}
+
+fn scope_flag(cli: &Cli) -> Result<LinkScope> {
+    LinkScope::parse(&cli.flag_or("scope", "inter"))
+        .ok_or_else(|| err!("--scope must be 'intra' or 'inter'"))
+}
+
+/// `llmperf calibrate-comm` — fit α-β from measured sweeps and persist
+/// the result as a topology profile.
+fn calibrate_comm(cli: &Cli) -> Result<()> {
+    let logs = read_comm_logs(cli)?;
+    let fit = fit_alpha_beta(&logs)?;
+    let scope = scope_flag(cli)?;
+    println!("{}", report::validate::fit_table(&logs, &fit).render());
+
+    let out = cli.flag_or("out", "comm_profile.json");
+    let mut profile = if std::path::Path::new(&out).exists() {
+        TopologyProfile::load(&out)?
+    } else {
+        TopologyProfile::new("calibrated")
+    };
+    if let Some(name) = cli.flag("name") {
+        profile.name = name.to_string();
+    }
+    profile.upsert(LinkProfile {
+        scope,
+        alpha: fit.alpha,
+        beta: fit.beta,
+        n_samples: fit.n_samples as u64,
+        mean_abs_rel_err: fit.mean_abs_rel_err,
+        sources: logs.iter().map(|l| l.source.clone()).collect(),
+    });
+    profile.save(&out)?;
+    println!("wrote {out}: '{}' scope '{}' -> α {}, bw {}\n",
+             profile.name, scope.label(), fmt::seconds(fit.alpha),
+             fmt::rate(fit.bandwidth()));
+
+    let kind = match scope {
+        LinkScope::Inter => LinkKind::Infiniband,
+        LinkScope::Intra => LinkKind::NvLink,
+    };
+    let label = format!("fitted {}-node link", scope.label());
+    println!("{}", report::validate::validate_table(&logs, &fit.link(kind), &label)
+        .render());
+    println!("use it: llmperf sweep-parallel --nodes 2 --profile {out}");
+    Ok(())
+}
+
+/// `llmperf validate-comm` — measured-vs-modeled table for a set of logs
+/// against a calibrated profile (or the stock public-spec model).
+fn validate_comm(cli: &Cli) -> Result<()> {
+    let logs = read_comm_logs(cli)?;
+    let scope = scope_flag(cli)?;
+    let stock = match scope {
+        LinkScope::Inter => Link::infiniband(),
+        LinkScope::Intra => {
+            let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
+                .map(Platform::get)
+                .ok_or_else(|| err!("unknown platform"))?;
+            plat.fabric
+        }
+    };
+    let (link, label) = match cli.flag("profile") {
+        Some(path) => {
+            let prof = TopologyProfile::load(path)?;
+            let lp = prof.link(scope).ok_or_else(|| {
+                err!("profile {path} has no '{}' entry", scope.label())
+            })?;
+            let mut link = stock;
+            lp.apply(&mut link);
+            (link, format!("profile '{}' ({}-node)", prof.name, scope.label()))
+        }
+        None => (stock, format!("stock {}-node model", scope.label())),
+    };
+    println!("{}", report::validate::validate_table(&logs, &link, &label).render());
     Ok(())
 }
 

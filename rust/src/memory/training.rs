@@ -19,7 +19,9 @@ use crate::parallel::ParallelPlan;
 /// memory numbers are bf16 too (w2 + g2 + m2 + v2 ≈ 8 B/param gives the
 /// measured 66.7 GB for Naive 7B; fp32 states would OOM the A800).
 pub const W_BYTES: f64 = 2.0;
+/// Gradient bytes per parameter (bf16).
 pub const G_BYTES: f64 = 2.0;
+/// Adam state bytes per parameter (bf16 m + v).
 pub const OPT_BYTES: f64 = 4.0; // bf16 m + v
 
 /// Where each state component lives after partitioning/offload.
@@ -27,8 +29,11 @@ pub const OPT_BYTES: f64 = 4.0; // bf16 m + v
 pub struct MemoryBreakdown {
     /// per-GPU bytes
     pub weights: f64,
+    /// per-GPU gradient bytes
     pub grads: f64,
+    /// per-GPU optimizer-state bytes
     pub optimizer: f64,
+    /// per-GPU activation bytes at peak
     pub activations: f64,
     /// allocator / fragmentation / comm buffers
     pub buffers: f64,
@@ -39,6 +44,7 @@ pub struct MemoryBreakdown {
 }
 
 impl MemoryBreakdown {
+    /// Total per-GPU demand (what is checked against device memory).
     pub fn gpu_total(&self) -> f64 {
         self.weights + self.grads + self.optimizer + self.activations
             + self.buffers + self.overhead
@@ -212,11 +218,15 @@ pub fn training_memory_plan(
 /// Does this configuration fit?  (paper's "-" cells)
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Fit {
+    /// fits both GPU and host memory
     Ok,
+    /// exceeds device memory
     OomGpu,
+    /// offloaded state exceeds host RAM
     OomHost,
 }
 
+/// Check a memory breakdown against the platform's GPU + host budgets.
 pub fn check_fit(plat: &Platform, mem: &MemoryBreakdown) -> Fit {
     if mem.gpu_total() > plat.gpu.mem_bytes {
         Fit::OomGpu

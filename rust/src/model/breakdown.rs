@@ -9,9 +9,13 @@ use crate::ops::{total_time, Op};
 /// Per-module timing entry.
 #[derive(Debug, Clone)]
 pub struct ModuleTime {
+    /// which module
     pub kind: ModuleKind,
+    /// modeled wall time
     pub seconds: f64,
+    /// FLOPs across the module's ops
     pub flops: f64,
+    /// HBM bytes across the module's ops
     pub bytes: f64,
 }
 

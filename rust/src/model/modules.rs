@@ -13,21 +13,32 @@ use crate::ops::{Gemm, Op};
 /// Modules named in the paper's Table VI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ModuleKind {
+    /// token-embedding gather
     Embedding,
+    /// fused Q/K/V projection GEMM
     Qkv,
+    /// rotary position embedding
     Rope,
+    /// QK^T batched GEMM (naive attention)
     Bmm0,
+    /// attention-score softmax (naive attention)
     Softmax,
+    /// PV batched GEMM (naive attention)
     Bmm1,
+    /// the fused FlashAttention kernel (replaces Bmm0/Softmax/Bmm1)
     FlashAttn,
+    /// attention output projection GEMM
     Output,
+    /// gate/up/down MLP GEMMs + SiLU
     Mlp,
+    /// the two per-layer RMSNorms
     RmsNorm,
     /// the classification/generation head ("Linear" row in Table VI)
     Linear,
 }
 
 impl ModuleKind {
+    /// Paper-table row label.
     pub fn label(self) -> &'static str {
         match self {
             ModuleKind::Embedding => "Embedding",
@@ -48,7 +59,9 @@ impl ModuleKind {
 /// A module with its op list (for the whole model, all layers folded in).
 #[derive(Debug, Clone)]
 pub struct ModuleOps {
+    /// which module the ops belong to
     pub kind: ModuleKind,
+    /// its operator decomposition
     pub ops: Vec<Op>,
 }
 

@@ -14,14 +14,20 @@ use crate::hw::{Dtype, GpuSpec};
 /// One attention invocation over (batch, heads, q_len, kv_len, head_dim).
 #[derive(Debug, Clone, Copy)]
 pub struct AttnShape {
+    /// batch size
     pub batch: u64,
+    /// query-head count
     pub heads: u64,
+    /// query sequence length
     pub q_len: u64,
+    /// key/value sequence length (context during decode)
     pub kv_len: u64,
+    /// per-head dimension
     pub head_dim: u64,
 }
 
 impl AttnShape {
+    /// Square (prefill/training) attention: q_len = kv_len = seq.
     pub fn square(batch: u64, heads: u64, seq: u64, head_dim: u64) -> Self {
         AttnShape { batch, heads, q_len: seq, kv_len: seq, head_dim }
     }
@@ -95,6 +101,7 @@ impl Op {
 /// pure GEMM (softmax + masking in the mainloop, online-rescale traffic),
 /// calibrated so the modeled fwd improvement lands near Table VIII's 34.9%.
 pub const FUSED_EFF_MULT_MIN: f64 = 0.25;
+/// Span of the kv_len-dependent efficiency ramp above the minimum.
 pub const FUSED_EFF_MULT_RANGE: f64 = 0.45;
 
 /// Fused-kernel efficiency multiplier grows with kv_len: short sequences

@@ -18,8 +18,11 @@ use crate::hw::{Dtype, GpuSpec};
 /// Modeled GEMM: C[M,N] = A[M,K] · B[K,N].
 #[derive(Debug, Clone, Copy)]
 pub struct Gemm {
+    /// rows of A and C (batch·seq in the transformer GEMMs)
     pub m: u64,
+    /// columns of B and C (output features)
     pub n: u64,
+    /// inner/contraction dimension
     pub k: u64,
     /// dtype of the weight/B operand (quantization shrinks its bytes)
     pub weight_dtype: Dtype,
@@ -28,15 +31,18 @@ pub struct Gemm {
 }
 
 impl Gemm {
+    /// A bf16 GEMM of the given shape.
     pub fn new(m: u64, n: u64, k: u64) -> Self {
         Gemm { m, n, k, weight_dtype: Dtype::Bf16, act_dtype: Dtype::Bf16 }
     }
 
+    /// Same GEMM with a quantized weight operand.
     pub fn with_weight_dtype(mut self, dt: Dtype) -> Self {
         self.weight_dtype = dt;
         self
     }
 
+    /// 2·M·N·K multiply-accumulate FLOPs.
     pub fn flops(&self) -> f64 {
         2.0 * self.m as f64 * self.n as f64 * self.k as f64
     }

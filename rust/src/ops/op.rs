@@ -38,6 +38,7 @@ impl Op {
         Op::Elementwise { bytes: n_elems * dt.bytes(), passes, launches }
     }
 
+    /// FLOPs the op performs.
     pub fn flops(&self) -> f64 {
         match self {
             Op::Gemm(g) => g.flops(),
@@ -48,6 +49,7 @@ impl Op {
         }
     }
 
+    /// HBM bytes the op moves.
     pub fn bytes(&self) -> f64 {
         match self {
             Op::Gemm(g) => g.bytes(),

@@ -16,19 +16,25 @@ use super::plan::ParallelPlan;
 /// One parallelism axis of a plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Axis {
+    /// tensor parallelism (intra-layer sharding, stride 1)
     Tensor,
+    /// data parallelism (gradient replication, stride tp)
     Data,
+    /// pipeline parallelism (layer stages, stride tp*dp)
     Pipeline,
 }
 
 /// Communication-cost context for a plan on a topology.
 #[derive(Debug, Clone)]
 pub struct PlanCost<'a> {
+    /// the plan being priced
     pub plan: &'a ParallelPlan,
+    /// the topology its collectives run on
     pub topo: &'a Topology,
 }
 
 impl<'a> PlanCost<'a> {
+    /// Pricing context for one plan on one topology.
     pub fn new(plan: &'a ParallelPlan, topo: &'a Topology) -> Self {
         PlanCost { plan, topo }
     }

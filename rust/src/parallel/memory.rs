@@ -18,8 +18,11 @@ use super::plan::ParallelPlan;
 /// model states over tp·pp, optimizer + fp32 master over every rank).
 #[derive(Debug, Clone, Copy)]
 pub struct StateShards {
+    /// per-GPU weight bytes (bf16, over tp*pp)
     pub weights: f64,
+    /// per-GPU gradient bytes (bf16, over tp*pp)
     pub grads: f64,
+    /// per-GPU optimizer-state + fp32-master bytes (over the world)
     pub optimizer: f64,
 }
 

@@ -23,6 +23,7 @@ pub fn bubble_fraction(pp: u32, micro_batches: u64) -> f64 {
 /// A resolved 1F1B schedule for one plan + workload.
 #[derive(Debug, Clone, Copy)]
 pub struct PipelineSchedule {
+    /// pipeline stage count
     pub pp: u32,
     /// micro-batch count m; 1 when there is no pipeline (the whole batch
     /// runs as one pass)
@@ -37,6 +38,7 @@ impl PipelineSchedule {
         PipelineSchedule { pp: plan.pp, micro_batches: m }
     }
 
+    /// Idle fraction of each rank's timeline (fill/drain bubble).
     pub fn bubble_fraction(&self) -> f64 {
         bubble_fraction(self.pp, self.micro_batches)
     }

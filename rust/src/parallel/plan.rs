@@ -61,6 +61,7 @@ impl std::fmt::Display for PlanError {
 impl std::error::Error for PlanError {}
 
 impl ParallelPlan {
+    /// A plan with the given per-axis degrees (not yet validated).
     pub fn new(tp: u32, pp: u32, dp: u32) -> Self {
         ParallelPlan { tp, pp, dp }
     }

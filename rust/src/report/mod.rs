@@ -8,6 +8,7 @@ pub mod modulewise;
 pub mod parallel;
 pub mod pretrain;
 pub mod serve;
+pub mod validate;
 
 use crate::config::LlamaConfig;
 use crate::err;

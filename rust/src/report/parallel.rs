@@ -16,11 +16,17 @@ use crate::util::table::{f0, f1, oom, Table};
 /// One evaluated plan (kept public for tests and future reports).
 #[derive(Debug, Clone)]
 pub struct PlanRow {
+    /// the evaluated plan
     pub plan: ParallelPlan,
+    /// 1F1B bubble fraction
     pub bubble: f64,
+    /// modeled training-step wall time, seconds
     pub step_time: f64,
+    /// global training throughput
     pub tokens_per_s: f64,
+    /// per-GPU memory demand, GB
     pub mem_gb: f64,
+    /// whether the plan fits GPU memory
     pub fits: bool,
 }
 

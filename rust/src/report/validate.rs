@@ -1,0 +1,149 @@
+//! Measured-vs-modeled communication validation — the multi-node
+//! analogue of pinning the single-node collective model to Figs. 13–15.
+//!
+//! `llmperf validate-comm` feeds parsed NCCL-tests sweeps through these
+//! tables: per collective per message size, the measured time/busbw next
+//! to what the α-β model (stock or calibrated) predicts, with per-row
+//! relative error and a closing summary row.  A calibrated profile whose
+//! errors stay in the low single-digit percents is trustworthy input for
+//! `sweep-parallel` plan rankings.
+
+use crate::calibrate::comm::{CommFit, CommLog};
+use crate::comm::collectives::{bus_bandwidth, coll_time};
+use crate::hw::Link;
+use crate::util::fmt;
+use crate::util::table::{f1, f2, Table};
+
+/// Measured vs modeled time and bus bandwidth for every sample of every
+/// log, priced on `link`; `link_label` names the link in the title.
+pub fn validate_table(logs: &[CommLog], link: &Link, link_label: &str) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Communication validation — measured vs α-β model on {link_label} \
+             (α = {}, bw = {})",
+            fmt::seconds(link.latency),
+            fmt::rate(link.bw)
+        ),
+        &["Collective", "Ranks", "Size", "Measured", "Modeled", "Err %",
+          "Meas busbw", "Model busbw"],
+    )
+    .align_left(0)
+    .align_left(2);
+    let (mut sum_abs_rel, mut n) = (0.0f64, 0usize);
+    for log in logs {
+        for s in &log.samples {
+            let modeled = coll_time(link, log.op, s.bytes, log.ranks);
+            let rel = if s.seconds > 0.0 {
+                (modeled - s.seconds) / s.seconds
+            } else {
+                0.0
+            };
+            sum_abs_rel += rel.abs();
+            n += 1;
+            t.row(vec![
+                log.op.label().to_string(),
+                log.ranks.to_string(),
+                fmt::bytes(s.bytes),
+                fmt::seconds(s.seconds),
+                fmt::seconds(modeled),
+                f1(rel * 100.0),
+                f2(log.measured_busbw(s) / 1e9),
+                f2(bus_bandwidth(link, log.op, s.bytes, log.ranks) / 1e9),
+            ]);
+        }
+    }
+    if n > 0 {
+        t.row(vec![
+            "mean abs err".to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            f1(sum_abs_rel / n as f64 * 100.0),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    t
+}
+
+/// One-line-per-input summary of a `calibrate-comm` run: what was parsed
+/// and what the joint fit recovered.
+pub fn fit_table(logs: &[CommLog], fit: &CommFit) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "α-β fit — α = {}, bw = {} ({} samples, mean |err| {:.1}%, \
+             max {:.1}%)",
+            fmt::seconds(fit.alpha),
+            fmt::rate(fit.bandwidth()),
+            fit.n_samples,
+            fit.mean_abs_rel_err * 100.0,
+            fit.max_abs_rel_err * 100.0
+        ),
+        &["Source", "Collective", "Ranks", "Samples", "Size range"],
+    )
+    .align_left(0)
+    .align_left(1)
+    .align_left(4);
+    for log in logs {
+        let lo = log.samples.iter().map(|s| s.bytes).fold(f64::INFINITY, f64::min);
+        let hi = log.samples.iter().map(|s| s.bytes).fold(0.0f64, f64::max);
+        t.row(vec![
+            log.source.clone(),
+            log.op.label().to_string(),
+            log.ranks.to_string(),
+            log.samples.len().to_string(),
+            if log.samples.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{} .. {}", fmt::bytes(lo), fmt::bytes(hi))
+            },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::comm::{fit_alpha_beta, synthesize_log};
+    use crate::comm::Collective;
+    use crate::hw::LinkKind;
+
+    fn sizes() -> Vec<f64> {
+        (10..=30).step_by(2).map(|e| (1u64 << e) as f64).collect()
+    }
+
+    #[test]
+    fn validate_table_near_zero_error_on_self_model() {
+        // samples synthesized from the very link they are validated
+        // against must show ~0% error in every row
+        let link = Link { kind: LinkKind::Infiniband, bw: 21e9, latency: 5e-6 };
+        let log = synthesize_log(
+            Collective::AllReduce, 16, link.latency, 1.0 / link.bw, &sizes(), 0.0, 7,
+        );
+        let t = validate_table(&[log], &link, "test link");
+        assert_eq!(t.n_rows(), sizes().len() + 1); // + summary row
+        let s = t.render();
+        assert!(s.contains("Err %"));
+        assert!(s.contains("mean abs err"));
+        // every error cell rounds to 0.0 or -0.0
+        for line in s.lines().filter(|l| l.contains("AllReduce")) {
+            assert!(line.contains(" 0.0 ") || line.contains(" -0.0 "), "{line}");
+        }
+    }
+
+    #[test]
+    fn fit_table_summarizes_inputs() {
+        let logs = vec![
+            synthesize_log(Collective::AllReduce, 16, 5e-6, 1.0 / 20e9, &sizes(), 0.01, 1),
+            synthesize_log(Collective::AllGather, 16, 5e-6, 1.0 / 20e9, &sizes(), 0.01, 2),
+        ];
+        let fit = fit_alpha_beta(&logs).unwrap();
+        let t = fit_table(&logs, &fit);
+        assert_eq!(t.n_rows(), 2);
+        let s = t.render();
+        assert!(s.contains("AllReduce") && s.contains("AllGather"));
+        assert!(s.contains("1.0 KiB"));
+    }
+}

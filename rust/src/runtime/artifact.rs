@@ -91,8 +91,10 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest text (artifact files resolved against `dir`).
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
-        let mut man = Manifest { dir, models: vec![], params: vec![], hlos: vec![], micros: vec![] };
+        let mut man =
+            Manifest { dir, models: vec![], params: vec![], hlos: vec![], micros: vec![] };
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -146,16 +148,19 @@ impl Manifest {
         Ok(man)
     }
 
+    /// Look up a model's config record.
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models.iter().find(|m| m.name == name)
             .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
     }
 
+    /// Look up one lowered entry point.
     pub fn hlo(&self, model: &str, entry: &str) -> Result<&HloInfo> {
         self.hlos.iter().find(|h| h.model == model && h.entry == entry)
             .ok_or_else(|| anyhow!("hlo '{model}/{entry}' not in manifest"))
     }
 
+    /// Look up one microbenchmark artifact.
     pub fn micro(&self, name: &str) -> Result<&MicroInfo> {
         self.micros.iter().find(|m| m.name == name)
             .ok_or_else(|| anyhow!("micro '{name}' not in manifest"))

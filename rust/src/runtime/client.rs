@@ -50,6 +50,7 @@ impl Runtime {
         self.compile_file(&info.file.clone())
     }
 
+    /// The manifest config of `model`.
     pub fn model_info(&self, model: &str) -> Result<ModelInfo> {
         Ok(self.manifest.model(model)?.clone())
     }

@@ -35,7 +35,9 @@ pub enum KvPolicy {
 /// One serving framework's policy parameters.
 #[derive(Debug, Clone)]
 pub struct EngineSpec {
+    /// framework name (report labels)
     pub name: &'static str,
+    /// KV allocator flavor
     pub kv: KvPolicy,
     /// fraction of GPU memory the engine budgets (vLLM's
     /// gpu_memory_utilization; TGI is more conservative)
@@ -62,6 +64,7 @@ pub struct EngineSpec {
 }
 
 impl EngineSpec {
+    /// HuggingFace Text Generation Inference (see module docs).
     pub fn tgi() -> Self {
         EngineSpec {
             name: "TGI",
@@ -77,6 +80,7 @@ impl EngineSpec {
         }
     }
 
+    /// vLLM with PagedAttention (see module docs).
     pub fn vllm() -> Self {
         EngineSpec {
             name: "vLLM",
@@ -92,6 +96,7 @@ impl EngineSpec {
         }
     }
 
+    /// LightLLM with Token Attention (see module docs).
     pub fn lightllm() -> Self {
         EngineSpec {
             name: "LightLLM",
@@ -107,6 +112,7 @@ impl EngineSpec {
         }
     }
 
+    /// The paper's three engines, in Table X order.
     pub fn all() -> Vec<EngineSpec> {
         vec![EngineSpec::tgi(), EngineSpec::vllm(), EngineSpec::lightllm()]
     }
@@ -134,7 +140,9 @@ impl EngineSpec {
 /// token capacity.
 #[derive(Debug, Clone, Copy)]
 pub struct DeployPlan {
+    /// the TP-only plan the engine deploys on
     pub parallel: ParallelPlan,
+    /// whole-group KV pool size, tokens
     pub kv_capacity_tokens: u64,
 }
 

@@ -10,13 +10,16 @@ use std::collections::HashMap;
 /// Paged block allocator.  Tracks per-sequence block lists by token count.
 #[derive(Debug)]
 pub struct PagedKvCache {
+    /// tokens per block (vLLM default 16)
     pub block_tokens: u64,
+    /// pool size in blocks
     pub total_blocks: u64,
     free_blocks: u64,
     seqs: HashMap<u64, u64>, // seq id -> allocated blocks
 }
 
 impl PagedKvCache {
+    /// A pool holding `capacity_tokens` of KV in fixed-size blocks.
     pub fn new(capacity_tokens: u64, block_tokens: u64) -> Self {
         assert!(block_tokens > 0);
         let total_blocks = capacity_tokens / block_tokens;
@@ -54,20 +57,24 @@ impl PagedKvCache {
         true
     }
 
+    /// Free a sequence's blocks (idempotent).
     pub fn release(&mut self, seq: u64) {
         if let Some(blocks) = self.seqs.remove(&seq) {
             self.free_blocks += blocks;
         }
     }
 
+    /// Token capacity still allocatable.
     pub fn free_tokens(&self) -> u64 {
         self.free_blocks * self.block_tokens
     }
 
+    /// Blocks currently allocated.
     pub fn used_blocks(&self) -> u64 {
         self.total_blocks - self.free_blocks
     }
 
+    /// Sequences currently holding blocks.
     pub fn n_seqs(&self) -> usize {
         self.seqs.len()
     }

@@ -4,8 +4,11 @@
 /// max-generated length, burst arrival).
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// request id (stable across completion records)
     pub id: u64,
+    /// prompt tokens
     pub input_len: u64,
+    /// tokens to generate
     pub output_len: u64,
     /// arrival time (0.0 for the burst benchmark)
     pub arrival: f64,
@@ -14,27 +17,37 @@ pub struct Request {
 /// Completion record.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// request id
     pub id: u64,
+    /// completion timestamp
     pub finish: f64,
     /// end-to-end latency (finish - arrival) — what Figures 7-10 CDF
     pub latency: f64,
     /// time until first output token
     pub ttft: f64,
+    /// tokens actually generated
     pub output_tokens: u64,
 }
 
 /// Live state of an admitted request inside the engine.
 #[derive(Debug, Clone)]
 pub struct RunningSeq {
+    /// request id
     pub id: u64,
+    /// arrival time
     pub arrival: f64,
+    /// prompt tokens (already prefilled on admission)
     pub prompt_len: u64,
+    /// tokens the request wants generated
     pub target_output: u64,
+    /// tokens generated so far
     pub generated: u64,
+    /// when the first output token appeared (TTFT), if yet
     pub first_token_at: Option<f64>,
 }
 
 impl RunningSeq {
+    /// Fresh engine-side state for an admitted request.
     pub fn new(r: &Request) -> Self {
         RunningSeq {
             id: r.id,
@@ -51,6 +64,7 @@ impl RunningSeq {
         self.prompt_len + self.generated
     }
 
+    /// Whether the request generated its full output.
     pub fn done(&self) -> bool {
         self.generated >= self.target_output
     }

@@ -39,7 +39,9 @@ impl Kv {
 
     fn new(policy: KvPolicy, capacity: u64) -> Self {
         match policy {
-            KvPolicy::Paged { block_tokens } => Kv::Paged(PagedKvCache::new(capacity, block_tokens)),
+            KvPolicy::Paged { block_tokens } => {
+                Kv::Paged(PagedKvCache::new(capacity, block_tokens))
+            }
             KvPolicy::TokenLevel => Kv::Token(TokenKv::new(capacity)),
             KvPolicy::ReserveMax => Kv::Reserve {
                 capacity, used: 0, seqs: std::collections::HashMap::new(),
@@ -95,14 +97,19 @@ impl Kv {
 /// Simulation output.
 #[derive(Debug)]
 pub struct SimResult {
+    /// one record per finished request
     pub completions: Vec<Completion>,
+    /// wall time until the last completion
     pub makespan: f64,
     /// tokens delivered to clients (completions only)
     pub output_tokens: u64,
     /// all generated tokens incl. work discarded by preemption-recompute
     pub generated_tokens: u64,
+    /// decode engine iterations executed
     pub decode_iters: u64,
+    /// prefill engine iterations executed
     pub prefill_iters: u64,
+    /// sequences evicted under KV pressure
     pub preemptions: u64,
     /// mean decode-iteration wall time (Table X denominator)
     pub mean_iter_time: f64,
@@ -114,6 +121,7 @@ impl SimResult {
         if self.makespan <= 0.0 { 0.0 } else { self.output_tokens as f64 / self.makespan }
     }
 
+    /// CDF of end-to-end request latencies (Figures 7-10).
     pub fn latency_cdf(&self) -> Cdf {
         Cdf::new(self.completions.iter().map(|c| c.latency).collect())
     }

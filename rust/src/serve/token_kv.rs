@@ -3,18 +3,22 @@
 
 use std::collections::HashMap;
 
+/// Token-granular KV pool: per-sequence exact token accounting.
 #[derive(Debug)]
 pub struct TokenKv {
+    /// pool size, tokens
     pub capacity: u64,
     used: u64,
     seqs: HashMap<u64, u64>,
 }
 
 impl TokenKv {
+    /// A pool holding exactly `capacity_tokens`.
     pub fn new(capacity_tokens: u64) -> Self {
         TokenKv { capacity: capacity_tokens, used: 0, seqs: HashMap::new() }
     }
 
+    /// Admit a sequence at its exact token count; false if it can't fit.
     pub fn admit(&mut self, seq: u64, tokens: u64) -> bool {
         if self.used + tokens > self.capacity || self.seqs.contains_key(&seq) {
             return false;
@@ -24,6 +28,7 @@ impl TokenKv {
         true
     }
 
+    /// Grow a sequence to `new_total_tokens`; false if the pool is full.
     pub fn append_token(&mut self, seq: u64, new_total_tokens: u64) -> bool {
         let Some(t) = self.seqs.get_mut(&seq) else { return false };
         let delta = new_total_tokens.saturating_sub(*t);
@@ -35,16 +40,19 @@ impl TokenKv {
         true
     }
 
+    /// Free a sequence's tokens (idempotent).
     pub fn release(&mut self, seq: u64) {
         if let Some(t) = self.seqs.remove(&seq) {
             self.used -= t;
         }
     }
 
+    /// Tokens still allocatable.
     pub fn free_tokens(&self) -> u64 {
         self.capacity - self.used
     }
 
+    /// Sequences currently admitted.
     pub fn n_seqs(&self) -> usize {
         self.seqs.len()
     }
@@ -87,8 +95,12 @@ mod tests {
         let mut n_tok = 0;
         let mut n_paged = 0;
         for id in 0..100 {
-            if tok.admit(id, 17) { n_tok += 1; }
-            if paged.admit(id, 17) { n_paged += 1; }
+            if tok.admit(id, 17) {
+                n_tok += 1;
+            }
+            if paged.admit(id, 17) {
+                n_paged += 1;
+            }
         }
         assert!(n_tok > n_paged, "token {n_tok} !> paged {n_paged}");
     }

@@ -29,7 +29,9 @@ pub fn scaling_series(plat: &Platform, cfg: &LlamaConfig, m: &Method,
 pub fn scaling_efficiency(series: &[(u32, f64)]) -> f64 {
     let t1 = series.iter().find(|(n, _)| *n == 1).map(|(_, t)| *t).unwrap_or(0.0);
     let (n_max, t_max) = series.last().copied().unwrap_or((1, 0.0));
-    if t1 <= 0.0 { return 0.0; }
+    if t1 <= 0.0 {
+        return 0.0;
+    }
     t_max / (n_max as f64 * t1)
 }
 

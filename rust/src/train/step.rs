@@ -49,6 +49,7 @@ pub const FROZEN_BWD_FACTOR: f64 = 1.15;
 /// Simulated step-time report.
 #[derive(Debug, Clone)]
 pub struct StepReport {
+    /// forward compute
     pub fwd: f64,
     /// backward compute (including recompute-forward if enabled)
     pub bwd: f64,
@@ -62,14 +63,18 @@ pub struct StepReport {
     pub offload: f64,
     /// host<->device memcopy portion of the step (Table XIV)
     pub memcopy: f64,
+    /// end-to-end step wall time
     pub step_time: f64,
     /// cluster-wide training throughput (tokens/s over all GPUs)
     pub tokens_per_s: f64,
+    /// per-GPU memory demand
     pub mem: MemoryBreakdown,
+    /// whether the config fits GPU + host memory
     pub fit: Fit,
 }
 
 impl StepReport {
+    /// An out-of-memory cell: infinite step time, zero throughput.
     pub fn oom(mem: MemoryBreakdown, fit: Fit) -> Self {
         StepReport {
             fwd: 0.0, bwd: 0.0, comm_total: 0.0, comm_exposed: 0.0,
@@ -78,6 +83,7 @@ impl StepReport {
         }
     }
 
+    /// Whether this cell failed to fit (the paper's "-" cells).
     pub fn is_oom(&self) -> bool {
         self.fit != Fit::Ok
     }

@@ -25,6 +25,7 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// A synthetic corpus over `vocab` tokens.
     pub fn new(vocab: u64, seed: u64) -> Corpus {
         Corpus { vocab, rng: Rng::new(seed), noise: 0.1 }
     }
@@ -85,6 +86,7 @@ fn zeros_like(params: &[Literal]) -> Result<Vec<Literal>> {
 }
 
 impl Trainer {
+    /// Build a trainer over the AOT artifacts of `model`.
     pub fn new(artifact_dir: &str, model: &str, lr: f32, seed: u64) -> Result<Trainer> {
         let rt = Runtime::open(artifact_dir)?;
         let info = rt.model_info(model)?;

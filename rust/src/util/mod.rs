@@ -4,6 +4,7 @@
 
 pub mod error;
 pub mod fmt;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;

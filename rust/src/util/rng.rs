@@ -12,11 +12,13 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator seeded deterministically.
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

@@ -2,20 +2,26 @@
 
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
-    if xs.is_empty() { return 0.0; }
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
 /// Population standard deviation.
 pub fn std_dev(xs: &[f64]) -> f64 {
-    if xs.len() < 2 { return 0.0; }
+    if xs.len() < 2 {
+        return 0.0;
+    }
     let m = mean(xs);
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
 /// Linear-interpolated percentile, q in [0, 100].  Input need not be sorted.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() { return 0.0; }
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     percentile_sorted(&v, q)
@@ -23,7 +29,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 
 /// Percentile over already-sorted data.
 pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
-    if v.is_empty() { return 0.0; }
+    if v.is_empty() {
+        return 0.0;
+    }
     let q = q.clamp(0.0, 100.0);
     let pos = q / 100.0 * (v.len() - 1) as f64;
     let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
@@ -38,11 +46,13 @@ pub struct Cdf {
 }
 
 impl Cdf {
+    /// Build from unsorted samples.
     pub fn new(mut xs: Vec<f64>) -> Self {
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Cdf { sorted: xs }
     }
 
+    /// Whether there are no samples.
     pub fn is_empty(&self) -> bool {
         self.sorted.is_empty()
     }
@@ -54,7 +64,9 @@ impl Cdf {
 
     /// P(X <= x).
     pub fn prob_le(&self, x: f64) -> f64 {
-        if self.sorted.is_empty() { return 0.0; }
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
         let n = self.sorted.partition_point(|&v| v <= x);
         n as f64 / self.sorted.len() as f64
     }

@@ -3,15 +3,19 @@
 //! Every paper table is re-emitted through this renderer so `llmperf
 //! table N` output is diffable and easy to paste into EXPERIMENTS.md.
 
+/// Column alignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Align {
+    /// pad on the right (labels)
     Left,
+    /// pad on the left (numbers; the default)
     Right,
 }
 
 /// A simple column-aligned table with a title and header row.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// table caption, printed above the frame
     pub title: String,
     header: Vec<String>,
     aligns: Vec<Align>,
@@ -19,6 +23,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given caption and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -36,32 +41,37 @@ impl Table {
         self
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Whether no rows were added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Number of data rows.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
-    /// Render to a string with unicode-free ASCII framing.
+    /// Render to a string with ASCII framing.  Widths are measured in
+    /// chars, not bytes, so cells holding e.g. "97.20 µs" stay aligned.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
-        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        let width_of = |s: &str| s.chars().count();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| width_of(h)).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
-                widths[i] = widths[i].max(c.len());
+                widths[i] = widths[i].max(width_of(c));
             }
         }
         let fmt_row = |cells: &[String]| -> String {
             let mut s = String::from("|");
             for i in 0..ncol {
-                let pad = widths[i] - cells[i].len();
+                let pad = widths[i] - width_of(&cells[i]);
                 match self.aligns[i] {
                     Align::Left => s.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad))),
                     Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cells[i])),
@@ -115,15 +125,25 @@ impl Table {
 }
 
 /// Convenience cell formatters.
-pub fn f1(x: f64) -> String { format!("{x:.1}") }
-pub fn f2(x: f64) -> String { format!("{x:.2}") }
-pub fn f0(x: f64) -> String { format!("{x:.0}") }
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+/// Two decimals.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+/// Rounded to an integer.
+pub fn f0(x: f64) -> String {
+    format!("{x:.0}")
+}
 /// Adaptive 2-3 significant decimals for second-scale values.
 pub fn f3ish(x: f64) -> String {
     if x.abs() >= 10.0 { format!("{x:.1}") } else { format!("{x:.3}") }
 }
 /// "-" for OOM / unavailable cells, matching the paper.
-pub fn oom() -> String { "-".to_string() }
+pub fn oom() -> String {
+    "-".to_string()
+}
 
 #[cfg(test)]
 mod tests {
@@ -144,6 +164,17 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn unicode_cells_stay_aligned() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["97.20 µs".into(), "1".into()]);
+        t.row(vec!["12.34 ms".into(), "2".into()]);
+        let s = t.render();
+        // every framed line (all but the title) has the same char width
+        let w = s.lines().nth(1).unwrap().chars().count();
+        assert!(s.lines().skip(1).all(|l| l.chars().count() == w), "{s}");
     }
 
     #[test]
