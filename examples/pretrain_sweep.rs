@@ -5,8 +5,9 @@
 //!   cargo run --release --example pretrain_sweep
 
 use llm_perf_lab::report::pretrain;
+use llm_perf_lab::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     std::fs::create_dir_all("results")?;
     let t0 = std::time::Instant::now();
 

@@ -11,8 +11,9 @@ use llm_perf_lab::hw::{Platform, PlatformId};
 use llm_perf_lab::report;
 use llm_perf_lab::serve::{simulate, EngineSpec};
 use llm_perf_lab::train::simulate_step;
+use llm_perf_lab::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // --- 1. one training-step cell of Table III
     let plat = Platform::get(PlatformId::A800);
     let cfg = LlamaConfig::llama2_7b();

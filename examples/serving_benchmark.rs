@@ -1,48 +1,78 @@
-//! Real serving benchmark: the threaded router + continuous batcher over
-//! PJRT, exercised with a burst of concurrent clients — the real-compute
-//! counterpart of Figure 6/7.
+//! Open-loop serving benchmark: Poisson arrivals + log-normal lengths
+//! through the discrete-event simulator, per-engine percentile table,
+//! then the binary-searched max QPS under a chat-style SLO — the
+//! workload-generation counterpart of Figure 6/7 (`llmperf sweep-load`
+//! is the CLI version).
 //!
-//!   make artifacts && cargo run --release --example serving_benchmark -- \
-//!       [requests] [max_new] [model]
+//!   cargo run --release --example serving_benchmark -- \
+//!       [qps] [requests] [seed]
 
-use std::sync::Arc;
-use std::time::Instant;
+use llm_perf_lab::config::{Arrival, LengthDist, LlamaConfig, SloSpec, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::report::load::max_qps_under_slo;
+use llm_perf_lab::serve::{simulate_requests, EngineSpec};
+use llm_perf_lab::util::error::Result;
+use llm_perf_lab::util::table::{f0, f1, f2, oom, Table};
 
-use llm_perf_lab::engine::Server;
-use llm_perf_lab::util::stats::Cdf;
-
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
-    let max_new: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32);
-    let model = args.get(3).cloned().unwrap_or_else(|| "tiny".to_string());
+    let qps: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8.0);
+    let n: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let seed: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(42);
 
-    let server = Arc::new(Server::start("artifacts", &model)?);
-    println!("server up (model '{model}'); dispatching {n} requests in a burst");
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    // production-shaped lengths: log-normal prompts (mean 512, cv 0.6)
+    // and log-normal outputs (mean 128, cv 0.8), Poisson arrivals
+    let spec = WorkloadSpec::new(n)
+        .arrival(Arrival::Poisson { qps })
+        .input(LengthDist::log_normal(512.0, 0.6))
+        .output(LengthDist::log_normal(128.0, 0.8))
+        .seed(seed);
+    let requests = spec.generate()?;
+    println!("workload: {} requests, Poisson {qps} QPS, log-normal lengths, seed {seed}", n);
 
-    // burst: all clients submit at t=0 from separate threads (the paper's
-    // asyncio dispatch pattern)
-    let t0 = Instant::now();
-    let mut clients = Vec::new();
-    for i in 0..n {
-        let srv = Arc::clone(&server);
-        clients.push(std::thread::spawn(move || {
-            let prompt: Vec<i32> = (0..48).map(|t| ((t * 7 + i as i64) % 512) as i32).collect();
-            let pending = srv.submit(prompt, max_new, i).expect("submit");
-            pending.wait().expect("generation")
-        }));
+    let mut t = Table::new(
+        &format!("Open-loop serving, {} / {} at {qps} QPS", plat.id.label(), cfg.name),
+        &["Engine", "tok/s", "TTFT p50", "p90", "p99", "TPOT p50 (ms)", "p90", "p99"],
+    )
+    .align_left(0);
+    for engine in EngineSpec::all() {
+        match simulate_requests(&plat, &cfg, &engine, &requests) {
+            Some(r) => {
+                let (ttft, tpot) = (r.ttft_summary(), r.tpot_summary());
+                t.row(vec![
+                    engine.name.into(),
+                    f0(r.throughput()),
+                    f2(ttft.p50),
+                    f2(ttft.p90),
+                    f2(ttft.p99),
+                    f1(tpot.p50 * 1e3),
+                    f1(tpot.p90 * 1e3),
+                    f1(tpot.p99 * 1e3),
+                ]);
+            }
+            None => {
+                let mut row = vec![engine.name.to_string()];
+                row.extend(std::iter::repeat_with(oom).take(7));
+                t.row(row);
+            }
+        }
     }
-    let outs: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
-    let makespan = t0.elapsed().as_secs_f64();
+    println!("{}", t.render());
 
-    let total_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
-    let lat = Cdf::new(outs.iter().map(|o| o.latency).collect());
-    let ttft = Cdf::new(outs.iter().map(|o| o.ttft).collect());
-    println!("completed {} requests / {} output tokens in {:.2}s", outs.len(),
-             total_tokens, makespan);
-    println!("throughput: {:.1} output tokens/s", total_tokens as f64 / makespan);
-    println!("latency  p50 {:.3}s  p90 {:.3}s  p100 {:.3}s",
-             lat.quantile(0.5), lat.quantile(0.9), lat.quantile(1.0));
-    println!("ttft     p50 {:.3}s  p90 {:.3}s", ttft.quantile(0.5), ttft.quantile(0.9));
+    let slo = SloSpec::interactive();
+    println!("SLO capacity ({}):", slo.describe());
+    for engine in EngineSpec::all() {
+        if engine.plan(&plat, &cfg).is_none() {
+            println!("  {:<10} cannot deploy (OOM)", engine.name);
+            continue;
+        }
+        match max_qps_under_slo(&plat, &cfg, &engine, &spec, &slo, 0.5, 64.0)? {
+            Some(q) => println!("  {:<10} max ~{q:.1} QPS", engine.name),
+            None => println!("  {:<10} misses the SLO even at 0.5 QPS", engine.name),
+        }
+    }
+    println!("\nnext: `llmperf sweep-load --engine vllm` for the per-QPS table");
     Ok(())
 }

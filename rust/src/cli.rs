@@ -59,6 +59,11 @@ impl Cli {
         self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or `default` when absent/unparseable.
+    pub fn flag_f64(&self, key: &str, default: f64) -> f64 {
+        self.flag(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     /// Whether `--key` was given (boolean flags).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
@@ -94,5 +99,13 @@ mod tests {
         let c = parse("serve");
         assert_eq!(c.flag_u64("requests", 16), 16);
         assert_eq!(c.flag_f32("lr", 1e-3), 1e-3);
+        assert_eq!(c.flag_f64("qps", 2.5), 2.5);
+    }
+
+    #[test]
+    fn f64_flags_parse() {
+        let c = parse("sweep-load --qps-max 32.5 --slo-ttft 2");
+        assert_eq!(c.flag_f64("qps-max", 0.0), 32.5);
+        assert_eq!(c.flag_f64("slo-ttft", 0.0), 2.0);
     }
 }

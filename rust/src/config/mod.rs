@@ -1,13 +1,18 @@
 //! Configuration layer: model architectures, optimization-method grammar,
-//! workload descriptions, and persisted calibration profiles shared by
-//! all simulators and reports.
+//! workload descriptions (including the open-loop serving workload
+//! generator and its trace/SLO grammar), and persisted calibration
+//! profiles shared by all simulators and reports.
 
 pub mod method;
 pub mod model;
 pub mod profile;
+pub mod slo;
+pub mod trace;
 pub mod workload;
 
 pub use method::{Method, Tuning, ZeroStage};
 pub use model::LlamaConfig;
 pub use profile::{LinkProfile, LinkScope, TopologyProfile};
-pub use workload::{ServeWorkload, TrainWorkload};
+pub use slo::SloSpec;
+pub use trace::{Trace, TraceEntry};
+pub use workload::{Arrival, LengthDist, ServeWorkload, TrainWorkload, WorkloadSpec};

@@ -1,0 +1,77 @@
+//! Service-level objectives for serving workloads.
+//!
+//! An [`SloSpec`] bounds the two streaming latency metrics every serving
+//! benchmark reports (LLM-Inference-Bench, arXiv 2411.00136): **TTFT**
+//! (time to first token — prompt queueing + prefill) and **TPOT** (time
+//! per output token after the first — decode cadence).  The spec is
+//! evaluated two ways by `serve::SimResult`:
+//!
+//! * **percentile-level** (`meets_slo`): the workload passes if both
+//!   metrics at [`SloSpec::quantile`] are within budget — the pass/fail
+//!   signal `llmperf sweep-load` binary-searches on, and
+//! * **per-request** (`goodput` / `slo_attainment`): tokens/s delivered
+//!   by, and fraction of, requests that individually met both budgets.
+
+/// Latency budgets a serving deployment must meet at a given quantile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// quantile in (0, 1] the budgets apply to (0.9 = p90)
+    pub quantile: f64,
+    /// time-to-first-token budget, seconds
+    pub max_ttft: f64,
+    /// time-per-output-token budget, seconds per token
+    pub max_tpot: f64,
+}
+
+impl SloSpec {
+    /// An SLO at `quantile` with the given TTFT / TPOT budgets.
+    pub fn new(quantile: f64, max_ttft: f64, max_tpot: f64) -> Self {
+        SloSpec { quantile: quantile.clamp(0.0, 1.0), max_ttft, max_tpot }
+    }
+
+    /// A chat-style default: p90 TTFT ≤ 2 s, p90 TPOT ≤ 100 ms
+    /// (~10 tokens/s of visible streaming).
+    pub fn interactive() -> Self {
+        SloSpec { quantile: 0.9, max_ttft: 2.0, max_tpot: 0.1 }
+    }
+
+    /// Whether one request's observed (ttft, tpot) meets both budgets.
+    pub fn admits(&self, ttft: f64, tpot: f64) -> bool {
+        ttft <= self.max_ttft && tpot <= self.max_tpot
+    }
+
+    /// Human-readable caption fragment ("p90 TTFT <= 2.0s, TPOT <= 100ms").
+    pub fn describe(&self) -> String {
+        format!(
+            "p{:.0} TTFT <= {:.1}s, TPOT <= {:.0}ms",
+            self.quantile * 100.0,
+            self.max_ttft,
+            self.max_tpot * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_checks_both_budgets() {
+        let slo = SloSpec::interactive();
+        assert!(slo.admits(1.0, 0.05));
+        assert!(!slo.admits(3.0, 0.05), "ttft over budget");
+        assert!(!slo.admits(1.0, 0.2), "tpot over budget");
+        assert!(slo.admits(2.0, 0.1), "budgets are inclusive");
+    }
+
+    #[test]
+    fn describe_mentions_quantile_and_budgets() {
+        let s = SloSpec::new(0.99, 1.5, 0.05).describe();
+        assert!(s.contains("p99") && s.contains("1.5") && s.contains("50"), "{s}");
+    }
+
+    #[test]
+    fn quantile_clamped() {
+        assert_eq!(SloSpec::new(1.7, 1.0, 0.1).quantile, 1.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Replayable serving traces: recorded (arrival, input_len, output_len)
+//! triples that drive the simulator with real request mixes instead of
+//! the synthetic burst (`config::workload`, ROADMAP "as many scenarios
+//! as you can imagine").
+//!
+//! File format (JSON, times in seconds from trace start):
+//!
+//! ```json
+//! {
+//!   "name": "prod-sample",
+//!   "version": 1,
+//!   "requests": [
+//!     {"arrival_s": 0.0, "input_len": 512, "output_len": 128},
+//!     {"arrival_s": 0.4, "input_len": 96, "output_len": 512}
+//!   ]
+//! }
+//! ```
+//!
+//! Entries need not be sorted; replay orders by arrival. A checked-in
+//! sample lives at `rust/tests/fixtures/trace_bursty_sample.json`.
+
+use crate::err;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// One recorded request of a serving trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    /// arrival time, seconds from trace start
+    pub arrival_s: f64,
+    /// prompt tokens
+    pub input_len: u64,
+    /// tokens to generate
+    pub output_len: u64,
+}
+
+/// A named, replayable request trace (schema in the module docs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    /// trace label, used in report captions
+    pub name: String,
+    /// recorded requests, in any order
+    pub requests: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Parse the JSON trace schema, validating every entry.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let doc = Json::parse(text)?;
+        let name = doc.get("name").and_then(|v| v.as_str()).unwrap_or("trace").to_string();
+        let entries = doc
+            .get("requests")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| err!("trace: missing 'requests' array"))?;
+        let mut requests = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let num = |key: &str| -> Result<f64> {
+                e.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| err!("trace: request {i} missing numeric '{key}'"))
+            };
+            let len = |key: &str| -> Result<u64> {
+                let x = num(key)?;
+                if x < 1.0 || x.fract() != 0.0 {
+                    return Err(err!("trace: request {i} '{key}' must be a positive integer"));
+                }
+                Ok(x as u64)
+            };
+            let arrival_s = num("arrival_s")?;
+            if !arrival_s.is_finite() || arrival_s < 0.0 {
+                return Err(err!("trace: request {i} arrival_s must be finite and >= 0"));
+            }
+            requests.push(TraceEntry {
+                arrival_s,
+                input_len: len("input_len")?,
+                output_len: len("output_len")?,
+            });
+        }
+        if requests.is_empty() {
+            return Err(err!("trace '{name}': no requests"));
+        }
+        Ok(Trace { name, requests })
+    }
+
+    /// Load a trace file from disk.
+    pub fn load(path: &str) -> Result<Trace> {
+        let text = std::fs::read_to_string(path).map_err(|e| err!("reading trace {path}: {e}"))?;
+        Trace::parse(&text).map_err(|e| err!("{path}: {e}"))
+    }
+
+    /// The trace as a JSON value (inverse of [`Trace::parse`]).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("version".into(), Json::Num(1.0)),
+            (
+                "requests".into(),
+                Json::Arr(
+                    self.requests
+                        .iter()
+                        .map(|r| {
+                            Json::Obj(vec![
+                                ("arrival_s".into(), Json::Num(r.arrival_s)),
+                                ("input_len".into(), Json::Num(r.input_len as f64)),
+                                ("output_len".into(), Json::Num(r.output_len as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render as a JSON document (round-trips through [`Trace::parse`]).
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Write the trace to disk.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.render()).map_err(|e| err!("writing trace {path}: {e}"))?;
+        Ok(())
+    }
+
+    /// Number of recorded requests.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Whether the trace holds no requests.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Time of the last arrival, seconds from trace start.
+    pub fn duration(&self) -> f64 {
+        self.requests.iter().map(|r| r.arrival_s).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            name: "t".into(),
+            requests: vec![
+                TraceEntry { arrival_s: 0.0, input_len: 512, output_len: 128 },
+                TraceEntry { arrival_s: 0.25, input_len: 96, output_len: 32 },
+                TraceEntry { arrival_s: 2.5, input_len: 1024, output_len: 256 },
+            ],
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trips() {
+        let t = sample();
+        assert_eq!(Trace::parse(&t.render()).unwrap(), t);
+    }
+
+    #[test]
+    fn duration_is_last_arrival() {
+        assert_eq!(sample().duration(), 2.5);
+        assert_eq!(sample().len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_schemas() {
+        assert!(Trace::parse("{}").is_err(), "missing requests");
+        assert!(Trace::parse(r#"{"requests": []}"#).is_err(), "empty");
+        assert!(
+            Trace::parse(r#"{"requests": [{"arrival_s": -1, "input_len": 1, "output_len": 1}]}"#)
+                .is_err(),
+            "negative arrival"
+        );
+        assert!(
+            Trace::parse(r#"{"requests": [{"arrival_s": 0, "input_len": 0, "output_len": 1}]}"#)
+                .is_err(),
+            "zero input_len"
+        );
+        assert!(
+            Trace::parse(r#"{"requests": [{"arrival_s": 0, "input_len": 1.5, "output_len": 1}]}"#)
+                .is_err(),
+            "fractional length"
+        );
+        assert!(
+            Trace::parse(r#"{"requests": [{"arrival_s": 0, "output_len": 1}]}"#).is_err(),
+            "missing input_len"
+        );
+    }
+
+    #[test]
+    fn name_defaults_when_absent() {
+        let t = Trace::parse(
+            r#"{"requests": [{"arrival_s": 0, "input_len": 8, "output_len": 4}]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.name, "trace");
+    }
+}

@@ -1,8 +1,46 @@
-//! Workload descriptions (paper §III "Datasets").
+//! Workload descriptions (paper §III "Datasets") and the open-loop
+//! serving workload generator.
 //!
 //! Pre-training / fine-tuning use the alpaca-derived sequence length of
-//! 350 tokens; serving uses the burst workload of 1000 requests × 512
-//! input tokens with a per-platform fixed "max generated tokens".
+//! 350 tokens ([`TrainWorkload`]); the paper's serving benchmark is a
+//! burst of 1000 requests × 512 input tokens ([`ServeWorkload`]).
+//! [`WorkloadSpec`] generalizes the latter into a generator over an
+//! [`Arrival`] process (at-once burst, Poisson, bursty on/off, trace
+//! replay) and per-request [`LengthDist`] prompt/output distributions —
+//! the arrival process and length spread are what dominate observed
+//! TTFT/TPOT tails under load, so the closed burst alone mis-ranks
+//! engine configurations (see DESIGN.md §Serving workloads & SLOs).
+//!
+//! Generation is deterministic in [`WorkloadSpec::seed`]; arrivals and
+//! lengths draw from independent streams, so two specs differing only in
+//! offered load sample identical request lengths:
+//!
+//! ```
+//! use llm_perf_lab::config::{Arrival, LengthDist, WorkloadSpec};
+//!
+//! let reqs = WorkloadSpec::new(16)
+//!     .arrival(Arrival::Poisson { qps: 8.0 })
+//!     .input(LengthDist::log_normal(512.0, 0.4))
+//!     .output(LengthDist::Fixed(64))
+//!     .seed(7)
+//!     .generate()
+//!     .unwrap();
+//! assert_eq!(reqs.len(), 16);
+//! assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+//! assert_eq!(reqs, WorkloadSpec::new(16)
+//!     .arrival(Arrival::Poisson { qps: 8.0 })
+//!     .input(LengthDist::log_normal(512.0, 0.4))
+//!     .output(LengthDist::Fixed(64))
+//!     .seed(7)
+//!     .generate()
+//!     .unwrap());
+//! ```
+
+use crate::config::trace::Trace;
+use crate::err;
+use crate::serve::request::Request;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
 
 /// Training workload: synthetic batch of fixed-length sequences.
 #[derive(Debug, Clone, Copy)]
@@ -61,9 +99,315 @@ impl ServeWorkload {
     }
 }
 
+/// Request arrival process of an open-loop serving workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// the paper's closed burst: every request arrives at t=0
+    AtOnce,
+    /// open-loop Poisson arrivals at `qps` requests/s
+    Poisson {
+        /// offered load, requests per second (> 0)
+        qps: f64,
+    },
+    /// on/off bursts: Poisson at `qps` for `on_s` seconds, then silence
+    /// for `off_s` seconds, repeating — diurnal/batchy traffic in the small
+    Bursty {
+        /// offered load during the on-phase, requests per second (> 0)
+        qps: f64,
+        /// on-phase duration, seconds (> 0)
+        on_s: f64,
+        /// off-phase duration, seconds (>= 0)
+        off_s: f64,
+    },
+    /// replay arrival timestamps from the spec's [`Trace`]
+    Trace,
+}
+
+impl Arrival {
+    /// Parse the CLI spelling: `atonce`, `poisson:QPS`,
+    /// `bursty:QPS:ON_S:OFF_S`, or `trace`.
+    pub fn parse(s: &str) -> Option<Arrival> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["atonce"] | ["burst"] => Some(Arrival::AtOnce),
+            ["trace"] => Some(Arrival::Trace),
+            ["poisson", qps] => {
+                let qps: f64 = qps.parse().ok()?;
+                (qps > 0.0).then_some(Arrival::Poisson { qps })
+            }
+            ["bursty", qps, on, off] => {
+                let (qps, on_s, off_s): (f64, f64, f64) =
+                    (qps.parse().ok()?, on.parse().ok()?, off.parse().ok()?);
+                (qps > 0.0 && on_s > 0.0 && off_s >= 0.0)
+                    .then_some(Arrival::Bursty { qps, on_s, off_s })
+            }
+            _ => None,
+        }
+    }
+
+    /// `n` non-decreasing arrival times drawn from this process.
+    fn times(&self, n: u64, rng: &mut Rng) -> Vec<f64> {
+        match *self {
+            Arrival::AtOnce => vec![0.0; n as usize],
+            Arrival::Poisson { qps } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(1.0 / qps);
+                        t
+                    })
+                    .collect()
+            }
+            Arrival::Bursty { qps, on_s, off_s } => {
+                // draw Poisson arrivals on the "on-time" axis, then map to
+                // wall time by inserting one off-gap per completed on-phase
+                let mut t_on = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t_on += rng.exp(1.0 / qps);
+                        (t_on / on_s).floor() * off_s + t_on
+                    })
+                    .collect()
+            }
+            Arrival::Trace => Vec::new(), // resolved from the trace by generate()
+        }
+    }
+}
+
+/// Per-request token-length distribution (prompt or output side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDist {
+    /// every request uses exactly this many tokens
+    Fixed(u64),
+    /// uniform over `[lo, hi]`, inclusive
+    Uniform {
+        /// smallest length, tokens (>= 1)
+        lo: u64,
+        /// largest length, tokens (>= lo)
+        hi: u64,
+    },
+    /// log-normal with log-space parameters (the empirical shape of both
+    /// prompt and output lengths in production traces)
+    LogNormal {
+        /// mean of the underlying normal
+        mu: f64,
+        /// std-dev of the underlying normal (> 0)
+        sigma: f64,
+    },
+    /// take lengths from the spec's [`Trace`]
+    Trace,
+}
+
+impl LengthDist {
+    /// Log-normal parameterized by its arithmetic `mean` (tokens) and
+    /// coefficient of variation `cv` (std/mean): sigma² = ln(1+cv²),
+    /// mu = ln(mean) − sigma²/2.
+    pub fn log_normal(mean: f64, cv: f64) -> LengthDist {
+        let sigma2 = (1.0 + cv * cv).ln();
+        LengthDist::LogNormal { mu: mean.ln() - sigma2 / 2.0, sigma: sigma2.sqrt() }
+    }
+
+    /// Parse the CLI spelling: a bare integer (fixed), `uniform:LO:HI`,
+    /// `lognormal:MEAN:CV`, or `trace`.
+    pub fn parse(s: &str) -> Option<LengthDist> {
+        if let Ok(n) = s.parse::<u64>() {
+            return (n >= 1).then_some(LengthDist::Fixed(n));
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["trace"] => Some(LengthDist::Trace),
+            ["uniform", lo, hi] => {
+                let (lo, hi): (u64, u64) = (lo.parse().ok()?, hi.parse().ok()?);
+                (lo >= 1 && hi >= lo).then_some(LengthDist::Uniform { lo, hi })
+            }
+            ["lognormal", mean, cv] => {
+                let (mean, cv): (f64, f64) = (mean.parse().ok()?, cv.parse().ok()?);
+                (mean >= 1.0 && cv > 0.0).then_some(LengthDist::log_normal(mean, cv))
+            }
+            _ => None,
+        }
+    }
+
+    /// Expected length, tokens (for tests and captions).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(n) => n as f64,
+            LengthDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+            LengthDist::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            LengthDist::Trace => 0.0,
+        }
+    }
+
+    /// One sample, clamped to >= 1 token.
+    fn sample(&self, rng: &mut Rng) -> u64 {
+        match *self {
+            LengthDist::Fixed(n) => n.max(1),
+            LengthDist::Uniform { lo, hi } => rng.range(lo, hi + 1),
+            LengthDist::LogNormal { mu, sigma } => {
+                (rng.log_normal(mu, sigma).round() as u64).max(1)
+            }
+            LengthDist::Trace => 1, // resolved from the trace by generate()
+        }
+    }
+}
+
+// Seed offsets keeping the arrival and length streams independent: the
+// same spec at a different QPS samples identical request lengths.
+const ARRIVAL_STREAM: u64 = 0xA11C_0FFE_E5EED_u64;
+const LENGTH_STREAM: u64 = 0x1E46_7B5E_ED00_u64;
+
+/// Declarative open-loop serving workload: arrival process + length
+/// distributions + seed, expanded by [`WorkloadSpec::generate`] into the
+/// concrete request list the simulator replays.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// requests to generate (ignored when a trace drives the workload)
+    pub n_requests: u64,
+    /// arrival process
+    pub arrival: Arrival,
+    /// prompt-length distribution
+    pub input: LengthDist,
+    /// output-length distribution
+    pub output: LengthDist,
+    /// RNG seed; same seed → identical workload
+    pub seed: u64,
+    /// trace backing any `Trace` variant above
+    pub trace: Option<Trace>,
+}
+
+impl WorkloadSpec {
+    /// A spec with the paper's defaults: `n` at-once requests of
+    /// 512 prompt / 128 output tokens, seed 42.
+    pub fn new(n: u64) -> Self {
+        WorkloadSpec {
+            n_requests: n,
+            arrival: Arrival::AtOnce,
+            input: LengthDist::Fixed(512),
+            output: LengthDist::Fixed(128),
+            seed: 42,
+            trace: None,
+        }
+    }
+
+    /// The closed burst the paper benchmarks: `n` × (`input_len`,
+    /// `output_len`) requests all arriving at t=0 — generates exactly the
+    /// request list `serve::simulate` builds from a [`ServeWorkload`].
+    pub fn at_once(n: u64, input_len: u64, output_len: u64) -> Self {
+        WorkloadSpec::new(n)
+            .input(LengthDist::Fixed(input_len))
+            .output(LengthDist::Fixed(output_len))
+    }
+
+    /// A full trace replay: arrivals and both lengths from `trace`.
+    pub fn from_trace(trace: Trace) -> Self {
+        let mut s = WorkloadSpec::new(trace.len() as u64);
+        s.arrival = Arrival::Trace;
+        s.input = LengthDist::Trace;
+        s.output = LengthDist::Trace;
+        s.trace = Some(trace);
+        s
+    }
+
+    /// Set the arrival process.
+    pub fn arrival(mut self, a: Arrival) -> Self {
+        self.arrival = a;
+        self
+    }
+
+    /// Set the prompt-length distribution.
+    pub fn input(mut self, d: LengthDist) -> Self {
+        self.input = d;
+        self
+    }
+
+    /// Set the output-length distribution.
+    pub fn output(mut self, d: LengthDist) -> Self {
+        self.output = d;
+        self
+    }
+
+    /// Set the RNG seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Attach the trace backing `Trace` arrival / length variants.
+    pub fn with_trace(mut self, trace: Trace) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Whether any component replays the attached trace.
+    pub fn uses_trace(&self) -> bool {
+        self.arrival == Arrival::Trace
+            || self.input == LengthDist::Trace
+            || self.output == LengthDist::Trace
+    }
+
+    /// Expand into the concrete request list, sorted by arrival time.
+    /// Errors if a `Trace` component has no attached trace or the spec
+    /// would generate zero requests.
+    pub fn generate(&self) -> Result<Vec<Request>> {
+        let trace = match (&self.trace, self.uses_trace()) {
+            (Some(t), true) => Some(t),
+            (_, false) => None,
+            (None, true) => {
+                return Err(err!("workload: a 'trace' component needs an attached trace"))
+            }
+        };
+        let n = trace.map(|t| t.len() as u64).unwrap_or(self.n_requests);
+        if n == 0 {
+            return Err(err!("workload: zero requests"));
+        }
+        let mut arr_rng = Rng::new(self.seed ^ ARRIVAL_STREAM);
+        let mut len_rng = Rng::new(self.seed ^ LENGTH_STREAM);
+        let arrivals = self.arrival.times(n, &mut arr_rng);
+        let mut reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let entry = trace.map(|t| &t.requests[i as usize]);
+                Request {
+                    id: i,
+                    input_len: match self.input {
+                        LengthDist::Trace => entry.unwrap().input_len,
+                        d => d.sample(&mut len_rng),
+                    },
+                    output_len: match self.output {
+                        LengthDist::Trace => entry.unwrap().output_len,
+                        d => d.sample(&mut len_rng),
+                    },
+                    arrival: match self.arrival {
+                        Arrival::Trace => entry.unwrap().arrival_s,
+                        _ => arrivals[i as usize],
+                    },
+                }
+            })
+            .collect();
+        // traces may be recorded out of order; generated processes are
+        // already sorted (stable: equal arrivals keep id order)
+        reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        Ok(reqs)
+    }
+
+    /// Mean offered load in requests/s, if the process defines one.
+    pub fn offered_qps(&self) -> Option<f64> {
+        match self.arrival {
+            Arrival::AtOnce => None,
+            Arrival::Poisson { qps } => Some(qps),
+            Arrival::Bursty { qps, on_s, off_s } => Some(qps * on_s / (on_s + off_s)),
+            Arrival::Trace => {
+                let t = self.trace.as_ref()?;
+                let d = t.duration();
+                (d > 0.0).then(|| t.len() as f64 / d)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::trace::TraceEntry;
 
     #[test]
     fn paper_defaults() {
@@ -74,5 +418,126 @@ mod tests {
         assert_eq!(s.input_len, 512);
         assert_eq!(s.total_output_tokens(), 64_000.0);
         assert_eq!(s.total_tokens(), 576_000.0);
+    }
+
+    #[test]
+    fn at_once_spec_matches_paper_burst() {
+        let reqs = WorkloadSpec::at_once(10, 512, 128).generate().unwrap();
+        assert_eq!(reqs.len(), 10);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!((r.id, r.input_len, r.output_len, r.arrival), (i as u64, 512, 128, 0.0));
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_different_seed_diverges() {
+        let spec = |seed| {
+            WorkloadSpec::new(64)
+                .arrival(Arrival::Poisson { qps: 4.0 })
+                .input(LengthDist::log_normal(512.0, 0.5))
+                .output(LengthDist::Uniform { lo: 16, hi: 256 })
+                .seed(seed)
+        };
+        assert_eq!(spec(7).generate().unwrap(), spec(7).generate().unwrap());
+        assert_ne!(spec(7).generate().unwrap(), spec(8).generate().unwrap());
+    }
+
+    #[test]
+    fn length_stream_independent_of_arrival_process() {
+        // changing only the offered load must not change sampled lengths
+        let base = WorkloadSpec::new(32).input(LengthDist::log_normal(512.0, 0.5)).seed(3);
+        let a = base.clone().arrival(Arrival::Poisson { qps: 1.0 }).generate().unwrap();
+        let b = base.arrival(Arrival::Poisson { qps: 50.0 }).generate().unwrap();
+        let lens = |rs: &[Request]| {
+            let mut v: Vec<(u64, u64, u64)> =
+                rs.iter().map(|r| (r.id, r.input_len, r.output_len)).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(lens(&a), lens(&b));
+    }
+
+    #[test]
+    fn poisson_interarrival_mean_close() {
+        let reqs = WorkloadSpec::new(4000)
+            .arrival(Arrival::Poisson { qps: 20.0 })
+            .seed(11)
+            .generate()
+            .unwrap();
+        let mean_gap = reqs.last().unwrap().arrival / reqs.len() as f64;
+        assert!((mean_gap - 0.05).abs() / 0.05 < 0.08, "mean gap {mean_gap}");
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn lognormal_length_mean_close() {
+        let d = LengthDist::log_normal(512.0, 0.5);
+        assert!((d.mean() - 512.0).abs() < 1e-9);
+        let reqs =
+            WorkloadSpec::new(20_000).input(d).output(LengthDist::Fixed(1)).generate().unwrap();
+        let mean =
+            reqs.iter().map(|r| r.input_len as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((mean - 512.0).abs() / 512.0 < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn bursty_arrivals_respect_off_gaps() {
+        // qps 10 for 1s on, 9s off: arrivals only in [k*10, k*10+1) windows
+        let reqs = WorkloadSpec::new(100)
+            .arrival(Arrival::Bursty { qps: 10.0, on_s: 1.0, off_s: 9.0 })
+            .seed(5)
+            .generate()
+            .unwrap();
+        for r in &reqs {
+            let phase = r.arrival % 10.0;
+            assert!(phase < 1.0, "arrival {} lands in an off window", r.arrival);
+        }
+        // mean offered load accounts for the duty cycle
+        let spec = WorkloadSpec::new(1)
+            .arrival(Arrival::Bursty { qps: 10.0, on_s: 1.0, off_s: 9.0 });
+        assert!((spec.offered_qps().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_replay_sorts_and_uses_recorded_values() {
+        let trace = Trace {
+            name: "t".into(),
+            requests: vec![
+                TraceEntry { arrival_s: 3.0, input_len: 100, output_len: 10 },
+                TraceEntry { arrival_s: 1.0, input_len: 200, output_len: 20 },
+            ],
+        };
+        let reqs = WorkloadSpec::from_trace(trace).generate().unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!((reqs[0].arrival, reqs[0].input_len, reqs[0].output_len), (1.0, 200, 20));
+        assert_eq!((reqs[1].arrival, reqs[1].input_len, reqs[1].output_len), (3.0, 100, 10));
+    }
+
+    #[test]
+    fn trace_component_without_trace_errors() {
+        let spec = WorkloadSpec::new(4).arrival(Arrival::Trace);
+        assert!(spec.generate().is_err());
+        assert!(WorkloadSpec::new(0).generate().is_err(), "zero requests");
+    }
+
+    #[test]
+    fn parse_grammars() {
+        assert_eq!(Arrival::parse("atonce"), Some(Arrival::AtOnce));
+        assert_eq!(Arrival::parse("poisson:2.5"), Some(Arrival::Poisson { qps: 2.5 }));
+        assert_eq!(
+            Arrival::parse("bursty:8:2:10"),
+            Some(Arrival::Bursty { qps: 8.0, on_s: 2.0, off_s: 10.0 })
+        );
+        assert_eq!(Arrival::parse("trace"), Some(Arrival::Trace));
+        assert_eq!(Arrival::parse("poisson:-1"), None);
+        assert_eq!(Arrival::parse("nope"), None);
+
+        assert_eq!(LengthDist::parse("512"), Some(LengthDist::Fixed(512)));
+        assert_eq!(LengthDist::parse("uniform:16:64"), Some(LengthDist::Uniform { lo: 16, hi: 64 }));
+        assert_eq!(LengthDist::parse("trace"), Some(LengthDist::Trace));
+        assert_eq!(LengthDist::parse("uniform:64:16"), None);
+        assert_eq!(LengthDist::parse("0"), None);
+        let d = LengthDist::parse("lognormal:512:0.5").unwrap();
+        assert!((d.mean() - 512.0).abs() < 1e-9);
     }
 }

@@ -22,9 +22,13 @@
 //!
 //! Cross-cutting: `parallel/` holds the `ParallelPlan` (TP×PP×DP)
 //! subsystem — the single source of sharding truth for the training,
-//! fine-tuning, and serving simulators (DESIGN.md §Parallelism) — and
+//! fine-tuning, and serving simulators (DESIGN.md §Parallelism) —
 //! `calibrate/comm` fits measured interconnect α-β profiles that replace
-//! the public-spec link constants (README §Calibration).
+//! the public-spec link constants (README §Calibration), and
+//! `config::workload` generates open-loop serving workloads (Poisson /
+//! bursty / trace-replay arrivals, length distributions) whose
+//! TTFT/TPOT tails `report::load` sweeps against SLOs
+//! (DESIGN.md §Serving workloads & SLOs).
 
 #![warn(missing_docs)]
 

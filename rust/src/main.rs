@@ -3,6 +3,7 @@
 //! Subcommands (see README):
 //!   table N | figure N | report-all      — regenerate paper tables/figures
 //!   sim-pretrain | sim-serve             — one simulator cell
+//!   sweep-load                           — QPS sweep + max-QPS-under-SLO search
 //!   sweep-parallel                       — TP×PP×DP plan comparison
 //!   calibrate-comm | validate-comm       — fit/check interconnect α-β profiles
 //!   train | serve | calibrate            — the *real* PJRT paths (`xla` feature)
@@ -12,13 +13,13 @@ use llm_perf_lab::calibrate::comm::{fit_alpha_beta, parse_log, CommLog};
 use llm_perf_lab::cli::Cli;
 use llm_perf_lab::comm::Collective;
 use llm_perf_lab::config::{
-    LinkProfile, LinkScope, LlamaConfig, Method, ServeWorkload, TopologyProfile,
-    TrainWorkload,
+    Arrival, LengthDist, LinkProfile, LinkScope, LlamaConfig, Method, SloSpec, TopologyProfile,
+    Trace, TrainWorkload, WorkloadSpec,
 };
 use llm_perf_lab::err;
 use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
-use llm_perf_lab::serve::EngineSpec;
+use llm_perf_lab::serve::{simulate_requests, EngineSpec};
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
 use llm_perf_lab::util::fmt;
@@ -34,6 +35,21 @@ paper reproduction:
 simulators:
   sim-pretrain   --model 7b --platform a800 --method F+Z3 [--bs 1]
   sim-serve      --model 7b --platform a800 --engine vllm [--requests 1000]
+                 [--arrival atonce|poisson:QPS|bursty:QPS:ON_S:OFF_S|trace]
+                 [--input LEN|uniform:LO:HI|lognormal:MEAN:CV|trace]
+                 [--output ...same grammar...] [--trace FILE] [--seed 42]
+                 [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 one serving cell; open-loop arrivals + length
+                 distributions + trace replay (bare --trace FILE = full
+                 replay); reports TTFT/TPOT percentiles and, with
+                 --slo-*, goodput
+  sweep-load     --model 7b --platform a800 --engine vllm [--requests 200]
+                 [--qps-min 0.5] [--qps-max 32] [--points 6]
+                 [--input ...] [--output ...] [--seed 42]
+                 [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
+                 sweep Poisson load over a QPS grid (TTFT/TPOT p50/p90/p99
+                 + goodput per point) and binary-search the max QPS that
+                 still meets the SLO
   sweep-parallel [--model 70b] [--platform a800] [--nodes 1] [--bs 8] [--seq 350]
                  [--profile comm_profile.json]
                  rank every valid TP x PP x DP plan (step time, tokens/s,
@@ -144,40 +160,8 @@ fn run(cli: &Cli) -> Result<()> {
         }
         "calibrate-comm" => calibrate_comm(cli)?,
         "validate-comm" => validate_comm(cli)?,
-        "sim-serve" => {
-            let cfg = LlamaConfig::by_name(&cli.flag_or("model", "7b"))
-                .ok_or_else(|| err!("unknown model"))?;
-            let plat = PlatformId::parse(&cli.flag_or("platform", "a800"))
-                .map(Platform::get)
-                .ok_or_else(|| err!("unknown platform"))?;
-            let engine = match cli.flag_or("engine", "vllm").as_str() {
-                "vllm" => EngineSpec::vllm(),
-                "tgi" => EngineSpec::tgi(),
-                "lightllm" => EngineSpec::lightllm(),
-                other => return Err(err!("unknown engine '{other}'")),
-            };
-            let wl = ServeWorkload {
-                n_requests: cli.flag_u64("requests", 1000),
-                input_len: cli.flag_u64("input", 512),
-                output_len: cli.flag_u64("output", 128),
-                burst: true,
-            };
-            match llm_perf_lab::serve::simulate(&plat, &cfg, &engine, &wl) {
-                None => println!("{} / {} / {}: OOM (cannot deploy)",
-                                 plat.id.label(), cfg.name, engine.name),
-                Some(r) => {
-                    let cdf = r.latency_cdf();
-                    println!("{} / {} / {}: {} requests", plat.id.label(), cfg.name,
-                             engine.name, wl.n_requests);
-                    println!("  throughput {:.0} output tokens/s, makespan {:.1}s",
-                             r.throughput(), r.makespan);
-                    println!("  latency p50 {:.1}s  p90 {:.1}s  p100 {:.1}s",
-                             cdf.quantile(0.5), cdf.quantile(0.9), cdf.quantile(1.0));
-                    println!("  iters: {} decode / {} prefill, {} preemptions",
-                             r.decode_iters, r.prefill_iters, r.preemptions);
-                }
-            }
-        }
+        "sim-serve" => sim_serve(cli)?,
+        "sweep-load" => sweep_load(cli)?,
         "train" | "serve" | "calibrate" => {
             #[cfg(feature = "xla")]
             real::dispatch(cli)?;
@@ -243,6 +227,170 @@ fn read_comm_logs(cli: &Cli) -> Result<Vec<CommLog>> {
 fn scope_flag(cli: &Cli) -> Result<LinkScope> {
     LinkScope::parse(&cli.flag_or("scope", "inter"))
         .ok_or_else(|| err!("--scope must be 'intra' or 'inter'"))
+}
+
+fn model_flag(cli: &Cli, default: &str) -> Result<LlamaConfig> {
+    let name = cli.flag_or("model", default);
+    LlamaConfig::by_name(&name).ok_or_else(|| err!("unknown model '{name}'"))
+}
+
+fn platform_flag(cli: &Cli) -> Result<Platform> {
+    let name = cli.flag_or("platform", "a800");
+    PlatformId::parse(&name).map(Platform::get).ok_or_else(|| err!("unknown platform '{name}'"))
+}
+
+fn engine_flag(cli: &Cli) -> Result<EngineSpec> {
+    match cli.flag_or("engine", "vllm").as_str() {
+        "vllm" => Ok(EngineSpec::vllm()),
+        "tgi" => Ok(EngineSpec::tgi()),
+        "lightllm" => Ok(EngineSpec::lightllm()),
+        other => Err(err!("unknown engine '{other}'")),
+    }
+}
+
+/// Build a `WorkloadSpec` from the shared workload flags (`--requests`,
+/// `--arrival`, `--input`, `--output`, `--trace`, `--seed`);
+/// `default_requests` is the per-subcommand `--requests` fallback.
+fn workload_flags(cli: &Cli, default_requests: u64) -> Result<WorkloadSpec> {
+    let arrival_s = cli.flag_or("arrival", "atonce");
+    let arrival = Arrival::parse(&arrival_s)
+        .ok_or_else(|| err!("bad --arrival '{arrival_s}' (atonce | poisson:QPS | \
+                             bursty:QPS:ON_S:OFF_S | trace)"))?;
+    let dist = |key: &str, default: &str| -> Result<LengthDist> {
+        let s = cli.flag_or(key, default);
+        LengthDist::parse(&s)
+            .ok_or_else(|| err!("bad --{key} '{s}' (LEN | uniform:LO:HI | \
+                                 lognormal:MEAN:CV | trace)"))
+    };
+    let mut spec = WorkloadSpec::new(cli.flag_u64("requests", default_requests))
+        .arrival(arrival)
+        .input(dist("input", "512")?)
+        .output(dist("output", "128")?)
+        .seed(cli.flag_u64("seed", 42));
+    match cli.flag("trace") {
+        Some(path) => {
+            let trace = Trace::load(path)?;
+            // bare --trace (no explicit component flags) means full replay
+            if cli.flag("arrival").is_none()
+                && cli.flag("input").is_none()
+                && cli.flag("output").is_none()
+            {
+                if cli.flag("requests").is_some() {
+                    return Err(err!("--requests conflicts with a full trace replay (the \
+                                     trace sets the request count); set --arrival/--input/\
+                                     --output to mix trace and generated components"));
+                }
+                return Ok(WorkloadSpec::from_trace(trace).seed(cli.flag_u64("seed", 42)));
+            }
+            spec = spec.with_trace(trace);
+            if !spec.uses_trace() {
+                return Err(err!("--trace given but no workload component is 'trace' \
+                                 (use --arrival trace / --input trace / --output trace, \
+                                 or drop the other flags for a full replay)"));
+            }
+        }
+        None if spec.uses_trace() => {
+            return Err(err!("a 'trace' workload component needs --trace FILE"));
+        }
+        None => {}
+    }
+    Ok(spec)
+}
+
+/// The SLO flags (`--slo-ttft`, `--slo-tpot`, `--slo-q`), if any was
+/// given; unset budgets fall back to the interactive defaults.
+fn slo_flags(cli: &Cli) -> Result<Option<SloSpec>> {
+    if cli.flag("slo-ttft").is_none() && cli.flag("slo-tpot").is_none()
+        && cli.flag("slo-q").is_none()
+    {
+        return Ok(None);
+    }
+    let d = SloSpec::interactive();
+    let q = cli.flag_f64("slo-q", d.quantile);
+    if !(q > 0.0 && q <= 1.0) {
+        return Err(err!("--slo-q must be a quantile in (0, 1], e.g. 0.9 for p90; got {q}"));
+    }
+    Ok(Some(SloSpec::new(
+        q,
+        cli.flag_f64("slo-ttft", d.max_ttft),
+        cli.flag_f64("slo-tpot", d.max_tpot),
+    )))
+}
+
+/// `llmperf sim-serve` — one serving cell under any workload.
+fn sim_serve(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "7b")?;
+    let plat = platform_flag(cli)?;
+    let engine = engine_flag(cli)?;
+    let spec = workload_flags(cli, 1000)?;
+    let slo = slo_flags(cli)?; // validate before simulating
+    let requests = spec.generate()?;
+    match simulate_requests(&plat, &cfg, &engine, &requests) {
+        None => {
+            println!("{} / {} / {}: OOM (cannot deploy)", plat.id.label(), cfg.name, engine.name)
+        }
+        Some(r) => {
+            let cdf = r.latency_cdf();
+            let (ttft, tpot) = (r.ttft_summary(), r.tpot_summary());
+            println!("{} / {} / {}: {} requests ({:?} arrivals)", plat.id.label(), cfg.name,
+                     engine.name, requests.len(), spec.arrival);
+            if r.rejected > 0 {
+                println!("  WARNING: {} unservable request(s) rejected \
+                          (prompt beyond the engine's prefill/KV budget)", r.rejected);
+            }
+            println!("  throughput {:.0} output tokens/s, makespan {:.1}s",
+                     r.throughput(), r.makespan);
+            println!("  latency p50 {:.1}s  p90 {:.1}s  p100 {:.1}s",
+                     cdf.quantile(0.5), cdf.quantile(0.9), cdf.quantile(1.0));
+            println!("  ttft    p50 {:.2}s  p90 {:.2}s  p99 {:.2}s",
+                     ttft.p50, ttft.p90, ttft.p99);
+            println!("  tpot    p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+                     tpot.p50 * 1e3, tpot.p90 * 1e3, tpot.p99 * 1e3);
+            println!("  iters: {} decode / {} prefill, {} preemptions",
+                     r.decode_iters, r.prefill_iters, r.preemptions);
+            if let Some(slo) = slo {
+                println!("  SLO {}: {} | goodput {:.0} tokens/s | attainment {:.1}%",
+                         slo.describe(),
+                         if r.meets_slo(&slo) { "met" } else { "MISSED" },
+                         r.goodput(&slo), r.slo_attainment(&slo) * 100.0);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `llmperf sweep-load` — QPS sweep + binary-searched SLO capacity.
+fn sweep_load(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "7b")?;
+    let plat = platform_flag(cli)?;
+    let engine = engine_flag(cli)?;
+    if cli.flag("arrival").is_some() {
+        return Err(err!("sweep-load sweeps Poisson load over the QPS grid itself — \
+                         --arrival is not accepted (use sim-serve for a single \
+                         bursty/trace cell)"));
+    }
+    let base = workload_flags(cli, 200)?;
+    let slo = slo_flags(cli)?.unwrap_or_else(SloSpec::interactive);
+    let (lo, hi) = (cli.flag_f64("qps-min", 0.5), cli.flag_f64("qps-max", 32.0));
+    if !(lo > 0.0 && hi >= lo) {
+        return Err(err!("need 0 < --qps-min <= --qps-max"));
+    }
+    if engine.plan(&plat, &cfg).is_none() {
+        println!("{} / {} / {}: OOM (cannot deploy — no load sweep to run)",
+                 plat.id.label(), cfg.name, engine.name);
+        return Ok(());
+    }
+    let grid = report::load::qps_grid(lo, hi, cli.flag_u64("points", 6) as usize);
+    println!("{}", report::load::sweep_load(&plat, &cfg, &engine, &base, &grid, &slo)?.render());
+    match report::load::max_qps_under_slo(&plat, &cfg, &engine, &base, &slo, lo, hi)? {
+        None => println!("SLO {} is missed even at {lo:.2} QPS — lower the load \
+                          range or relax the SLO", slo.describe()),
+        Some(q) if q >= hi => println!("max QPS under SLO ({}) >= {hi:.2} — the \
+                                        deployment is not the bottleneck in this range",
+                                       slo.describe()),
+        Some(q) => println!("max QPS under SLO ({}) ~= {q:.2}", slo.describe()),
+    }
+    Ok(())
 }
 
 /// `llmperf calibrate-comm` — fit α-β from measured sweeps and persist

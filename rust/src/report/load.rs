@@ -1,0 +1,186 @@
+//! Load sweeps and SLO-capacity search (`llmperf sweep-load`): how much
+//! open-loop traffic one (platform, model, engine, plan) deployment
+//! sustains before its TTFT/TPOT tails blow the SLO — the
+//! capacity-planning view the paper's closed burst cannot answer
+//! (DESIGN.md §Serving workloads & SLOs).
+
+use crate::config::{Arrival, LlamaConfig, SloSpec, WorkloadSpec};
+use crate::err;
+use crate::hw::Platform;
+use crate::serve::{simulate_requests, EngineSpec, SimResult};
+use crate::util::error::Result;
+use crate::util::table::{f0, f1, f2, oom, Table};
+
+/// A geometric QPS grid from `lo` to `hi` with `n >= 2` points.
+pub fn qps_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    let n = n.max(2);
+    let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+    (0..n).map(|i| lo * ratio.powi(i as i32)).collect()
+}
+
+/// One simulated load point: the spec re-armed to Poisson(`qps`).
+fn probe(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    base: &WorkloadSpec,
+    qps: f64,
+) -> Result<Option<SimResult>> {
+    let spec = base.clone().arrival(Arrival::Poisson { qps });
+    Ok(simulate_requests(plat, cfg, engine, &spec.generate()?))
+}
+
+/// Sweep offered load for one deployment: one row per QPS point with
+/// output-token throughput, goodput, TTFT and TPOT p50/p90/p99, and the
+/// percentile-level SLO verdict.
+pub fn sweep_load(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    base: &WorkloadSpec,
+    grid: &[f64],
+    slo: &SloSpec,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!(
+            "Load sweep — {} / {} / {}, {} Poisson requests per point, SLO {}",
+            plat.id.label(),
+            cfg.name,
+            engine.name,
+            base.n_requests,
+            slo.describe()
+        ),
+        &[
+            "QPS", "tok/s", "goodput", "TTFT p50", "p90", "p99", "TPOT p50 (ms)", "p90", "p99",
+            "SLO",
+        ],
+    )
+    .align_left(9);
+    for &qps in grid {
+        match probe(plat, cfg, engine, base, qps)? {
+            Some(r) => {
+                let (ttft, tpot) = (r.ttft_summary(), r.tpot_summary());
+                t.row(vec![
+                    f2(qps),
+                    f0(r.throughput()),
+                    f0(r.goodput(slo)),
+                    f2(ttft.p50),
+                    f2(ttft.p90),
+                    f2(ttft.p99),
+                    f1(tpot.p50 * 1e3),
+                    f1(tpot.p90 * 1e3),
+                    f1(tpot.p99 * 1e3),
+                    if r.meets_slo(slo) { "met".into() } else { "MISSED".into() },
+                ]);
+            }
+            None => {
+                let mut row = vec![f2(qps)];
+                row.extend(std::iter::repeat_with(oom).take(9));
+                t.row(row);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Binary-search (geometric bisection) the highest Poisson QPS whose
+/// simulated tails still meet the SLO.  `Err` if the engine cannot
+/// deploy the model at all (an OOM is not an SLO miss); `Ok(None)` when
+/// even `lo` misses the SLO; if `hi` passes, `hi` is returned as-is —
+/// the deployment is not the bottleneck in that range.
+pub fn max_qps_under_slo(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Option<f64>> {
+    if !(lo > 0.0 && hi >= lo) {
+        return Err(err!("max_qps_under_slo: need 0 < lo <= hi, got {lo}..{hi}"));
+    }
+    if engine.plan(plat, cfg).is_none() {
+        return Err(err!("{} cannot deploy {} on {} (OOM) — no load level can meet an SLO",
+                        engine.name, cfg.name, plat.id.label()));
+    }
+    let ok = |qps: f64| -> Result<bool> {
+        Ok(probe(plat, cfg, engine, base, qps)?.map(|r| r.meets_slo(slo)).unwrap_or(false))
+    };
+    if !ok(lo)? {
+        return Ok(None);
+    }
+    if ok(hi)? {
+        return Ok(Some(hi));
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    // geometric bisection: stop once the bracket is within 2%
+    while hi / lo > 1.02 {
+        let mid = (lo * hi).sqrt();
+        if ok(mid)? {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(Some(lo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn qps_grid_is_geometric_and_inclusive() {
+        let g = qps_grid(1.0, 16.0, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 1.0).abs() < 1e-9 && (g[4] - 16.0).abs() < 1e-9);
+        assert!((g[2] - 4.0).abs() < 1e-9, "{g:?}");
+        assert_eq!(qps_grid(2.0, 8.0, 1).len(), 2, "n clamps to 2");
+    }
+
+    #[test]
+    fn sweep_load_renders_and_flags_slo() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(40, 256, 32);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let t = sweep_load(&plat, &cfg, &EngineSpec::vllm(), &base, &[0.5, 4.0], &slo).unwrap();
+        assert_eq!(t.n_rows(), 2);
+        assert!(t.render().contains("met"), "{}", t.render());
+    }
+
+    #[test]
+    fn max_qps_errors_on_undeployable_model() {
+        // OOM must surface as an error, not read as "SLO missed at lo"
+        let plat = Platform::get(PlatformId::Rtx4090);
+        let cfg = LlamaConfig::llama2_70b();
+        let base = WorkloadSpec::at_once(10, 256, 16);
+        let slo = SloSpec::interactive();
+        let r = max_qps_under_slo(&plat, &cfg, &EngineSpec::tgi(), &base, &slo, 0.5, 8.0);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn max_qps_none_when_slo_impossible() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, 0.0, 0.0);
+        let q = max_qps_under_slo(&plat, &cfg, &EngineSpec::vllm(), &base, &slo, 0.5, 8.0)
+            .unwrap();
+        assert!(q.is_none());
+    }
+
+    #[test]
+    fn max_qps_hi_returned_when_everything_passes() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let q = max_qps_under_slo(&plat, &cfg, &EngineSpec::vllm(), &base, &slo, 0.5, 8.0)
+            .unwrap();
+        assert_eq!(q, Some(8.0));
+    }
+}

@@ -3,6 +3,7 @@
 //! print them; `report_all` writes text + CSV under results/.
 
 pub mod finetune;
+pub mod load;
 pub mod micro;
 pub mod modulewise;
 pub mod parallel;

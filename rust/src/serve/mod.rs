@@ -1,6 +1,9 @@
 //! Serving substrate (paper §VI): three engine policies (TGI / vLLM /
 //! LightLLM), two KV allocators (paged, token-level) plus reserve-max,
-//! and a discrete-event continuous-batching simulator.
+//! and a discrete-event continuous-batching simulator that replays
+//! either the paper's closed burst or any open-loop
+//! `config::WorkloadSpec` (arrival processes, length distributions,
+//! trace replay) with TTFT/TPOT/SLO accounting.
 
 pub mod engine;
 pub mod kv_cache;
@@ -9,4 +12,4 @@ pub mod sim;
 pub mod token_kv;
 
 pub use engine::{DeployPlan, EngineSpec, KvPolicy};
-pub use sim::{simulate, SimResult};
+pub use sim::{simulate, simulate_requests, simulate_workload, SimResult};

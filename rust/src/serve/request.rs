@@ -1,8 +1,9 @@
 //! Serving request model and per-request metrics.
 
 /// One inference request (the paper's workload: 512 input tokens, fixed
-/// max-generated length, burst arrival).
-#[derive(Debug, Clone)]
+/// max-generated length, burst arrival; open-loop workloads carry real
+/// arrival times — see `config::WorkloadSpec`).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     /// request id (stable across completion records)
     pub id: u64,
@@ -27,6 +28,19 @@ pub struct Completion {
     pub ttft: f64,
     /// tokens actually generated
     pub output_tokens: u64,
+}
+
+impl Completion {
+    /// Time per output token after the first (the decode-cadence SLO
+    /// metric): (latency − ttft) / (output_tokens − 1); 0 for
+    /// single-token outputs.
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens > 1 {
+            (self.latency - self.ttft) / (self.output_tokens - 1) as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Live state of an admitted request inside the engine.
@@ -78,6 +92,14 @@ impl RunningSeq {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tpot_excludes_first_token() {
+        let c = Completion { id: 0, finish: 11.0, latency: 11.0, ttft: 1.0, output_tokens: 101 };
+        assert!((c.tpot() - 0.1).abs() < 1e-12);
+        let single = Completion { id: 1, finish: 1.0, latency: 1.0, ttft: 1.0, output_tokens: 1 };
+        assert_eq!(single.tpot(), 0.0);
+    }
 
     #[test]
     fn running_seq_lifecycle() {

@@ -1,11 +1,17 @@
 //! Discrete-event serving simulator: continuous batching at iteration
 //! granularity over the engine policies — generates Fig. 6 (throughput),
 //! Figs. 7-10 (latency CDFs) and Tables X/XI (module-wise decode time).
+//!
+//! Two entry points share one event loop: [`simulate`] replays the
+//! paper's closed burst (every request at t=0), and [`simulate_requests`]
+//! / [`simulate_workload`] replay any open-loop request list — admission
+//! respects per-request arrival times and the clock jumps to the next
+//! arrival when the engine idles (DESIGN.md §Serving workloads & SLOs).
 
 use std::collections::VecDeque;
 
 use crate::comm::Collective;
-use crate::config::{LlamaConfig, ServeWorkload};
+use crate::config::{LlamaConfig, ServeWorkload, SloSpec, WorkloadSpec};
 use crate::hw::{Dtype, Platform, Topology};
 use crate::model::breakdown::total as mods_total;
 use crate::model::modules::decode_modules;
@@ -15,7 +21,7 @@ use crate::serve::engine::{DeployPlan, EngineSpec, KvPolicy};
 use crate::serve::kv_cache::PagedKvCache;
 use crate::serve::request::{Completion, Request, RunningSeq};
 use crate::serve::token_kv::TokenKv;
-use crate::util::stats::Cdf;
+use crate::util::stats::{Cdf, PctSummary};
 
 /// Unified KV-manager facade over the three allocator policies.
 enum Kv {
@@ -111,6 +117,10 @@ pub struct SimResult {
     pub prefill_iters: u64,
     /// sequences evicted under KV pressure
     pub preemptions: u64,
+    /// requests rejected as permanently unservable (prompt larger than
+    /// the prefill budget or the whole KV pool) — nonzero means the
+    /// workload was not fully simulated
+    pub rejected: u64,
     /// mean decode-iteration wall time (Table X denominator)
     pub mean_iter_time: f64,
 }
@@ -125,12 +135,84 @@ impl SimResult {
     pub fn latency_cdf(&self) -> Cdf {
         Cdf::new(self.completions.iter().map(|c| c.latency).collect())
     }
+
+    /// CDF of per-request time-to-first-token.
+    pub fn ttft_cdf(&self) -> Cdf {
+        Cdf::new(self.completions.iter().map(|c| c.ttft).collect())
+    }
+
+    /// Per-request TPOT sample: single-token completions are excluded —
+    /// they have no decode cadence, and counting them as 0 would dilute
+    /// the percentiles the SLO check gates on.
+    fn tpots(&self) -> Vec<f64> {
+        self.completions.iter().filter(|c| c.output_tokens > 1).map(|c| c.tpot()).collect()
+    }
+
+    /// CDF of per-request time-per-output-token (decode cadence;
+    /// single-token completions excluded).
+    pub fn tpot_cdf(&self) -> Cdf {
+        Cdf::new(self.tpots())
+    }
+
+    /// p50/p90/p99 summary of per-request TTFT.
+    pub fn ttft_summary(&self) -> PctSummary {
+        PctSummary::of(&self.completions.iter().map(|c| c.ttft).collect::<Vec<_>>())
+    }
+
+    /// p50/p90/p99 summary of per-request TPOT (single-token
+    /// completions excluded).
+    pub fn tpot_summary(&self) -> PctSummary {
+        PctSummary::of(&self.tpots())
+    }
+
+    /// Percentile-level SLO check: TTFT and TPOT at `slo.quantile` are
+    /// both within budget — the pass/fail signal `llmperf sweep-load`
+    /// binary-searches on.  False for an empty run and whenever any
+    /// request was rejected as unservable (a partially-simulated
+    /// workload must not read as "met").
+    pub fn meets_slo(&self, slo: &SloSpec) -> bool {
+        self.rejected == 0
+            && !self.completions.is_empty()
+            && self.ttft_cdf().quantile(slo.quantile) <= slo.max_ttft
+            && self.tpot_cdf().quantile(slo.quantile) <= slo.max_tpot
+    }
+
+    /// Fraction of requests that individually met both SLO budgets.
+    /// Rejected (never-served) requests count against the denominator.
+    pub fn slo_attainment(&self, slo: &SloSpec) -> f64 {
+        let total = self.completions.len() as u64 + self.rejected;
+        if total == 0 {
+            return 0.0;
+        }
+        let met = self.completions.iter().filter(|c| slo.admits(c.ttft, c.tpot())).count();
+        met as f64 / total as f64
+    }
+
+    /// Goodput: output tokens/s delivered by requests that individually
+    /// met the SLO (tokens from late requests don't count).
+    pub fn goodput(&self, slo: &SloSpec) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        let tokens: u64 = self
+            .completions
+            .iter()
+            .filter(|c| slo.admits(c.ttft, c.tpot()))
+            .map(|c| c.output_tokens)
+            .sum();
+        tokens as f64 / self.makespan
+    }
 }
 
 /// Per-GPU decode-iteration compute time under the deployment's TP
 /// group, plus the per-layer activation AllReduces TP requires.
-pub fn decode_iter_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
-                        batch: u64, avg_ctx: u64) -> f64 {
+pub fn decode_iter_time(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    plan: &DeployPlan,
+    batch: u64,
+    avg_ctx: u64,
+) -> f64 {
     if batch == 0 {
         return 0.0;
     }
@@ -165,8 +247,7 @@ pub fn decode_iter_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
 
 /// Prefill time for `tokens` prompt tokens (batched, fused kernels):
 /// GEMM-dominated forward at M = tokens.
-pub fn prefill_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
-                    tokens: u64) -> f64 {
+pub fn prefill_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan, tokens: u64) -> f64 {
     if tokens == 0 {
         return 0.0;
     }
@@ -215,8 +296,14 @@ impl IterCostCache {
         IterCostCache { map: std::collections::HashMap::new() }
     }
 
-    fn decode(&mut self, plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan,
-              batch: u64, avg_ctx: u64) -> f64 {
+    fn decode(
+        &mut self,
+        plat: &Platform,
+        cfg: &LlamaConfig,
+        plan: &DeployPlan,
+        batch: u64,
+        avg_ctx: u64,
+    ) -> f64 {
         let bucket = (batch, avg_ctx / 32);
         if let Some(&t) = self.map.get(&bucket) {
             return t;
@@ -227,36 +314,92 @@ impl IterCostCache {
     }
 }
 
-/// Run the burst benchmark for one (platform, model, engine) combination.
-/// Returns None if the model cannot be deployed (Fig. 6 OOM cells).
-pub fn simulate(plat: &Platform, cfg: &LlamaConfig, engine: &EngineSpec,
-                wl: &ServeWorkload) -> Option<SimResult> {
+/// Run the paper's burst benchmark for one (platform, model, engine)
+/// combination: every request arrives at t=0.  Returns None if the model
+/// cannot be deployed (Fig. 6 OOM cells).
+pub fn simulate(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    wl: &ServeWorkload,
+) -> Option<SimResult> {
+    let requests: Vec<Request> = (0..wl.n_requests)
+        .map(|i| Request { id: i, input_len: wl.input_len, output_len: wl.output_len, arrival: 0.0 })
+        .collect();
+    simulate_requests(plat, cfg, engine, &requests)
+}
+
+/// Generate a [`WorkloadSpec`]'s request list and replay it.  `Err` for
+/// an invalid spec; `Ok(None)` if the model cannot be deployed.
+pub fn simulate_workload(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &WorkloadSpec,
+) -> crate::util::error::Result<Option<SimResult>> {
+    Ok(simulate_requests(plat, cfg, engine, &spec.generate()?))
+}
+
+/// Replay an explicit open-loop request list (any arrival times; sorted
+/// internally).  A request is admissible once `arrival <= clock`; when
+/// the engine idles with work still pending the clock advances to the
+/// next arrival.  A request no idle engine can admit (prompt beyond the
+/// prefill budget or the whole KV pool) is counted in
+/// [`SimResult::rejected`] and skipped.  An all-zero-arrival list
+/// reproduces [`simulate`] bit-for-bit.  Returns None if the model
+/// cannot be deployed.
+pub fn simulate_requests(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    requests: &[Request],
+) -> Option<SimResult> {
     let plan = engine.plan(plat, cfg)?;
     let mut kv = Kv::new(engine.kv, plan.kv_capacity_tokens);
     let mut cost = IterCostCache::new();
 
-    let mut waiting: VecDeque<Request> = (0..wl.n_requests)
-        .map(|i| Request {
-            id: i,
-            input_len: wl.input_len,
-            output_len: wl.output_len,
-            arrival: 0.0,
-        })
-        .collect();
+    // not-yet-arrived requests, in arrival order (stable for t=0 ties,
+    // preserving the burst benchmark's id order)
+    let mut pending: VecDeque<Request> = {
+        let mut v = requests.to_vec();
+        v.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        v.into()
+    };
+    let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut running: Vec<RunningSeq> = Vec::new();
-    let mut completions: Vec<Completion> = Vec::with_capacity(wl.n_requests as usize);
+    let mut completions: Vec<Completion> = Vec::with_capacity(requests.len());
+    // first-token times of preempted sequences: recompute preemption
+    // regenerates tokens, but the client already saw the first one — TTFT
+    // must keep the earliest emission (restored on re-admission)
+    let mut first_tokens: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
     let mut clock = 0.0f64;
     let mut decode_iters = 0u64;
     let mut prefill_iters = 0u64;
     let mut preemptions = 0u64;
+    let mut rejected = 0u64;
     let mut output_tokens = 0u64;
     let mut generated_tokens = 0u64;
     let mut iter_time_sum = 0.0f64;
 
     let max_iters = 100_000_000u64;
     let mut guard = 0u64;
-    while (!waiting.is_empty() || !running.is_empty()) && guard < max_iters {
+    while (!pending.is_empty() || !waiting.is_empty() || !running.is_empty()) && guard < max_iters {
         guard += 1;
+        // ---- arrivals: everything due by now joins the admission queue.
+        // Statically unservable requests (prompt beyond the prefill
+        // budget, or an admission reserve beyond the whole KV pool) are
+        // rejected here — queueing one would convoy every request behind
+        // it until the engine drains.
+        while pending.front().map(|r| r.arrival <= clock).unwrap_or(false) {
+            let req = pending.pop_front().unwrap();
+            let reserve = req.input_len
+                + (engine.admit_reserve_frac * req.output_len as f64) as u64;
+            if req.input_len > engine.max_prefill_tokens || reserve > plan.kv_capacity_tokens {
+                rejected += 1;
+                continue;
+            }
+            waiting.push_back(req);
+        }
         // ---- admission: fill the batch within KV + concurrency budgets,
         // batching admitted prompts into prefill iterations
         let mut prefill_tokens = 0u64;
@@ -275,10 +418,11 @@ pub fn simulate(plat: &Platform, cfg: &LlamaConfig, engine: &EngineSpec,
             if kv.free_tokens() < reserve {
                 break;
             }
-            let seq = RunningSeq::new(req);
+            let mut seq = RunningSeq::new(req);
             if !kv.admit(&seq) {
                 break;
             }
+            seq.first_token_at = first_tokens.get(&seq.id).copied();
             prefill_tokens += req.input_len;
             admitted += 1;
             running.push(seq);
@@ -293,7 +437,25 @@ pub fn simulate(plat: &Platform, cfg: &LlamaConfig, engine: &EngineSpec,
         }
 
         if running.is_empty() {
-            break;
+            if waiting.is_empty() {
+                match pending.front() {
+                    // idle: jump straight to the next arrival
+                    Some(next) => {
+                        clock = clock.max(next.arrival);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            // the engine is fully idle yet the head request still failed
+            // admission — with an empty batch and a drained KV pool that
+            // can only mean it is permanently unservable (prompt larger
+            // than the prefill budget or the whole pool).  Reject just
+            // that request and keep going; silently truncating the rest
+            // of the workload here would poison every SLO metric.
+            waiting.pop_front();
+            rejected += 1;
+            continue;
         }
 
         // ---- one decode iteration over the running batch
@@ -320,6 +482,9 @@ pub fn simulate(plat: &Platform, cfg: &LlamaConfig, engine: &EngineSpec,
                 // vLLM-style preemption: release and requeue (recompute)
                 let seq = running.remove(i);
                 kv.release(seq.id);
+                if let Some(t) = seq.first_token_at {
+                    first_tokens.insert(seq.id, t);
+                }
                 preemptions += 1;
                 preempted.push(seq);
             }
@@ -341,6 +506,7 @@ pub fn simulate(plat: &Platform, cfg: &LlamaConfig, engine: &EngineSpec,
             if running[j].done() {
                 let seq = running.remove(j);
                 kv.release(seq.id);
+                first_tokens.remove(&seq.id);
                 output_tokens += seq.generated;
                 completions.push(Completion {
                     id: seq.id,
@@ -363,6 +529,7 @@ pub fn simulate(plat: &Platform, cfg: &LlamaConfig, engine: &EngineSpec,
         decode_iters,
         prefill_iters,
         preemptions,
+        rejected,
         mean_iter_time: if decode_iters > 0 { iter_time_sum / decode_iters as f64 } else { 0.0 },
     })
 }
@@ -445,6 +612,66 @@ mod tests {
         let t7 = run(e.clone(), PlatformId::A800, &LlamaConfig::llama2_7b(), 64).throughput();
         let t70 = run(e, PlatformId::A800, &LlamaConfig::llama2_70b(), 64).throughput();
         assert!(t7 > 2.0 * t70, "7B {t7:.0} vs 70B {t70:.0}");
+    }
+
+    #[test]
+    fn arrival_times_gate_admission_and_idle_advances_clock() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let reqs = vec![
+            Request { id: 0, input_len: 512, output_len: 16, arrival: 0.0 },
+            Request { id: 1, input_len: 512, output_len: 16, arrival: 1000.0 },
+        ];
+        let r = simulate_requests(&plat, &cfg, &EngineSpec::vllm(), &reqs).unwrap();
+        assert_eq!(r.completions.len(), 2);
+        let c0 = r.completions.iter().find(|c| c.id == 0).unwrap();
+        let c1 = r.completions.iter().find(|c| c.id == 1).unwrap();
+        // the first request finishes long before the second arrives; the
+        // clock then jumps to t=1000 instead of spinning
+        assert!(c0.finish < 1000.0);
+        assert!(c1.finish >= 1000.0 && r.makespan >= 1000.0);
+        // the late request's latency counts from *its* arrival, so it is
+        // served as fast as an unloaded engine can go
+        assert!(c1.latency < 500.0, "latency {}", c1.latency);
+        assert!(c1.ttft <= c1.latency);
+    }
+
+    #[test]
+    fn unservable_request_is_rejected_not_workload_truncating() {
+        // one impossible prompt (bigger than any prefill budget) must not
+        // stop the requests behind and after it from being served
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let reqs = vec![
+            Request { id: 0, input_len: 512, output_len: 8, arrival: 0.0 },
+            Request { id: 1, input_len: 1_000_000, output_len: 8, arrival: 0.0 },
+            Request { id: 2, input_len: 512, output_len: 8, arrival: 0.0 },
+            Request { id: 3, input_len: 512, output_len: 8, arrival: 500.0 },
+        ];
+        let r = simulate_requests(&plat, &cfg, &EngineSpec::vllm(), &reqs).unwrap();
+        assert_eq!(r.rejected, 1);
+        let mut served: Vec<u64> = r.completions.iter().map(|c| c.id).collect();
+        served.sort();
+        assert_eq!(served, vec![0, 2, 3]);
+        // a partially-simulated workload never reads as SLO-met
+        assert!(!r.meets_slo(&SloSpec::new(0.9, f64::MAX, f64::MAX)));
+    }
+
+    #[test]
+    fn slo_metrics_consistent() {
+        let r = run(EngineSpec::vllm(), PlatformId::A800, &LlamaConfig::llama2_7b(), 64);
+        // generous SLO: everything passes; goodput == throughput
+        let pass = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        assert!(r.meets_slo(&pass));
+        assert_eq!(r.slo_attainment(&pass), 1.0);
+        assert!((r.goodput(&pass) - r.throughput()).abs() < 1e-9);
+        // impossible SLO: nothing passes
+        let fail = SloSpec::new(0.9, 0.0, 0.0);
+        assert!(!r.meets_slo(&fail));
+        assert_eq!(r.slo_attainment(&fail), 0.0);
+        assert_eq!(r.goodput(&fail), 0.0);
+        // TPOT is positive and below the mean iteration time ceiling
+        assert!(r.tpot_cdf().quantile(0.5) > 0.0);
     }
 
     #[test]

@@ -60,6 +60,12 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Log-normal with log-space parameters `mu`, `sigma` (length
+    /// distributions: arithmetic mean = exp(mu + sigma²/2)).
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -120,6 +126,17 @@ mod tests {
         let n = 50_000;
         let mean: f64 = (0..n).map(|_| r.exp(3.0)).sum::<f64>() / n as f64;
         assert!((mean - 3.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn log_normal_mean_close() {
+        // mean 512, cv 0.5 -> sigma = sqrt(ln(1.25)), mu = ln(512) - sigma^2/2
+        let sigma = (1.0f64 + 0.25).ln().sqrt();
+        let mu = 512.0f64.ln() - sigma * sigma / 2.0;
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.log_normal(mu, sigma)).sum::<f64>() / n as f64;
+        assert!((mean - 512.0).abs() / 512.0 < 0.02, "mean={mean}");
     }
 
     #[test]

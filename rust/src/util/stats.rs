@@ -83,6 +83,43 @@ impl Cdf {
     }
 }
 
+/// Fixed p50/p90/p99 percentile summary of a sample — the row format of
+/// every SLO table (`report::load`, `llmperf sweep-load`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PctSummary {
+    /// sample count
+    pub n: usize,
+    /// arithmetic mean
+    pub mean: f64,
+    /// median
+    pub p50: f64,
+    /// 90th percentile
+    pub p90: f64,
+    /// 99th percentile
+    pub p99: f64,
+    /// maximum
+    pub max: f64,
+}
+
+impl PctSummary {
+    /// Summarize a sample (all-zero summary for empty input).
+    pub fn of(xs: &[f64]) -> PctSummary {
+        if xs.is_empty() {
+            return PctSummary { n: 0, mean: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        PctSummary {
+            n: v.len(),
+            mean: mean(&v),
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
 /// Throughput (units/s) from a total and a duration in seconds.
 pub fn throughput(total_units: f64, seconds: f64) -> f64 {
     if seconds <= 0.0 { 0.0 } else { total_units / seconds }
@@ -145,6 +182,40 @@ mod tests {
             assert!(p >= prev);
             prev = p;
         }
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample() {
+        // n=1: every quantile must collapse to the one observation
+        let xs = [7.5];
+        for q in [0.0, 1.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, q), 7.5, "q={q}");
+        }
+        let s = PctSummary::of(&xs);
+        assert_eq!((s.n, s.mean, s.p50, s.p90, s.p99, s.max), (1, 7.5, 7.5, 7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn percentile_with_ties() {
+        // heavy ties: the interpolation must stay inside the tied band
+        let xs = [1.0, 1.0, 1.0, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 50.0), 1.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 2.0);
+        let all_same = [3.0; 9];
+        let s = PctSummary::of(&all_same);
+        assert_eq!((s.p50, s.p90, s.p99, s.max), (3.0, 3.0, 3.0, 3.0));
+    }
+
+    #[test]
+    fn pct_summary_empty_and_ordering() {
+        let e = PctSummary::of(&[]);
+        assert_eq!((e.n, e.p50, e.p99), (0, 0.0, 0.0));
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = PctSummary::of(&xs);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p99 - 99.01).abs() < 0.1);
     }
 
     #[test]
