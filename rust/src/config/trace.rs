@@ -136,6 +136,28 @@ impl Trace {
     pub fn duration(&self) -> f64 {
         self.requests.iter().map(|r| r.arrival_s).fold(0.0, f64::max)
     }
+
+    /// Mean recorded request rate (len / duration), if the trace spans
+    /// any time at all.
+    pub fn mean_qps(&self) -> Option<f64> {
+        let d = self.duration();
+        (d > 0.0).then(|| self.len() as f64 / d)
+    }
+
+    /// The same request mix replayed `factor`× faster: every arrival is
+    /// divided by `factor` (2.0 = twice the recorded rate), lengths
+    /// untouched — how a recorded trace is swept across a QPS grid.
+    pub fn time_compressed(&self, factor: f64) -> Result<Trace> {
+        if !(factor.is_finite() && factor > 0.0) {
+            return Err(err!("trace '{}': compression factor must be > 0, got {factor}",
+                            self.name));
+        }
+        let mut t = self.clone();
+        for r in &mut t.requests {
+            r.arrival_s /= factor;
+        }
+        Ok(t)
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +185,18 @@ mod tests {
     fn duration_is_last_arrival() {
         assert_eq!(sample().duration(), 2.5);
         assert_eq!(sample().len(), 3);
+        assert!((sample().mean_qps().unwrap() - 3.0 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_compression_scales_arrivals_only() {
+        let t = sample().time_compressed(2.0).unwrap();
+        assert_eq!(t.duration(), 1.25);
+        assert_eq!(t.requests[1].arrival_s, 0.125);
+        assert_eq!(t.requests[2].input_len, 1024, "lengths untouched");
+        assert!((t.mean_qps().unwrap() - 2.0 * sample().mean_qps().unwrap()).abs() < 1e-12);
+        assert!(sample().time_compressed(0.0).is_err());
+        assert!(sample().time_compressed(f64::NAN).is_err());
     }
 
     #[test]

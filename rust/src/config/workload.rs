@@ -395,12 +395,49 @@ impl WorkloadSpec {
             Arrival::AtOnce => None,
             Arrival::Poisson { qps } => Some(qps),
             Arrival::Bursty { qps, on_s, off_s } => Some(qps * on_s / (on_s + off_s)),
+            Arrival::Trace => self.trace.as_ref().and_then(|t| t.mean_qps()),
+        }
+    }
+
+    /// The same workload re-armed to a *mean* offered load of `qps`
+    /// requests/s, preserving the arrival shape — what a load sweep
+    /// varies between grid points:
+    ///
+    /// * `AtOnce` becomes `Poisson { qps }` (the closed burst has no
+    ///   rate to scale; sweeps have always probed it as Poisson),
+    /// * `Poisson` is set to `qps`,
+    /// * `Bursty` keeps its duty cycle and scales the on-phase rate so
+    ///   the long-run mean hits `qps`,
+    /// * `Trace` is time-compressed (arrivals rescaled, mix and order
+    ///   preserved) so the recorded mean rate becomes `qps`.
+    ///
+    /// Errors on a non-positive target or a trace workload whose
+    /// recorded span is zero (no rate to rescale).
+    pub fn with_offered_qps(&self, qps: f64) -> Result<WorkloadSpec> {
+        if !(qps.is_finite() && qps > 0.0) {
+            return Err(err!("workload: offered QPS must be > 0, got {qps}"));
+        }
+        let mut spec = self.clone();
+        match self.arrival {
+            Arrival::AtOnce | Arrival::Poisson { .. } => {
+                spec.arrival = Arrival::Poisson { qps };
+            }
+            Arrival::Bursty { on_s, off_s, .. } => {
+                spec.arrival = Arrival::Bursty { qps: qps * (on_s + off_s) / on_s, on_s, off_s };
+            }
             Arrival::Trace => {
-                let t = self.trace.as_ref()?;
-                let d = t.duration();
-                (d > 0.0).then(|| t.len() as f64 / d)
+                let trace = self
+                    .trace
+                    .as_ref()
+                    .ok_or_else(|| err!("workload: a 'trace' component needs an attached trace"))?;
+                let recorded = trace
+                    .mean_qps()
+                    .ok_or_else(|| err!("trace '{}': zero recorded duration, no rate to \
+                                         rescale", trace.name))?;
+                spec.trace = Some(trace.time_compressed(qps / recorded)?);
             }
         }
+        Ok(spec)
     }
 }
 
@@ -496,6 +533,49 @@ mod tests {
         let spec = WorkloadSpec::new(1)
             .arrival(Arrival::Bursty { qps: 10.0, on_s: 1.0, off_s: 9.0 });
         assert!((spec.offered_qps().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offered_qps_rescaling_preserves_shape() {
+        // AtOnce and Poisson both re-arm to Poisson at the target rate
+        let base = WorkloadSpec::new(32);
+        assert_eq!(base.with_offered_qps(4.0).unwrap().arrival, Arrival::Poisson { qps: 4.0 });
+        let p = base.clone().arrival(Arrival::Poisson { qps: 1.0 });
+        assert_eq!(p.with_offered_qps(4.0).unwrap().offered_qps(), Some(4.0));
+        // Bursty keeps its duty cycle; the on-phase rate absorbs the scale
+        let b = base
+            .clone()
+            .arrival(Arrival::Bursty { qps: 10.0, on_s: 1.0, off_s: 9.0 })
+            .with_offered_qps(2.0)
+            .unwrap();
+        match b.arrival {
+            Arrival::Bursty { qps, on_s, off_s } => {
+                assert_eq!((on_s, off_s), (1.0, 9.0));
+                assert!((qps - 20.0).abs() < 1e-9, "on-phase rate {qps}");
+            }
+            other => panic!("bursty shape lost: {other:?}"),
+        }
+        assert!((b.offered_qps().unwrap() - 2.0).abs() < 1e-12);
+        // Trace time-compresses: same mix, recorded rate becomes the target
+        let trace = Trace {
+            name: "t".into(),
+            requests: vec![
+                TraceEntry { arrival_s: 0.0, input_len: 100, output_len: 10 },
+                TraceEntry { arrival_s: 4.0, input_len: 200, output_len: 20 },
+            ],
+        };
+        let t = WorkloadSpec::from_trace(trace).with_offered_qps(5.0).unwrap();
+        assert!((t.offered_qps().unwrap() - 5.0).abs() < 1e-9);
+        let reqs = t.generate().unwrap();
+        assert_eq!((reqs[1].input_len, reqs[1].output_len), (200, 20), "mix preserved");
+        // invalid targets and unscalable traces error
+        assert!(base.with_offered_qps(0.0).is_err());
+        assert!(base.with_offered_qps(f64::NAN).is_err());
+        let flat = Trace {
+            name: "flat".into(),
+            requests: vec![TraceEntry { arrival_s: 0.0, input_len: 1, output_len: 1 }],
+        };
+        assert!(WorkloadSpec::from_trace(flat).with_offered_qps(1.0).is_err());
     }
 
     #[test]

@@ -70,6 +70,9 @@ pub struct Platform {
     /// per-extra-rank synchronization/straggler cost fraction (drives the
     /// sub-linear scaling of Fig. 4 even when gradients are tiny)
     pub straggler_frac: f64,
+    /// rental price per GPU-hour, USD (typical on-demand cloud/colo rates
+    /// at paper time) — the `$`-cost axis of `search::autotune_serve`
+    pub gpu_hour_usd: f64,
 }
 
 impl Platform {
@@ -87,6 +90,7 @@ impl Platform {
                 cpu_adam_rate: 1.3e9,
                 host_contention: 2.0,
                 straggler_frac: 0.004,
+                gpu_hour_usd: 2.10,
             },
             PlatformId::Rtx4090 => Platform {
                 id,
@@ -100,6 +104,7 @@ impl Platform {
                 cpu_adam_rate: 0.17e9, // 2×Xeon 6230 @ 2.1 GHz
                 host_contention: 4.0,
                 straggler_frac: 0.013,
+                gpu_hour_usd: 0.45,
             },
             PlatformId::Rtx3090Nvl => Platform {
                 id,
@@ -112,6 +117,7 @@ impl Platform {
                 cpu_adam_rate: 0.145e9, // 2×EPYC 7302 @ 3.0 GHz
                 host_contention: 4.0,
                 straggler_frac: 0.02,
+                gpu_hour_usd: 0.28,
             },
             PlatformId::Rtx3090 => Platform {
                 id,
@@ -124,6 +130,7 @@ impl Platform {
                 cpu_adam_rate: 0.145e9,
                 host_contention: 4.0,
                 straggler_frac: 0.037,
+                gpu_hour_usd: 0.25,
             },
         }
     }
@@ -170,6 +177,18 @@ mod tests {
         let r3 = Platform::get(PlatformId::Rtx3090);
         assert!(a.usable_gpu_mem() > 3.0 * r3.usable_gpu_mem());
         assert!(a.fabric.bw > 8.0 * r3.fabric.bw);
+    }
+
+    #[test]
+    fn gpu_hour_prices_positive_and_ordered() {
+        // every platform is priced, and the datacenter part costs a
+        // multiple of the consumer cards (the $-objective's whole point)
+        for p in Platform::all() {
+            assert!(p.gpu_hour_usd > 0.0, "{:?}", p.id);
+        }
+        let a = Platform::get(PlatformId::A800);
+        let r4 = Platform::get(PlatformId::Rtx4090);
+        assert!(a.gpu_hour_usd > 3.0 * r4.gpu_hour_usd);
     }
 
     #[test]

@@ -24,11 +24,14 @@
 //! subsystem — the single source of sharding truth for the training,
 //! fine-tuning, and serving simulators (DESIGN.md §Parallelism) —
 //! `calibrate/comm` fits measured interconnect α-β profiles that replace
-//! the public-spec link constants (README §Calibration), and
+//! the public-spec link constants (README §Calibration),
 //! `config::workload` generates open-loop serving workloads (Poisson /
 //! bursty / trace-replay arrivals, length distributions) whose
 //! TTFT/TPOT tails `report::load` sweeps against SLOs
-//! (DESIGN.md §Serving workloads & SLOs).
+//! (DESIGN.md §Serving workloads & SLOs), and `search/` is the
+//! configuration autotuner — joint (plan × method × load) search with
+//! memory-pruned enumeration and Pareto frontiers
+//! (DESIGN.md §Configuration search).
 
 #![warn(missing_docs)]
 
@@ -42,6 +45,7 @@ pub mod model;
 pub mod ops;
 pub mod parallel;
 pub mod report;
+pub mod search;
 pub mod serve;
 pub mod train;
 pub mod util;

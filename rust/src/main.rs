@@ -5,6 +5,7 @@
 //!   sim-pretrain | sim-serve             — one simulator cell
 //!   sweep-load                           — QPS sweep + max-QPS-under-SLO search
 //!   sweep-parallel                       — TP×PP×DP plan comparison
+//!   autotune-train | autotune-serve      — Pareto-frontier configuration search
 //!   calibrate-comm | validate-comm       — fit/check interconnect α-β profiles
 //!   train | serve | calibrate            — the *real* PJRT paths (`xla` feature)
 //!   info                                 — environment summary
@@ -19,6 +20,7 @@ use llm_perf_lab::config::{
 use llm_perf_lab::err;
 use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
+use llm_perf_lab::search::{autotune_serve, autotune_train, SearchBudget};
 use llm_perf_lab::serve::{simulate_requests, EngineSpec};
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
@@ -45,17 +47,42 @@ simulators:
                  --slo-*, goodput
   sweep-load     --model 7b --platform a800 --engine vllm [--requests 200]
                  [--qps-min 0.5] [--qps-max 32] [--points 6]
-                 [--input ...] [--output ...] [--seed 42]
+                 [--arrival poisson:1|bursty:QPS:ON_S:OFF_S|trace] [--trace FILE]
+                 [--input ...] [--output ...] [--seed 42] [--engines all]
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
-                 sweep Poisson load over a QPS grid (TTFT/TPOT p50/p90/p99
-                 + goodput per point) and binary-search the max QPS that
-                 still meets the SLO
+                 sweep mean offered load over a QPS grid (TTFT/TPOT
+                 p50/p90/p99 + goodput per point) and binary-search the
+                 max QPS that still meets the SLO; the grid re-arms the
+                 base arrival shape (Poisson stays Poisson, bursty keeps
+                 its duty cycle, traces are time-compressed);
+                 --engines all prints one capacity row per engine instead
   sweep-parallel [--model 70b] [--platform a800] [--nodes 1] [--bs 8] [--seq 350]
                  [--profile comm_profile.json]
                  rank every valid TP x PP x DP plan (step time, tokens/s,
                  1F1B bubble, memory fit); --nodes > 1 spans IB-connected
                  copies of the platform; --profile prices inter/intra links
                  with calibrated numbers instead of public-spec constants
+
+configuration autotuner (DESIGN.md §Configuration search):
+  autotune-train --model 13b [--platform a800] [--nodes 1] [--seq 350]
+                 [--bs 8 | --bs 4,8,16] [--methods none|grid|Z3,F+R+Z2,...]
+                 [--mem-frac 1.0] [--max-configs N] [--show-pruned]
+                 [--profile comm_profile.json]
+                 joint plan x stack/method x batch search: enumerate,
+                 prune OOM configs via the memory models (never costed),
+                 cost the rest, print the throughput x memory-headroom
+                 Pareto frontier; --methods adds DeepSpeed method cells
+                 on the pure-DP plan ('grid' = the paper's Table III set)
+  autotune-serve --model 70b [--platform a800] [--qps 2.0]
+                 [--engines all|vllm,tgi,lightllm] [--requests 200]
+                 [--arrival ...] [--input ...] [--output ...] [--seed 42]
+                 [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
+                 [--qps-min 0.25] [--qps-max 64] [--max-configs N]
+                 [--no-early-prune] [--show-pruned] [--profile FILE]
+                 joint engine x TP-degree x load search: bisect each
+                 feasible deployment's max QPS under the SLO and print
+                 the capacity x GPUs x $/h Pareto frontier over
+                 candidates meeting --qps (all candidates without it)
 
 interconnect calibration (NCCL-tests logs in, measured link models out):
   calibrate-comm <log...> [--scope inter] [--out comm_profile.json]
@@ -162,6 +189,8 @@ fn run(cli: &Cli) -> Result<()> {
         "validate-comm" => validate_comm(cli)?,
         "sim-serve" => sim_serve(cli)?,
         "sweep-load" => sweep_load(cli)?,
+        "autotune-train" => autotune_train_cmd(cli)?,
+        "autotune-serve" => autotune_serve_cmd(cli)?,
         "train" | "serve" | "calibrate" => {
             #[cfg(feature = "xla")]
             real::dispatch(cli)?;
@@ -239,12 +268,89 @@ fn platform_flag(cli: &Cli) -> Result<Platform> {
     PlatformId::parse(&name).map(Platform::get).ok_or_else(|| err!("unknown platform '{name}'"))
 }
 
-fn engine_flag(cli: &Cli) -> Result<EngineSpec> {
-    match cli.flag_or("engine", "vllm").as_str() {
+fn engine_by_name(name: &str) -> Result<EngineSpec> {
+    match name {
         "vllm" => Ok(EngineSpec::vllm()),
         "tgi" => Ok(EngineSpec::tgi()),
         "lightllm" => Ok(EngineSpec::lightllm()),
         other => Err(err!("unknown engine '{other}'")),
+    }
+}
+
+fn engine_flag(cli: &Cli) -> Result<EngineSpec> {
+    engine_by_name(&cli.flag_or("engine", "vllm"))
+}
+
+/// Parse an `--engines` value: `all` or a comma list of engine names.
+fn parse_engines(spec: &str) -> Result<Vec<EngineSpec>> {
+    if spec == "all" {
+        return Ok(EngineSpec::all());
+    }
+    spec.split(',').map(|s| engine_by_name(s.trim())).collect()
+}
+
+/// Parse a comma list of positive integers (`--bs 4,8,16`).
+fn parse_u64_list(spec: &str) -> Result<Vec<u64>> {
+    let v: Vec<u64> = spec
+        .split(',')
+        .map(|s| s.trim().parse::<u64>().map_err(|e| err!("bad integer '{s}': {e}")))
+        .collect::<Result<Vec<u64>>>()?;
+    if v.is_empty() || v.contains(&0) {
+        return Err(err!("need a comma list of positive integers, got '{spec}'"));
+    }
+    Ok(v)
+}
+
+/// Apply a calibration profile to a (possibly multi-node) topology,
+/// reporting exactly the scopes the profile carried — an intra-only
+/// profile must not present stock inter-node constants as calibrated.
+fn apply_profile_to_topology(cli: &Cli, topo: &mut Topology) -> Result<()> {
+    if let Some(path) = cli.flag("profile") {
+        let prof = TopologyProfile::load(path)?;
+        prof.apply(topo);
+        let mut applied = Vec::new();
+        if prof.link(LinkScope::Intra).is_some() {
+            applied.push(format!("intra {} @ {}", fmt::rate(topo.intra.bw),
+                                 fmt::seconds(topo.intra.latency)));
+        }
+        if prof.link(LinkScope::Inter).is_some() {
+            applied.push(format!("inter {} @ {}", fmt::rate(topo.inter.bw),
+                                 fmt::seconds(topo.inter.latency)));
+        }
+        if applied.is_empty() {
+            println!("profile '{}' carries no link entries — stock constants in effect",
+                     prof.name);
+        } else {
+            println!("calibration profile '{}' applied: {}", prof.name, applied.join(", "));
+        }
+    }
+    Ok(())
+}
+
+/// Apply a calibration profile's intra-node entry to the platform fabric
+/// (what single-node serving collectives are priced on).
+fn apply_profile_to_platform(cli: &Cli, plat: &mut Platform) -> Result<()> {
+    if let Some(path) = cli.flag("profile") {
+        let prof = TopologyProfile::load(path)?;
+        match prof.link(LinkScope::Intra) {
+            Some(lp) => {
+                lp.apply(&mut plat.fabric);
+                println!("calibration profile '{}' applied: intra {} @ {}",
+                         prof.name, fmt::rate(plat.fabric.bw),
+                         fmt::seconds(plat.fabric.latency));
+            }
+            None => println!("profile '{}' has no intra-node entry — serving prices on \
+                              the stock fabric", prof.name),
+        }
+    }
+    Ok(())
+}
+
+/// The shared autotune budget flags (`--max-configs`, `--no-early-prune`).
+fn budget_flags(cli: &Cli) -> SearchBudget {
+    SearchBudget {
+        max_costed: cli.flag_u64("max-configs", u64::MAX) as usize,
+        early_prune: !cli.has("no-early-prune"),
     }
 }
 
@@ -360,21 +466,33 @@ fn sim_serve(cli: &Cli) -> Result<()> {
 }
 
 /// `llmperf sweep-load` — QPS sweep + binary-searched SLO capacity.
+/// The grid rescales the base workload's *mean* offered load, keeping
+/// its arrival shape (Poisson / bursty duty cycle / time-compressed
+/// trace); `--engines all` prints the per-engine capacity table instead.
 fn sweep_load(cli: &Cli) -> Result<()> {
     let cfg = model_flag(cli, "7b")?;
     let plat = platform_flag(cli)?;
-    let engine = engine_flag(cli)?;
-    if cli.flag("arrival").is_some() {
-        return Err(err!("sweep-load sweeps Poisson load over the QPS grid itself — \
-                         --arrival is not accepted (use sim-serve for a single \
-                         bursty/trace cell)"));
-    }
     let base = workload_flags(cli, 200)?;
     let slo = slo_flags(cli)?.unwrap_or_else(SloSpec::interactive);
     let (lo, hi) = (cli.flag_f64("qps-min", 0.5), cli.flag_f64("qps-max", 32.0));
     if !(lo > 0.0 && hi >= lo) {
         return Err(err!("need 0 < --qps-min <= --qps-max"));
     }
+    if let Some(spec) = cli.flag("engines") {
+        if cli.flag("engine").is_some() {
+            return Err(err!("--engines and --engine conflict — pass one of them"));
+        }
+        if cli.flag("points").is_some() {
+            return Err(err!("--points has no effect with --engines (the capacity table \
+                             bisects, it does not grid)"));
+        }
+        let engines = parse_engines(spec)?;
+        println!("{}",
+                 report::load::engine_capacity_table(&plat, &cfg, &engines, &base, &slo, lo, hi)?
+                     .render());
+        return Ok(());
+    }
+    let engine = engine_flag(cli)?;
     if engine.plan(&plat, &cfg).is_none() {
         println!("{} / {} / {}: OOM (cannot deploy — no load sweep to run)",
                  plat.id.label(), cfg.name, engine.name);
@@ -389,6 +507,113 @@ fn sweep_load(cli: &Cli) -> Result<()> {
                                         deployment is not the bottleneck in this range",
                                        slo.describe()),
         Some(q) => println!("max QPS under SLO ({}) ~= {q:.2}", slo.describe()),
+    }
+    Ok(())
+}
+
+/// `llmperf autotune-train` — plan × stack/method × batch frontier.
+fn autotune_train_cmd(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "13b")?;
+    let plat = platform_flag(cli)?;
+    let nodes = cli.flag_u64("nodes", 1) as u32;
+    if nodes == 0 {
+        return Err(err!("--nodes must be >= 1"));
+    }
+    let mut topo = Topology::multi_node(&plat, nodes);
+    apply_profile_to_topology(cli, &mut topo)?;
+    let batch_sizes = parse_u64_list(&cli.flag_or("bs", "8"))?;
+    let methods = match cli.flag_or("methods", "none").as_str() {
+        "none" => Vec::new(),
+        "grid" => Method::pretrain_grid().into_iter().map(|(_, m)| m).collect(),
+        list => list
+            .split(',')
+            .map(|l| {
+                Method::parse(l.trim()).ok_or_else(|| err!("bad method label '{l}'"))
+            })
+            .collect::<Result<Vec<Method>>>()?,
+    };
+    let frac = cli.flag_f64("mem-frac", 1.0);
+    if !(frac > 0.0 && frac <= 1.0) {
+        return Err(err!("--mem-frac must be in (0, 1], got {frac}"));
+    }
+    let search = autotune_train(&plat, &topo, &cfg, cli.flag_u64("seq", 350), &batch_sizes,
+                                &methods, plat.gpu.mem_bytes * frac, budget_flags(cli));
+    println!("{}", report::search::train_frontier_table(&search, &plat, &cfg, nodes).render());
+    if cli.has("show-pruned") && !search.pruned.is_empty() {
+        println!("{}",
+                 report::search::pruned_table("Pruned before costing", &search.pruned).render());
+    }
+    match search.best_throughput() {
+        Some(best) => println!("best throughput: {} — {:.0} tokens/s at {:.1} GB/GPU \
+                                ({:.1} GB headroom)",
+                               best.cand.label(), best.tokens_per_s, best.mem_gb,
+                               best.headroom_gb),
+        None if search.stats.skipped > 0 => {
+            println!("no configuration was costed — the --max-configs budget skipped {} \
+                      feasible candidate(s); raise it", search.stats.skipped)
+        }
+        None => println!("every configuration was pruned — try more --nodes, a smaller \
+                          --bs, or --methods grid (offload/PEFT cells fit where plain \
+                          plans OOM)"),
+    }
+    Ok(())
+}
+
+/// `llmperf autotune-serve` — engine × TP × load frontier.
+fn autotune_serve_cmd(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "70b")?;
+    let mut plat = platform_flag(cli)?;
+    apply_profile_to_platform(cli, &mut plat)?;
+    // `--engine` (the sim-serve/sweep-load habit) works as a one-engine
+    // search; conflicting flags error instead of being silently ignored
+    let engines = match (cli.flag("engines"), cli.flag("engine")) {
+        (Some(_), Some(_)) => {
+            return Err(err!("--engines and --engine conflict — pass one of them"))
+        }
+        (Some(spec), None) => parse_engines(spec)?,
+        (None, Some(one)) => vec![engine_by_name(one)?],
+        (None, None) => EngineSpec::all(),
+    };
+    let base = workload_flags(cli, 200)?;
+    let slo = slo_flags(cli)?.unwrap_or_else(SloSpec::interactive);
+    let target = match cli.flag("qps") {
+        Some(v) => {
+            let t: f64 = v.parse().map_err(|e| err!("bad --qps '{v}': {e}"))?;
+            if !(t.is_finite() && t > 0.0) {
+                return Err(err!("--qps must be > 0, got {t}"));
+            }
+            Some(t)
+        }
+        None => None,
+    };
+    let (mut lo, mut hi) = (cli.flag_f64("qps-min", 0.25), cli.flag_f64("qps-max", 64.0));
+    if !(lo > 0.0 && hi >= lo) {
+        return Err(err!("need 0 < --qps-min <= --qps-max"));
+    }
+    if let Some(t) = target {
+        // the bracket must contain the target or no candidate can prove
+        // it sustains that load
+        lo = lo.min(t);
+        hi = hi.max(t);
+    }
+    let search = autotune_serve(&plat, &cfg, &engines, &base, &slo, target, (lo, hi),
+                                budget_flags(cli))?;
+    println!("{}", report::search::serve_frontier_table(&search, &plat, &cfg).render());
+    if cli.has("show-pruned") && !search.pruned.is_empty() {
+        println!("{}",
+                 report::search::pruned_table("Pruned before costing", &search.pruned).render());
+    }
+    let at_target = match target {
+        Some(t) => format!(" at {t:.2} QPS"),
+        None => String::new(),
+    };
+    match search.min_gpu_point() {
+        Some(e) => println!("cheapest deployment meeting the SLO{}: {} — {} GPU(s), \
+                             ${:.2}/h, max {} QPS",
+                            at_target, e.cand.label(), e.gpus, e.cost_per_hour,
+                            match e.max_qps { Some(q) => format!("{q:.2}"), None => "-".into() }),
+        None => println!("no deployment meets SLO {}{} — relax the SLO, lower --qps, or \
+                          try another platform", slo.describe(), at_target),
     }
     Ok(())
 }

@@ -3,11 +3,17 @@
 //! sustains before its TTFT/TPOT tails blow the SLO — the
 //! capacity-planning view the paper's closed burst cannot answer
 //! (DESIGN.md §Serving workloads & SLOs).
+//!
+//! A sweep varies the *mean offered load* of the base workload, not its
+//! shape: each grid/bisection point re-arms the spec through
+//! [`WorkloadSpec::with_offered_qps`], so Poisson sweeps stay Poisson,
+//! bursty sweeps keep their duty cycle, and trace sweeps time-compress
+//! the recorded arrivals (same mix, faster clock).
 
-use crate::config::{Arrival, LlamaConfig, SloSpec, WorkloadSpec};
+use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::err;
 use crate::hw::Platform;
-use crate::serve::{simulate_requests, EngineSpec, SimResult};
+use crate::serve::{simulate_requests_on, DeployPlan, EngineSpec, SimResult};
 use crate::util::error::Result;
 use crate::util::table::{f0, f1, f2, oom, Table};
 
@@ -18,16 +24,18 @@ pub fn qps_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
     (0..n).map(|i| lo * ratio.powi(i as i32)).collect()
 }
 
-/// One simulated load point: the spec re-armed to Poisson(`qps`).
+/// One simulated load point: the base spec re-armed to a mean offered
+/// load of `qps` (shape-preserving), on a forced deployment plan.
 fn probe(
     plat: &Platform,
     cfg: &LlamaConfig,
     engine: &EngineSpec,
+    plan: &DeployPlan,
     base: &WorkloadSpec,
     qps: f64,
-) -> Result<Option<SimResult>> {
-    let spec = base.clone().arrival(Arrival::Poisson { qps });
-    Ok(simulate_requests(plat, cfg, engine, &spec.generate()?))
+) -> Result<SimResult> {
+    let reqs = base.with_offered_qps(qps)?.generate()?;
+    Ok(simulate_requests_on(plat, cfg, engine, plan, &reqs))
 }
 
 /// Sweep offered load for one deployment: one row per QPS point with
@@ -41,13 +49,19 @@ pub fn sweep_load(
     grid: &[f64],
     slo: &SloSpec,
 ) -> Result<Table> {
+    let shape = match base.arrival {
+        crate::config::Arrival::Bursty { .. } => "bursty",
+        crate::config::Arrival::Trace => "trace-compressed",
+        _ => "Poisson",
+    };
     let mut t = Table::new(
         &format!(
-            "Load sweep — {} / {} / {}, {} Poisson requests per point, SLO {}",
+            "Load sweep — {} / {} / {}, {} {} requests per point, SLO {}",
             plat.id.label(),
             cfg.name,
             engine.name,
             base.n_requests,
+            shape,
             slo.describe()
         ),
         &[
@@ -56,9 +70,11 @@ pub fn sweep_load(
         ],
     )
     .align_left(9);
+    let plan = engine.plan(plat, cfg);
     for &qps in grid {
-        match probe(plat, cfg, engine, base, qps)? {
-            Some(r) => {
+        match &plan {
+            Some(p) => {
+                let r = probe(plat, cfg, engine, p, base, qps)?;
                 let (ttft, tpot) = (r.ttft_summary(), r.tpot_summary());
                 t.row(vec![
                     f2(qps),
@@ -83,11 +99,70 @@ pub fn sweep_load(
     Ok(t)
 }
 
-/// Binary-search (geometric bisection) the highest Poisson QPS whose
-/// simulated tails still meet the SLO.  `Err` if the engine cannot
-/// deploy the model at all (an OOM is not an SLO miss); `Ok(None)` when
-/// even `lo` misses the SLO; if `hi` passes, `hi` is returned as-is —
-/// the deployment is not the bottleneck in that range.
+/// The bisection core: highest passing QPS *and* the simulation that
+/// passed there, so callers reporting the operating point don't have to
+/// re-run the event loop.
+#[allow(clippy::too_many_arguments)]
+fn bisect_max_qps(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Option<(f64, SimResult)>> {
+    if !(lo > 0.0 && hi >= lo) {
+        return Err(err!("max_qps_under_slo: need 0 < lo <= hi, got {lo}..{hi}"));
+    }
+    let r_lo = probe(plat, cfg, engine, plan, base, lo)?;
+    if !r_lo.meets_slo(slo) {
+        return Ok(None);
+    }
+    let r_hi = probe(plat, cfg, engine, plan, base, hi)?;
+    if r_hi.meets_slo(slo) {
+        return Ok(Some((hi, r_hi)));
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    let mut best = r_lo;
+    // geometric bisection: stop once the bracket is within 2%
+    while hi / lo > 1.02 {
+        let mid = (lo * hi).sqrt();
+        let r = probe(plat, cfg, engine, plan, base, mid)?;
+        if r.meets_slo(slo) {
+            lo = mid;
+            best = r;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(Some((lo, best)))
+}
+
+/// [`max_qps_under_slo`] on an explicit deployment plan — the form the
+/// configuration autotuner prices every feasible TP degree with
+/// (`search::autotune_serve`).
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_on(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Option<f64>> {
+    Ok(bisect_max_qps(plat, cfg, engine, plan, base, slo, lo, hi)?.map(|(q, _)| q))
+}
+
+/// Binary-search (geometric bisection) the highest mean offered QPS
+/// whose simulated tails still meet the SLO, preserving the base
+/// workload's arrival shape.  `Err` if the engine cannot deploy the
+/// model at all (an OOM is not an SLO miss); `Ok(None)` when even `lo`
+/// misses the SLO; if `hi` passes, `hi` is returned as-is — the
+/// deployment is not the bottleneck in that range.
 pub fn max_qps_under_slo(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -97,38 +172,85 @@ pub fn max_qps_under_slo(
     lo: f64,
     hi: f64,
 ) -> Result<Option<f64>> {
-    if !(lo > 0.0 && hi >= lo) {
-        return Err(err!("max_qps_under_slo: need 0 < lo <= hi, got {lo}..{hi}"));
-    }
-    if engine.plan(plat, cfg).is_none() {
-        return Err(err!("{} cannot deploy {} on {} (OOM) — no load level can meet an SLO",
-                        engine.name, cfg.name, plat.id.label()));
-    }
-    let ok = |qps: f64| -> Result<bool> {
-        Ok(probe(plat, cfg, engine, base, qps)?.map(|r| r.meets_slo(slo)).unwrap_or(false))
-    };
-    if !ok(lo)? {
-        return Ok(None);
-    }
-    if ok(hi)? {
-        return Ok(Some(hi));
-    }
-    let (mut lo, mut hi) = (lo, hi);
-    // geometric bisection: stop once the bracket is within 2%
-    while hi / lo > 1.02 {
-        let mid = (lo * hi).sqrt();
-        if ok(mid)? {
-            lo = mid;
-        } else {
-            hi = mid;
+    let plan = engine.plan(plat, cfg).ok_or_else(|| {
+        err!("{} cannot deploy {} on {} (OOM) — no load level can meet an SLO",
+             engine.name, cfg.name, plat.id.label())
+    })?;
+    max_qps_under_slo_on(plat, cfg, engine, &plan, base, slo, lo, hi)
+}
+
+/// Side-by-side SLO capacity: one row per engine at the same SLO and
+/// workload shape — TP degree, KV capacity, the bisected max QPS, and
+/// throughput/goodput at that operating point (`sweep-load
+/// --engines all`, the ROADMAP "per-engine capacity tables" item).
+pub fn engine_capacity_table(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engines: &[EngineSpec],
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!(
+            "Engine capacity — {} / {}, SLO {}, {} requests per probe, bracket {:.2}..{:.2} QPS",
+            plat.id.label(),
+            cfg.name,
+            slo.describe(),
+            base.n_requests,
+            lo,
+            hi
+        ),
+        &["Engine", "TP", "KV tokens", "max QPS", "tok/s @cap", "goodput @cap", "note"],
+    )
+    .align_left(0)
+    .align_left(6);
+    for engine in engines {
+        match engine.plan(plat, cfg) {
+            None => t.row(vec![
+                engine.name.to_string(),
+                oom(),
+                oom(),
+                oom(),
+                oom(),
+                oom(),
+                "cannot deploy (OOM)".to_string(),
+            ]),
+            Some(plan) => {
+                match bisect_max_qps(plat, cfg, engine, &plan, base, slo, lo, hi)? {
+                    None => t.row(vec![
+                        engine.name.to_string(),
+                        plan.tp().to_string(),
+                        plan.kv_capacity_tokens.to_string(),
+                        oom(),
+                        oom(),
+                        oom(),
+                        format!("SLO missed even at {lo:.2} QPS"),
+                    ]),
+                    Some((q, r)) => {
+                        let note = if q >= hi { "not the bottleneck at hi" } else { "" };
+                        t.row(vec![
+                            engine.name.to_string(),
+                            plan.tp().to_string(),
+                            plan.kv_capacity_tokens.to_string(),
+                            f2(q),
+                            f0(r.throughput()),
+                            f0(r.goodput(slo)),
+                            note.to_string(),
+                        ]);
+                    }
+                }
+            }
         }
     }
-    Ok(Some(lo))
+    Ok(t)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Arrival;
     use crate::hw::PlatformId;
 
     #[test]
@@ -149,6 +271,20 @@ mod tests {
         let t = sweep_load(&plat, &cfg, &EngineSpec::vllm(), &base, &[0.5, 4.0], &slo).unwrap();
         assert_eq!(t.n_rows(), 2);
         assert!(t.render().contains("met"), "{}", t.render());
+    }
+
+    #[test]
+    fn sweep_load_scales_bursty_shapes() {
+        // a bursty base sweeps without error and keeps its duty cycle in
+        // the caption's shape label
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(30, 256, 16)
+            .arrival(Arrival::Bursty { qps: 4.0, on_s: 1.0, off_s: 3.0 });
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let t = sweep_load(&plat, &cfg, &EngineSpec::vllm(), &base, &[0.5, 2.0], &slo).unwrap();
+        assert_eq!(t.n_rows(), 2);
+        assert!(t.title.contains("bursty"), "{}", t.title);
     }
 
     #[test]
@@ -182,5 +318,39 @@ mod tests {
         let q = max_qps_under_slo(&plat, &cfg, &EngineSpec::vllm(), &base, &slo, 0.5, 8.0)
             .unwrap();
         assert_eq!(q, Some(8.0));
+    }
+
+    #[test]
+    fn forced_plan_capacity_at_least_min_tp() {
+        // a wider TP group must sustain at least the min-TP capacity
+        // under a permissive TTFT-only SLO (faster iterations, larger KV)
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_13b();
+        let engine = EngineSpec::vllm();
+        let base = WorkloadSpec::at_once(60, 256, 32);
+        let slo = SloSpec::new(0.9, 6.0, f64::MAX);
+        let auto = engine.plan(&plat, &cfg).unwrap();
+        let q_min = max_qps_under_slo_on(&plat, &cfg, &engine, &auto, &base, &slo, 0.25, 64.0)
+            .unwrap()
+            .expect("13B must take some load on A800");
+        let wide = engine.plan_with_tp(&plat, &cfg, 8).unwrap();
+        let q_wide = max_qps_under_slo_on(&plat, &cfg, &engine, &wide, &base, &slo, 0.25, 64.0)
+            .unwrap()
+            .expect("a wider group cannot lose all capacity");
+        assert!(q_wide >= q_min * 0.75, "tp8 {q_wide:.2} vs tp{} {q_min:.2}", auto.tp());
+    }
+
+    #[test]
+    fn engine_capacity_table_has_one_row_per_engine() {
+        let plat = Platform::get(PlatformId::Rtx3090Nvl);
+        let cfg = LlamaConfig::llama2_70b();
+        let base = WorkloadSpec::at_once(16, 128, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let engines = EngineSpec::all();
+        let t = engine_capacity_table(&plat, &cfg, &engines, &base, &slo, 0.5, 2.0).unwrap();
+        assert_eq!(t.n_rows(), 3);
+        // TGI cannot deploy 70B on 24 GB (Fig. 6) — its row says so
+        let s = t.render();
+        assert!(s.contains("cannot deploy"), "{s}");
     }
 }

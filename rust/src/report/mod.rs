@@ -8,6 +8,7 @@ pub mod micro;
 pub mod modulewise;
 pub mod parallel;
 pub mod pretrain;
+pub mod search;
 pub mod serve;
 pub mod validate;
 

@@ -1,0 +1,136 @@
+//! Frontier tables for the configuration autotuner (`llmperf
+//! autotune-train` / `autotune-serve`): one row per Pareto point with
+//! the full configuration and its predicted step time / SLO capacity,
+//! plus a search-summary footer (enumerated / pruned / costed / skipped)
+//! so the reader can tell how much space the answer covers.
+
+use crate::config::LlamaConfig;
+use crate::hw::Platform;
+use crate::search::{SearchStats, ServeSearch, TrainSearch};
+use crate::util::table::{f0, f1, f2, Table};
+
+fn stats_line(stats: &SearchStats) -> String {
+    format!(
+        "{} enumerated, {} pruned infeasible (never costed), {} costed, {} skipped \
+         (budget/early-prune)",
+        stats.enumerated, stats.pruned_infeasible, stats.costed, stats.skipped
+    )
+}
+
+/// The training frontier: plan + stack + batch per row, with step time,
+/// throughput, per-GPU memory and headroom below the budget.
+pub fn train_frontier_table(
+    search: &TrainSearch,
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    n_nodes: u32,
+) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Training frontier — {} on {} node(s) × {} {} ({}; throughput × memory headroom)",
+            cfg.name,
+            n_nodes,
+            plat.n_gpus,
+            plat.gpu.name,
+            stats_line(&search.stats)
+        ),
+        &["Plan", "Stack", "bs", "Step (ms)", "Tokens/s", "GB/GPU", "Headroom GB"],
+    )
+    .align_left(0)
+    .align_left(1);
+    for e in search.frontier_evals() {
+        t.row(vec![
+            e.cand.plan.label(),
+            e.cand.stack.label(),
+            e.cand.wl.batch_size.to_string(),
+            f1(e.step_time * 1e3),
+            f0(e.tokens_per_s),
+            f1(e.mem_gb),
+            f1(e.headroom_gb),
+        ]);
+    }
+    t
+}
+
+/// The serving frontier: engine + TP per row, with GPUs, $/h, KV
+/// capacity and the bisected max QPS under the SLO.
+pub fn serve_frontier_table(search: &ServeSearch, plat: &Platform, cfg: &LlamaConfig) -> Table {
+    let target = match search.target_qps {
+        Some(t) => format!("target {t:.2} QPS"),
+        None => "no QPS target".to_string(),
+    };
+    let mut t = Table::new(
+        &format!(
+            "Serving frontier — {} on {} ({}; {}; capacity × GPUs × $/h)",
+            cfg.name,
+            plat.id.label(),
+            target,
+            stats_line(&search.stats)
+        ),
+        &["Engine", "TP", "GPUs", "$/h", "KV tokens", "max QPS under SLO"],
+    )
+    .align_left(0);
+    for e in search.frontier_evals() {
+        t.row(vec![
+            e.cand.engine.name.to_string(),
+            e.cand.plan.tp().to_string(),
+            e.gpus.to_string(),
+            f2(e.cost_per_hour),
+            e.cand.plan.kv_capacity_tokens.to_string(),
+            match e.max_qps {
+                Some(q) => f2(q),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
+/// Why-not table: every candidate the memory models rejected before
+/// costing, with the reason (printed under the frontier on request).
+pub fn pruned_table(title: &str, pruned: &[crate::search::PrunedCandidate]) -> Table {
+    let mut t = Table::new(title, &["Config", "Why pruned"]).align_left(0).align_left(1);
+    for p in pruned {
+        t.row(vec![p.label.clone(), p.reason.clone()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SloSpec, WorkloadSpec};
+    use crate::hw::{PlatformId, Topology};
+    use crate::search::{autotune_serve, autotune_train, SearchBudget};
+    use crate::serve::EngineSpec;
+
+    #[test]
+    fn train_table_renders_frontier_rows() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let s = autotune_train(&plat, &topo, &cfg, 350, &[4], &[], plat.gpu.mem_bytes,
+                               SearchBudget::default());
+        let t = train_frontier_table(&s, &plat, &cfg, 1);
+        assert_eq!(t.n_rows(), s.frontier.len());
+        let rendered = t.render();
+        assert!(rendered.contains("Tokens/s") && rendered.contains("Headroom"));
+        assert!(rendered.contains("pruned infeasible"), "{}", t.title);
+    }
+
+    #[test]
+    fn serve_table_renders_frontier_and_pruned() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let s = autotune_serve(&plat, &cfg, &EngineSpec::all(), &base, &slo, None, (0.5, 2.0),
+                               SearchBudget::default())
+            .unwrap();
+        let t = serve_frontier_table(&s, &plat, &cfg);
+        assert_eq!(t.n_rows(), s.frontier.len());
+        assert!(t.render().contains("max QPS"));
+        let p = pruned_table("why-not", &s.pruned);
+        assert_eq!(p.n_rows(), s.pruned.len());
+    }
+}

@@ -1,0 +1,338 @@
+//! Configuration autotuner: joint (plan × method × load) search with
+//! Pareto frontiers (`llmperf autotune-train` / `autotune-serve`).
+//!
+//! The paper's central user pain is that "runtime performance can vary
+//! significantly across hardware and software stacks, which makes it
+//! difficult to choose the best configuration" — the repo's sweeps
+//! (`sweep-parallel`, `sweep-load`) *enumerate* that variation but leave
+//! the choice to the reader.  This subsystem closes the loop over
+//! everything the cost models can already price:
+//!
+//! 1. [`space`] enumerates candidates — ParallelPlan × training stack /
+//!    method × batch for training, engine × TP degree for serving — and
+//!    prunes memory-infeasible ones with the cheap analytical models
+//!    *before* any costing;
+//! 2. [`objective`] costs the survivors (step simulation; bisected
+//!    max-QPS-under-SLO) and projects each onto a maximize-all objective
+//!    vector;
+//! 3. [`pareto`] keeps the non-dominated set, so the answer is a
+//!    frontier of defensible trade-offs, not a brittle argmax;
+//! 4. the drivers here ([`autotune_train`] / [`autotune_serve`]) wire
+//!    the phases together deterministically, with a candidate budget and
+//!    a dominance early-prune so 70B × multi-node spaces stay fast.
+//!
+//! `report::search` renders the frontiers (DESIGN.md §Configuration
+//! search).
+
+pub mod objective;
+pub mod pareto;
+pub mod space;
+
+use crate::config::{LlamaConfig, Method, SloSpec, WorkloadSpec};
+use crate::hw::{Platform, Topology};
+use crate::serve::EngineSpec;
+use crate::util::error::Result;
+
+pub use objective::{eval_serve, eval_train, ServeEval, TrainEval};
+pub use pareto::{dominates, pareto_indices};
+pub use space::{
+    serve_space, train_space, ConfigSpace, PrunedCandidate, ServeCandidate, TrainCandidate,
+    TrainStack,
+};
+
+/// Driver knobs bounding how much of a space gets costed.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchBudget {
+    /// cap on costed candidates, in enumeration order (deterministic
+    /// truncation; the stats record how many were skipped)
+    pub max_costed: usize,
+    /// serving early-prune: once an engine's smaller TP group reaches
+    /// the bracket ceiling, skip its wider groups — they cannot beat it
+    /// on any objective axis (≤ the same capacity, more GPUs, more $)
+    pub early_prune: bool,
+}
+
+impl Default for SearchBudget {
+    fn default() -> Self {
+        SearchBudget { max_costed: usize::MAX, early_prune: true }
+    }
+}
+
+/// What happened to the space on the way to the frontier.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchStats {
+    /// candidates the grammar enumerated
+    pub enumerated: usize,
+    /// rejected by the memory models before costing
+    pub pruned_infeasible: usize,
+    /// priced through a simulator / bisection
+    pub costed: usize,
+    /// feasible but skipped by the budget or the dominance early-prune
+    pub skipped: usize,
+}
+
+/// Result of a training search.
+#[derive(Debug, Clone)]
+pub struct TrainSearch {
+    /// every costed candidate, in enumeration order
+    pub evals: Vec<TrainEval>,
+    /// indices into `evals` forming the Pareto frontier
+    pub frontier: Vec<usize>,
+    /// infeasible candidates (label + reason), never costed
+    pub pruned: Vec<PrunedCandidate>,
+    /// bookkeeping for reports and the pruning-invariant tests
+    pub stats: SearchStats,
+}
+
+impl TrainSearch {
+    /// Frontier evals sorted for presentation: throughput descending,
+    /// then label ascending (deterministic tie-breaking).
+    pub fn frontier_evals(&self) -> Vec<&TrainEval> {
+        let mut v: Vec<&TrainEval> = self.frontier.iter().map(|&i| &self.evals[i]).collect();
+        v.sort_by(|a, b| {
+            b.tokens_per_s
+                .partial_cmp(&a.tokens_per_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.cand.label().cmp(&b.cand.label()))
+        });
+        v
+    }
+
+    /// The frontier point with the highest throughput, if any.
+    pub fn best_throughput(&self) -> Option<&TrainEval> {
+        self.frontier_evals().into_iter().next()
+    }
+}
+
+/// Joint plan × stack/method × batch search for training: enumerate,
+/// prune on the analytical memory models (never costing an infeasible
+/// candidate), cost the survivors, and keep the
+/// (throughput × memory-headroom) Pareto frontier.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_train(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    seq_len: u64,
+    batch_sizes: &[u64],
+    methods: &[Method],
+    mem_budget: f64,
+    budget: SearchBudget,
+) -> TrainSearch {
+    let space = train_space(plat, topo, cfg, seq_len, batch_sizes, methods, mem_budget);
+    let mut stats = SearchStats {
+        enumerated: space.enumerated(),
+        pruned_infeasible: space.pruned.len(),
+        ..Default::default()
+    };
+    let mut evals = Vec::new();
+    for cand in &space.candidates {
+        if evals.len() >= budget.max_costed {
+            stats.skipped += 1;
+            continue;
+        }
+        evals.push(eval_train(plat, topo, cfg, cand, mem_budget));
+    }
+    stats.costed = evals.len();
+    let frontier = pareto_indices(&evals.iter().map(|e| e.objectives()).collect::<Vec<_>>());
+    TrainSearch { evals, frontier, pruned: space.pruned, stats }
+}
+
+/// Result of a serving search.
+#[derive(Debug, Clone)]
+pub struct ServeSearch {
+    /// every costed candidate, in enumeration order
+    pub evals: Vec<ServeEval>,
+    /// indices into `evals` forming the Pareto frontier over candidates
+    /// that meet `target_qps` (without a target: every candidate with
+    /// *some* SLO capacity — a deployment missing the SLO even at the
+    /// bracket floor never makes the frontier)
+    pub frontier: Vec<usize>,
+    /// infeasible candidates (label + reason), never costed
+    pub pruned: Vec<PrunedCandidate>,
+    /// bookkeeping for reports and the pruning-invariant tests
+    pub stats: SearchStats,
+    /// the capacity target frontier membership was gated on
+    pub target_qps: Option<f64>,
+}
+
+impl ServeSearch {
+    /// Frontier evals sorted for presentation: GPUs ascending, then
+    /// capacity descending, then label (deterministic tie-breaking).
+    pub fn frontier_evals(&self) -> Vec<&ServeEval> {
+        let mut v: Vec<&ServeEval> = self.frontier.iter().map(|&i| &self.evals[i]).collect();
+        v.sort_by(|a, b| {
+            a.gpus
+                .cmp(&b.gpus)
+                .then_with(|| {
+                    b.max_qps
+                        .unwrap_or(0.0)
+                        .partial_cmp(&a.max_qps.unwrap_or(0.0))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .then_with(|| a.cand.label().cmp(&b.cand.label()))
+        });
+        v
+    }
+
+    /// The cheapest frontier point — fewest GPUs, capacity as the
+    /// tie-break — i.e. the "min GPU count meeting the SLO at the
+    /// target" answer.
+    pub fn min_gpu_point(&self) -> Option<&ServeEval> {
+        self.frontier_evals().into_iter().next()
+    }
+}
+
+/// Joint engine × TP-degree × load search for serving: enumerate, prune
+/// on deploy-time memory checks, bisect each survivor's
+/// max-QPS-under-SLO (shape-preserving re-arm of `base`), and keep the
+/// (capacity × −GPUs × −$/h) Pareto frontier over candidates sustaining
+/// `target_qps` (with `None`, over every candidate with some capacity).
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_serve(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engines: &[EngineSpec],
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    target_qps: Option<f64>,
+    bracket: (f64, f64),
+    budget: SearchBudget,
+) -> Result<ServeSearch> {
+    let space = serve_space(plat, cfg, engines);
+    let mut stats = SearchStats {
+        enumerated: space.enumerated(),
+        pruned_infeasible: space.pruned.len(),
+        ..Default::default()
+    };
+    let mut evals: Vec<ServeEval> = Vec::new();
+    for cand in &space.candidates {
+        if evals.len() >= budget.max_costed {
+            stats.skipped += 1;
+            continue;
+        }
+        // dominance early-prune: a smaller group of the same engine
+        // already saturates the bracket — a wider one cannot beat it on
+        // capacity and strictly loses on GPUs and $.
+        if budget.early_prune
+            && evals.iter().any(|e| {
+                e.cand.engine.name == cand.engine.name
+                    && e.gpus < cand.gpus()
+                    && e.max_qps == Some(bracket.1)
+            })
+        {
+            stats.skipped += 1;
+            continue;
+        }
+        evals.push(eval_serve(plat, cfg, cand, base, slo, bracket)?);
+    }
+    stats.costed = evals.len();
+    // frontier over qualifying candidates only; indices stay into
+    // `evals`.  Without a target, a candidate still needs *some*
+    // capacity — a deployment that misses the SLO even at the bracket
+    // floor would otherwise win on the GPU/$ axes with 0 QPS and the
+    // "cheapest deployment meeting the SLO" summary would lie.
+    let qualifying: Vec<usize> = (0..evals.len())
+        .filter(|&i| match target_qps {
+            Some(t) => evals[i].meets_target(t),
+            None => evals[i].max_qps.is_some(),
+        })
+        .collect();
+    let points: Vec<Vec<f64>> = qualifying.iter().map(|&i| evals[i].objectives()).collect();
+    let frontier: Vec<usize> = pareto_indices(&points).into_iter().map(|k| qualifying[k]).collect();
+    Ok(ServeSearch { evals, frontier, pruned: space.pruned, stats, target_qps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn train_search_frontier_is_nonempty_and_consistent() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let s = autotune_train(&plat, &topo, &cfg, 350, &[4], &[], plat.gpu.mem_bytes,
+                               SearchBudget::default());
+        assert!(!s.frontier.is_empty());
+        assert_eq!(s.stats.costed, s.evals.len());
+        assert_eq!(s.stats.enumerated, s.stats.costed + s.stats.pruned_infeasible);
+        let best = s.best_throughput().unwrap();
+        // the best-throughput frontier point is the global throughput max
+        for e in &s.evals {
+            assert!(e.tokens_per_s <= best.tokens_per_s + 1e-9, "{}", e.cand.label());
+        }
+    }
+
+    #[test]
+    fn train_budget_caps_costing_deterministically() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let budget = SearchBudget { max_costed: 3, early_prune: true };
+        let a = autotune_train(&plat, &topo, &cfg, 350, &[4], &[], plat.gpu.mem_bytes, budget);
+        let b = autotune_train(&plat, &topo, &cfg, 350, &[4], &[], plat.gpu.mem_bytes, budget);
+        assert_eq!(a.evals.len(), 3);
+        assert!(a.stats.skipped > 0);
+        let labels = |s: &TrainSearch| {
+            s.evals.iter().map(|e| e.cand.label()).collect::<Vec<_>>()
+        };
+        assert_eq!(labels(&a), labels(&b), "same budget, same candidates");
+    }
+
+    #[test]
+    fn serve_early_prune_skips_saturated_wider_groups() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX); // everything passes
+        let engines = [EngineSpec::vllm()];
+        let pruned = autotune_serve(&plat, &cfg, &engines, &base, &slo, None, (0.5, 4.0),
+                                    SearchBudget::default())
+            .unwrap();
+        // TP1 hits the bracket ceiling, so TP2/4/8 are never costed
+        assert_eq!(pruned.stats.costed, 1);
+        assert_eq!(pruned.stats.skipped, 3);
+        let full = autotune_serve(&plat, &cfg, &engines, &base, &slo, None, (0.5, 4.0),
+                                  SearchBudget { max_costed: usize::MAX, early_prune: false })
+            .unwrap();
+        assert_eq!(full.stats.costed, 4);
+        // both searches agree on the frontier's min-GPU point
+        assert_eq!(pruned.min_gpu_point().unwrap().cand.label(),
+                   full.min_gpu_point().unwrap().cand.label());
+    }
+
+    #[test]
+    fn serve_target_gates_frontier_membership() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let engines = [EngineSpec::vllm()];
+        let s = autotune_serve(&plat, &cfg, &engines, &base, &slo, Some(1e9), (0.5, 4.0),
+                               SearchBudget::default())
+            .unwrap();
+        assert!(s.frontier.is_empty(), "nothing sustains 1e9 QPS");
+        assert!(!s.evals.is_empty(), "candidates were still costed and reported");
+        assert!(s.min_gpu_point().is_none());
+    }
+
+    #[test]
+    fn capacity_less_candidates_never_reach_the_frontier() {
+        // no target given + an impossible SLO: every eval has max_qps
+        // None, and none of them may be reported as "cheapest deployment
+        // meeting the SLO"
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let never = SloSpec::new(0.9, 0.0, 0.0);
+        let s = autotune_serve(&plat, &cfg, &[EngineSpec::vllm()], &base, &never, None,
+                               (0.5, 4.0), SearchBudget::default())
+            .unwrap();
+        assert!(!s.evals.is_empty());
+        assert!(s.evals.iter().all(|e| e.max_qps.is_none()));
+        assert!(s.frontier.is_empty(), "0-capacity candidates must not be Pareto points");
+        assert!(s.min_gpu_point().is_none());
+    }
+}

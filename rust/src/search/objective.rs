@@ -1,0 +1,183 @@
+//! Costing + objective vectors for the autotuner's two searches.
+//!
+//! An *evaluation* attaches the expensive numbers to a feasible
+//! candidate: a full step simulation for training, a bisected
+//! max-QPS-under-SLO for serving.  Each eval then projects itself onto a
+//! maximize-everything objective vector (`pareto` convention):
+//!
+//! * training — global throughput (tokens/s) × memory headroom below the
+//!   budget (a plan at the cliff edge is a worse pick than an equally
+//!   fast one with room for longer sequences), and
+//! * serving — SLO capacity (max QPS) × −GPUs × −$/h (the per-GPU-hour
+//!   price on [`Platform`]) — "cheapest deployment meeting the SLO at
+//!   the target load" falls out of the frontier's min-GPU point.
+
+use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
+use crate::hw::{Platform, Topology};
+use crate::report::load::max_qps_under_slo_on;
+use crate::train::{simulate_megatron_plan, simulate_step_plan};
+use crate::util::error::Result;
+
+use super::space::{ServeCandidate, TrainCandidate, TrainStack};
+
+/// A costed training candidate.
+#[derive(Debug, Clone)]
+pub struct TrainEval {
+    /// the candidate that was costed
+    pub cand: TrainCandidate,
+    /// modeled step wall time, seconds
+    pub step_time: f64,
+    /// global training throughput, tokens/s
+    pub tokens_per_s: f64,
+    /// per-GPU memory demand, GB
+    pub mem_gb: f64,
+    /// memory left below the budget, GB
+    pub headroom_gb: f64,
+}
+
+impl TrainEval {
+    /// Maximize-all objective vector: (throughput, memory headroom).
+    pub fn objectives(&self) -> Vec<f64> {
+        vec![self.tokens_per_s, self.headroom_gb]
+    }
+}
+
+/// Cost one feasible training candidate through its stack's simulator.
+/// The space already pruned memory-infeasible candidates, so an OOM here
+/// would be a model inconsistency — debug-asserted, not handled.
+pub fn eval_train(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    cand: &TrainCandidate,
+    mem_budget: f64,
+) -> TrainEval {
+    let r = match &cand.stack {
+        TrainStack::Megatron => simulate_megatron_plan(plat, topo, cfg, &cand.plan, cand.wl),
+        TrainStack::DeepSpeed(m) => simulate_step_plan(plat, topo, cfg, m, cand.wl, &cand.plan),
+    };
+    debug_assert!(!r.is_oom(), "pruning let an OOM candidate through: {}", cand.label());
+    let mem_gb = r.mem.gpu_total() / 1e9;
+    TrainEval {
+        cand: cand.clone(),
+        step_time: r.step_time,
+        tokens_per_s: r.tokens_per_s,
+        mem_gb,
+        headroom_gb: (mem_budget / 1e9 - mem_gb).max(0.0),
+    }
+}
+
+/// A costed serving candidate.
+#[derive(Debug, Clone)]
+pub struct ServeEval {
+    /// the candidate that was costed
+    pub cand: ServeCandidate,
+    /// highest mean offered QPS meeting the SLO in the search bracket;
+    /// None when even the bracket floor misses it
+    pub max_qps: Option<f64>,
+    /// GPUs the deployment occupies (its TP degree)
+    pub gpus: u32,
+    /// rental cost of those GPUs, USD per hour
+    pub cost_per_hour: f64,
+}
+
+impl ServeEval {
+    /// Maximize-all objective vector: (capacity, −GPUs, −$/h).  A
+    /// capacity-less candidate scores 0 QPS.
+    pub fn objectives(&self) -> Vec<f64> {
+        vec![self.max_qps.unwrap_or(0.0), -f64::from(self.gpus), -self.cost_per_hour]
+    }
+
+    /// Whether the deployment sustains `target` QPS within the SLO.
+    pub fn meets_target(&self, target: f64) -> bool {
+        self.max_qps.is_some_and(|q| q >= target)
+    }
+}
+
+/// Cost one feasible serving candidate: bisect its max QPS under the SLO
+/// over `bracket`, preserving the base workload's arrival shape.
+pub fn eval_serve(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    cand: &ServeCandidate,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    bracket: (f64, f64),
+) -> Result<ServeEval> {
+    let max_qps = max_qps_under_slo_on(
+        plat, cfg, &cand.engine, &cand.plan, base, slo, bracket.0, bracket.1,
+    )?;
+    let gpus = cand.gpus();
+    Ok(ServeEval {
+        cand: cand.clone(),
+        max_qps,
+        gpus,
+        cost_per_hour: f64::from(gpus) * plat.gpu_hour_usd,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::hw::PlatformId;
+    use crate::parallel::ParallelPlan;
+    use crate::serve::EngineSpec;
+
+    #[test]
+    fn train_eval_matches_the_underlying_simulators() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let wl = crate::config::TrainWorkload { seq_len: 350, batch_size: 4 };
+        let budget = plat.gpu.mem_bytes;
+        let meg = TrainCandidate {
+            plan: ParallelPlan::new(2, 1, 4),
+            stack: TrainStack::Megatron,
+            wl,
+        };
+        let e = eval_train(&plat, &topo, &cfg, &meg, budget);
+        let r = simulate_megatron_plan(&plat, &topo, &cfg, &meg.plan, wl);
+        assert_eq!(e.tokens_per_s, r.tokens_per_s);
+        assert_eq!(e.step_time, r.step_time);
+        assert!((e.mem_gb + e.headroom_gb - budget / 1e9).abs() < 1e-9);
+        let ds = TrainCandidate {
+            plan: ParallelPlan::data_parallel(8),
+            stack: TrainStack::DeepSpeed(Method::parse("Z3").unwrap()),
+            wl,
+        };
+        let e2 = eval_train(&plat, &topo, &cfg, &ds, budget);
+        let r2 = simulate_step_plan(&plat, &topo, &cfg, &Method::parse("Z3").unwrap(), wl,
+                                    &ds.plan);
+        assert_eq!(e2.tokens_per_s, r2.tokens_per_s);
+        // objective vectors are maximize-all and finite
+        for o in [e.objectives(), e2.objectives()] {
+            assert!(o.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn serve_eval_prices_gpus_and_dollars() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let cand = ServeCandidate {
+            plan: engine.plan_with_tp(&plat, &cfg, 2).unwrap(),
+            engine,
+        };
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let e = eval_serve(&plat, &cfg, &cand, &base, &slo, (0.5, 4.0)).unwrap();
+        assert_eq!(e.gpus, 2);
+        assert!((e.cost_per_hour - 2.0 * plat.gpu_hour_usd).abs() < 1e-12);
+        assert_eq!(e.max_qps, Some(4.0), "unbounded SLO passes at hi");
+        assert!(e.meets_target(4.0) && !e.meets_target(5.0));
+        assert_eq!(e.objectives()[1], -2.0);
+        // an impossible SLO yields a capacity-less eval, objective 0
+        let never = SloSpec::new(0.9, 0.0, 0.0);
+        let e0 = eval_serve(&plat, &cfg, &cand, &base, &never, (0.5, 4.0)).unwrap();
+        assert_eq!(e0.max_qps, None);
+        assert_eq!(e0.objectives()[0], 0.0);
+        assert!(!e0.meets_target(0.1));
+    }
+}

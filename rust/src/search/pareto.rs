@@ -1,0 +1,120 @@
+//! Pareto-dominance filtering for the configuration autotuner.
+//!
+//! A search over (plan × method × load) rarely has one best answer: a
+//! faster plan may sit closer to the memory cliff, a cheaper deployment
+//! may carry thinner SLO margin.  Instead of a brittle argmax the driver
+//! returns the *frontier* — every candidate no other candidate beats on
+//! all axes at once — and lets the reader (or a downstream policy) pick
+//! the trade-off.  Axes are plain `f64`s with a maximize-everything
+//! convention: callers negate minimize-axes (GPU count, $/h) when
+//! building the objective vector.
+
+/// Whether objective vector `a` dominates `b`: at least as good on every
+/// axis and strictly better on at least one.  Both vectors must have the
+/// same arity and finite entries (NaN never dominates and is never
+/// dominated, which would corrupt a frontier — keep it out).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "objective arity mismatch");
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the Pareto-optimal points, in input order.  Exact
+/// duplicates keep only the first occurrence — together with the
+/// deterministic input order this makes the frontier reproducible
+/// run-to-run (the driver's tie-breaking rule).
+pub fn pareto_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut out = Vec::new();
+    'candidate: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            if dominates(q, p) {
+                continue 'candidate;
+            }
+            if j < i && q == p {
+                continue 'candidate; // duplicate coordinates: first wins
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict_somewhere() {
+        assert!(dominates(&[2.0, 1.0], &[1.0, 1.0]));
+        assert!(dominates(&[2.0, 2.0], &[1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal never dominates");
+        assert!(!dominates(&[2.0, 0.5], &[1.0, 1.0]), "trade-off: incomparable");
+        assert!(!dominates(&[1.0, 1.0], &[2.0, 0.5]));
+    }
+
+    #[test]
+    fn frontier_excludes_exactly_the_dominated() {
+        // points on y = 1/x are mutually incomparable; (1,1) is inside
+        let pts = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+            vec![1.0, 1.0], // dominated by (2,2)
+        ];
+        assert_eq!(pareto_indices(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn frontier_properties_hold_on_a_grid() {
+        // exhaustive property check on a deterministic pseudo-random set
+        let mut pts = Vec::new();
+        let mut x = 7u64;
+        for _ in 0..60 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let a = (x >> 33) % 8;
+            let b = (x >> 13) % 8;
+            pts.push(vec![a as f64, b as f64]);
+        }
+        let front = pareto_indices(&pts);
+        assert!(!front.is_empty());
+        // no frontier point dominates another frontier point
+        for &i in &front {
+            for &j in &front {
+                assert!(i == j || !dominates(&pts[i], &pts[j]), "{i} dominates {j}");
+            }
+        }
+        // every excluded point is dominated by (or duplicates) a frontier point
+        for i in 0..pts.len() {
+            if front.contains(&i) {
+                continue;
+            }
+            let covered = front
+                .iter()
+                .any(|&j| dominates(&pts[j], &pts[i]) || (j < i && pts[j] == pts[i]));
+            assert!(covered, "point {i} excluded but not dominated/duplicated");
+        }
+    }
+
+    #[test]
+    fn duplicates_keep_first_only() {
+        let pts = vec![vec![3.0, 3.0], vec![3.0, 3.0], vec![1.0, 5.0]];
+        assert_eq!(pareto_indices(&pts), vec![0, 2]);
+    }
+
+    #[test]
+    fn single_point_is_its_own_frontier() {
+        assert_eq!(pareto_indices(&[vec![1.0]]), vec![0]);
+        assert!(pareto_indices(&[]).is_empty());
+    }
+}

@@ -1,0 +1,266 @@
+//! Candidate enumeration + memory-feasibility pruning for the autotuner.
+//!
+//! A [`ConfigSpace`] is built in two phases: *enumerate* every candidate
+//! the grammar allows (plan × stack/method × batch for training, engine ×
+//! TP degree for serving), then *prune* with the cheap memory models
+//! (`parallel::memory`, `memory::{training,kv}`) so nothing infeasible
+//! ever reaches a step simulator or a serving event loop — the invariant
+//! `tests/autotune.rs` pins.  Pruned candidates are kept (label + reason)
+//! so reports can show *why* a configuration is out, the same courtesy
+//! `sweep-parallel` extends to OOM rows.
+
+use crate::config::{LlamaConfig, Method, TrainWorkload};
+use crate::hw::{Platform, Topology};
+use crate::memory::{check_fit, training_memory_plan, Fit, MemoryBreakdown};
+use crate::parallel::{megatron_memory, ParallelPlan};
+use crate::serve::{DeployPlan, EngineSpec};
+use crate::train::megatron::MEGATRON_ACT_DISCOUNT;
+
+/// Which training stack prices a candidate — the repo models two:
+/// Megatron-LM executes arbitrary TP×PP×DP plans, DeepSpeed/ZeRO is
+/// DP-only but sweeps the paper's method grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrainStack {
+    /// Megatron-LM plan simulator (fused kernels, 1F1B pipeline)
+    Megatron,
+    /// DeepSpeed step simulator under this optimization method
+    DeepSpeed(Method),
+}
+
+impl TrainStack {
+    /// Stack label for frontier tables ("Megatron" / "DS F+Z3").
+    pub fn label(&self) -> String {
+        match self {
+            TrainStack::Megatron => "Megatron".to_string(),
+            TrainStack::DeepSpeed(m) => format!("DS {m}"),
+        }
+    }
+}
+
+/// One point of the training design space.
+#[derive(Debug, Clone)]
+pub struct TrainCandidate {
+    /// the TP×PP×DP plan (always the full topology world)
+    pub plan: ParallelPlan,
+    /// which stack / method combination executes it
+    pub stack: TrainStack,
+    /// per-replica batch and sequence length
+    pub wl: TrainWorkload,
+}
+
+impl TrainCandidate {
+    /// Full config label ("TP2·PP2·DP2 Megatron bs8").
+    pub fn label(&self) -> String {
+        format!("{} {} bs{}", self.plan.label(), self.stack.label(), self.wl.batch_size)
+    }
+
+    /// Per-GPU memory demand from the analytical models alone — the
+    /// pruning signal; no step simulation happens here.
+    pub fn memory(&self, plat: &Platform, cfg: &LlamaConfig) -> MemoryBreakdown {
+        match &self.stack {
+            TrainStack::Megatron => {
+                megatron_memory(plat, cfg, &self.plan, self.wl, MEGATRON_ACT_DISCOUNT)
+            }
+            TrainStack::DeepSpeed(m) => {
+                training_memory_plan(plat, cfg, m, self.wl.batch_size, self.wl.seq_len, &self.plan)
+            }
+        }
+    }
+}
+
+/// One point of the serving design space: an engine on a forced TP group
+/// (already memory-checked — construction goes through
+/// [`EngineSpec::plan_with_tp`]).
+#[derive(Debug, Clone)]
+pub struct ServeCandidate {
+    /// the engine policy
+    pub engine: EngineSpec,
+    /// the feasible deployment (TP degree + whole-group KV capacity)
+    pub plan: DeployPlan,
+}
+
+impl ServeCandidate {
+    /// GPUs the deployment occupies (its TP degree).
+    pub fn gpus(&self) -> u32 {
+        self.plan.tp()
+    }
+
+    /// Config label ("vLLM TP4").
+    pub fn label(&self) -> String {
+        format!("{} TP{}", self.engine.name, self.plan.tp())
+    }
+}
+
+/// A candidate rejected before costing, with the reason.
+#[derive(Debug, Clone)]
+pub struct PrunedCandidate {
+    /// the candidate's config label
+    pub label: String,
+    /// why it was infeasible ("GPU OOM: 93.2 GB", "KV pool below floor")
+    pub reason: String,
+}
+
+/// The enumerated-then-pruned candidate set handed to the driver.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace<C> {
+    /// memory-feasible candidates, in deterministic enumeration order —
+    /// the only ones the driver may cost
+    pub candidates: Vec<C>,
+    /// infeasible candidates, never costed
+    pub pruned: Vec<PrunedCandidate>,
+}
+
+impl<C> ConfigSpace<C> {
+    /// Total candidates the grammar enumerated (feasible + pruned).
+    pub fn enumerated(&self) -> usize {
+        self.candidates.len() + self.pruned.len()
+    }
+}
+
+/// Enumerate the training space for a (platform, topology, model):
+/// every valid plan under the Megatron stack, plus the DeepSpeed method
+/// grid on the pure-DP plan (the only plan that stack executes), each at
+/// every requested batch size — then prune anything whose analytical
+/// memory demand fails `check_fit` or exceeds `mem_budget` bytes/GPU.
+pub fn train_space(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    seq_len: u64,
+    batch_sizes: &[u64],
+    methods: &[Method],
+    mem_budget: f64,
+) -> ConfigSpace<TrainCandidate> {
+    let mut space = ConfigSpace { candidates: Vec::new(), pruned: Vec::new() };
+    let dp_world = ParallelPlan::data_parallel(topo.n_gpus());
+    for &bs in batch_sizes {
+        let wl = TrainWorkload { seq_len, batch_size: bs };
+        let mut consider = |cand: TrainCandidate| {
+            let mem = cand.memory(plat, cfg);
+            let reason = match check_fit(plat, &mem) {
+                Fit::OomGpu => Some(format!("GPU OOM: {:.1} GB/GPU", mem.gpu_total() / 1e9)),
+                Fit::OomHost => Some(format!("host OOM: {:.1} GB pinned", mem.host_bytes / 1e9)),
+                Fit::Ok if mem.gpu_total() > mem_budget => {
+                    Some(format!("over budget: {:.1} GB/GPU > {:.1} GB",
+                                 mem.gpu_total() / 1e9, mem_budget / 1e9))
+                }
+                Fit::Ok => None,
+            };
+            match reason {
+                Some(reason) => {
+                    space.pruned.push(PrunedCandidate { label: cand.label(), reason })
+                }
+                None => space.candidates.push(cand),
+            }
+        };
+        for plan in ParallelPlan::enumerate(topo, cfg) {
+            consider(TrainCandidate { plan, stack: TrainStack::Megatron, wl });
+        }
+        for m in methods {
+            consider(TrainCandidate { plan: dp_world, stack: TrainStack::DeepSpeed(*m), wl });
+        }
+    }
+    space
+}
+
+/// Enumerate the serving space: each engine × each power-of-two TP
+/// degree on the box, pruned by the engine's own deploy-time memory
+/// check (weights fit, KV pool above the engine's floor).
+pub fn serve_space(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engines: &[EngineSpec],
+) -> ConfigSpace<ServeCandidate> {
+    let mut space = ConfigSpace { candidates: Vec::new(), pruned: Vec::new() };
+    for engine in engines {
+        for plan in ParallelPlan::serving_candidates(plat.n_gpus) {
+            match engine.plan_with_tp(plat, cfg, plan.tp) {
+                Some(deploy) => space
+                    .candidates
+                    .push(ServeCandidate { engine: engine.clone(), plan: deploy }),
+                None => space.pruned.push(PrunedCandidate {
+                    label: format!("{} TP{}", engine.name, plan.tp),
+                    reason: "weights + KV floor exceed the group's memory".to_string(),
+                }),
+            }
+        }
+    }
+    space
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn train_space_prunes_oom_keeps_feasible() {
+        // 70B on one 8-GPU A800 node: no Megatron plan fits (the
+        // sweep-parallel tests pin this), so everything must be pruned
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_70b();
+        let s = train_space(&plat, &topo, &cfg, 350, &[8], &[], plat.gpu.mem_bytes);
+        assert!(s.candidates.is_empty(), "no 70B plan fits a single node");
+        assert_eq!(s.enumerated(), 10); // the full 8-GPU plan grid
+        assert!(s.pruned.iter().all(|p| p.reason.contains("OOM")));
+        // 4 nodes: feasible plans appear, infeasible ones stay pruned
+        let topo4 = Topology::multi_node(&plat, 4);
+        let s4 = train_space(&plat, &topo4, &cfg, 350, &[16], &[], plat.gpu.mem_bytes);
+        assert!(!s4.candidates.is_empty());
+        assert!(!s4.pruned.is_empty());
+        for c in &s4.candidates {
+            assert_eq!(check_fit(&plat, &c.memory(&plat, &cfg)), Fit::Ok, "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn train_space_budget_tightens_the_cut() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let full = train_space(&plat, &topo, &cfg, 350, &[1], &[], plat.gpu.mem_bytes);
+        let tight = train_space(&plat, &topo, &cfg, 350, &[1], &[], 30e9);
+        assert!(tight.candidates.len() < full.candidates.len());
+        assert_eq!(tight.enumerated(), full.enumerated());
+        for c in &tight.candidates {
+            assert!(c.memory(&plat, &cfg).gpu_total() <= 30e9, "{}", c.label());
+        }
+        assert!(tight.pruned.iter().any(|p| p.reason.contains("over budget")));
+    }
+
+    #[test]
+    fn train_space_methods_ride_the_dp_plan() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let methods: Vec<Method> =
+            ["Naive", "Z3", "F+R+Z2"].iter().map(|l| Method::parse(l).unwrap()).collect();
+        let s = train_space(&plat, &topo, &cfg, 350, &[1, 4], &methods, plat.gpu.mem_bytes);
+        let ds: Vec<&TrainCandidate> = s
+            .candidates
+            .iter()
+            .filter(|c| matches!(c.stack, TrainStack::DeepSpeed(_)))
+            .collect();
+        assert!(!ds.is_empty());
+        assert!(ds.iter().all(|c| c.plan == ParallelPlan::data_parallel(8)));
+        // two batch sizes double the enumeration
+        assert_eq!(s.enumerated(), 2 * (10 + methods.len()));
+    }
+
+    #[test]
+    fn serve_space_prunes_undeployable_groups() {
+        // 70B on a 24 GB box: TGI can deploy nowhere (pre-GQA KV), vLLM
+        // only on the widest groups — pruning mirrors Fig. 6's OOM cells
+        let plat = Platform::get(PlatformId::Rtx4090);
+        let cfg = LlamaConfig::llama2_70b();
+        let s = serve_space(&plat, &cfg, &EngineSpec::all());
+        assert_eq!(s.enumerated(), 3 * 4); // 3 engines × TP {1,2,4,8}
+        assert!(s.candidates.iter().all(|c| c.engine.name != "TGI"));
+        for c in &s.candidates {
+            // feasibility really was checked at enumeration time
+            assert!(c.engine.plan_with_tp(&plat, &cfg, c.gpus()).is_some());
+        }
+        assert!(!s.pruned.is_empty());
+    }
+}

@@ -122,17 +122,40 @@ impl EngineSpec {
         self.iter_overhead * (1.0 - self.async_overlap)
     }
 
-    /// Deployment plan: smallest TP group that fits, with the engine's
-    /// memory budget, or None (the Fig. 6 OOM cells).
-    pub fn plan(&self, plat: &Platform, cfg: &LlamaConfig) -> Option<DeployPlan> {
+    /// The model's architecture with this engine's KV-reservation quirk
+    /// applied (pre-GQA TGI reserves MHA-sized KV).
+    fn kv_config(&self, cfg: &LlamaConfig) -> LlamaConfig {
         let mut kv_cfg = cfg.clone();
         if self.assume_mha_kv {
             kv_cfg.n_kv_heads = kv_cfg.n_heads; // reserve MHA-sized KV
         }
+        kv_cfg
+    }
+
+    /// Deployment plan: smallest TP group that fits, with the engine's
+    /// memory budget, or None (the Fig. 6 OOM cells).
+    pub fn plan(&self, plat: &Platform, cfg: &LlamaConfig) -> Option<DeployPlan> {
+        let kv_cfg = self.kv_config(cfg);
         let parallel = min_serving_plan(plat, &kv_cfg, Dtype::Bf16,
                                         self.gpu_mem_util, self.min_kv_tokens)?;
         let mem = serve_memory(plat, &kv_cfg, &parallel, Dtype::Bf16, self.gpu_mem_util);
         Some(DeployPlan { parallel, kv_capacity_tokens: mem.kv_token_capacity })
+    }
+
+    /// Deployment forced onto a specific TP degree (the autotuner's
+    /// candidate axis: TP groups *larger* than the minimum trade GPUs for
+    /// KV capacity and per-iteration speed).  None when the group doesn't
+    /// exist on the box or its KV pool is below the engine's floor —
+    /// exactly the memory-feasibility check `plan` applies per degree.
+    pub fn plan_with_tp(&self, plat: &Platform, cfg: &LlamaConfig, tp: u32) -> Option<DeployPlan> {
+        if tp == 0 || tp > plat.n_gpus {
+            return None;
+        }
+        let kv_cfg = self.kv_config(cfg);
+        let parallel = ParallelPlan::tensor_parallel(tp);
+        let mem = serve_memory(plat, &kv_cfg, &parallel, Dtype::Bf16, self.gpu_mem_util);
+        (mem.kv_pool_per_gpu > 0.0 && mem.kv_token_capacity >= self.min_kv_tokens)
+            .then_some(DeployPlan { parallel, kv_capacity_tokens: mem.kv_token_capacity })
     }
 }
 
@@ -193,6 +216,25 @@ mod tests {
         assert!(p70.tp() >= 2);
         // serving deployments are TP-only plans
         assert_eq!((p70.parallel.pp, p70.parallel.dp), (1, 1));
+    }
+
+    #[test]
+    fn plan_with_tp_matches_plan_at_min_and_grows_kv() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_70b();
+        let e = EngineSpec::vllm();
+        let auto = e.plan(&plat, &cfg).unwrap();
+        let forced = e.plan_with_tp(&plat, &cfg, auto.tp()).unwrap();
+        assert_eq!(forced.kv_capacity_tokens, auto.kv_capacity_tokens);
+        // a larger group buys a strictly larger KV pool…
+        let bigger = e.plan_with_tp(&plat, &cfg, auto.tp() * 2).unwrap();
+        assert!(bigger.kv_capacity_tokens > auto.kv_capacity_tokens);
+        // …and degrees below the minimum, or off the box, are refused
+        if auto.tp() > 1 {
+            assert!(e.plan_with_tp(&plat, &cfg, auto.tp() / 2).is_none());
+        }
+        assert!(e.plan_with_tp(&plat, &cfg, 0).is_none());
+        assert!(e.plan_with_tp(&plat, &cfg, 16).is_none());
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod sim;
 pub mod token_kv;
 
 pub use engine::{DeployPlan, EngineSpec, KvPolicy};
-pub use sim::{simulate, simulate_requests, simulate_workload, SimResult};
+pub use sim::{simulate, simulate_requests, simulate_requests_on, simulate_workload, SimResult};

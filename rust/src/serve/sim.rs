@@ -355,6 +355,23 @@ pub fn simulate_requests(
     requests: &[Request],
 ) -> Option<SimResult> {
     let plan = engine.plan(plat, cfg)?;
+    Some(simulate_requests_on(plat, cfg, engine, &plan, requests))
+}
+
+/// Replay a request list on an explicit [`DeployPlan`] instead of the
+/// engine's own minimum-TP choice — the entry point the configuration
+/// autotuner uses to price *every* feasible TP degree, not just the
+/// smallest (`search::autotune_serve`).  Same event loop and semantics
+/// as [`simulate_requests`]; the caller owns plan feasibility
+/// (`EngineSpec::plan_with_tp`).
+pub fn simulate_requests_on(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    requests: &[Request],
+) -> SimResult {
+    let plan = *plan;
     let mut kv = Kv::new(engine.kv, plan.kv_capacity_tokens);
     let mut cost = IterCostCache::new();
 
@@ -521,7 +538,7 @@ pub fn simulate_requests(
         }
     }
 
-    Some(SimResult {
+    SimResult {
         completions,
         makespan: clock,
         output_tokens,
@@ -531,7 +548,7 @@ pub fn simulate_requests(
         preemptions,
         rejected,
         mean_iter_time: if decode_iters > 0 { iter_time_sum / decode_iters as f64 } else { 0.0 },
-    })
+    }
 }
 
 #[cfg(test)]
@@ -672,6 +689,29 @@ mod tests {
         assert_eq!(r.goodput(&fail), 0.0);
         // TPOT is positive and below the mean iteration time ceiling
         assert!(r.tpot_cdf().quantile(0.5) > 0.0);
+    }
+
+    #[test]
+    fn forced_plan_at_min_tp_reproduces_auto_plan() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_13b();
+        let engine = EngineSpec::vllm();
+        let reqs: Vec<Request> = (0..80)
+            .map(|i| Request { id: i, input_len: 512, output_len: 32, arrival: 0.1 * i as f64 })
+            .collect();
+        let auto = simulate_requests(&plat, &cfg, &engine, &reqs).unwrap();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let forced = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+        assert_eq!(auto.makespan, forced.makespan);
+        assert_eq!(auto.decode_iters, forced.decode_iters);
+        assert_eq!(auto.completions.len(), forced.completions.len());
+        // a wider TP group reprices every iteration (sharded compute +
+        // per-layer AllReduces), so forcing the plan really takes effect
+        let wide = engine.plan_with_tp(&plat, &cfg, 8).unwrap();
+        assert!(wide.kv_capacity_tokens > plan.kv_capacity_tokens);
+        let r8 = simulate_requests_on(&plat, &cfg, &engine, &wide, &reqs);
+        assert_eq!(r8.completions.len(), forced.completions.len());
+        assert_ne!(r8.makespan, forced.makespan);
     }
 
     #[test]

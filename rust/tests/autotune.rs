@@ -1,0 +1,196 @@
+//! End-to-end tests for the configuration autotuner (ISSUE 4 acceptance
+//! criteria): the pruned-infeasible-never-costed invariant, Pareto
+//! frontier properties over real searches, agreement between
+//! `autotune-train` and an exhaustive `sweep-parallel` over the same
+//! space, and a seeded `autotune-serve` regression whose minimum-GPU
+//! point provably meets the SLO under `simulate_workload`'s event loop.
+
+use llm_perf_lab::config::{Arrival, LlamaConfig, Method, SloSpec, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId, Topology};
+use llm_perf_lab::memory::check_fit;
+use llm_perf_lab::memory::Fit;
+use llm_perf_lab::report::parallel::sweep_plans;
+use llm_perf_lab::search::{
+    autotune_serve, autotune_train, dominates, serve_space, train_space, SearchBudget,
+    TrainStack,
+};
+use llm_perf_lab::serve::{simulate_requests_on, EngineSpec};
+
+fn budget() -> SearchBudget {
+    SearchBudget::default()
+}
+
+/// Invariant: everything the space enumerates is either costed or
+/// pruned-with-a-reason, feasible candidates are exactly the costed set,
+/// and no candidate the memory models reject is ever handed to a
+/// simulator.  (The spaces are the only entry to the drivers, so
+/// checking the space + the driver's stats pins the whole path.)
+#[test]
+fn pruned_infeasible_candidates_are_never_costed() {
+    let plat = Platform::get(PlatformId::A800);
+    let topo = Topology::multi_node(&plat, 2);
+    let cfg = LlamaConfig::llama2_70b();
+    let methods: Vec<Method> =
+        ["Naive", "Z3+O"].iter().map(|l| Method::parse(l).unwrap()).collect();
+    let space = train_space(&plat, &topo, &cfg, 350, &[8], &methods, plat.gpu.mem_bytes);
+    assert!(!space.pruned.is_empty(), "70B on 2 nodes must prune something");
+    // every kept candidate really is feasible; every pruned one has a reason
+    for c in &space.candidates {
+        assert_eq!(check_fit(&plat, &c.memory(&plat, &cfg)), Fit::Ok, "{}", c.label());
+    }
+    for p in &space.pruned {
+        assert!(!p.reason.is_empty(), "{}", p.label);
+    }
+    // the driver costs exactly the feasible set — nothing more
+    let search = autotune_train(&plat, &topo, &cfg, 350, &[8], &methods, plat.gpu.mem_bytes,
+                                budget());
+    assert_eq!(search.stats.costed, space.candidates.len());
+    assert_eq!(search.stats.pruned_infeasible, space.pruned.len());
+    assert_eq!(search.stats.enumerated,
+               search.stats.costed + search.stats.pruned_infeasible + search.stats.skipped);
+    let costed_labels: Vec<String> = search.evals.iter().map(|e| e.cand.label()).collect();
+    for p in &search.pruned {
+        assert!(!costed_labels.contains(&p.label), "pruned {} was costed", p.label);
+    }
+    // serving side: the space only keeps deployable (engine, TP) pairs
+    let sspace = serve_space(&Platform::get(PlatformId::Rtx4090), &cfg, &EngineSpec::all());
+    for c in &sspace.candidates {
+        assert!(c.engine
+            .plan_with_tp(&Platform::get(PlatformId::Rtx4090), &cfg, c.gpus())
+            .is_some());
+    }
+    assert!(sspace.pruned.iter().any(|p| p.label.starts_with("TGI")),
+            "TGI × 70B × 24 GB must be pruned (Fig. 6)");
+}
+
+/// Pareto property: no frontier point dominates another, and every
+/// costed non-frontier candidate is dominated by (or duplicates) some
+/// frontier point.
+#[test]
+fn train_frontier_satisfies_pareto_properties() {
+    let plat = Platform::get(PlatformId::A800);
+    let topo = Topology::single_node(&plat);
+    let cfg = LlamaConfig::llama2_7b();
+    let methods: Vec<Method> =
+        ["Naive", "Z2", "Z3", "F", "R+Z2"].iter().map(|l| Method::parse(l).unwrap()).collect();
+    let search = autotune_train(&plat, &topo, &cfg, 350, &[1, 8], &methods,
+                                plat.gpu.mem_bytes, budget());
+    assert!(!search.frontier.is_empty());
+    let objs: Vec<Vec<f64>> = search.evals.iter().map(|e| e.objectives()).collect();
+    for &i in &search.frontier {
+        for &j in &search.frontier {
+            assert!(i == j || !dominates(&objs[i], &objs[j]),
+                    "frontier point {} dominates {}",
+                    search.evals[i].cand.label(), search.evals[j].cand.label());
+        }
+    }
+    for i in 0..search.evals.len() {
+        if search.frontier.contains(&i) {
+            continue;
+        }
+        let covered = search.frontier.iter().any(|&j| {
+            dominates(&objs[j], &objs[i]) || (j < i && objs[j] == objs[i])
+        });
+        assert!(covered, "excluded {} is not dominated", search.evals[i].cand.label());
+    }
+    // every frontier point fits the memory budget (acceptance criterion)
+    for e in search.frontier_evals() {
+        assert!(e.mem_gb * 1e9 <= plat.gpu.mem_bytes, "{}", e.cand.label());
+        assert!(e.headroom_gb >= 0.0);
+    }
+}
+
+/// Acceptance: over the same (Megatron-plan) space, `autotune-train`'s
+/// top-throughput frontier point is exactly the best runnable row of an
+/// exhaustive `sweep-parallel`.
+#[test]
+fn autotune_train_top_point_matches_exhaustive_sweep() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_13b();
+    for topo in [Topology::single_node(&plat), Topology::multi_node(&plat, 2)] {
+        let wl = llm_perf_lab::config::TrainWorkload { seq_len: 350, batch_size: 8 };
+        let search = autotune_train(&plat, &topo, &cfg, 350, &[8], &[], plat.gpu.mem_bytes,
+                                    budget());
+        let best = search.best_throughput().expect("13B must have feasible plans");
+        assert!(matches!(best.cand.stack, TrainStack::Megatron));
+        let rows = sweep_plans(&plat, &topo, &cfg, wl);
+        let sweep_best = rows.iter().filter(|r| r.fits).max_by(|a, b| {
+            a.tokens_per_s.partial_cmp(&b.tokens_per_s).unwrap()
+        });
+        let sweep_best = sweep_best.expect("sweep must find runnable plans");
+        assert_eq!(best.cand.plan, sweep_best.plan, "{} nodes", topo.n_nodes);
+        assert!((best.tokens_per_s - sweep_best.tokens_per_s).abs() < 1e-9);
+        assert!((best.step_time - sweep_best.step_time).abs() < 1e-12);
+    }
+}
+
+/// Acceptance: a seeded `autotune-serve` on a small model returns a
+/// non-empty frontier, is reproducible run-to-run, and its minimum-GPU
+/// point provably sustains the target load within the SLO when replayed
+/// through the serving event loop.
+#[test]
+fn autotune_serve_min_gpu_point_meets_slo_end_to_end() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(80).seed(7);
+    // a feasible interactive-ish SLO for 7B on A800
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let target = 2.0;
+    let run = || {
+        autotune_serve(&plat, &cfg, &EngineSpec::all(), &base, &slo, Some(target),
+                       (0.5, 16.0), budget())
+            .unwrap()
+    };
+    let search = run();
+    assert!(!search.frontier.is_empty(), "7B at 2 QPS must be servable on A800");
+    // seeded regression: identical frontier labels and capacities
+    let again = run();
+    let sig = |s: &llm_perf_lab::search::ServeSearch| {
+        s.frontier_evals()
+            .iter()
+            .map(|e| (e.cand.label(), e.max_qps.map(|q| q.to_bits())))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(sig(&search), sig(&again));
+    // every frontier point claims the target …
+    for e in search.frontier_evals() {
+        assert!(e.meets_target(target), "{}", e.cand.label());
+    }
+    // … and the min-GPU point proves it under the event loop itself
+    let min = search.min_gpu_point().unwrap();
+    let reqs = base
+        .clone()
+        .arrival(Arrival::Poisson { qps: target })
+        .generate()
+        .unwrap();
+    let replay = simulate_requests_on(&plat, &cfg, &min.cand.engine, &min.cand.plan, &reqs);
+    assert!(replay.meets_slo(&slo),
+            "min-GPU point {} misses the SLO it was selected for", min.cand.label());
+    // no cheaper deployment is on the frontier
+    for e in search.frontier_evals() {
+        assert!(e.gpus >= min.gpus);
+    }
+}
+
+/// The serving frontier is a real trade-off curve when the SLO knee
+/// differs per TP degree: wider groups may buy capacity, never fewer
+/// GPUs — GPUs ascend and capacity weakly ascends along the sorted
+/// frontier.
+#[test]
+fn serve_frontier_is_monotone_tradeoff() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_13b();
+    let base = WorkloadSpec::new(60).seed(11);
+    let slo = SloSpec::new(0.9, 2.0, 0.2);
+    let search = autotune_serve(&plat, &cfg, &[EngineSpec::vllm()], &base, &slo, None,
+                                (0.25, 32.0),
+                                SearchBudget { max_costed: usize::MAX, early_prune: false })
+        .unwrap();
+    let front = search.frontier_evals();
+    assert!(!front.is_empty());
+    for w in front.windows(2) {
+        assert!(w[0].gpus < w[1].gpus, "sorted frontier must strictly ascend in GPUs");
+        assert!(w[1].max_qps.unwrap_or(0.0) > w[0].max_qps.unwrap_or(0.0),
+                "a wider frontier group must buy capacity, else it is dominated");
+    }
+}
