@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""CI perf tracking: run two pinned llmperf scenarios, record wall time
+plus key model outputs into BENCH_ci.json, and warn (never fail) on >10%
+regression against the committed baseline.
+
+Schema of BENCH_ci.json (documented in DESIGN.md §CI perf tracking):
+
+    {
+      "schema": "llmperf-bench-ci/v1",
+      "commit": "<git sha or 'unknown'>",
+      "scenarios": [
+        {
+          "name": "<pinned scenario id>",
+          "argv": ["sweep-load", ...],
+          "wall_s": 12.34,
+          "metrics": {"<metric>": <float>}
+        }
+      ]
+    }
+
+The committed baseline (.github/bench_baseline.json) uses the same
+shape; a baseline value of null means "not recorded yet" and skips the
+comparison.  Refresh the baseline by copying a green run's BENCH_ci.json
+artifact over it (wall times are runner-dependent — record them from the
+same runner class CI uses).
+
+Exit code is non-zero only when a scenario fails to run or its output
+cannot be parsed; regressions emit GitHub ::warning:: annotations.
+"""
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+# The two pinned scenarios: the sweep-load SLO knee for 7B on A800, and
+# the autotune-serve min-GPU search (with the dp>1 replica axis open).
+# Keep these stable — the whole point is a comparable trajectory.
+SCENARIOS = [
+    {
+        "name": "sweep-load-knee-7b-a800",
+        "argv": [
+            "sweep-load", "--model", "7b", "--platform", "a800", "--engine", "vllm",
+            "--requests", "120", "--arrival", "poisson:4", "--points", "4",
+            "--qps-min", "0.5", "--qps-max", "32",
+            "--slo-ttft", "2.0", "--slo-tpot", "0.1", "--seed", "42",
+        ],
+        # "max QPS under SLO (p90 TTFT <= 2.0s, ...) ~= 13.87" (or ">=")
+        "metrics": {
+            "max_qps_under_slo": r"max QPS under SLO \([^)]*\) [~>]= ([0-9.]+)",
+        },
+    },
+    {
+        "name": "autotune-serve-min-gpu-7b-a800",
+        "argv": [
+            "autotune-serve", "--model", "7b", "--platform", "a800",
+            "--qps", "1", "--requests", "60", "--qps-min", "0.5", "--qps-max", "16",
+            "--slo-ttft", "4.0", "--slo-tpot", "0.25", "--seed", "42",
+            "--max-replicas", "2", "--gpu-budget", "8",
+        ],
+        # "cheapest deployment meeting the SLO at 1.00 QPS: vLLM TP1 —
+        #  1 GPU(s), $2.10/h, max 16.00 QPS"
+        "metrics": {
+            "min_gpus": r"— ([0-9]+) GPU\(s\)",
+            "max_qps_at_min_gpu": r"max ([0-9.]+) QPS",
+        },
+    },
+]
+
+TOLERANCE = 0.10  # warn beyond ±10%
+
+# Metrics where *lower* is a regression (throughput-like); wall_s is the
+# opposite (higher is a regression).
+HIGHER_IS_BETTER = {"max_qps_under_slo", "max_qps_at_min_gpu", "frontier_rows"}
+
+
+def frontier_rows(output):
+    """Count data rows of the frontier table: framed lines between the
+    2nd and 3rd +---+ separators."""
+    rows, seps = 0, 0
+    for line in output.splitlines():
+        if line.startswith("+-"):
+            seps += 1
+        elif seps == 2 and line.startswith("|"):
+            rows += 1
+    return float(rows)
+
+
+def run_scenario(binary, scenario):
+    t0 = time.monotonic()
+    proc = subprocess.run(
+        [binary] + scenario["argv"], capture_output=True, text=True, timeout=1800
+    )
+    wall = time.monotonic() - t0
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError(f"{scenario['name']}: exit {proc.returncode}")
+    metrics = {}
+    for key, pattern in scenario["metrics"].items():
+        m = re.search(pattern, proc.stdout)
+        if not m:
+            sys.stderr.write(proc.stdout)
+            raise RuntimeError(f"{scenario['name']}: no match for {key} ({pattern})")
+        metrics[key] = float(m.group(1))
+    if scenario["name"].startswith("autotune"):
+        metrics["frontier_rows"] = frontier_rows(proc.stdout)
+    return {"name": scenario["name"], "argv": scenario["argv"], "wall_s": round(wall, 3),
+            "metrics": metrics}
+
+
+def warn(msg):
+    # GitHub annotation; plain stderr elsewhere
+    print(f"::warning title=bench regression::{msg}")
+
+
+def compare(result, baseline):
+    """Warn on >10% movement in the regression direction; report both
+    directions so improvements can be folded into the baseline."""
+    base_by_name = {s["name"]: s for s in baseline.get("scenarios", [])}
+    for s in result["scenarios"]:
+        base = base_by_name.get(s["name"])
+        if base is None:
+            print(f"note: no baseline for scenario {s['name']}")
+            continue
+        pairs = [("wall_s", s["wall_s"], base.get("wall_s"))]
+        pairs += [(k, v, base.get("metrics", {}).get(k)) for k, v in s["metrics"].items()]
+        for key, now, then in pairs:
+            if then is None:
+                print(f"note: {s['name']}/{key} has no baseline value yet (now {now})")
+                continue
+            if then == 0:
+                continue
+            delta = (now - then) / then
+            worse = -delta if key in HIGHER_IS_BETTER else delta
+            if worse > TOLERANCE:
+                warn(f"{s['name']}/{key}: {then} -> {now} "
+                     f"({delta:+.1%}, tolerance ±{TOLERANCE:.0%})")
+            else:
+                print(f"ok: {s['name']}/{key}: {then} -> {now} ({delta:+.1%})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--binary", required=True, help="path to the release llmperf binary")
+    ap.add_argument("--baseline", help="committed baseline JSON to compare against")
+    ap.add_argument("--out", default="BENCH_ci.json", help="where to write the artifact")
+    args = ap.parse_args()
+
+    result = {
+        "schema": "llmperf-bench-ci/v1",
+        "commit": os.environ.get("GITHUB_SHA", "unknown"),
+        "scenarios": [run_scenario(args.binary, s) for s in SCENARIOS],
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    if args.baseline and os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            compare(result, json.load(f))
+    elif args.baseline:
+        print(f"note: baseline {args.baseline} not found; nothing to compare")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,9 +28,11 @@
 //! `config::workload` generates open-loop serving workloads (Poisson /
 //! bursty / trace-replay arrivals, length distributions) whose
 //! TTFT/TPOT tails `report::load` sweeps against SLOs
-//! (DESIGN.md §Serving workloads & SLOs), and `search/` is the
-//! configuration autotuner — joint (plan × method × load) search with
-//! memory-pruned enumeration and Pareto frontiers
+//! (DESIGN.md §Serving workloads & SLOs), `serve::cluster` scales
+//! serving to dp>1 replica fleets behind a load balancer
+//! (DESIGN.md §Replica clusters & balancing), and `search/` is the
+//! configuration autotuner — joint (plan × method × replicas × load)
+//! search with memory-pruned enumeration and Pareto frontiers
 //! (DESIGN.md §Configuration search).
 
 #![warn(missing_docs)]

@@ -3,6 +3,7 @@
 //! Subcommands (see README):
 //!   table N | figure N | report-all      — regenerate paper tables/figures
 //!   sim-pretrain | sim-serve             — one simulator cell
+//!   sim-cluster                          — dp>1 replica cluster + load balancer
 //!   sweep-load                           — QPS sweep + max-QPS-under-SLO search
 //!   sweep-parallel                       — TP×PP×DP plan comparison
 //!   autotune-train | autotune-serve      — Pareto-frontier configuration search
@@ -20,8 +21,8 @@ use llm_perf_lab::config::{
 use llm_perf_lab::err;
 use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
-use llm_perf_lab::search::{autotune_serve, autotune_train, SearchBudget};
-use llm_perf_lab::serve::{simulate_requests, EngineSpec};
+use llm_perf_lab::search::{autotune_serve, autotune_train, ReplicaSpace, SearchBudget};
+use llm_perf_lab::serve::{simulate_cluster, simulate_requests, Balancer, ClusterSpec, EngineSpec};
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
 use llm_perf_lab::util::fmt;
@@ -45,6 +46,15 @@ simulators:
                  distributions + trace replay (bare --trace FILE = full
                  replay); reports TTFT/TPOT percentiles and, with
                  --slo-*, goodput
+  sim-cluster    --model 7b --platform a800 --engine vllm --replicas 2
+                 [--tp N] [--balancer rr|lo|jsq|all] [--requests 200]
+                 [--arrival ...] [--input ...] [--output ...] [--trace FILE]
+                 [--seed 42] [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 one workload on N identical replicas of a deployment
+                 behind a load balancer (round-robin, least-outstanding
+                 work, join-shortest-queue; seeded tie-break): merged
+                 cluster metrics + per-replica utilization table;
+                 --balancer all prints a per-policy comparison instead
   sweep-load     --model 7b --platform a800 --engine vllm [--requests 200]
                  [--qps-min 0.5] [--qps-max 32] [--points 6]
                  [--arrival poisson:1|bursty:QPS:ON_S:OFF_S|trace] [--trace FILE]
@@ -78,11 +88,14 @@ configuration autotuner (DESIGN.md §Configuration search):
                  [--arrival ...] [--input ...] [--output ...] [--seed 42]
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
                  [--qps-min 0.25] [--qps-max 64] [--max-configs N]
+                 [--max-replicas 1] [--gpu-budget N] [--balancer rr|lo|jsq]
                  [--no-early-prune] [--show-pruned] [--profile FILE]
-                 joint engine x TP-degree x load search: bisect each
-                 feasible deployment's max QPS under the SLO and print
-                 the capacity x GPUs x $/h Pareto frontier over
-                 candidates meeting --qps (all candidates without it)
+                 joint engine x TP-degree x replica-count x load search:
+                 bisect each feasible deployment's (or cluster's) max QPS
+                 under the SLO and print the capacity x total-GPUs x $/h
+                 Pareto frontier over candidates meeting --qps (all
+                 candidates without it); --max-replicas opens the dp>1
+                 axis, --gpu-budget caps TP x replicas
 
 interconnect calibration (NCCL-tests logs in, measured link models out):
   calibrate-comm <log...> [--scope inter] [--out comm_profile.json]
@@ -188,6 +201,7 @@ fn run(cli: &Cli) -> Result<()> {
         "calibrate-comm" => calibrate_comm(cli)?,
         "validate-comm" => validate_comm(cli)?,
         "sim-serve" => sim_serve(cli)?,
+        "sim-cluster" => sim_cluster(cli)?,
         "sweep-load" => sweep_load(cli)?,
         "autotune-train" => autotune_train_cmd(cli)?,
         "autotune-serve" => autotune_serve_cmd(cli)?,
@@ -465,6 +479,75 @@ fn sim_serve(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `llmperf sim-cluster` — one workload on a dp>1 replica cluster
+/// behind a load balancer (`--balancer all` compares the policies).
+fn sim_cluster(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "7b")?;
+    let plat = platform_flag(cli)?;
+    let engine = engine_flag(cli)?;
+    let spec = workload_flags(cli, 200)?;
+    let slo = slo_flags(cli)?;
+    let replicas_s = cli.flag_or("replicas", "2");
+    let replicas: u32 =
+        replicas_s.parse().map_err(|e| err!("bad --replicas '{replicas_s}': {e}"))?;
+    if replicas == 0 {
+        return Err(err!("--replicas must be >= 1"));
+    }
+    let plan = match cli.flag("tp") {
+        Some(v) => {
+            let tp: u32 = v.parse().map_err(|e| err!("bad --tp '{v}': {e}"))?;
+            engine.plan_with_tp(&plat, &cfg, tp).ok_or_else(|| {
+                err!("{} cannot deploy {} at TP{} on {} (per-replica memory check failed)",
+                     engine.name, cfg.name, tp, plat.id.label())
+            })?
+        }
+        None => engine.plan(&plat, &cfg).ok_or_else(|| {
+            err!("{} cannot deploy {} on {} (OOM)", engine.name, cfg.name, plat.id.label())
+        })?,
+    };
+    let bal = cli.flag_or("balancer", "rr");
+    if bal == "all" {
+        // policy comparison: same cluster shape and workload, one row
+        // per balancer (the balancer field of `cluster` is ignored)
+        let cluster = ClusterSpec::new(replicas, plan, Balancer::RoundRobin).seed(spec.seed);
+        let slo = slo.unwrap_or_else(SloSpec::interactive);
+        println!("{}",
+                 report::load::balancer_comparison_table(&plat, &cfg, &engine, &cluster, &spec,
+                                                         &slo)?
+                     .render());
+        return Ok(());
+    }
+    let balancer = Balancer::parse(&bal)
+        .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq | all)"))?;
+    let cluster = ClusterSpec::new(replicas, plan, balancer).seed(spec.seed);
+    let reqs = spec.generate()?;
+    let r = simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
+    let m = &r.merged;
+    println!("{} / {} / {} — {} replica(s) × TP{} = {} GPUs, {} balancer, {} requests \
+              ({:?} arrivals)",
+             plat.id.label(), cfg.name, engine.name, cluster.replicas, cluster.plan.tp(),
+             cluster.total_gpus(), balancer.describe(), reqs.len(), spec.arrival);
+    if m.rejected > 0 {
+        println!("  WARNING: {} unservable request(s) rejected \
+                  (prompt beyond the engine's prefill/KV budget)", m.rejected);
+    }
+    let (ttft, tpot) = (m.ttft_summary(), m.tpot_summary());
+    println!("  throughput {:.0} output tokens/s, makespan {:.1}s, \
+              utilization skew {:.2}",
+             m.throughput(), m.makespan, r.utilization_skew());
+    println!("  ttft    p50 {:.2}s  p90 {:.2}s  p99 {:.2}s", ttft.p50, ttft.p90, ttft.p99);
+    println!("  tpot    p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+             tpot.p50 * 1e3, tpot.p90 * 1e3, tpot.p99 * 1e3);
+    if let Some(slo) = slo {
+        println!("  SLO {}: {} | goodput {:.0} tokens/s | attainment {:.1}%",
+                 slo.describe(),
+                 if m.meets_slo(&slo) { "met" } else { "MISSED" },
+                 m.goodput(&slo), m.slo_attainment(&slo) * 100.0);
+    }
+    println!("{}", report::load::replica_table(&r, &cluster).render());
+    Ok(())
+}
+
 /// `llmperf sweep-load` — QPS sweep + binary-searched SLO capacity.
 /// The grid rescales the base workload's *mean* offered load, keeping
 /// its arrival shape (Poisson / bursty duty cycle / time-compressed
@@ -596,7 +679,28 @@ fn autotune_serve_cmd(cli: &Cli) -> Result<()> {
         lo = lo.min(t);
         hi = hi.max(t);
     }
-    let search = autotune_serve(&plat, &cfg, &engines, &base, &slo, target, (lo, hi),
+    let max_replicas_s = cli.flag_or("max-replicas", "1");
+    let max_replicas: u32 = max_replicas_s
+        .parse()
+        .map_err(|e| err!("bad --max-replicas '{max_replicas_s}': {e}"))?;
+    if max_replicas == 0 {
+        return Err(err!("--max-replicas must be >= 1"));
+    }
+    let gpu_budget = match cli.flag("gpu-budget") {
+        Some(v) => {
+            let b: u32 = v.parse().map_err(|e| err!("bad --gpu-budget '{v}': {e}"))?;
+            if b == 0 {
+                return Err(err!("--gpu-budget must be >= 1"));
+            }
+            Some(b)
+        }
+        None => None,
+    };
+    let bal = cli.flag_or("balancer", "rr");
+    let balancer = Balancer::parse(&bal)
+        .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq)"))?;
+    let replicas = ReplicaSpace { max_replicas, gpu_budget, balancer };
+    let search = autotune_serve(&plat, &cfg, &engines, &base, &slo, target, (lo, hi), replicas,
                                 budget_flags(cli))?;
     println!("{}", report::search::serve_frontier_table(&search, &plat, &cfg).render());
     if cli.has("show-pruned") && !search.pruned.is_empty() {

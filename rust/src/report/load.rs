@@ -13,7 +13,10 @@
 use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::err;
 use crate::hw::Platform;
-use crate::serve::{simulate_requests_on, DeployPlan, EngineSpec, SimResult};
+use crate::serve::{
+    simulate_cluster, simulate_requests_on, Balancer, ClusterResult, ClusterSpec, DeployPlan,
+    EngineSpec, SimResult,
+};
 use crate::util::error::Result;
 use crate::util::table::{f0, f1, f2, oom, Table};
 
@@ -99,9 +102,44 @@ pub fn sweep_load(
     Ok(t)
 }
 
-/// The bisection core: highest passing QPS *and* the simulation that
-/// passed there, so callers reporting the operating point don't have to
-/// re-run the event loop.
+/// The bisection core over any probe (single deployment or replica
+/// cluster): highest passing QPS *and* the simulation that passed
+/// there, so callers reporting the operating point don't have to re-run
+/// the event loop.
+fn bisect_qps(
+    mut probe_at: impl FnMut(f64) -> Result<SimResult>,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Option<(f64, SimResult)>> {
+    if !(lo > 0.0 && hi >= lo) {
+        return Err(err!("max_qps_under_slo: need 0 < lo <= hi, got {lo}..{hi}"));
+    }
+    let r_lo = probe_at(lo)?;
+    if !r_lo.meets_slo(slo) {
+        return Ok(None);
+    }
+    let r_hi = probe_at(hi)?;
+    if r_hi.meets_slo(slo) {
+        return Ok(Some((hi, r_hi)));
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    let mut best = r_lo;
+    // geometric bisection: stop once the bracket is within 2%
+    while hi / lo > 1.02 {
+        let mid = (lo * hi).sqrt();
+        let r = probe_at(mid)?;
+        if r.meets_slo(slo) {
+            lo = mid;
+            best = r;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(Some((lo, best)))
+}
+
+/// [`bisect_qps`] specialized to one deployment plan.
 #[allow(clippy::too_many_arguments)]
 fn bisect_max_qps(
     plat: &Platform,
@@ -113,31 +151,7 @@ fn bisect_max_qps(
     lo: f64,
     hi: f64,
 ) -> Result<Option<(f64, SimResult)>> {
-    if !(lo > 0.0 && hi >= lo) {
-        return Err(err!("max_qps_under_slo: need 0 < lo <= hi, got {lo}..{hi}"));
-    }
-    let r_lo = probe(plat, cfg, engine, plan, base, lo)?;
-    if !r_lo.meets_slo(slo) {
-        return Ok(None);
-    }
-    let r_hi = probe(plat, cfg, engine, plan, base, hi)?;
-    if r_hi.meets_slo(slo) {
-        return Ok(Some((hi, r_hi)));
-    }
-    let (mut lo, mut hi) = (lo, hi);
-    let mut best = r_lo;
-    // geometric bisection: stop once the bracket is within 2%
-    while hi / lo > 1.02 {
-        let mid = (lo * hi).sqrt();
-        let r = probe(plat, cfg, engine, plan, base, mid)?;
-        if r.meets_slo(slo) {
-            lo = mid;
-            best = r;
-        } else {
-            hi = mid;
-        }
-    }
-    Ok(Some((lo, best)))
+    bisect_qps(|qps| probe(plat, cfg, engine, plan, base, qps), slo, lo, hi)
 }
 
 /// [`max_qps_under_slo`] on an explicit deployment plan — the form the
@@ -177,6 +191,106 @@ pub fn max_qps_under_slo(
              engine.name, cfg.name, plat.id.label())
     })?;
     max_qps_under_slo_on(plat, cfg, engine, &plan, base, slo, lo, hi)
+}
+
+/// [`max_qps_under_slo`] for a replica cluster: each probe dispatches
+/// the re-armed arrival stream across the cluster's replicas and the
+/// SLO is checked on the merged, cluster-level result — the capacity
+/// signal `autotune-serve` bisects for multi-replica candidates.
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_cluster(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    cluster: &ClusterSpec,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Option<f64>> {
+    let probe_at = |qps: f64| -> Result<SimResult> {
+        let reqs = base.with_offered_qps(qps)?.generate()?;
+        Ok(simulate_cluster(plat, cfg, engine, cluster, &reqs).merged)
+    };
+    Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
+}
+
+/// Per-replica breakdown of one cluster run: requests routed, output
+/// tokens, throughput, makespan, decode iterations, preemptions — the
+/// balance view behind [`ClusterResult::utilization_skew`]
+/// (`llmperf sim-cluster`).
+pub fn replica_table(result: &ClusterResult, spec: &ClusterSpec) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Per-replica breakdown — {} replica(s) × TP{}, {} balancer, skew {:.2}",
+            spec.replicas,
+            spec.plan.tp(),
+            spec.balancer.describe(),
+            result.utilization_skew()
+        ),
+        &["Replica", "Requests", "Done", "Out tokens", "tok/s", "Makespan (s)", "Decode it",
+          "Preempt", "Rejected"],
+    );
+    for r in &result.replicas {
+        let tput = if r.makespan > 0.0 { r.output_tokens as f64 / r.makespan } else { 0.0 };
+        t.row(vec![
+            r.replica.to_string(),
+            r.requests.to_string(),
+            r.completions.to_string(),
+            r.output_tokens.to_string(),
+            f0(tput),
+            f1(r.makespan),
+            r.decode_iters.to_string(),
+            r.preemptions.to_string(),
+            r.rejected.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Side-by-side balancing policies on the same cluster shape and
+/// workload: one row per [`Balancer`] with tail latency, goodput,
+/// utilization skew and the SLO verdict — the "which policy?" half of
+/// the cluster question (`llmperf sim-cluster --balancer all`).
+pub fn balancer_comparison_table(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    cluster: &ClusterSpec,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+) -> Result<Table> {
+    let reqs = base.generate()?;
+    let mut t = Table::new(
+        &format!(
+            "Balancer comparison — {} / {} / {}, {} replica(s) × TP{}, {} requests, SLO {}",
+            plat.id.label(),
+            cfg.name,
+            engine.name,
+            cluster.replicas,
+            cluster.plan.tp(),
+            reqs.len(),
+            slo.describe()
+        ),
+        &["Policy", "TTFT p50", "p99", "TPOT p99 (ms)", "Goodput", "Skew", "Preempt", "SLO"],
+    )
+    .align_left(0);
+    for b in Balancer::ALL {
+        let spec = ClusterSpec { balancer: b, ..*cluster };
+        let r = simulate_cluster(plat, cfg, engine, &spec, &reqs);
+        let (ttft, tpot) = (r.merged.ttft_summary(), r.merged.tpot_summary());
+        t.row(vec![
+            b.label().to_string(),
+            f2(ttft.p50),
+            f2(ttft.p99),
+            f1(tpot.p99 * 1e3),
+            f0(r.merged.goodput(slo)),
+            f2(r.utilization_skew()),
+            r.merged.preemptions.to_string(),
+            if r.merged.meets_slo(slo) { "met".into() } else { "MISSED".into() },
+        ]);
+    }
+    Ok(t)
 }
 
 /// Side-by-side SLO capacity: one row per engine at the same SLO and
@@ -338,6 +452,45 @@ mod tests {
             .unwrap()
             .expect("a wider group cannot lose all capacity");
         assert!(q_wide >= q_min * 0.75, "tp8 {q_wide:.2} vs tp{} {q_min:.2}", auto.tp());
+    }
+
+    #[test]
+    fn cluster_capacity_at_least_single_box() {
+        // two replicas must sustain at least the single deployment's
+        // load under a permissive TTFT-only SLO
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let base = WorkloadSpec::new(60).seed(3);
+        let slo = SloSpec::new(0.9, 6.0, f64::MAX);
+        let single = max_qps_under_slo_on(&plat, &cfg, &engine, &plan, &base, &slo, 0.25, 64.0)
+            .unwrap()
+            .expect("7B takes some load on A800");
+        let cluster = ClusterSpec::new(2, plan, Balancer::JoinShortestQueue).seed(base.seed);
+        let two = max_qps_under_slo_cluster(&plat, &cfg, &engine, &cluster, &base, &slo,
+                                            0.25, 64.0)
+            .unwrap()
+            .expect("a 2-replica cluster cannot lose all capacity");
+        assert!(two >= single * 0.9, "2 replicas {two:.2} vs 1 box {single:.2}");
+    }
+
+    #[test]
+    fn cluster_tables_render() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let cluster = ClusterSpec::new(2, plan, Balancer::RoundRobin);
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let cmp = balancer_comparison_table(&plat, &cfg, &engine, &cluster, &base, &slo).unwrap();
+        assert_eq!(cmp.n_rows(), 3, "one row per policy");
+        assert!(cmp.render().contains("jsq"), "{}", cmp.render());
+        let reqs = base.generate().unwrap();
+        let r = crate::serve::simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
+        let per = replica_table(&r, &cluster);
+        assert_eq!(per.n_rows(), 2, "one row per replica");
     }
 
     #[test]

@@ -52,8 +52,9 @@ pub fn train_frontier_table(
     t
 }
 
-/// The serving frontier: engine + TP per row, with GPUs, $/h, KV
-/// capacity and the bisected max QPS under the SLO.
+/// The serving frontier: engine + TP + replica count per row, with
+/// total GPUs, $/h, per-replica KV capacity and the bisected max QPS
+/// under the SLO (cluster-level for multi-replica rows).
 pub fn serve_frontier_table(search: &ServeSearch, plat: &Platform, cfg: &LlamaConfig) -> Table {
     let target = match search.target_qps {
         Some(t) => format!("target {t:.2} QPS"),
@@ -67,13 +68,14 @@ pub fn serve_frontier_table(search: &ServeSearch, plat: &Platform, cfg: &LlamaCo
             target,
             stats_line(&search.stats)
         ),
-        &["Engine", "TP", "GPUs", "$/h", "KV tokens", "max QPS under SLO"],
+        &["Engine", "TP", "Repl", "GPUs", "$/h", "KV tokens/repl", "max QPS under SLO"],
     )
     .align_left(0);
     for e in search.frontier_evals() {
         t.row(vec![
             e.cand.engine.name.to_string(),
             e.cand.plan.tp().to_string(),
+            e.cand.replicas.to_string(),
             e.gpus.to_string(),
             f2(e.cost_per_hour),
             e.cand.plan.kv_capacity_tokens.to_string(),
@@ -101,7 +103,7 @@ mod tests {
     use super::*;
     use crate::config::{SloSpec, WorkloadSpec};
     use crate::hw::{PlatformId, Topology};
-    use crate::search::{autotune_serve, autotune_train, SearchBudget};
+    use crate::search::{autotune_serve, autotune_train, ReplicaSpace, SearchBudget};
     use crate::serve::EngineSpec;
 
     #[test]
@@ -125,11 +127,11 @@ mod tests {
         let base = WorkloadSpec::at_once(20, 256, 16);
         let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
         let s = autotune_serve(&plat, &cfg, &EngineSpec::all(), &base, &slo, None, (0.5, 2.0),
-                               SearchBudget::default())
+                               ReplicaSpace::default(), SearchBudget::default())
             .unwrap();
         let t = serve_frontier_table(&s, &plat, &cfg);
         assert_eq!(t.n_rows(), s.frontier.len());
-        assert!(t.render().contains("max QPS"));
+        assert!(t.render().contains("max QPS") && t.render().contains("Repl"));
         let p = pruned_table("why-not", &s.pruned);
         assert_eq!(p.n_rows(), s.pruned.len());
     }

@@ -9,9 +9,9 @@
 //! everything the cost models can already price:
 //!
 //! 1. [`space`] enumerates candidates — ParallelPlan × training stack /
-//!    method × batch for training, engine × TP degree for serving — and
-//!    prunes memory-infeasible ones with the cheap analytical models
-//!    *before* any costing;
+//!    method × batch for training, engine × TP degree × replica count
+//!    for serving — and prunes memory-infeasible or over-GPU-budget
+//!    ones with the cheap analytical models *before* any costing;
 //! 2. [`objective`] costs the survivors (step simulation; bisected
 //!    max-QPS-under-SLO) and projects each onto a maximize-all objective
 //!    vector;
@@ -36,8 +36,8 @@ use crate::util::error::Result;
 pub use objective::{eval_serve, eval_train, ServeEval, TrainEval};
 pub use pareto::{dominates, pareto_indices};
 pub use space::{
-    serve_space, train_space, ConfigSpace, PrunedCandidate, ServeCandidate, TrainCandidate,
-    TrainStack,
+    serve_space, train_space, ConfigSpace, PrunedCandidate, ReplicaSpace, ServeCandidate,
+    TrainCandidate, TrainStack,
 };
 
 /// Driver knobs bounding how much of a space gets costed.
@@ -183,11 +183,15 @@ impl ServeSearch {
     }
 }
 
-/// Joint engine × TP-degree × load search for serving: enumerate, prune
-/// on deploy-time memory checks, bisect each survivor's
-/// max-QPS-under-SLO (shape-preserving re-arm of `base`), and keep the
+/// Joint engine × TP-degree × replica-count × load search for serving:
+/// enumerate, prune on per-replica deploy-time memory checks and the
+/// total-GPU budget, bisect each survivor's max-QPS-under-SLO
+/// (shape-preserving re-arm of `base`; multi-replica candidates run the
+/// cluster event loop under `replicas.balancer`), and keep the
 /// (capacity × −GPUs × −$/h) Pareto frontier over candidates sustaining
 /// `target_qps` (with `None`, over every candidate with some capacity).
+/// GPUs and $/h are cluster totals, so the frontier's min-GPU point is
+/// "the cheapest fleet meeting the SLO".
 #[allow(clippy::too_many_arguments)]
 pub fn autotune_serve(
     plat: &Platform,
@@ -197,9 +201,10 @@ pub fn autotune_serve(
     slo: &SloSpec,
     target_qps: Option<f64>,
     bracket: (f64, f64),
+    replicas: ReplicaSpace,
     budget: SearchBudget,
 ) -> Result<ServeSearch> {
-    let space = serve_space(plat, cfg, engines);
+    let space = serve_space(plat, cfg, engines, &replicas);
     let mut stats = SearchStats {
         enumerated: space.enumerated(),
         pruned_infeasible: space.pruned.len(),
@@ -211,9 +216,10 @@ pub fn autotune_serve(
             stats.skipped += 1;
             continue;
         }
-        // dominance early-prune: a smaller group of the same engine
-        // already saturates the bracket — a wider one cannot beat it on
-        // capacity and strictly loses on GPUs and $.
+        // dominance early-prune: a smaller fleet of the same engine
+        // already saturates the bracket — a larger one (wider TP or more
+        // replicas) cannot beat it on capacity and strictly loses on
+        // GPUs and $.
         if budget.early_prune
             && evals.iter().any(|e| {
                 e.cand.engine.name == cand.engine.name
@@ -224,7 +230,7 @@ pub fn autotune_serve(
             stats.skipped += 1;
             continue;
         }
-        evals.push(eval_serve(plat, cfg, cand, base, slo, bracket)?);
+        evals.push(eval_serve(plat, cfg, cand, base, slo, bracket, replicas.balancer)?);
     }
     stats.costed = evals.len();
     // frontier over qualifying candidates only; indices stay into
@@ -289,12 +295,13 @@ mod tests {
         let slo = SloSpec::new(0.9, f64::MAX, f64::MAX); // everything passes
         let engines = [EngineSpec::vllm()];
         let pruned = autotune_serve(&plat, &cfg, &engines, &base, &slo, None, (0.5, 4.0),
-                                    SearchBudget::default())
+                                    ReplicaSpace::default(), SearchBudget::default())
             .unwrap();
         // TP1 hits the bracket ceiling, so TP2/4/8 are never costed
         assert_eq!(pruned.stats.costed, 1);
         assert_eq!(pruned.stats.skipped, 3);
         let full = autotune_serve(&plat, &cfg, &engines, &base, &slo, None, (0.5, 4.0),
+                                  ReplicaSpace::default(),
                                   SearchBudget { max_costed: usize::MAX, early_prune: false })
             .unwrap();
         assert_eq!(full.stats.costed, 4);
@@ -311,7 +318,7 @@ mod tests {
         let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
         let engines = [EngineSpec::vllm()];
         let s = autotune_serve(&plat, &cfg, &engines, &base, &slo, Some(1e9), (0.5, 4.0),
-                               SearchBudget::default())
+                               ReplicaSpace::default(), SearchBudget::default())
             .unwrap();
         assert!(s.frontier.is_empty(), "nothing sustains 1e9 QPS");
         assert!(!s.evals.is_empty(), "candidates were still costed and reported");
@@ -328,7 +335,7 @@ mod tests {
         let base = WorkloadSpec::at_once(20, 256, 16);
         let never = SloSpec::new(0.9, 0.0, 0.0);
         let s = autotune_serve(&plat, &cfg, &[EngineSpec::vllm()], &base, &never, None,
-                               (0.5, 4.0), SearchBudget::default())
+                               (0.5, 4.0), ReplicaSpace::default(), SearchBudget::default())
             .unwrap();
         assert!(!s.evals.is_empty());
         assert!(s.evals.iter().all(|e| e.max_qps.is_none()));

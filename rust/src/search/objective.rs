@@ -14,7 +14,8 @@
 
 use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::hw::{Platform, Topology};
-use crate::report::load::max_qps_under_slo_on;
+use crate::report::load::{max_qps_under_slo_cluster, max_qps_under_slo_on};
+use crate::serve::{Balancer, ClusterSpec};
 use crate::train::{simulate_megatron_plan, simulate_step_plan};
 use crate::util::error::Result;
 
@@ -75,7 +76,7 @@ pub struct ServeEval {
     /// highest mean offered QPS meeting the SLO in the search bracket;
     /// None when even the bracket floor misses it
     pub max_qps: Option<f64>,
-    /// GPUs the deployment occupies (its TP degree)
+    /// GPUs the deployment occupies (TP degree × replicas)
     pub gpus: u32,
     /// rental cost of those GPUs, USD per hour
     pub cost_per_hour: f64,
@@ -96,6 +97,11 @@ impl ServeEval {
 
 /// Cost one feasible serving candidate: bisect its max QPS under the SLO
 /// over `bracket`, preserving the base workload's arrival shape.
+/// Single-replica candidates run the plain deployment event loop;
+/// multi-replica candidates run the cluster loop under `balancer` (the
+/// tie-break seeded from the workload seed, so evals are reproducible),
+/// and the $/h objective prices *total* GPUs — replicas × TP ×
+/// [`Platform::gpu_hour_usd`].
 pub fn eval_serve(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -103,10 +109,18 @@ pub fn eval_serve(
     base: &WorkloadSpec,
     slo: &SloSpec,
     bracket: (f64, f64),
+    balancer: Balancer,
 ) -> Result<ServeEval> {
-    let max_qps = max_qps_under_slo_on(
-        plat, cfg, &cand.engine, &cand.plan, base, slo, bracket.0, bracket.1,
-    )?;
+    let max_qps = if cand.replicas == 1 {
+        max_qps_under_slo_on(
+            plat, cfg, &cand.engine, &cand.plan, base, slo, bracket.0, bracket.1,
+        )?
+    } else {
+        let cluster = ClusterSpec::new(cand.replicas, cand.plan, balancer).seed(base.seed);
+        max_qps_under_slo_cluster(
+            plat, cfg, &cand.engine, &cluster, base, slo, bracket.0, bracket.1,
+        )?
+    };
     let gpus = cand.gpus();
     Ok(ServeEval {
         cand: cand.clone(),
@@ -164,10 +178,12 @@ mod tests {
         let cand = ServeCandidate {
             plan: engine.plan_with_tp(&plat, &cfg, 2).unwrap(),
             engine,
+            replicas: 1,
         };
         let base = WorkloadSpec::at_once(20, 256, 16);
         let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
-        let e = eval_serve(&plat, &cfg, &cand, &base, &slo, (0.5, 4.0)).unwrap();
+        let rr = Balancer::RoundRobin;
+        let e = eval_serve(&plat, &cfg, &cand, &base, &slo, (0.5, 4.0), rr).unwrap();
         assert_eq!(e.gpus, 2);
         assert!((e.cost_per_hour - 2.0 * plat.gpu_hour_usd).abs() < 1e-12);
         assert_eq!(e.max_qps, Some(4.0), "unbounded SLO passes at hi");
@@ -175,9 +191,30 @@ mod tests {
         assert_eq!(e.objectives()[1], -2.0);
         // an impossible SLO yields a capacity-less eval, objective 0
         let never = SloSpec::new(0.9, 0.0, 0.0);
-        let e0 = eval_serve(&plat, &cfg, &cand, &base, &never, (0.5, 4.0)).unwrap();
+        let e0 = eval_serve(&plat, &cfg, &cand, &base, &never, (0.5, 4.0), rr).unwrap();
         assert_eq!(e0.max_qps, None);
         assert_eq!(e0.objectives()[0], 0.0);
         assert!(!e0.meets_target(0.1));
+    }
+
+    #[test]
+    fn serve_eval_cluster_prices_total_gpus() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let cand = ServeCandidate {
+            plan: engine.plan_with_tp(&plat, &cfg, 2).unwrap(),
+            engine,
+            replicas: 3,
+        };
+        let base = WorkloadSpec::at_once(24, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let e = eval_serve(&plat, &cfg, &cand, &base, &slo, (0.5, 4.0),
+                           Balancer::JoinShortestQueue)
+            .unwrap();
+        assert_eq!(e.gpus, 6, "replicas × TP");
+        assert!((e.cost_per_hour - 6.0 * plat.gpu_hour_usd).abs() < 1e-12);
+        assert_eq!(e.max_qps, Some(4.0), "unbounded SLO passes at hi");
+        assert_eq!(e.objectives()[1], -6.0);
     }
 }

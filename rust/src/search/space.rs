@@ -13,7 +13,7 @@ use crate::config::{LlamaConfig, Method, TrainWorkload};
 use crate::hw::{Platform, Topology};
 use crate::memory::{check_fit, training_memory_plan, Fit, MemoryBreakdown};
 use crate::parallel::{megatron_memory, ParallelPlan};
-use crate::serve::{DeployPlan, EngineSpec};
+use crate::serve::{Balancer, DeployPlan, EngineSpec};
 use crate::train::megatron::MEGATRON_ACT_DISCOUNT;
 
 /// Which training stack prices a candidate — the repo models two:
@@ -68,26 +68,60 @@ impl TrainCandidate {
     }
 }
 
-/// One point of the serving design space: an engine on a forced TP group
-/// (already memory-checked — construction goes through
-/// [`EngineSpec::plan_with_tp`]).
+/// One point of the serving design space: `replicas` copies of an
+/// engine on a forced TP group (each replica already memory-checked —
+/// construction goes through [`EngineSpec::plan_with_tp`]).
 #[derive(Debug, Clone)]
 pub struct ServeCandidate {
     /// the engine policy
     pub engine: EngineSpec,
-    /// the feasible deployment (TP degree + whole-group KV capacity)
+    /// the per-replica deployment (TP degree + whole-group KV capacity)
     pub plan: DeployPlan,
+    /// identical replicas behind the load balancer (1 = one box, the
+    /// pre-cluster search space)
+    pub replicas: u32,
 }
 
 impl ServeCandidate {
-    /// GPUs the deployment occupies (its TP degree).
+    /// GPUs the whole candidate occupies (replicas × TP degree).
     pub fn gpus(&self) -> u32 {
-        self.plan.tp()
+        self.plan.tp() * self.replicas
     }
 
-    /// Config label ("vLLM TP4").
+    /// Config label ("vLLM TP4", "vLLM TP2×3" for a 3-replica cluster).
     pub fn label(&self) -> String {
-        format!("{} TP{}", self.engine.name, self.plan.tp())
+        serve_label(self.engine.name, self.plan.tp(), self.replicas)
+    }
+}
+
+/// The one spelling of a serving-candidate label, shared by feasible
+/// and pruned rows so the frontier and why-not tables can never
+/// diverge ("vLLM TP4", "vLLM TP2×3").
+fn serve_label(engine: &str, tp: u32, replicas: u32) -> String {
+    if replicas == 1 {
+        format!("{engine} TP{tp}")
+    } else {
+        format!("{engine} TP{tp}×{replicas}")
+    }
+}
+
+/// The replica axis of the serving space (plus the balancing policy the
+/// cluster evals simulate under).  [`Default`] is the pre-cluster
+/// single-box space: one replica, no GPU budget, round-robin.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSpace {
+    /// largest replica count to enumerate (>= 1)
+    pub max_replicas: u32,
+    /// cap on total GPUs (TP × replicas); `None` = unbounded, the
+    /// per-replica TP degree is still bounded by one box
+    pub gpu_budget: Option<u32>,
+    /// balancing policy multi-replica candidates are costed under
+    pub balancer: Balancer,
+}
+
+impl Default for ReplicaSpace {
+    fn default() -> Self {
+        ReplicaSpace { max_replicas: 1, gpu_budget: None, balancer: Balancer::RoundRobin }
     }
 }
 
@@ -164,24 +198,45 @@ pub fn train_space(
 }
 
 /// Enumerate the serving space: each engine × each power-of-two TP
-/// degree on the box, pruned by the engine's own deploy-time memory
-/// check (weights fit, KV pool above the engine's floor).
+/// degree on the box × each replica count up to `rep.max_replicas`,
+/// pruned by the engine's own per-replica deploy-time memory check
+/// (weights fit, KV pool above the engine's floor) and by the
+/// total-GPU budget (TP × replicas ≤ `rep.gpu_budget`) — both *before*
+/// any costing.  A memory-infeasible TP degree is recorded once (the
+/// check does not depend on the replica count), so it contributes one
+/// row to [`ConfigSpace::enumerated`] regardless of `max_replicas`.
 pub fn serve_space(
     plat: &Platform,
     cfg: &LlamaConfig,
     engines: &[EngineSpec],
+    rep: &ReplicaSpace,
 ) -> ConfigSpace<ServeCandidate> {
+    let max_replicas = rep.max_replicas.max(1);
     let mut space = ConfigSpace { candidates: Vec::new(), pruned: Vec::new() };
     for engine in engines {
         for plan in ParallelPlan::serving_candidates(plat.n_gpus) {
-            match engine.plan_with_tp(plat, cfg, plan.tp) {
-                Some(deploy) => space
-                    .candidates
-                    .push(ServeCandidate { engine: engine.clone(), plan: deploy }),
-                None => space.pruned.push(PrunedCandidate {
-                    label: format!("{} TP{}", engine.name, plan.tp),
-                    reason: "weights + KV floor exceed the group's memory".to_string(),
-                }),
+            let deploy = match engine.plan_with_tp(plat, cfg, plan.tp) {
+                Some(d) => d,
+                None => {
+                    // the per-replica memory check is replica-count
+                    // independent: one why-not row per TP degree, not
+                    // one per replica count
+                    space.pruned.push(PrunedCandidate {
+                        label: serve_label(engine.name, plan.tp, 1),
+                        reason: "weights + KV floor exceed the group's memory".to_string(),
+                    });
+                    continue;
+                }
+            };
+            for replicas in 1..=max_replicas {
+                let cand = ServeCandidate { engine: engine.clone(), plan: deploy, replicas };
+                match rep.gpu_budget {
+                    Some(budget) if cand.gpus() > budget => space.pruned.push(PrunedCandidate {
+                        label: cand.label(),
+                        reason: format!("over GPU budget: {} > {budget}", cand.gpus()),
+                    }),
+                    _ => space.candidates.push(cand),
+                }
             }
         }
     }
@@ -254,13 +309,36 @@ mod tests {
         // only on the widest groups — pruning mirrors Fig. 6's OOM cells
         let plat = Platform::get(PlatformId::Rtx4090);
         let cfg = LlamaConfig::llama2_70b();
-        let s = serve_space(&plat, &cfg, &EngineSpec::all());
+        let s = serve_space(&plat, &cfg, &EngineSpec::all(), &ReplicaSpace::default());
         assert_eq!(s.enumerated(), 3 * 4); // 3 engines × TP {1,2,4,8}
         assert!(s.candidates.iter().all(|c| c.engine.name != "TGI"));
         for c in &s.candidates {
             // feasibility really was checked at enumeration time
-            assert!(c.engine.plan_with_tp(&plat, &cfg, c.gpus()).is_some());
+            assert_eq!(c.replicas, 1);
+            assert!(c.engine.plan_with_tp(&plat, &cfg, c.plan.tp()).is_some());
         }
         assert!(!s.pruned.is_empty());
+    }
+
+    #[test]
+    fn serve_space_replicas_multiply_and_budget_prunes() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engines = [EngineSpec::vllm()];
+        let rep = ReplicaSpace { max_replicas: 3, gpu_budget: Some(8), ..Default::default() };
+        let s = serve_space(&plat, &cfg, &engines, &rep);
+        // 1 engine × TP {1,2,4,8} × replicas {1,2,3}, every replica of a
+        // feasible 7B deployment is feasible — budget is the only pruner
+        assert_eq!(s.enumerated(), 4 * 3);
+        for c in &s.candidates {
+            assert!(c.gpus() <= 8, "{}", c.label());
+            assert_eq!(c.gpus(), c.plan.tp() * c.replicas);
+        }
+        // TP4×3 and TP8×{2,3} blow the 8-GPU budget
+        assert_eq!(s.pruned.len(), 3);
+        assert!(s.pruned.iter().all(|p| p.reason.contains("over GPU budget")), "{:?}", s.pruned);
+        // multi-replica labels carry the replica count
+        assert!(s.candidates.iter().any(|c| c.label() == "vLLM TP1×3"));
+        assert!(s.candidates.iter().any(|c| c.label() == "vLLM TP2"));
     }
 }

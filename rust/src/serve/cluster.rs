@@ -1,0 +1,496 @@
+//! Replica clusters: dp>1 serving behind a load balancer.
+//!
+//! The paper (and every simulator below this file) benchmarks one
+//! deployment on one box.  Real traffic is served by *fleets*: N
+//! identical replicas of a (engine, TP-group) deployment behind a
+//! dispatcher — the "how many replicas, behind which balancing policy?"
+//! question capacity planning actually asks (DESIGN.md §Replica
+//! clusters & balancing).  This module answers it without touching the
+//! per-replica event loop:
+//!
+//! 1. a [`Balancer`] policy splits one shared arrival stream into
+//!    per-replica request lists at dispatch time (deterministic, with a
+//!    seeded random tie-break),
+//! 2. each replica replays its list through the unmodified
+//!    [`simulate_requests_on`] event loop, and
+//! 3. the per-replica results are merged into one cluster-level
+//!    [`SimResult`] (TTFT/TPOT percentiles, goodput, SLO checks all
+//!    work unchanged) plus per-replica utilization stats.
+//!
+//! Replicas never share KV or requests — a dispatched request lives and
+//! dies on its replica, so with `replicas == 1` the cluster result *is*
+//! the single-box result, bit for bit (`tests/cluster.rs` pins this).
+
+use crate::config::LlamaConfig;
+use crate::hw::Platform;
+use crate::serve::engine::{DeployPlan, EngineSpec};
+use crate::serve::request::{Completion, Request};
+use crate::serve::sim::{decode_iter_time, prefill_time, simulate_requests_on, SimResult};
+use crate::util::rng::Rng;
+
+/// Cluster-level request-routing policy.  All three dispatch on
+/// *arrival-time* knowledge only — the request's prompt length and its
+/// declared generation budget (`Request::output_len` models the
+/// `max_tokens` parameter a client sends, so a fronting proxy really
+/// does see it), never simulation outcomes such as completion times.
+/// Ties are broken by a seeded RNG so runs are reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Balancer {
+    /// cycle through replicas in order, ignoring load (nginx default)
+    RoundRobin,
+    /// route to the replica with the least estimated outstanding *work*
+    /// (token-weighted: a queued 4k-prompt counts for more than a chat
+    /// turn) — the length-aware policy
+    LeastOutstanding,
+    /// route to the replica with the fewest in-flight *requests*
+    /// (classic JSQ: counts, not sizes)
+    JoinShortestQueue,
+}
+
+impl Balancer {
+    /// Every policy, in the order comparison tables print them.
+    pub const ALL: [Balancer; 3] =
+        [Balancer::RoundRobin, Balancer::LeastOutstanding, Balancer::JoinShortestQueue];
+
+    /// Parse the CLI spelling: `rr`, `lo`, `jsq` (or the long forms
+    /// `round-robin`, `least-outstanding[-work]`, `join-shortest-queue`).
+    pub fn parse(s: &str) -> Option<Balancer> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(Balancer::RoundRobin),
+            "lo" | "least-outstanding" | "least-outstanding-work" | "leastoutstanding" => {
+                Some(Balancer::LeastOutstanding)
+            }
+            "jsq" | "join-shortest-queue" | "shortest-queue" => Some(Balancer::JoinShortestQueue),
+            _ => None,
+        }
+    }
+
+    /// Short label for report rows ("rr" / "lo" / "jsq").
+    pub fn label(&self) -> &'static str {
+        match self {
+            Balancer::RoundRobin => "rr",
+            Balancer::LeastOutstanding => "lo",
+            Balancer::JoinShortestQueue => "jsq",
+        }
+    }
+
+    /// Long human name for captions.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Balancer::RoundRobin => "round-robin",
+            Balancer::LeastOutstanding => "least-outstanding-work",
+            Balancer::JoinShortestQueue => "join-shortest-queue",
+        }
+    }
+}
+
+/// A homogeneous serving cluster: `replicas` copies of one
+/// [`DeployPlan`] behind a [`Balancer`].  Every replica runs the same
+/// engine policy on its own TP group and its own KV pool.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    /// replica count (>= 1); each replica is an independent engine
+    pub replicas: u32,
+    /// the deployment every replica runs (TP degree + KV capacity)
+    pub plan: DeployPlan,
+    /// how the shared arrival stream is split across replicas
+    pub balancer: Balancer,
+    /// seed for the balancer's random tie-break
+    pub seed: u64,
+}
+
+impl ClusterSpec {
+    /// A cluster of `replicas` copies of `plan` behind `balancer`
+    /// (tie-break seed 42).
+    pub fn new(replicas: u32, plan: DeployPlan, balancer: Balancer) -> Self {
+        ClusterSpec { replicas, plan, balancer, seed: 42 }
+    }
+
+    /// Set the tie-break seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// GPUs the whole cluster occupies (replicas × TP degree).
+    pub fn total_gpus(&self) -> u32 {
+        self.replicas * self.plan.tp()
+    }
+}
+
+/// Per-replica outcome inside a [`ClusterResult`].
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaStats {
+    /// replica index (dispatch order)
+    pub replica: u32,
+    /// requests the balancer routed here
+    pub requests: u64,
+    /// requests that completed here
+    pub completions: u64,
+    /// output tokens delivered by this replica
+    pub output_tokens: u64,
+    /// wall time until this replica's last completion
+    pub makespan: f64,
+    /// decode iterations this replica executed
+    pub decode_iters: u64,
+    /// sequences this replica evicted under KV pressure
+    pub preemptions: u64,
+    /// requests this replica rejected as unservable
+    pub rejected: u64,
+}
+
+/// Cluster simulation output: the merged cluster-level [`SimResult`]
+/// (all metric/SLO accessors work unchanged) plus per-replica stats.
+#[derive(Debug)]
+pub struct ClusterResult {
+    /// cluster-level result over the union of all completions; makespan
+    /// is the slowest replica's, counters are summed
+    pub merged: SimResult,
+    /// one entry per replica, in replica order
+    pub replicas: Vec<ReplicaStats>,
+}
+
+impl ClusterResult {
+    /// Load-balance skew: the busiest replica's output tokens over the
+    /// per-replica mean (1.0 = perfectly balanced; 2.0 = one replica did
+    /// double its fair share).  1.0 for an empty run.
+    pub fn utilization_skew(&self) -> f64 {
+        let total: u64 = self.replicas.iter().map(|r| r.output_tokens).sum();
+        if total == 0 || self.replicas.is_empty() {
+            return 1.0;
+        }
+        let mean = total as f64 / self.replicas.len() as f64;
+        let max = self.replicas.iter().map(|r| r.output_tokens).max().unwrap_or(0) as f64;
+        max / mean
+    }
+}
+
+/// Dispatch-time estimate of one request's service seconds on `plan`:
+/// prefill at the prompt length plus one decode iteration per token of
+/// the declared generation budget (the request-carried `max_tokens`
+/// knob — not an oracle) at a nominal mid-range batch.  Only the
+/// *ranking* across
+/// (homogeneous) replicas matters to the balancer; the absolute scale
+/// just expires in-flight entries at roughly the right rate.  Lengths
+/// are bucketed to 32 tokens so the estimate is a lookup after the
+/// first request of a size class (same trick as the simulator's
+/// iteration-cost cache).
+struct ServiceEstimate<'a> {
+    plat: &'a Platform,
+    cfg: &'a LlamaConfig,
+    engine: &'a EngineSpec,
+    plan: DeployPlan,
+    cache: std::collections::HashMap<(u64, u64), f64>,
+}
+
+/// Decode batch the dispatcher assumes when estimating per-token
+/// cadence (continuous batching keeps replicas in this regime; the
+/// exact value only rescales all estimates equally).
+const NOMINAL_DECODE_BATCH: u64 = 8;
+
+impl<'a> ServiceEstimate<'a> {
+    fn new(
+        plat: &'a Platform,
+        cfg: &'a LlamaConfig,
+        engine: &'a EngineSpec,
+        plan: DeployPlan,
+    ) -> Self {
+        ServiceEstimate { plat, cfg, engine, plan, cache: std::collections::HashMap::new() }
+    }
+
+    fn seconds(&mut self, req: &Request) -> f64 {
+        let key = (req.input_len / 32, req.output_len / 32);
+        if let Some(&s) = self.cache.get(&key) {
+            return s;
+        }
+        // bucket *midpoints*: flooring to the bucket base would cost a
+        // 31-token output as ~1 token and a 33-token one as 32 — a work
+        // cliff that would mis-weight LeastOutstanding routing
+        let input = key.0 * 32 + 16;
+        let output = key.1 * 32 + 16;
+        let ctx = input + output / 2;
+        let tpot = decode_iter_time(self.plat, self.cfg, &self.plan, NOMINAL_DECODE_BATCH, ctx)
+            + self.engine.effective_overhead();
+        let s = prefill_time(self.plat, self.cfg, &self.plan, input) + output as f64 * tpot;
+        self.cache.insert(key, s);
+        s
+    }
+}
+
+/// In-flight (estimated finish, estimated service seconds) pairs the
+/// dispatcher tracks per replica.
+struct ReplicaLoad {
+    in_flight: Vec<(f64, f64)>,
+}
+
+impl ReplicaLoad {
+    fn expire(&mut self, now: f64) {
+        self.in_flight.retain(|&(finish, _)| finish > now);
+    }
+
+    fn count(&self) -> f64 {
+        self.in_flight.len() as f64
+    }
+
+    fn work(&self) -> f64 {
+        self.in_flight.iter().map(|&(_, s)| s).sum()
+    }
+}
+
+/// Index of the minimum score; exact ties are broken by `rng` (the
+/// seeded tie-break — relevant at t=0 when every replica is empty).
+fn pick_min(scores: &[f64], rng: &mut Rng) -> usize {
+    let mut best = f64::INFINITY;
+    let mut tied: Vec<usize> = Vec::new();
+    for (r, &s) in scores.iter().enumerate() {
+        if s < best {
+            best = s;
+            tied.clear();
+        }
+        if s <= best {
+            tied.push(r);
+        }
+    }
+    if tied.len() == 1 { tied[0] } else { tied[rng.index(tied.len())] }
+}
+
+// Keeps the tie-break stream independent of workload-generation streams
+// seeded from the same user seed.
+const BALANCER_STREAM: u64 = 0xBA1A_4CE5_EED5_u64;
+
+/// Split `requests` (any order; sorted by arrival internally) into one
+/// list per replica under the cluster's balancing policy.  Pure
+/// dispatch — no event loop runs here — so callers can inspect or replay
+/// the partition independently of [`simulate_cluster`].
+pub fn dispatch(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &ClusterSpec,
+    requests: &[Request],
+) -> Vec<Vec<Request>> {
+    assert!(spec.replicas >= 1, "cluster needs at least one replica");
+    let n = spec.replicas as usize;
+    let mut sorted = requests.to_vec();
+    sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+
+    let mut lists: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
+    let mut loads: Vec<ReplicaLoad> =
+        (0..n).map(|_| ReplicaLoad { in_flight: Vec::new() }).collect();
+    let mut est = ServiceEstimate::new(plat, cfg, engine, spec.plan);
+    let mut rng = Rng::new(spec.seed ^ BALANCER_STREAM);
+    let mut rr_next = 0usize;
+
+    for req in sorted {
+        for load in loads.iter_mut() {
+            load.expire(req.arrival);
+        }
+        let r = match spec.balancer {
+            Balancer::RoundRobin => {
+                let r = rr_next;
+                rr_next = (rr_next + 1) % n;
+                r
+            }
+            Balancer::LeastOutstanding => {
+                let scores: Vec<f64> = loads.iter().map(|l| l.work()).collect();
+                pick_min(&scores, &mut rng)
+            }
+            Balancer::JoinShortestQueue => {
+                let scores: Vec<f64> = loads.iter().map(|l| l.count()).collect();
+                pick_min(&scores, &mut rng)
+            }
+        };
+        let s = est.seconds(&req);
+        loads[r].in_flight.push((req.arrival + s, s));
+        lists[r].push(req);
+    }
+    lists
+}
+
+/// Simulate `requests` on a replica cluster: dispatch the shared
+/// arrival stream, replay each replica through the unmodified
+/// single-deployment event loop, and merge.  The caller owns plan
+/// feasibility, exactly as with [`simulate_requests_on`].
+pub fn simulate_cluster(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &ClusterSpec,
+    requests: &[Request],
+) -> ClusterResult {
+    let lists = dispatch(plat, cfg, engine, spec, requests);
+    let results: Vec<SimResult> = lists
+        .iter()
+        .map(|list| simulate_requests_on(plat, cfg, engine, &spec.plan, list))
+        .collect();
+
+    let replicas: Vec<ReplicaStats> = results
+        .iter()
+        .enumerate()
+        .map(|(r, res)| ReplicaStats {
+            replica: r as u32,
+            requests: lists[r].len() as u64,
+            completions: res.completions.len() as u64,
+            output_tokens: res.output_tokens,
+            makespan: res.makespan,
+            decode_iters: res.decode_iters,
+            preemptions: res.preemptions,
+            rejected: res.rejected,
+        })
+        .collect();
+
+    // merge: counters sum, makespan is the slowest replica, mean
+    // iteration time is decode-iteration weighted; completions
+    // stable-sort by finish (within a replica they already are, so one
+    // replica merges to exactly its own result)
+    let mut completions: Vec<Completion> =
+        results.iter().flat_map(|r| r.completions.iter().cloned()).collect();
+    completions.sort_by(|a, b| a.finish.partial_cmp(&b.finish).unwrap());
+    let decode_iters: u64 = results.iter().map(|r| r.decode_iters).sum();
+    let iter_time_sum: f64 = results.iter().map(|r| r.mean_iter_time * r.decode_iters as f64).sum();
+    let merged = SimResult {
+        completions,
+        makespan: results.iter().map(|r| r.makespan).fold(0.0, f64::max),
+        output_tokens: results.iter().map(|r| r.output_tokens).sum(),
+        generated_tokens: results.iter().map(|r| r.generated_tokens).sum(),
+        decode_iters,
+        prefill_iters: results.iter().map(|r| r.prefill_iters).sum(),
+        preemptions: results.iter().map(|r| r.preemptions).sum(),
+        rejected: results.iter().map(|r| r.rejected).sum(),
+        mean_iter_time: if decode_iters > 0 { iter_time_sum / decode_iters as f64 } else { 0.0 },
+    };
+    ClusterResult { merged, replicas }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::hw::PlatformId;
+
+    fn setup() -> (Platform, LlamaConfig, EngineSpec) {
+        (Platform::get(PlatformId::A800), LlamaConfig::llama2_7b(), EngineSpec::vllm())
+    }
+
+    #[test]
+    fn parse_and_labels_round_trip() {
+        for b in Balancer::ALL {
+            assert_eq!(Balancer::parse(b.label()), Some(b));
+            assert_eq!(Balancer::parse(b.describe()), Some(b));
+        }
+        assert_eq!(Balancer::parse("nope"), None);
+    }
+
+    #[test]
+    fn round_robin_splits_cyclically() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let spec = ClusterSpec::new(3, plan, Balancer::RoundRobin);
+        let reqs = WorkloadSpec::at_once(9, 128, 8).generate().unwrap();
+        let lists = dispatch(&plat, &cfg, &engine, &spec, &reqs);
+        assert_eq!(lists.len(), 3);
+        for list in &lists {
+            assert_eq!(list.len(), 3);
+        }
+        // id i lands on replica i % 3 (arrivals tie at t=0; stable sort)
+        for (r, list) in lists.iter().enumerate() {
+            for req in list {
+                assert_eq!(req.id as usize % 3, r);
+            }
+        }
+        assert_eq!(spec.total_gpus(), 3 * plan.tp());
+    }
+
+    #[test]
+    fn dispatch_conserves_requests_across_policies() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let reqs = WorkloadSpec::new(50)
+            .arrival(crate::config::Arrival::Poisson { qps: 8.0 })
+            .input(crate::config::LengthDist::log_normal(400.0, 1.0))
+            .seed(3)
+            .generate()
+            .unwrap();
+        for b in Balancer::ALL {
+            let spec = ClusterSpec::new(4, plan, b).seed(5);
+            let lists = dispatch(&plat, &cfg, &engine, &spec, &reqs);
+            let mut ids: Vec<u64> = lists.iter().flatten().map(|r| r.id).collect();
+            ids.sort();
+            assert_eq!(ids, (0..50).collect::<Vec<u64>>(), "{}", b.label());
+        }
+    }
+
+    #[test]
+    fn dispatch_is_deterministic_in_the_seed() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let reqs = WorkloadSpec::new(40).seed(9).generate().unwrap();
+        let split = |seed| {
+            let spec = ClusterSpec::new(3, plan, Balancer::JoinShortestQueue).seed(seed);
+            dispatch(&plat, &cfg, &engine, &spec, &reqs)
+                .iter()
+                .map(|l| l.iter().map(|r| r.id).collect::<Vec<_>>())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(split(1), split(1));
+        // at-once arrivals are all ties, so the tie-break seed matters
+        assert_ne!(split(1), split(2));
+    }
+
+    #[test]
+    fn least_outstanding_balances_token_work() {
+        // two replicas, alternating huge/tiny prompts at t=0: round-robin
+        // stacks all the huge ones on replica 0, least-outstanding
+        // interleaves them
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let reqs: Vec<Request> = (0..20)
+            .map(|i| Request {
+                id: i,
+                input_len: if i % 2 == 0 { 4096 } else { 32 },
+                output_len: 16,
+                arrival: 0.0,
+            })
+            .collect();
+        let work = |b: Balancer| {
+            let spec = ClusterSpec::new(2, plan, b).seed(7);
+            let lists = dispatch(&plat, &cfg, &engine, &spec, &reqs);
+            let tokens: Vec<u64> =
+                lists.iter().map(|l| l.iter().map(|r| r.input_len).sum()).collect();
+            (tokens[0] as i64 - tokens[1] as i64).unsigned_abs()
+        };
+        assert!(work(Balancer::LeastOutstanding) < work(Balancer::RoundRobin),
+                "lo imbalance {} !< rr imbalance {}",
+                work(Balancer::LeastOutstanding), work(Balancer::RoundRobin));
+    }
+
+    #[test]
+    fn merged_result_sums_counters_and_takes_max_makespan() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let spec = ClusterSpec::new(2, plan, Balancer::RoundRobin);
+        let reqs = WorkloadSpec::at_once(30, 256, 16).generate().unwrap();
+        let r = simulate_cluster(&plat, &cfg, &engine, &spec, &reqs);
+        assert_eq!(r.merged.completions.len(), 30);
+        assert_eq!(r.merged.output_tokens, 30 * 16);
+        assert_eq!(r.replicas.len(), 2);
+        let sum: u64 = r.replicas.iter().map(|s| s.completions).sum();
+        assert_eq!(sum, 30);
+        let max = r.replicas.iter().map(|s| s.makespan).fold(0.0, f64::max);
+        assert_eq!(r.merged.makespan, max);
+        // merged completions are sorted by finish time
+        assert!(r.merged.completions.windows(2).all(|w| w[0].finish <= w[1].finish));
+        assert!(r.utilization_skew() >= 1.0);
+    }
+
+    #[test]
+    fn skew_is_one_when_perfectly_balanced() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let spec = ClusterSpec::new(2, plan, Balancer::RoundRobin);
+        // identical requests, even count: round-robin splits exactly
+        let reqs = WorkloadSpec::at_once(16, 256, 32).generate().unwrap();
+        let r = simulate_cluster(&plat, &cfg, &engine, &spec, &reqs);
+        assert!((r.utilization_skew() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,15 +1,19 @@
 //! Serving substrate (paper §VI): three engine policies (TGI / vLLM /
 //! LightLLM), two KV allocators (paged, token-level) plus reserve-max,
-//! and a discrete-event continuous-batching simulator that replays
-//! either the paper's closed burst or any open-loop
-//! `config::WorkloadSpec` (arrival processes, length distributions,
-//! trace replay) with TTFT/TPOT/SLO accounting.
+//! a discrete-event continuous-batching simulator that replays either
+//! the paper's closed burst or any open-loop `config::WorkloadSpec`
+//! (arrival processes, length distributions, trace replay) with
+//! TTFT/TPOT/SLO accounting, and a replica-cluster layer (`cluster`)
+//! that load-balances one arrival stream across dp>1 copies of a
+//! deployment.
 
+pub mod cluster;
 pub mod engine;
 pub mod kv_cache;
 pub mod request;
 pub mod sim;
 pub mod token_kv;
 
+pub use cluster::{dispatch, simulate_cluster, Balancer, ClusterResult, ClusterSpec, ReplicaStats};
 pub use engine::{DeployPlan, EngineSpec, KvPolicy};
 pub use sim::{simulate, simulate_requests, simulate_requests_on, simulate_workload, SimResult};

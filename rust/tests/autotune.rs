@@ -11,8 +11,8 @@ use llm_perf_lab::memory::check_fit;
 use llm_perf_lab::memory::Fit;
 use llm_perf_lab::report::parallel::sweep_plans;
 use llm_perf_lab::search::{
-    autotune_serve, autotune_train, dominates, serve_space, train_space, SearchBudget,
-    TrainStack,
+    autotune_serve, autotune_train, dominates, serve_space, train_space, ReplicaSpace,
+    SearchBudget, TrainStack,
 };
 use llm_perf_lab::serve::{simulate_requests_on, EngineSpec};
 
@@ -53,10 +53,11 @@ fn pruned_infeasible_candidates_are_never_costed() {
         assert!(!costed_labels.contains(&p.label), "pruned {} was costed", p.label);
     }
     // serving side: the space only keeps deployable (engine, TP) pairs
-    let sspace = serve_space(&Platform::get(PlatformId::Rtx4090), &cfg, &EngineSpec::all());
+    let sspace = serve_space(&Platform::get(PlatformId::Rtx4090), &cfg, &EngineSpec::all(),
+                             &ReplicaSpace::default());
     for c in &sspace.candidates {
         assert!(c.engine
-            .plan_with_tp(&Platform::get(PlatformId::Rtx4090), &cfg, c.gpus())
+            .plan_with_tp(&Platform::get(PlatformId::Rtx4090), &cfg, c.plan.tp())
             .is_some());
     }
     assert!(sspace.pruned.iter().any(|p| p.label.starts_with("TGI")),
@@ -138,7 +139,7 @@ fn autotune_serve_min_gpu_point_meets_slo_end_to_end() {
     let target = 2.0;
     let run = || {
         autotune_serve(&plat, &cfg, &EngineSpec::all(), &base, &slo, Some(target),
-                       (0.5, 16.0), budget())
+                       (0.5, 16.0), ReplicaSpace::default(), budget())
             .unwrap()
     };
     let search = run();
@@ -183,7 +184,7 @@ fn serve_frontier_is_monotone_tradeoff() {
     let base = WorkloadSpec::new(60).seed(11);
     let slo = SloSpec::new(0.9, 2.0, 0.2);
     let search = autotune_serve(&plat, &cfg, &[EngineSpec::vllm()], &base, &slo, None,
-                                (0.25, 32.0),
+                                (0.25, 32.0), ReplicaSpace::default(),
                                 SearchBudget { max_costed: usize::MAX, early_prune: false })
         .unwrap();
     let front = search.frontier_evals();
