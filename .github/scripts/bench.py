@@ -1,7 +1,16 @@
 #!/usr/bin/env python3
-"""CI perf tracking: run two pinned llmperf scenarios, record wall time
-plus key model outputs into BENCH_ci.json, and warn (never fail) on >10%
-regression against the committed baseline.
+"""CI perf tracking: run three pinned llmperf scenarios, record wall
+time plus key model outputs into BENCH_ci.json, and warn (never fail) on
+>10% regression against the committed baseline.
+
+The third scenario is a pair: the same >=200-candidate autotune-serve
+space once through the default staged/parallel/memoized pipeline and
+once with --exhaustive --jobs 1 --no-early-prune (full sequential
+evaluation).  It records the staged-over-exhaustive wall-clock speedup
+and the memo hit rate, cross-checks that both runs report the identical
+min-GPU answer (a hard failure on mismatch — that is the staged-search
+fidelity guarantee), and warns when the speedup drops below 5x or the
+hit rate below 50%.
 
 Schema of BENCH_ci.json (documented in DESIGN.md §CI perf tracking):
 
@@ -70,11 +79,36 @@ SCENARIOS = [
     },
 ]
 
+# The third scenario: a 204-candidate autotune-serve space (3 engines ×
+# TP {1,2,4,8} × replicas 1..17), run once through the default staged
+# pipeline and once fully sequentially.  The exhaustive reference pins
+# --jobs 1 *and* --no-early-prune so it measures the true cost of
+# evaluating every candidate — with the saturation prune left on, a
+# cheap saturating candidate would let "exhaustive" skip most of the
+# space and the speedup would measure nothing.
+PAIRED_SCENARIO = {
+    "name": "autotune-serve-large-space-7b-a800",
+    "argv": [
+        "autotune-serve", "--model", "7b", "--platform", "a800", "--engines", "all",
+        "--requests", "50", "--qps", "1", "--qps-min", "0.5", "--qps-max", "24",
+        "--slo-ttft", "4.0", "--slo-tpot", "0.25", "--seed", "42",
+        "--max-replicas", "17",
+    ],
+    "exhaustive_extra": ["--exhaustive", "--jobs", "1", "--no-early-prune"],
+    "metrics": {
+        "min_gpus": r"— ([0-9]+) GPU\(s\)",
+        "max_qps_at_min_gpu": r"max ([0-9.]+) QPS",
+    },
+}
+
 TOLERANCE = 0.10  # warn beyond ±10%
 
 # Metrics where *lower* is a regression (throughput-like); wall_s is the
 # opposite (higher is a regression).
-HIGHER_IS_BETTER = {"max_qps_under_slo", "max_qps_at_min_gpu", "frontier_rows"}
+HIGHER_IS_BETTER = {
+    "max_qps_under_slo", "max_qps_at_min_gpu", "frontier_rows",
+    "speedup_staged_vs_exhaustive", "memo_hit_pct",
+}
 
 
 def frontier_rows(output):
@@ -109,6 +143,54 @@ def run_scenario(binary, scenario):
         metrics["frontier_rows"] = frontier_rows(proc.stdout)
     return {"name": scenario["name"], "argv": scenario["argv"], "wall_s": round(wall, 3),
             "metrics": metrics}
+
+
+def run_paired(binary, scenario):
+    """Run the staged pipeline and the sequential exhaustive reference on
+    the same pinned space; record the speedup, the memo hit rate, and the
+    (cross-checked) min-GPU answer.  The staged run's wall time is the
+    tracked wall_s."""
+    def timed(argv):
+        t0 = time.monotonic()
+        proc = subprocess.run([binary] + argv, capture_output=True, text=True, timeout=1800)
+        wall = time.monotonic() - t0
+        if proc.returncode != 0:
+            sys.stderr.write(proc.stdout + proc.stderr)
+            raise RuntimeError(f"{scenario['name']}: exit {proc.returncode}")
+        return wall, proc.stdout
+
+    staged_wall, staged_out = timed(scenario["argv"])
+    exh_wall, exh_out = timed(scenario["argv"] + scenario["exhaustive_extra"])
+
+    metrics = {}
+    for key, pattern in scenario["metrics"].items():
+        ms, me = re.search(pattern, staged_out), re.search(pattern, exh_out)
+        if not ms or not me:
+            sys.stderr.write(staged_out if not ms else exh_out)
+            raise RuntimeError(f"{scenario['name']}: no match for {key} ({pattern})")
+        metrics[key] = float(ms.group(1))
+        if key == "min_gpus" and float(ms.group(1)) != float(me.group(1)):
+            raise RuntimeError(
+                f"{scenario['name']}: staged min-GPU point {ms.group(1)} differs from "
+                f"exhaustive {me.group(1)} — staged-search fidelity guarantee broken"
+            )
+    memo = re.search(r"memo ([0-9]+) hits / ([0-9]+) misses", staged_out)
+    if not memo:
+        sys.stderr.write(staged_out)
+        raise RuntimeError(f"{scenario['name']}: no memo counters in staged output")
+    hits, misses = int(memo.group(1)), int(memo.group(2))
+    metrics["memo_hit_pct"] = round(100.0 * hits / max(hits + misses, 1), 1)
+    metrics["speedup_staged_vs_exhaustive"] = round(exh_wall / max(staged_wall, 1e-9), 2)
+    metrics["exhaustive_wall_s"] = round(exh_wall, 3)
+    metrics["frontier_rows"] = frontier_rows(staged_out)
+
+    if metrics["speedup_staged_vs_exhaustive"] < 5.0:
+        warn(f"{scenario['name']}: staged speedup "
+             f"{metrics['speedup_staged_vs_exhaustive']}x below the 5x target")
+    if metrics["memo_hit_pct"] < 50.0:
+        warn(f"{scenario['name']}: memo hit rate {metrics['memo_hit_pct']}% below 50%")
+    return {"name": scenario["name"], "argv": scenario["argv"],
+            "wall_s": round(staged_wall, 3), "metrics": metrics}
 
 
 def warn(msg):
@@ -152,7 +234,8 @@ def main():
     result = {
         "schema": "llmperf-bench-ci/v1",
         "commit": os.environ.get("GITHUB_SHA", "unknown"),
-        "scenarios": [run_scenario(args.binary, s) for s in SCENARIOS],
+        "scenarios": [run_scenario(args.binary, s) for s in SCENARIOS]
+        + [run_paired(args.binary, PAIRED_SCENARIO)],
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

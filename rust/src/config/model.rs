@@ -2,7 +2,10 @@
 //! small real-compute presets mirrored from python/compile/model.py.
 
 /// Llama-family decoder-only architecture description.
-#[derive(Debug, Clone)]
+///
+/// Derives `Eq`/`Hash` so the search layer can use the config's value
+/// identity in memo-cache keys (`search::memo`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct LlamaConfig {
     /// display name ("Llama2-7B", …)
     pub name: &'static str,

@@ -21,7 +21,9 @@ use llm_perf_lab::config::{
 use llm_perf_lab::err;
 use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
-use llm_perf_lab::search::{autotune_serve, autotune_train, ReplicaSpace, SearchBudget};
+use llm_perf_lab::search::{
+    autotune_serve_exec, autotune_train_exec, ExecPolicy, ReplicaSpace, SearchBudget,
+};
 use llm_perf_lab::serve::{simulate_cluster, simulate_requests, Balancer, ClusterSpec, EngineSpec};
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
@@ -77,25 +79,33 @@ configuration autotuner (DESIGN.md §Configuration search):
   autotune-train --model 13b [--platform a800] [--nodes 1] [--seq 350]
                  [--bs 8 | --bs 4,8,16] [--methods none|grid|Z3,F+R+Z2,...]
                  [--mem-frac 1.0] [--max-configs N] [--show-pruned]
-                 [--profile comm_profile.json]
-                 joint plan x stack/method x batch search: enumerate,
-                 prune OOM configs via the memory models (never costed),
-                 cost the rest, print the throughput x memory-headroom
-                 Pareto frontier; --methods adds DeepSpeed method cells
-                 on the pure-DP plan ('grid' = the paper's Table III set)
+                 [--jobs N] [--profile comm_profile.json]
+                 joint plan x stack/method x micro-batch x batch search:
+                 enumerate (pipeline plans also sweep the micro-batch
+                 count), prune OOM configs via the memory models (never
+                 costed), cost the rest in parallel on --jobs threads
+                 (default: all cores; results are bit-identical at any
+                 width), print the throughput x memory-headroom Pareto
+                 frontier; --methods adds DeepSpeed method cells on the
+                 pure-DP plan ('grid' = the paper's Table III set)
   autotune-serve --model 70b [--platform a800] [--qps 2.0]
                  [--engines all|vllm,tgi,lightllm] [--requests 200]
                  [--arrival ...] [--input ...] [--output ...] [--seed 42]
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
                  [--qps-min 0.25] [--qps-max 64] [--max-configs N]
                  [--max-replicas 1] [--gpu-budget N] [--balancer rr|lo|jsq]
-                 [--no-early-prune] [--show-pruned] [--profile FILE]
+                 [--jobs N] [--exhaustive] [--no-early-prune]
+                 [--show-pruned] [--profile FILE]
                  joint engine x TP-degree x replica-count x load search:
                  bisect each feasible deployment's (or cluster's) max QPS
                  under the SLO and print the capacity x total-GPUs x $/h
                  Pareto frontier over candidates meeting --qps (all
                  candidates without it); --max-replicas opens the dp>1
-                 axis, --gpu-budget caps TP x replicas
+                 axis, --gpu-budget caps TP x replicas; candidates are
+                 costed in parallel on --jobs threads through a staged
+                 coarse-to-fine pipeline (analytic screen -> short sims
+                 -> full bisection, min-GPU point provably identical to
+                 the exhaustive answer); --exhaustive bisects everything
 
 interconnect calibration (NCCL-tests logs in, measured link models out):
   calibrate-comm <log...> [--scope inter] [--out comm_profile.json]
@@ -368,6 +378,17 @@ fn budget_flags(cli: &Cli) -> SearchBudget {
     }
 }
 
+/// The shared autotune execution flags (`--jobs`, `--exhaustive`).
+/// `staged_default` is the subcommand's pipeline default: serving
+/// searches stage unless `--exhaustive`, training always evaluates
+/// everything feasible (its evals are cheap relative to bisection).
+fn exec_flags(cli: &Cli, staged_default: bool) -> ExecPolicy {
+    ExecPolicy {
+        jobs: cli.flag_u64("jobs", 0) as usize,
+        staged: staged_default && !cli.has("exhaustive"),
+    }
+}
+
 /// Build a `WorkloadSpec` from the shared workload flags (`--requests`,
 /// `--arrival`, `--input`, `--output`, `--trace`, `--seed`);
 /// `default_requests` is the per-subcommand `--requests` fallback.
@@ -619,9 +640,14 @@ fn autotune_train_cmd(cli: &Cli) -> Result<()> {
     if !(frac > 0.0 && frac <= 1.0) {
         return Err(err!("--mem-frac must be in (0, 1], got {frac}"));
     }
-    let search = autotune_train(&plat, &topo, &cfg, cli.flag_u64("seq", 350), &batch_sizes,
-                                &methods, plat.gpu.mem_bytes * frac, budget_flags(cli));
+    let policy = exec_flags(cli, false);
+    let search = autotune_train_exec(&plat, &topo, &cfg, cli.flag_u64("seq", 350), &batch_sizes,
+                                     &methods, plat.gpu.mem_bytes * frac, budget_flags(cli),
+                                     policy);
     println!("{}", report::search::train_frontier_table(&search, &plat, &cfg, nodes).render());
+    println!("{}",
+             report::search::exec_summary_line(&search.stats, policy.effective_jobs(),
+                                               policy.staged));
     if cli.has("show-pruned") && !search.pruned.is_empty() {
         println!("{}",
                  report::search::pruned_table("Pruned before costing", &search.pruned).render());
@@ -700,9 +726,13 @@ fn autotune_serve_cmd(cli: &Cli) -> Result<()> {
     let balancer = Balancer::parse(&bal)
         .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq)"))?;
     let replicas = ReplicaSpace { max_replicas, gpu_budget, balancer };
-    let search = autotune_serve(&plat, &cfg, &engines, &base, &slo, target, (lo, hi), replicas,
-                                budget_flags(cli))?;
+    let policy = exec_flags(cli, true);
+    let search = autotune_serve_exec(&plat, &cfg, &engines, &base, &slo, target, (lo, hi),
+                                     replicas, budget_flags(cli), policy)?;
     println!("{}", report::search::serve_frontier_table(&search, &plat, &cfg).render());
+    println!("{}",
+             report::search::exec_summary_line(&search.stats, policy.effective_jobs(),
+                                               policy.staged));
     if cli.has("show-pruned") && !search.pruned.is_empty() {
         println!("{}",
                  report::search::pruned_table("Pruned before costing", &search.pruned).render());

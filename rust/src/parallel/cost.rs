@@ -14,7 +14,7 @@ use crate::hw::{Link, Topology};
 use super::plan::ParallelPlan;
 
 /// One parallelism axis of a plan.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Axis {
     /// tensor parallelism (intra-layer sharding, stride 1)
     Tensor,

@@ -53,8 +53,21 @@ pub fn activation_shard(
     wl: TrainWorkload,
     discount: f64,
 ) -> f64 {
+    activation_shard_micro(cfg, plan, wl, discount, None)
+}
+
+/// `activation_shard` under an explicit micro-batch count (`None` = the
+/// default 1F1B granularity of one sample per micro-batch).  Fewer,
+/// larger micro-batches widen the in-flight activation window.
+pub fn activation_shard_micro(
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    wl: TrainWorkload,
+    discount: f64,
+    micro: Option<u64>,
+) -> f64 {
     let full = activation_bytes(cfg, wl.batch_size, wl.seq_len, false, false) * discount;
-    let sched = PipelineSchedule::one_f_one_b(plan, wl);
+    let sched = PipelineSchedule::with_micro(plan, wl, micro);
     if plan.pp > 1 {
         full / (plan.tp as f64 * plan.pp as f64 * sched.micro_batches as f64)
             * sched.in_flight() as f64
@@ -73,8 +86,22 @@ pub fn megatron_memory(
     wl: TrainWorkload,
     discount: f64,
 ) -> MemoryBreakdown {
+    megatron_memory_micro(plat, cfg, plan, wl, discount, None)
+}
+
+/// `megatron_memory` under an explicit micro-batch count (`None` = the
+/// default schedule) — the memory side of the autotuner's micro-batch
+/// axis.
+pub fn megatron_memory_micro(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    wl: TrainWorkload,
+    discount: f64,
+    micro: Option<u64>,
+) -> MemoryBreakdown {
     let s = state_shards(cfg, plan);
-    let act = activation_shard(cfg, plan, wl, discount);
+    let act = activation_shard_micro(cfg, plan, wl, discount, micro);
     MemoryBreakdown {
         weights: s.weights,
         grads: s.grads,

@@ -19,6 +19,9 @@ pub mod pipeline;
 pub mod plan;
 
 pub use cost::{Axis, PlanCost};
-pub use memory::{activation_shard, megatron_memory, state_shards, StateShards};
+pub use memory::{
+    activation_shard, activation_shard_micro, megatron_memory, megatron_memory_micro,
+    state_shards, StateShards,
+};
 pub use pipeline::{bubble_fraction, PipelineSchedule};
 pub use plan::{ParallelPlan, PlanError};

@@ -34,7 +34,16 @@ impl PipelineSchedule {
     /// Micro-batch count from the workload: one sample per micro-batch
     /// (Megatron's default granularity), no micro-batching at pp=1.
     pub fn one_f_one_b(plan: &ParallelPlan, wl: TrainWorkload) -> Self {
-        let m = if plan.pp > 1 { wl.batch_size.max(1) } else { 1 };
+        Self::with_micro(plan, wl, None)
+    }
+
+    /// 1F1B schedule with an explicit micro-batch count: `None` keeps the
+    /// default (one sample per micro-batch at pp>1), `Some(m)` is clamped
+    /// to `1..=batch_size`.  Without a pipeline there is nothing to
+    /// micro-batch, so m is pinned to 1 regardless.
+    pub fn with_micro(plan: &ParallelPlan, wl: TrainWorkload, micro: Option<u64>) -> Self {
+        let bs = wl.batch_size.max(1);
+        let m = if plan.pp > 1 { micro.unwrap_or(bs).clamp(1, bs) } else { 1 };
         PipelineSchedule { pp: plan.pp, micro_batches: m }
     }
 

@@ -14,8 +14,8 @@ use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::err;
 use crate::hw::Platform;
 use crate::serve::{
-    simulate_cluster, simulate_requests_on, Balancer, ClusterResult, ClusterSpec, DeployPlan,
-    EngineSpec, SimResult,
+    simulate_cluster, simulate_cluster_shared, simulate_requests_on, simulate_requests_shared,
+    Balancer, ClusterResult, ClusterSpec, DeployPlan, EngineSpec, SharedCosts, SimResult,
 };
 use crate::util::error::Result;
 use crate::util::table::{f0, f1, f2, oom, Table};
@@ -193,6 +193,30 @@ pub fn max_qps_under_slo(
     max_qps_under_slo_on(plat, cfg, engine, &plan, base, slo, lo, hi)
 }
 
+/// [`max_qps_under_slo_on`] drawing per-iteration costs from a shared
+/// [`SharedCosts`] memo — the bisection the autotuner's parallel
+/// evaluator runs so every probe of every candidate over the same plan
+/// shares one cost computation.  Bit-identical to
+/// [`max_qps_under_slo_on`].
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_on_shared(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+    costs: &SharedCosts,
+) -> Result<Option<f64>> {
+    let probe_at = |qps: f64| -> Result<SimResult> {
+        let reqs = base.with_offered_qps(qps)?.generate()?;
+        Ok(simulate_requests_shared(plat, cfg, engine, plan, &reqs, costs))
+    };
+    Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
+}
+
 /// [`max_qps_under_slo`] for a replica cluster: each probe dispatches
 /// the re-armed arrival stream across the cluster's replicas and the
 /// SLO is checked on the merged, cluster-level result — the capacity
@@ -211,6 +235,28 @@ pub fn max_qps_under_slo_cluster(
     let probe_at = |qps: f64| -> Result<SimResult> {
         let reqs = base.with_offered_qps(qps)?.generate()?;
         Ok(simulate_cluster(plat, cfg, engine, cluster, &reqs).merged)
+    };
+    Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
+}
+
+/// [`max_qps_under_slo_cluster`] on a shared [`SharedCosts`] memo —
+/// bit-identical to it, but every replica of every probe reuses the
+/// memoized per-iteration costs.
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_cluster_shared(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    cluster: &ClusterSpec,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+    costs: &SharedCosts,
+) -> Result<Option<f64>> {
+    let probe_at = |qps: f64| -> Result<SimResult> {
+        let reqs = base.with_offered_qps(qps)?.generate()?;
+        Ok(simulate_cluster_shared(plat, cfg, engine, cluster, &reqs, costs).merged)
     };
     Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
 }

@@ -12,8 +12,20 @@ use crate::util::table::{f0, f1, f2, Table};
 fn stats_line(stats: &SearchStats) -> String {
     format!(
         "{} enumerated, {} pruned infeasible (never costed), {} costed, {} skipped \
-         (budget/early-prune)",
+         (budget/early-prune/staging)",
         stats.enumerated, stats.pruned_infeasible, stats.costed, stats.skipped
+    )
+}
+
+/// One-line memo/pipeline summary printed under a frontier table:
+/// worker count, exhaustive vs staged, and the cost-table hit rate.
+pub fn exec_summary_line(stats: &SearchStats, jobs: usize, staged: bool) -> String {
+    let pipeline = if staged { "staged" } else { "exhaustive" };
+    let lookups = stats.memo_hits + stats.memo_misses;
+    let rate = if lookups == 0 { 0.0 } else { 100.0 * stats.memo_hits as f64 / lookups as f64 };
+    format!(
+        "search: {} job(s), {} pipeline — memo {} hits / {} misses ({:.0}% hit rate)",
+        jobs, pipeline, stats.memo_hits, stats.memo_misses, rate
     )
 }
 
@@ -39,10 +51,14 @@ pub fn train_frontier_table(
     .align_left(0)
     .align_left(1);
     for e in search.frontier_evals() {
+        let bs = match e.cand.micro {
+            Some(m) => format!("{}/mb{}", e.cand.wl.batch_size, m),
+            None => e.cand.wl.batch_size.to_string(),
+        };
         t.row(vec![
             e.cand.plan.label(),
             e.cand.stack.label(),
-            e.cand.wl.batch_size.to_string(),
+            bs,
             f1(e.step_time * 1e3),
             f0(e.tokens_per_s),
             f1(e.mem_gb),
@@ -134,5 +150,10 @@ mod tests {
         assert!(t.render().contains("max QPS") && t.render().contains("Repl"));
         let p = pruned_table("why-not", &s.pruned);
         assert_eq!(p.n_rows(), s.pruned.len());
+        // memo counters surface in the exec summary and never divide by 0
+        let line = exec_summary_line(&s.stats, 2, false);
+        assert!(line.contains("2 job(s)") && line.contains("exhaustive"), "{line}");
+        let empty = exec_summary_line(&SearchStats::default(), 1, true);
+        assert!(empty.contains("0% hit rate") && empty.contains("staged"), "{empty}");
     }
 }

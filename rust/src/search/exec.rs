@@ -1,0 +1,162 @@
+//! Parallel candidate evaluation for the autotuner (zero-dependency
+//! thread pool on `std::thread::scope`).
+//!
+//! Two invariants make concurrency invisible to callers:
+//!
+//! 1. **Deterministic order** — [`par_map`] claims indices from an
+//!    atomic counter but reassembles results in enumeration order, so
+//!    the evaluation vector is identical at any `--jobs` level.
+//! 2. **Deterministic pruning** — the serving dominance early-prune is
+//!    split into an opportunistic runtime check against a shared
+//!    [`SaturationFrontier`] (saves work, may over-evaluate under
+//!    races, never under-evaluates) and a sequential post-pass in the
+//!    driver that recomputes the canonical skip set and discards any
+//!    speculative evaluations, so costed/skipped stats and the frontier
+//!    are bit-identical to a sequential run (DESIGN.md §Configuration
+//!    search).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// How the autotuner drivers execute a search: worker count and whether
+/// the staged (successive-halving) serving pipeline is enabled.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecPolicy {
+    /// evaluator threads; 0 = one per available hardware thread
+    pub jobs: usize,
+    /// serving only: screen candidates with the analytical capacity
+    /// estimate and short simulations before full bisection
+    /// (`search::stage`); `false` = exhaustive evaluation
+    pub staged: bool,
+}
+
+impl Default for ExecPolicy {
+    /// Auto-sized thread pool, exhaustive evaluation — the library
+    /// default `autotune_train`/`autotune_serve` run under.
+    fn default() -> Self {
+        ExecPolicy { jobs: 0, staged: false }
+    }
+}
+
+impl ExecPolicy {
+    /// The worker count a driver actually spawns (resolves `jobs == 0`
+    /// to the machine's available parallelism).
+    pub fn effective_jobs(&self) -> usize {
+        if self.jobs > 0 {
+            self.jobs
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// Map `f` over `items` on up to `jobs` scoped threads, returning
+/// results in input order regardless of completion order.  `jobs <= 1`
+/// (or a single item) runs inline with no thread spawn.  A panicking
+/// `f` propagates to the caller when the scope joins.
+pub(crate) fn par_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if jobs <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    let workers = jobs.min(items.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                out.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = out.into_inner().unwrap();
+    v.sort_by_key(|&(i, _)| i);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Shared record of (engine, GPU count, enumeration index) triples whose
+/// evaluation saturated the search bracket — the concurrent form of the
+/// dominance early-prune.
+///
+/// A worker may skip candidate `i` only on the evidence of a *published*
+/// saturator with index `j < i`: published entries were really
+/// evaluated, so every runtime skip is also a skip of the canonical
+/// sequential pass (which skips `i` whenever any smaller kept fleet of
+/// the same engine saturates).  The driver's post-pass re-derives that
+/// canonical classification, so opportunistic timing can only cause
+/// extra (discarded) evaluations, never a missing one.
+pub(crate) struct SaturationFrontier {
+    published: Mutex<Vec<(String, u32, usize)>>,
+}
+
+impl SaturationFrontier {
+    pub(crate) fn new() -> Self {
+        SaturationFrontier { published: Mutex::new(Vec::new()) }
+    }
+
+    /// Record that candidate `idx` (`engine`, `gpus`) saturated the
+    /// bracket ceiling.
+    pub(crate) fn publish(&self, engine: &str, gpus: u32, idx: usize) {
+        self.published.lock().unwrap().push((engine.to_string(), gpus, idx));
+    }
+
+    /// Whether an earlier-enumerated, strictly smaller fleet of the same
+    /// engine is already known to saturate the bracket.
+    pub(crate) fn should_skip(&self, engine: &str, gpus: u32, idx: usize) -> bool {
+        self.published
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|(e, g, i)| *i < idx && e == engine && *g < gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_input_order_at_any_width() {
+        let items: Vec<u64> = (0..97).collect();
+        let seq = par_map(&items, 1, |i, &x| (i as u64) * 1000 + x * x);
+        for jobs in [2, 4, 8] {
+            let par = par_map(&items, jobs, |i, &x| (i as u64) * 1000 + x * x);
+            assert_eq!(par, seq, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, 8, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], 8, |i, &x| x + i as u32), vec![7]);
+    }
+
+    #[test]
+    fn saturation_frontier_only_trusts_earlier_smaller_entries() {
+        let f = SaturationFrontier::new();
+        f.publish("vLLM", 2, 5);
+        // later index, wider fleet, same engine: skip
+        assert!(f.should_skip("vLLM", 4, 9));
+        // earlier index than the publisher: never skipped by it
+        assert!(!f.should_skip("vLLM", 4, 3));
+        // equal size or other engine: not dominated
+        assert!(!f.should_skip("vLLM", 2, 9));
+        assert!(!f.should_skip("TGI", 4, 9));
+    }
+
+    #[test]
+    fn effective_jobs_resolves_auto() {
+        assert!(ExecPolicy::default().effective_jobs() >= 1);
+        assert_eq!(ExecPolicy { jobs: 3, staged: false }.effective_jobs(), 3);
+    }
+}

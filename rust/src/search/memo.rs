@@ -1,0 +1,100 @@
+//! Hash-cons memoization for the autotuner's evaluation pipeline.
+//!
+//! A [`MemoCache`] is created per search and composes the two
+//! layer-local caches — [`SharedCosts`] (serving: per-plan decode /
+//! prefill step-time tables, engine overhead excluded so all engines
+//! share one table) and [`BreakdownCache`] (training: per-(batch, seq)
+//! forward/backward compute, plan-independent) — under a single
+//! environment fingerprint.  The fingerprint pins the value identity of
+//! the `(Platform, Topology, LlamaConfig)` triple the cached numbers
+//! were computed against: entries are keyed inside the caches by
+//! `ParallelPlan` (which derives `Hash`/`Eq`), and the cache as a whole
+//! is only valid for one environment, which the fingerprint makes
+//! checkable.
+//!
+//! Hit/miss counters are derived, not raced: each cache counts total
+//! lookups (atomic) and distinct keys (map size), so
+//! `hits = lookups - distinct` is exact regardless of which thread
+//! happened to populate an entry first.
+
+use std::hash::{Hash, Hasher};
+
+use crate::config::LlamaConfig;
+use crate::hw::{Platform, Topology};
+use crate::serve::SharedCosts;
+use crate::train::BreakdownCache;
+
+/// Search-wide memo store: serve + train caches plus the environment
+/// fingerprint they are valid for.
+#[derive(Debug, Default)]
+pub struct MemoCache {
+    env: u64,
+    /// serving cost tables (`serve::SharedCosts`), keyed by `ParallelPlan`
+    pub serve: SharedCosts,
+    /// training compute memo (`train::BreakdownCache`), keyed by (batch, seq)
+    pub train: BreakdownCache,
+}
+
+/// Hash the value identity of a platform/config pair (plus topology for
+/// training searches).  `Platform`/`Topology` carry floats, so their
+/// stable `Debug` rendering is hashed; `LlamaConfig` derives `Hash`.
+fn fingerprint(plat: &Platform, topo: Option<&Topology>, cfg: &LlamaConfig) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    format!("{plat:?}").hash(&mut h);
+    if let Some(t) = topo {
+        format!("{t:?}").hash(&mut h);
+    }
+    cfg.hash(&mut h);
+    h.finish()
+}
+
+impl MemoCache {
+    /// Fresh cache for a serving search on `plat` / `cfg`.
+    pub fn for_serve(plat: &Platform, cfg: &LlamaConfig) -> Self {
+        MemoCache { env: fingerprint(plat, None, cfg), ..Default::default() }
+    }
+
+    /// Fresh cache for a training search on `plat` / `topo` / `cfg`.
+    pub fn for_train(plat: &Platform, topo: &Topology, cfg: &LlamaConfig) -> Self {
+        MemoCache { env: fingerprint(plat, Some(topo), cfg), ..Default::default() }
+    }
+
+    /// Value fingerprint of the environment this cache is valid for.
+    pub fn env(&self) -> u64 {
+        self.env
+    }
+
+    /// `(hits, misses)` across both caches.  Misses equal the number of
+    /// distinct keys materialized; hits are every other lookup.  Both
+    /// are deterministic for a fixed evaluation set.
+    pub fn counters(&self) -> (usize, usize) {
+        let lookups = self.serve.lookups() + self.train.lookups();
+        let misses = self.serve.distinct() + self.train.distinct();
+        ((lookups - misses) as usize, misses as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn fingerprint_separates_environments() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let serve = MemoCache::for_serve(&plat, &cfg);
+        let train = MemoCache::for_train(&plat, &Topology::single_node(&plat), &cfg);
+        assert_ne!(serve.env(), train.env(), "topology must enter the train fingerprint");
+        let mut cfg2 = cfg.clone();
+        cfg2.n_layers += 1;
+        assert_ne!(MemoCache::for_serve(&plat, &cfg2).env(), serve.env());
+        assert_eq!(MemoCache::for_serve(&plat, &cfg).env(), serve.env());
+    }
+
+    #[test]
+    fn fresh_cache_counts_nothing() {
+        let m = MemoCache::for_serve(&Platform::get(PlatformId::A800), &LlamaConfig::llama2_7b());
+        assert_eq!(m.counters(), (0, 0));
+    }
+}

@@ -21,19 +21,36 @@
 //!    the phases together deterministically, with a candidate budget and
 //!    a dominance early-prune so 70B × multi-node spaces stay fast.
 //!
-//! `report::search` renders the frontiers (DESIGN.md §Configuration
-//! search).
+//! The evaluation engine underneath is a three-stage, parallel,
+//! memoized pipeline: [`exec`] fans candidates out over a scoped thread
+//! pool (results reassembled in enumeration order, so every `--jobs`
+//! level is bit-identical), [`memo`] hash-conses the expensive
+//! per-plan cost tables across candidates, and [`stage`] optionally
+//! runs the serving search coarse-to-fine (analytical screen → short
+//! simulations → full bisection) while provably preserving the
+//! exhaustive frontier's min-GPU point.  `report::search` renders the
+//! frontiers (DESIGN.md §Configuration search).
 
+pub mod exec;
+pub mod memo;
 pub mod objective;
 pub mod pareto;
 pub mod space;
+pub mod stage;
 
 use crate::config::{LlamaConfig, Method, SloSpec, WorkloadSpec};
 use crate::hw::{Platform, Topology};
 use crate::serve::EngineSpec;
 use crate::util::error::Result;
 
-pub use objective::{eval_serve, eval_train, ServeEval, TrainEval};
+use exec::{par_map, SaturationFrontier};
+use stage::staged_serve;
+
+pub use exec::ExecPolicy;
+pub use memo::MemoCache;
+pub use objective::{
+    eval_serve, eval_serve_shared, eval_train, eval_train_memo, ServeEval, TrainEval,
+};
 pub use pareto::{dominates, pareto_indices};
 pub use space::{
     serve_space, train_space, ConfigSpace, PrunedCandidate, ReplicaSpace, ServeCandidate,
@@ -43,8 +60,9 @@ pub use space::{
 /// Driver knobs bounding how much of a space gets costed.
 #[derive(Debug, Clone, Copy)]
 pub struct SearchBudget {
-    /// cap on costed candidates, in enumeration order (deterministic
-    /// truncation; the stats record how many were skipped)
+    /// evaluation horizon: only the first `max_costed` candidates in
+    /// enumeration order are considered (deterministic truncation at
+    /// any `--jobs` level; the rest count as skipped in the stats)
     pub max_costed: usize,
     /// serving early-prune: once an engine's smaller TP group reaches
     /// the bracket ceiling, skip its wider groups — they cannot beat it
@@ -65,10 +83,17 @@ pub struct SearchStats {
     pub enumerated: usize,
     /// rejected by the memory models before costing
     pub pruned_infeasible: usize,
-    /// priced through a simulator / bisection
+    /// priced through a simulator / bisection (staged search: full
+    /// bisections only — the screening stages' short simulations are
+    /// not counted)
     pub costed: usize,
-    /// feasible but skipped by the budget or the dominance early-prune
+    /// feasible but skipped by the budget, the dominance early-prune,
+    /// or the staged pipeline's screens
     pub skipped: usize,
+    /// memo-cache hits across the search's cost-table lookups
+    pub memo_hits: usize,
+    /// memo-cache misses (distinct cost-table entries computed)
+    pub memo_misses: usize,
 }
 
 /// Result of a training search.
@@ -119,21 +144,44 @@ pub fn autotune_train(
     mem_budget: f64,
     budget: SearchBudget,
 ) -> TrainSearch {
+    autotune_train_exec(
+        plat, topo, cfg, seq_len, batch_sizes, methods, mem_budget, budget,
+        ExecPolicy::default(),
+    )
+}
+
+/// [`autotune_train`] under an explicit [`ExecPolicy`]: candidates are
+/// costed concurrently on `policy.jobs` threads against a shared
+/// [`MemoCache`] (Megatron forward/backward compute is memoized per
+/// (batch, seq) across every plan and micro-batch variant), with
+/// results, frontier, and stats bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_train_exec(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    seq_len: u64,
+    batch_sizes: &[u64],
+    methods: &[Method],
+    mem_budget: f64,
+    budget: SearchBudget,
+    policy: ExecPolicy,
+) -> TrainSearch {
     let space = train_space(plat, topo, cfg, seq_len, batch_sizes, methods, mem_budget);
     let mut stats = SearchStats {
         enumerated: space.enumerated(),
         pruned_infeasible: space.pruned.len(),
         ..Default::default()
     };
-    let mut evals = Vec::new();
-    for cand in &space.candidates {
-        if evals.len() >= budget.max_costed {
-            stats.skipped += 1;
-            continue;
-        }
-        evals.push(eval_train(plat, topo, cfg, cand, mem_budget));
-    }
+    let horizon = space.candidates.len().min(budget.max_costed);
+    stats.skipped = space.candidates.len() - horizon;
+    let memo = MemoCache::for_train(plat, topo, cfg);
+    let evals: Vec<TrainEval> =
+        par_map(&space.candidates[..horizon], policy.effective_jobs(), |_, cand| {
+            eval_train_memo(plat, topo, cfg, cand, mem_budget, Some(&memo.train))
+        });
     stats.costed = evals.len();
+    (stats.memo_hits, stats.memo_misses) = memo.counters();
     let frontier = pareto_indices(&evals.iter().map(|e| e.objectives()).collect::<Vec<_>>());
     TrainSearch { evals, frontier, pruned: space.pruned, stats }
 }
@@ -204,35 +252,109 @@ pub fn autotune_serve(
     replicas: ReplicaSpace,
     budget: SearchBudget,
 ) -> Result<ServeSearch> {
+    autotune_serve_exec(
+        plat, cfg, engines, base, slo, target_qps, bracket, replicas, budget,
+        ExecPolicy::default(),
+    )
+}
+
+/// [`autotune_serve`] under an explicit [`ExecPolicy`]: candidates are
+/// bisected concurrently on `policy.jobs` threads against a shared
+/// [`MemoCache`] of per-plan decode/prefill cost tables, and with
+/// `policy.staged` the coarse-to-fine pipeline ([`stage`]) screens the
+/// space before full bisection.  Evals, frontier, and costed/skipped
+/// stats are bit-identical at any thread count: workers race only an
+/// opportunistic saturation check, and a sequential post-pass
+/// recomputes the canonical early-prune classification (speculative
+/// evaluations are discarded — they can alter the memo counters under
+/// `jobs > 1`, never the results).
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_serve_exec(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engines: &[EngineSpec],
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    target_qps: Option<f64>,
+    bracket: (f64, f64),
+    replicas: ReplicaSpace,
+    budget: SearchBudget,
+    policy: ExecPolicy,
+) -> Result<ServeSearch> {
     let space = serve_space(plat, cfg, engines, &replicas);
     let mut stats = SearchStats {
         enumerated: space.enumerated(),
         pruned_infeasible: space.pruned.len(),
         ..Default::default()
     };
+    let horizon = space.candidates.len().min(budget.max_costed);
+    stats.skipped = space.candidates.len() - horizon;
+    let cands = &space.candidates[..horizon];
+    let jobs = policy.effective_jobs();
+    let memo = MemoCache::for_serve(plat, cfg);
     let mut evals: Vec<ServeEval> = Vec::new();
-    for cand in &space.candidates {
-        if evals.len() >= budget.max_costed {
-            stats.skipped += 1;
-            continue;
+    if policy.staged {
+        // coarse-to-fine: screened-out candidates are "skipped", fully
+        // bisected ones are "costed"; the early-prune is subsumed by the
+        // pipeline's own cuts.
+        let slots = staged_serve(
+            plat, cfg, cands, base, slo, target_qps, bracket, replicas.balancer, &memo, jobs,
+        )?;
+        for slot in slots {
+            match slot {
+                Some(e) => evals.push(e),
+                None => stats.skipped += 1,
+            }
         }
+    } else {
         // dominance early-prune: a smaller fleet of the same engine
         // already saturates the bracket — a larger one (wider TP or more
         // replicas) cannot beat it on capacity and strictly loses on
-        // GPUs and $.
-        if budget.early_prune
-            && evals.iter().any(|e| {
-                e.cand.engine.name == cand.engine.name
-                    && e.gpus < cand.gpus()
-                    && e.max_qps == Some(bracket.1)
-            })
-        {
-            stats.skipped += 1;
-            continue;
+        // GPUs and $.  Workers consult the shared frontier
+        // opportunistically; the sequential pass below re-derives the
+        // canonical skip set so the outcome is timing-independent.
+        let sat = SaturationFrontier::new();
+        let speculative: Vec<Option<Result<ServeEval>>> = par_map(cands, jobs, |i, cand| {
+            if budget.early_prune && sat.should_skip(cand.engine.name, cand.gpus(), i) {
+                return None;
+            }
+            let r = eval_serve_shared(
+                plat, cfg, cand, base, slo, bracket, replicas.balancer, &memo.serve,
+            );
+            if budget.early_prune {
+                if let Ok(e) = &r {
+                    if e.saturates(bracket.1) {
+                        sat.publish(cand.engine.name, e.gpus, i);
+                    }
+                }
+            }
+            Some(r)
+        });
+        for (cand, slot) in cands.iter().zip(speculative) {
+            let canonical_skip = budget.early_prune
+                && evals.iter().any(|e| {
+                    e.cand.engine.name == cand.engine.name
+                        && e.gpus < cand.gpus()
+                        && e.saturates(bracket.1)
+                });
+            if canonical_skip {
+                stats.skipped += 1;
+                continue;
+            }
+            match slot {
+                Some(r) => evals.push(r?),
+                // a runtime skip the canonical pass keeps is impossible
+                // (workers only trust really-evaluated saturators with
+                // earlier indices, a subset of the canonical evidence) —
+                // kept as a safety net rather than a panic
+                None => evals.push(eval_serve_shared(
+                    plat, cfg, cand, base, slo, bracket, replicas.balancer, &memo.serve,
+                )?),
+            }
         }
-        evals.push(eval_serve(plat, cfg, cand, base, slo, bracket, replicas.balancer)?);
     }
     stats.costed = evals.len();
+    (stats.memo_hits, stats.memo_misses) = memo.counters();
     // frontier over qualifying candidates only; indices stay into
     // `evals`.  Without a target, a candidate still needs *some*
     // capacity — a deployment that misses the SLO even at the bracket

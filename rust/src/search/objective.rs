@@ -14,9 +14,9 @@
 
 use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::hw::{Platform, Topology};
-use crate::report::load::{max_qps_under_slo_cluster, max_qps_under_slo_on};
-use crate::serve::{Balancer, ClusterSpec};
-use crate::train::{simulate_megatron_plan, simulate_step_plan};
+use crate::report::load::{max_qps_under_slo_cluster_shared, max_qps_under_slo_on_shared};
+use crate::serve::{Balancer, ClusterSpec, SharedCosts};
+use crate::train::{simulate_megatron_plan_micro, simulate_step_plan, BreakdownCache};
 use crate::util::error::Result;
 
 use super::space::{ServeCandidate, TrainCandidate, TrainStack};
@@ -53,8 +53,25 @@ pub fn eval_train(
     cand: &TrainCandidate,
     mem_budget: f64,
 ) -> TrainEval {
+    eval_train_memo(plat, topo, cfg, cand, mem_budget, None)
+}
+
+/// [`eval_train`] with an optional shared [`BreakdownCache`]: Megatron
+/// candidates reuse the per-(batch, seq) forward/backward compute memo
+/// across every plan and micro-batch variant in the space.  Results are
+/// bit-identical with or without the cache.
+pub fn eval_train_memo(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    cand: &TrainCandidate,
+    mem_budget: f64,
+    breaks: Option<&BreakdownCache>,
+) -> TrainEval {
     let r = match &cand.stack {
-        TrainStack::Megatron => simulate_megatron_plan(plat, topo, cfg, &cand.plan, cand.wl),
+        TrainStack::Megatron => {
+            simulate_megatron_plan_micro(plat, topo, cfg, &cand.plan, cand.wl, cand.micro, breaks)
+        }
         TrainStack::DeepSpeed(m) => simulate_step_plan(plat, topo, cfg, m, cand.wl, &cand.plan),
     };
     debug_assert!(!r.is_oom(), "pruning let an OOM candidate through: {}", cand.label());
@@ -93,6 +110,17 @@ impl ServeEval {
     pub fn meets_target(&self, target: f64) -> bool {
         self.max_qps.is_some_and(|q| q >= target)
     }
+
+    /// Whether the bisected capacity reached the bracket ceiling `hi`
+    /// (i.e. the candidate is unconstrained inside the search bracket).
+    /// Compared with a tight relative tolerance rather than `==`: the
+    /// ceiling is only returned bit-exactly when `hi` itself passes, but
+    /// float identity on a derived f64 is the wrong idiom — a genuine
+    /// interior capacity sits ≥ 2% below `hi` (the bisection's stopping
+    /// width), far outside 1e-9.
+    pub fn saturates(&self, hi: f64) -> bool {
+        self.max_qps.is_some_and(|q| q >= hi * (1.0 - 1e-9))
+    }
 }
 
 /// Cost one feasible serving candidate: bisect its max QPS under the SLO
@@ -111,14 +139,33 @@ pub fn eval_serve(
     bracket: (f64, f64),
     balancer: Balancer,
 ) -> Result<ServeEval> {
+    eval_serve_shared(plat, cfg, cand, base, slo, bracket, balancer, &SharedCosts::new())
+}
+
+/// [`eval_serve`] against a search-wide [`SharedCosts`] table: decode /
+/// prefill step times computed while bisecting one candidate are reused
+/// by every other candidate on the same `ParallelPlan` (engines share
+/// the table too — their overhead is added outside the memoized cost).
+/// Results are bit-identical to the unshared path.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_serve_shared(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    cand: &ServeCandidate,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    bracket: (f64, f64),
+    balancer: Balancer,
+    costs: &SharedCosts,
+) -> Result<ServeEval> {
     let max_qps = if cand.replicas == 1 {
-        max_qps_under_slo_on(
-            plat, cfg, &cand.engine, &cand.plan, base, slo, bracket.0, bracket.1,
+        max_qps_under_slo_on_shared(
+            plat, cfg, &cand.engine, &cand.plan, base, slo, bracket.0, bracket.1, costs,
         )?
     } else {
         let cluster = ClusterSpec::new(cand.replicas, cand.plan, balancer).seed(base.seed);
-        max_qps_under_slo_cluster(
-            plat, cfg, &cand.engine, &cluster, base, slo, bracket.0, bracket.1,
+        max_qps_under_slo_cluster_shared(
+            plat, cfg, &cand.engine, &cluster, base, slo, bracket.0, bracket.1, costs,
         )?
     };
     let gpus = cand.gpus();
@@ -149,9 +196,10 @@ mod tests {
             plan: ParallelPlan::new(2, 1, 4),
             stack: TrainStack::Megatron,
             wl,
+            micro: None,
         };
         let e = eval_train(&plat, &topo, &cfg, &meg, budget);
-        let r = simulate_megatron_plan(&plat, &topo, &cfg, &meg.plan, wl);
+        let r = crate::train::simulate_megatron_plan(&plat, &topo, &cfg, &meg.plan, wl);
         assert_eq!(e.tokens_per_s, r.tokens_per_s);
         assert_eq!(e.step_time, r.step_time);
         assert!((e.mem_gb + e.headroom_gb - budget / 1e9).abs() < 1e-9);
@@ -159,6 +207,7 @@ mod tests {
             plan: ParallelPlan::data_parallel(8),
             stack: TrainStack::DeepSpeed(Method::parse("Z3").unwrap()),
             wl,
+            micro: None,
         };
         let e2 = eval_train(&plat, &topo, &cfg, &ds, budget);
         let r2 = simulate_step_plan(&plat, &topo, &cfg, &Method::parse("Z3").unwrap(), wl,
@@ -189,6 +238,12 @@ mod tests {
         assert_eq!(e.max_qps, Some(4.0), "unbounded SLO passes at hi");
         assert!(e.meets_target(4.0) && !e.meets_target(5.0));
         assert_eq!(e.objectives()[1], -2.0);
+        // shared-cost path is bit-identical to the private-cache path
+        let costs = SharedCosts::new();
+        let es = eval_serve_shared(&plat, &cfg, &cand, &base, &slo, (0.5, 4.0), rr, &costs)
+            .unwrap();
+        assert_eq!(es.max_qps.map(f64::to_bits), e.max_qps.map(f64::to_bits));
+        assert!(costs.lookups() > 0);
         // an impossible SLO yields a capacity-less eval, objective 0
         let never = SloSpec::new(0.9, 0.0, 0.0);
         let e0 = eval_serve(&plat, &cfg, &cand, &base, &never, (0.5, 4.0), rr).unwrap();
@@ -216,5 +271,28 @@ mod tests {
         assert!((e.cost_per_hour - 6.0 * plat.gpu_hour_usd).abs() < 1e-12);
         assert_eq!(e.max_qps, Some(4.0), "unbounded SLO passes at hi");
         assert_eq!(e.objectives()[1], -6.0);
+    }
+
+    #[test]
+    fn saturation_uses_relative_tolerance_not_float_identity() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let mk = |q: Option<f64>| ServeEval {
+            cand: ServeCandidate {
+                plan: engine.plan_with_tp(&plat, &cfg, 1).unwrap(),
+                engine: engine.clone(),
+                replicas: 1,
+            },
+            max_qps: q,
+            gpus: 1,
+            cost_per_hour: plat.gpu_hour_usd,
+        };
+        let hi = 0.1 + 0.2; // 0.30000000000000004: a value float identity would miss
+        assert!(mk(Some(0.3)).saturates(hi), "one-ulp-below hi still saturates");
+        assert!(mk(Some(hi)).saturates(hi));
+        // a genuine interior capacity (bisection stops at 2% width) does not
+        assert!(!mk(Some(hi * 0.97)).saturates(hi));
+        assert!(!mk(None).saturates(hi));
     }
 }

@@ -12,7 +12,7 @@
 use crate::config::{LlamaConfig, Method, TrainWorkload};
 use crate::hw::{Platform, Topology};
 use crate::memory::{check_fit, training_memory_plan, Fit, MemoryBreakdown};
-use crate::parallel::{megatron_memory, ParallelPlan};
+use crate::parallel::{megatron_memory_micro, ParallelPlan};
 use crate::serve::{Balancer, DeployPlan, EngineSpec};
 use crate::train::megatron::MEGATRON_ACT_DISCOUNT;
 
@@ -46,12 +46,18 @@ pub struct TrainCandidate {
     pub stack: TrainStack,
     /// per-replica batch and sequence length
     pub wl: TrainWorkload,
+    /// pipeline micro-batch count override (Megatron, pp > 1 only);
+    /// `None` = the stack's default schedule (one micro-batch per
+    /// sample, i.e. `micro = batch`)
+    pub micro: Option<u64>,
 }
 
 impl TrainCandidate {
-    /// Full config label ("TP2·PP2·DP2 Megatron bs8").
+    /// Full config label ("TP2·PP2·DP2 Megatron bs8", with an " mb4"
+    /// suffix when a micro-batch count is forced).
     pub fn label(&self) -> String {
-        format!("{} {} bs{}", self.plan.label(), self.stack.label(), self.wl.batch_size)
+        let mb = self.micro.map(|m| format!(" mb{m}")).unwrap_or_default();
+        format!("{} {} bs{}{}", self.plan.label(), self.stack.label(), self.wl.batch_size, mb)
     }
 
     /// Per-GPU memory demand from the analytical models alone — the
@@ -59,7 +65,8 @@ impl TrainCandidate {
     pub fn memory(&self, plat: &Platform, cfg: &LlamaConfig) -> MemoryBreakdown {
         match &self.stack {
             TrainStack::Megatron => {
-                megatron_memory(plat, cfg, &self.plan, self.wl, MEGATRON_ACT_DISCOUNT)
+                megatron_memory_micro(plat, cfg, &self.plan, self.wl, MEGATRON_ACT_DISCOUNT,
+                                      self.micro)
             }
             TrainStack::DeepSpeed(m) => {
                 training_memory_plan(plat, cfg, m, self.wl.batch_size, self.wl.seq_len, &self.plan)
@@ -152,10 +159,12 @@ impl<C> ConfigSpace<C> {
 }
 
 /// Enumerate the training space for a (platform, topology, model):
-/// every valid plan under the Megatron stack, plus the DeepSpeed method
-/// grid on the pure-DP plan (the only plan that stack executes), each at
-/// every requested batch size — then prune anything whose analytical
-/// memory demand fails `check_fit` or exceeds `mem_budget` bytes/GPU.
+/// every valid plan under the Megatron stack (pipeline plans
+/// additionally at every power-of-two micro-batch count dividing the
+/// batch — see [`micro_options`]), plus the DeepSpeed method grid on
+/// the pure-DP plan (the only plan that stack executes), each at every
+/// requested batch size — then prune anything whose analytical memory
+/// demand fails `check_fit` or exceeds `mem_budget` bytes/GPU.
 pub fn train_space(
     plat: &Platform,
     topo: &Topology,
@@ -188,13 +197,47 @@ pub fn train_space(
             }
         };
         for plan in ParallelPlan::enumerate(topo, cfg) {
-            consider(TrainCandidate { plan, stack: TrainStack::Megatron, wl });
+            consider(TrainCandidate { plan, stack: TrainStack::Megatron, wl, micro: None });
+            // pipeline plans expose the micro-batch count as a free
+            // axis: fewer, larger micro-batches trade bubble fraction
+            // against per-stage activation memory — co-optimized here
+            // rather than hard-wired to the default schedule
+            if plan.pp > 1 {
+                for m in micro_options(bs) {
+                    consider(TrainCandidate {
+                        plan,
+                        stack: TrainStack::Megatron,
+                        wl,
+                        micro: Some(m),
+                    });
+                }
+            }
         }
         for m in methods {
-            consider(TrainCandidate { plan: dp_world, stack: TrainStack::DeepSpeed(*m), wl });
+            consider(TrainCandidate {
+                plan: dp_world,
+                stack: TrainStack::DeepSpeed(*m),
+                wl,
+                micro: None,
+            });
         }
     }
     space
+}
+
+/// Micro-batch counts worth enumerating for a pipeline plan at batch
+/// `bs`: powers of two strictly below `bs` that divide it evenly (the
+/// default schedule already runs `micro = bs`).
+fn micro_options(bs: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut m = 1;
+    while m < bs {
+        if bs % m == 0 {
+            v.push(m);
+        }
+        m *= 2;
+    }
+    v
 }
 
 /// Enumerate the serving space: each engine × each power-of-two TP
@@ -257,7 +300,8 @@ mod tests {
         let cfg = LlamaConfig::llama2_70b();
         let s = train_space(&plat, &topo, &cfg, 350, &[8], &[], plat.gpu.mem_bytes);
         assert!(s.candidates.is_empty(), "no 70B plan fits a single node");
-        assert_eq!(s.enumerated(), 10); // the full 8-GPU plan grid
+        // 10-plan 8-GPU grid + 6 pipeline plans × micro {1,2,4} at bs 8
+        assert_eq!(s.enumerated(), 28);
         assert!(s.pruned.iter().all(|p| p.reason.contains("OOM")));
         // 4 nodes: feasible plans appear, infeasible ones stay pruned
         let topo4 = Topology::multi_node(&plat, 4);
@@ -299,8 +343,38 @@ mod tests {
             .collect();
         assert!(!ds.is_empty());
         assert!(ds.iter().all(|c| c.plan == ParallelPlan::data_parallel(8)));
-        // two batch sizes double the enumeration
-        assert_eq!(s.enumerated(), 2 * (10 + methods.len()));
+        assert!(ds.iter().all(|c| c.micro.is_none()), "micro axis is Megatron-only");
+        // bs 1: 10 plans + 3 methods (no micro options below bs 1);
+        // bs 4: 10 plans + 6 pipeline plans × micro {1,2} + 3 methods
+        assert_eq!(s.enumerated(), (10 + 3) + (10 + 12 + 3));
+    }
+
+    #[test]
+    fn train_space_micro_axis_rides_pipeline_plans_only() {
+        let plat = Platform::get(PlatformId::A800);
+        let topo = Topology::single_node(&plat);
+        let cfg = LlamaConfig::llama2_7b();
+        let s = train_space(&plat, &topo, &cfg, 350, &[8], &[], plat.gpu.mem_bytes);
+        let micro: Vec<&TrainCandidate> =
+            s.candidates.iter().filter(|c| c.micro.is_some()).collect();
+        assert!(!micro.is_empty(), "7B bs8 pipeline micro variants must be feasible");
+        for c in &micro {
+            assert!(c.plan.pp > 1, "{}", c.label());
+            let m = c.micro.unwrap();
+            assert!(m < 8 && 8 % m == 0, "{}", c.label());
+            assert!(c.label().contains(&format!(" mb{m}")), "{}", c.label());
+        }
+        // the default-schedule twin of every micro variant is also enumerated
+        for c in &micro {
+            assert!(
+                s.candidates.iter().any(|d| d.micro.is_none() && d.plan == c.plan),
+                "default twin missing for {}",
+                c.label()
+            );
+        }
+        assert_eq!(micro_options(8), vec![1, 2, 4]);
+        assert_eq!(micro_options(1), Vec::<u64>::new());
+        assert_eq!(micro_options(6), vec![1, 2]);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Coarse-to-fine (successive-halving) serving search.
+//!
+//! Full bisection costs ~6 simulated workloads per candidate; on a
+//! multi-hundred-candidate space almost all of that work is spent on
+//! configurations nowhere near the frontier.  The staged pipeline
+//! spends the budget where it matters:
+//!
+//! * **Stage A — analytical screen.**  A closed-form capacity estimate
+//!   (steady-state decode batch over the modeled prefill + decode time
+//!   of the mean request) ranks every candidate for free; the top half
+//!   survives.
+//! * **Stage B — short simulations.**  Survivors are bisected against a
+//!   quarter-length workload (≥ 16 requests); the top half by measured
+//!   short-workload capacity survives.
+//! * **Stage C — full bisection.**  Finalists get the real workload —
+//!   the only evaluations that count as *costed* in [`super::SearchStats`].
+//!
+//! Every cut also keeps the best-ranked candidate at each distinct GPU
+//! count, and a final **escalation** pass fully evaluates every
+//! screened-out candidate at or below the cheapest qualifying GPU count
+//! (all of them, if nothing qualifies).  That makes the frontier's
+//! min-GPU point provably identical to the exhaustive search's: every
+//! candidate that could have beaten the staged winner on GPUs has been
+//! fully evaluated with bit-identical numbers.  Candidates the pipeline
+//! never fully evaluates are reported as *skipped*.
+//!
+//! All cuts order by (rank key desc, enumeration index asc), so the
+//! pipeline is deterministic at any `--jobs` level.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
+use crate::hw::Platform;
+use crate::serve::sim::{decode_iter_time, prefill_time};
+use crate::serve::Balancer;
+use crate::util::error::Result;
+
+use super::exec::par_map;
+use super::memo::MemoCache;
+use super::objective::{eval_serve_shared, ServeEval};
+use super::space::ServeCandidate;
+
+/// Spaces at or below this size skip the pipeline and evaluate fully.
+const MIN_STAGED: usize = 9;
+
+/// Nominal steady-state decode batch for the stage-A estimate.
+const NOMINAL_BATCH: u64 = 8;
+
+/// Rank `idxs` by `(key desc, idx asc)` and keep the top `keep_n` plus
+/// the best-ranked candidate at each distinct GPU count.  Returned in
+/// ascending enumeration order.
+fn cut(idxs: &[usize], key: &[f64], gpus: &[u32], keep_n: usize) -> Vec<usize> {
+    let mut order = idxs.to_vec();
+    order.sort_by(|&a, &b| {
+        key[b].partial_cmp(&key[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut kept: BTreeSet<usize> = order.iter().take(keep_n).copied().collect();
+    let mut best_per_gpus: BTreeMap<u32, usize> = BTreeMap::new();
+    for &i in &order {
+        best_per_gpus.entry(gpus[i]).or_insert(i);
+    }
+    kept.extend(best_per_gpus.values().copied());
+    kept.into_iter().collect()
+}
+
+/// Run the staged pipeline over `cands`, returning one slot per
+/// candidate in enumeration order: `Some` = fully evaluated against the
+/// real workload (bit-identical to [`eval_serve_shared`]), `None` =
+/// screened out before full bisection.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn staged_serve(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    cands: &[ServeCandidate],
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    target: Option<f64>,
+    bracket: (f64, f64),
+    balancer: Balancer,
+    memo: &MemoCache,
+    jobs: usize,
+) -> Result<Vec<Option<ServeEval>>> {
+    let n = cands.len();
+    let mut out: Vec<Option<ServeEval>> = vec![None; n];
+    let full_eval = |idxs: &[usize], out: &mut Vec<Option<ServeEval>>| -> Result<()> {
+        let evals = par_map(idxs, jobs, |_, &i| {
+            eval_serve_shared(plat, cfg, &cands[i], base, slo, bracket, balancer, &memo.serve)
+        });
+        for (&i, e) in idxs.iter().zip(evals) {
+            out[i] = Some(e?);
+        }
+        Ok(())
+    };
+
+    if n < MIN_STAGED {
+        let all: Vec<usize> = (0..n).collect();
+        full_eval(&all, &mut out)?;
+        return Ok(out);
+    }
+    let gpus: Vec<u32> = cands.iter().map(|c| c.gpus()).collect();
+
+    // Stage A: closed-form capacity estimate from the mean request shape.
+    let reqs = base.generate()?;
+    let n_req = reqs.len().max(1) as u64;
+    let mean_in = (reqs.iter().map(|r| r.input_len).sum::<u64>() / n_req).max(1);
+    let mean_out = (reqs.iter().map(|r| r.output_len).sum::<u64>() / n_req).max(1);
+    let score_a: Vec<f64> = par_map(cands, jobs, |_, c| {
+        let b = NOMINAL_BATCH.min(c.engine.max_num_seqs).max(1);
+        // decode context grows from mean_in to mean_in + mean_out; take the midpoint
+        let ctx = mean_in + mean_out / 2;
+        let t_iter = decode_iter_time(plat, cfg, &c.plan, b, ctx) + c.engine.effective_overhead();
+        let req_time = prefill_time(plat, cfg, &c.plan, mean_in) + mean_out as f64 * t_iter;
+        f64::from(c.replicas) * b as f64 / req_time.max(1e-12)
+    });
+    let all: Vec<usize> = (0..n).collect();
+    let survivors = cut(&all, &score_a, &gpus, n.div_ceil(2));
+
+    // Stage B: bisect the survivors against a quarter-length workload.
+    let mut short = base.clone();
+    short.n_requests = (base.n_requests / 4).max(16).min(base.n_requests);
+    let short_evals = par_map(&survivors, jobs, |_, &i| {
+        eval_serve_shared(plat, cfg, &cands[i], &short, slo, bracket, balancer, &memo.serve)
+    });
+    let mut score_b = vec![f64::NEG_INFINITY; n];
+    for (&i, e) in survivors.iter().zip(short_evals) {
+        score_b[i] = e?.max_qps.unwrap_or(f64::NEG_INFINITY);
+    }
+    let finalists = cut(&survivors, &score_b, &gpus, survivors.len().div_ceil(2));
+
+    // Stage C: full bisection on the finalists.
+    full_eval(&finalists, &mut out)?;
+
+    // Escalation: nothing cheaper than the winning GPU count may remain
+    // unevaluated, else the staged min-GPU point could differ from the
+    // exhaustive one.
+    let qualifies = |e: &ServeEval| match target {
+        Some(t) => e.meets_target(t),
+        None => e.max_qps.is_some(),
+    };
+    let g = out.iter().flatten().filter(|&e| qualifies(e)).map(|e| e.gpus).min();
+    let pending: Vec<usize> = match g {
+        Some(g) => (0..n).filter(|&i| out[i].is_none() && gpus[i] <= g).collect(),
+        None => (0..n).filter(|&i| out[i].is_none()).collect(),
+    };
+    full_eval(&pending, &mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cut_keeps_top_k_and_one_per_gpu_count() {
+        // keys: idx 3 best, then 1, then 0, then 2
+        let key = [2.0, 3.0, 1.0, 4.0];
+        let gpus = [1, 2, 4, 2];
+        let idxs = [0, 1, 2, 3];
+        let kept = cut(&idxs, &key, &gpus, 2);
+        // top-2 = {3, 1}; best per gpu count = {1: 0, 2: 3, 4: 2} → all kept
+        assert_eq!(kept, vec![0, 1, 2, 3]);
+        // with one gpu class, the union collapses to top-k + its best
+        let kept2 = cut(&idxs, &key, &[2, 2, 2, 2], 2);
+        assert_eq!(kept2, vec![1, 3]);
+    }
+
+    #[test]
+    fn cut_breaks_key_ties_by_enumeration_index() {
+        let key = [1.0, 1.0, 1.0];
+        let kept = cut(&[0, 1, 2], &key, &[1, 1, 1], 2);
+        assert_eq!(kept, vec![0, 1]);
+    }
+}

@@ -25,7 +25,10 @@ use crate::config::LlamaConfig;
 use crate::hw::Platform;
 use crate::serve::engine::{DeployPlan, EngineSpec};
 use crate::serve::request::{Completion, Request};
-use crate::serve::sim::{decode_iter_time, prefill_time, simulate_requests_on, SimResult};
+use crate::serve::sim::{
+    decode_iter_time, prefill_time, simulate_requests_on, simulate_requests_shared, SharedCosts,
+    SimResult,
+};
 use crate::util::rng::Rng;
 
 /// Cluster-level request-routing policy.  All three dispatch on
@@ -323,6 +326,29 @@ pub fn simulate_cluster(
         .iter()
         .map(|list| simulate_requests_on(plat, cfg, engine, &spec.plan, list))
         .collect();
+    merge_replicas(lists, results)
+}
+
+/// [`simulate_cluster`] with every replica drawing per-iteration costs
+/// from a shared [`SharedCosts`] memo (the autotuner's evaluation path).
+/// Bit-identical to [`simulate_cluster`].
+pub fn simulate_cluster_shared(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &ClusterSpec,
+    requests: &[Request],
+    costs: &SharedCosts,
+) -> ClusterResult {
+    let lists = dispatch(plat, cfg, engine, spec, requests);
+    let results: Vec<SimResult> = lists
+        .iter()
+        .map(|list| simulate_requests_shared(plat, cfg, engine, &spec.plan, list, costs))
+        .collect();
+    merge_replicas(lists, results)
+}
+
+fn merge_replicas(lists: Vec<Vec<Request>>, results: Vec<SimResult>) -> ClusterResult {
 
     let replicas: Vec<ReplicaStats> = results
         .iter()

@@ -14,6 +14,12 @@ pub mod request;
 pub mod sim;
 pub mod token_kv;
 
-pub use cluster::{dispatch, simulate_cluster, Balancer, ClusterResult, ClusterSpec, ReplicaStats};
+pub use cluster::{
+    dispatch, simulate_cluster, simulate_cluster_shared, Balancer, ClusterResult, ClusterSpec,
+    ReplicaStats,
+};
 pub use engine::{DeployPlan, EngineSpec, KvPolicy};
-pub use sim::{simulate, simulate_requests, simulate_requests_on, simulate_workload, SimResult};
+pub use sim::{
+    simulate, simulate_requests, simulate_requests_on, simulate_requests_shared,
+    simulate_workload, SharedCosts, SimResult,
+};

@@ -8,7 +8,9 @@
 //! respects per-request arrival times and the clock jumps to the next
 //! arrival when the engine idles (DESIGN.md §Serving workloads & SLOs).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::comm::Collective;
 use crate::config::{LlamaConfig, ServeWorkload, SloSpec, WorkloadSpec};
@@ -16,7 +18,7 @@ use crate::hw::{Dtype, Platform, Topology};
 use crate::model::breakdown::total as mods_total;
 use crate::model::modules::decode_modules;
 use crate::ops::{op_time, Gemm, Op};
-use crate::parallel::{Axis, PlanCost};
+use crate::parallel::{Axis, ParallelPlan, PlanCost};
 use crate::serve::engine::{DeployPlan, EngineSpec, KvPolicy};
 use crate::serve::kv_cache::PagedKvCache;
 use crate::serve::request::{Completion, Request, RunningSeq};
@@ -314,6 +316,83 @@ impl IterCostCache {
     }
 }
 
+/// Cross-simulation memo of the pure per-iteration cost kernels, shared
+/// between the candidates of one autotuner search (`search::memo`).
+///
+/// Keys carry the `ParallelPlan`'s value identity, so every candidate
+/// (and every bisection probe) that prices the same plan shares one
+/// computation; the engine is deliberately *not* part of the key —
+/// [`decode_iter_time`] and [`prefill_time`] are engine-independent (the
+/// per-iteration engine overhead is added separately by the event loop),
+/// so vLLM/TGI/LightLLM candidates on the same plan all hit the same
+/// entries.  A cache instance is only valid for one
+/// `(Platform, LlamaConfig)` pair; `search::memo::MemoCache` pins that
+/// with an environment fingerprint.
+///
+/// Memoization is exact, not approximate: the decode map replicates the
+/// event loop's private 32-token context bucketing bit-for-bit and the
+/// prefill map keys on the exact token count, so a memoized simulation
+/// returns results identical to [`simulate_requests_on`].  Thread-safe;
+/// racing fills store bit-identical values (the kernels are pure).
+#[derive(Debug, Default)]
+pub struct SharedCosts {
+    decode: Mutex<HashMap<(ParallelPlan, u64, u64), f64>>,
+    prefill: Mutex<HashMap<(ParallelPlan, u64), f64>>,
+    lookups: AtomicU64,
+}
+
+impl SharedCosts {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn decode_cost(
+        &self,
+        plat: &Platform,
+        cfg: &LlamaConfig,
+        plan: &DeployPlan,
+        batch: u64,
+        avg_ctx: u64,
+    ) -> f64 {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key = (plan.parallel, batch, avg_ctx / 32);
+        if let Some(&t) = self.decode.lock().unwrap().get(&key) {
+            return t;
+        }
+        let t = decode_iter_time(plat, cfg, plan, batch, (key.2 * 32).max(1));
+        self.decode.lock().unwrap().insert(key, t);
+        t
+    }
+
+    fn prefill_cost(
+        &self,
+        plat: &Platform,
+        cfg: &LlamaConfig,
+        plan: &DeployPlan,
+        tokens: u64,
+    ) -> f64 {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key = (plan.parallel, tokens);
+        if let Some(&t) = self.prefill.lock().unwrap().get(&key) {
+            return t;
+        }
+        let t = prefill_time(plat, cfg, plan, tokens);
+        self.prefill.lock().unwrap().insert(key, t);
+        t
+    }
+
+    /// Total lookups (hits + misses) since construction.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Distinct keys computed (the miss count).
+    pub fn distinct(&self) -> u64 {
+        (self.decode.lock().unwrap().len() + self.prefill.lock().unwrap().len()) as u64
+    }
+}
+
 /// Run the paper's burst benchmark for one (platform, model, engine)
 /// combination: every request arrives at t=0.  Returns None if the model
 /// cannot be deployed (Fig. 6 OOM cells).
@@ -371,9 +450,73 @@ pub fn simulate_requests_on(
     plan: &DeployPlan,
     requests: &[Request],
 ) -> SimResult {
-    let plan = *plan;
-    let mut kv = Kv::new(engine.kv, plan.kv_capacity_tokens);
     let mut cost = IterCostCache::new();
+    run_event_loop(
+        engine,
+        *plan,
+        requests,
+        |batch, avg_ctx| cost.decode(plat, cfg, plan, batch, avg_ctx),
+        |tokens| prefill_time(plat, cfg, plan, tokens),
+    )
+}
+
+/// [`simulate_requests_on`] drawing its per-iteration costs from a
+/// [`SharedCosts`] memo instead of a private per-run cache — the entry
+/// point the autotuner's parallel evaluator uses so every candidate and
+/// bisection probe over the same plan shares one cost computation.
+/// Produces results bit-identical to [`simulate_requests_on`].
+///
+/// A small per-run L1 map still fronts the shared cache so the memo's
+/// lookup counter stays deterministic: each run contributes exactly its
+/// distinct cost keys, independent of scheduling order.
+pub fn simulate_requests_shared(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    requests: &[Request],
+    costs: &SharedCosts,
+) -> SimResult {
+    let mut l1_decode: HashMap<(u64, u64), f64> = HashMap::new();
+    let mut l1_prefill: HashMap<u64, f64> = HashMap::new();
+    run_event_loop(
+        engine,
+        *plan,
+        requests,
+        |batch, avg_ctx| {
+            let bucket = (batch, avg_ctx / 32);
+            match l1_decode.get(&bucket) {
+                Some(&t) => t,
+                None => {
+                    let t = costs.decode_cost(plat, cfg, plan, batch, avg_ctx);
+                    l1_decode.insert(bucket, t);
+                    t
+                }
+            }
+        },
+        |tokens| match l1_prefill.get(&tokens) {
+            Some(&t) => t,
+            None => {
+                let t = costs.prefill_cost(plat, cfg, plan, tokens);
+                l1_prefill.insert(tokens, t);
+                t
+            }
+        },
+    )
+}
+
+/// The continuous-batching event loop shared by every serving entry
+/// point, parameterized over the two pure cost kernels (decode iteration
+/// and batched prefill) so callers choose the caching strategy without
+/// touching the scheduling semantics.
+fn run_event_loop(
+    engine: &EngineSpec,
+    plan: DeployPlan,
+    requests: &[Request],
+    mut decode_cost: impl FnMut(u64, u64) -> f64,
+    mut prefill_cost: impl FnMut(u64) -> f64,
+) -> SimResult {
+    let mut kv = Kv::new(engine.kv, plan.kv_capacity_tokens);
 
     // not-yet-arrived requests, in arrival order (stable for t=0 ties,
     // preserving the burst benchmark's id order)
@@ -446,8 +589,7 @@ pub fn simulate_requests_on(
             waiting.pop_front();
         }
         if admitted > 0 {
-            let t = prefill_time(plat, cfg, &plan, prefill_tokens)
-                + engine.effective_overhead();
+            let t = prefill_cost(prefill_tokens) + engine.effective_overhead();
             clock += t;
             prefill_iters += 1;
             continue; // prefill-priority scheduling (all three engines)
@@ -478,8 +620,7 @@ pub fn simulate_requests_on(
         // ---- one decode iteration over the running batch
         let batch = running.len() as u64;
         let avg_ctx = (running.iter().map(|s| s.context()).sum::<u64>() / batch).max(1);
-        let t = cost.decode(plat, cfg, &plan, batch, avg_ctx)
-            + engine.effective_overhead();
+        let t = decode_cost(batch, avg_ctx) + engine.effective_overhead();
         clock += t;
         decode_iters += 1;
         iter_time_sum += t;
@@ -712,6 +853,35 @@ mod tests {
         let r8 = simulate_requests_on(&plat, &cfg, &engine, &wide, &reqs);
         assert_eq!(r8.completions.len(), forced.completions.len());
         assert_ne!(r8.makespan, forced.makespan);
+    }
+
+    #[test]
+    fn shared_costs_reproduce_private_cache_bit_for_bit() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let reqs: Vec<Request> = (0..60)
+            .map(|i| Request {
+                id: i, input_len: 400 + 8 * i, output_len: 32, arrival: 0.2 * i as f64,
+            })
+            .collect();
+        let plain = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+        let costs = SharedCosts::new();
+        for _ in 0..2 {
+            let shared = simulate_requests_shared(&plat, &cfg, &engine, &plan, &reqs, &costs);
+            assert_eq!(shared.makespan.to_bits(), plain.makespan.to_bits());
+            assert_eq!(shared.decode_iters, plain.decode_iters);
+            assert_eq!(shared.prefill_iters, plain.prefill_iters);
+            assert_eq!(shared.completions.len(), plain.completions.len());
+            for (a, b) in shared.completions.iter().zip(plain.completions.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+                assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            }
+        }
+        // the second replay re-asks every key the first one computed
+        assert!(costs.lookups() > costs.distinct(), "replay must hit the memo");
     }
 
     #[test]

@@ -15,15 +15,69 @@
 //! bubble, collectives placed per axis on the topology's links);
 //! `simulate_step_megatron` is the paper's single-node TP×DP view of it.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 use crate::comm::Collective;
 use crate::config::{LlamaConfig, TrainWorkload};
 use crate::hw::{Platform, Topology};
 use crate::memory::{check_fit, Fit};
 use crate::model::breakdown::total;
 use crate::model::{backward_breakdown, forward_breakdown};
-use crate::parallel::{megatron_memory, Axis, ParallelPlan, PipelineSchedule, PlanCost};
+use crate::parallel::{megatron_memory_micro, Axis, ParallelPlan, PipelineSchedule, PlanCost};
 
 use super::step::{StepReport, DDP_OVERLAP, OPT_IO_BYTES_PER_PARAM};
+
+/// Shared memo of full-model forward/backward times keyed on
+/// `(batch_size, seq_len)`.
+///
+/// The per-layer GEMM breakdown depends only on the GPU, the model config
+/// and the workload shape — not the `ParallelPlan` (sharding is applied
+/// multiplicatively afterwards) — so every plan in a search space with the
+/// same batch size shares one computation.  A cache instance is only
+/// valid for a single `(Platform, LlamaConfig)` pair; the search layer's
+/// `MemoCache` pins that with an environment fingerprint.  Thread-safe:
+/// concurrent evaluators may race to fill a key, but the function is pure
+/// so both writers store bit-identical values.
+#[derive(Debug, Default)]
+pub struct BreakdownCache {
+    map: Mutex<HashMap<(u64, u64), (f64, f64)>>,
+    lookups: AtomicU64,
+}
+
+impl BreakdownCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `(fwd_full, bwd_full)` seconds for the unsharded model at this
+    /// workload shape, computing and memoizing on first use.
+    pub fn fwd_bwd(&self, plat: &Platform, cfg: &LlamaConfig, wl: TrainWorkload) -> (f64, f64) {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key = (wl.batch_size, wl.seq_len);
+        if let Some(&hit) = self.map.lock().unwrap().get(&key) {
+            return hit;
+        }
+        let fwd = total(&forward_breakdown(&plat.gpu, cfg, wl.batch_size, wl.seq_len,
+                                           false, false));
+        let bwd = total(&backward_breakdown(&plat.gpu, cfg, wl.batch_size, wl.seq_len,
+                                            false, false));
+        self.map.lock().unwrap().insert(key, (fwd, bwd));
+        (fwd, bwd)
+    }
+
+    /// Total lookups (hits + misses) since construction.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Distinct keys computed (the miss count).
+    pub fn distinct(&self) -> u64 {
+        self.map.lock().unwrap().len() as u64
+    }
+}
 
 /// Megatron's fused kernels cut the eager-launch tax of the HF/DeepSpeed
 /// stack; we approximate by discounting the element-wise share.
@@ -60,28 +114,52 @@ pub fn simulate_megatron_plan(
     plan: &ParallelPlan,
     wl: TrainWorkload,
 ) -> StepReport {
+    simulate_megatron_plan_micro(plat, topo, cfg, plan, wl, None, None)
+}
+
+/// `simulate_megatron_plan` with an explicit micro-batch count and an
+/// optional shared breakdown memo.
+///
+/// `micro = None` keeps the default 1F1B granularity (one sample per
+/// micro-batch), so the plain entry point above is exactly this call with
+/// `(None, None)`.  `Some(m)` re-prices the bubble stretch, the per-
+/// micro-batch TP/PP message sizes and the in-flight activation window at
+/// `m.clamp(1, batch_size)` micro-batches — the throughput/memory
+/// trade-off the autotuner's micro-batch axis searches over.
+pub fn simulate_megatron_plan_micro(
+    plat: &Platform,
+    topo: &Topology,
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    wl: TrainWorkload,
+    micro: Option<u64>,
+    breaks: Option<&BreakdownCache>,
+) -> StepReport {
     if let Err(e) = plan.validate(topo, cfg) {
         panic!("invalid ParallelPlan {plan}: {e}");
     }
     let p = cfg.param_count();
-    let mem = megatron_memory(plat, cfg, plan, wl, MEGATRON_ACT_DISCOUNT);
+    let mem = megatron_memory_micro(plat, cfg, plan, wl, MEGATRON_ACT_DISCOUNT, micro);
     let fit = check_fit(plat, &mem);
     if fit != Fit::Ok {
         return StepReport::oom(mem, fit);
     }
 
     let cost = PlanCost::new(plan, topo);
-    let sched = PipelineSchedule::one_f_one_b(plan, wl);
+    let sched = PipelineSchedule::with_micro(plan, wl, micro);
     let m = sched.micro_batches as f64;
 
     // --- compute: per-GPU GEMMs shrink by tp (width) and pp (depth);
     // fused kernels cut launches; the 1F1B fill/drain bubble stretches
     // every rank's timeline by 1/(1-bubble)
     let scale = plan.compute_shard();
-    let fwd_full = total(&forward_breakdown(&plat.gpu, cfg, wl.batch_size,
-                                            wl.seq_len, false, false));
-    let bwd_full = total(&backward_breakdown(&plat.gpu, cfg, wl.batch_size,
-                                             wl.seq_len, false, false));
+    let (fwd_full, bwd_full) = match breaks {
+        Some(cache) => cache.fwd_bwd(plat, cfg, wl),
+        None => (
+            total(&forward_breakdown(&plat.gpu, cfg, wl.batch_size, wl.seq_len, false, false)),
+            total(&backward_breakdown(&plat.gpu, cfg, wl.batch_size, wl.seq_len, false, false)),
+        ),
+    };
     let mut fwd = fwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
     let mut bwd = bwd_full * scale * MEGATRON_LAUNCH_DISCOUNT.max(scale);
     // large-batch inefficiency (measured, see const docs)

@@ -7,5 +7,7 @@ pub mod megatron;
 pub mod scaling;
 pub mod step;
 
-pub use megatron::{simulate_megatron_plan, simulate_step_megatron};
+pub use megatron::{
+    simulate_megatron_plan, simulate_megatron_plan_micro, simulate_step_megatron, BreakdownCache,
+};
 pub use step::{simulate_step, simulate_step_plan, StepReport};

@@ -1,0 +1,155 @@
+//! End-to-end tests for the search-at-scale evaluation engine (ISSUE 6):
+//! search results are bit-identical at any `--jobs` level (exhaustive
+//! and staged), the staged coarse-to-fine pipeline reproduces the
+//! exhaustive sequential search's min-GPU answer on the pinned
+//! acceptance spaces, and the memo cache actually shares cost-table
+//! work across candidates (hit/miss counters both move).
+
+use llm_perf_lab::config::{LlamaConfig, SloSpec, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId, Topology};
+use llm_perf_lab::search::{
+    autotune_serve_exec, autotune_train_exec, ExecPolicy, ReplicaSpace, SearchBudget,
+    ServeSearch, TrainSearch,
+};
+use llm_perf_lab::serve::{Balancer, EngineSpec};
+
+fn train_sig(s: &TrainSearch) -> Vec<(String, u64, u64)> {
+    s.evals
+        .iter()
+        .map(|e| (e.cand.label(), e.step_time.to_bits(), e.tokens_per_s.to_bits()))
+        .collect()
+}
+
+fn serve_sig(s: &ServeSearch) -> Vec<(String, u32, Option<u64>)> {
+    s.evals.iter().map(|e| (e.cand.label(), e.gpus, e.max_qps.map(f64::to_bits))).collect()
+}
+
+fn stats_sig(s: &llm_perf_lab::search::SearchStats) -> (usize, usize, usize, usize) {
+    (s.costed, s.skipped, s.memo_hits, s.memo_misses)
+}
+
+/// The training search — including the micro-batch axis — returns
+/// bit-identical evals, frontier, and stats at every worker count, and
+/// the shared forward/backward breakdown is computed once per (batch,
+/// seq) shape rather than once per plan.
+#[test]
+fn train_search_is_bit_identical_at_any_jobs_and_memoizes() {
+    let plat = Platform::get(PlatformId::A800);
+    let topo = Topology::single_node(&plat);
+    let cfg = LlamaConfig::llama2_7b();
+    let run = |jobs| {
+        autotune_train_exec(&plat, &topo, &cfg, 350, &[4, 8], &[], plat.gpu.mem_bytes,
+                            SearchBudget::default(), ExecPolicy { jobs, staged: false })
+    };
+    let seq = run(1);
+    for jobs in [2, 8] {
+        let par = run(jobs);
+        assert_eq!(train_sig(&seq), train_sig(&par), "evals differ at jobs={jobs}");
+        assert_eq!(seq.frontier, par.frontier, "frontier differs at jobs={jobs}");
+        assert_eq!(stats_sig(&seq.stats), stats_sig(&par.stats), "stats differ at jobs={jobs}");
+    }
+    // two batch shapes across dozens of plan × micro candidates: exactly
+    // two breakdowns computed, everything else served from the memo
+    assert_eq!(seq.stats.memo_misses, 2, "one fwd/bwd breakdown per (bs, seq)");
+    assert!(seq.stats.memo_hits > 0, "plan variants must share the breakdowns");
+}
+
+/// The serving search returns bit-identical evals, frontier, and stats
+/// (memo counters included) at every worker count, through both the
+/// exhaustive and the staged pipeline.  The bracket ceiling is far above
+/// any single-box capacity so no candidate saturates it — the
+/// early-prune stays inert and every pipeline evaluates the same set.
+#[test]
+fn serve_search_is_bit_identical_at_any_jobs() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(40).seed(7);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let run = |jobs, staged| {
+        autotune_serve_exec(&plat, &cfg, &EngineSpec::all(), &base, &slo, Some(2.0),
+                            (0.5, 512.0), ReplicaSpace::default(), SearchBudget::default(),
+                            ExecPolicy { jobs, staged })
+            .unwrap()
+    };
+    for staged in [false, true] {
+        let seq = run(1, staged);
+        assert!(!seq.frontier.is_empty(), "7B at 2 QPS must be servable (staged={staged})");
+        for jobs in [2, 8] {
+            let par = run(jobs, staged);
+            assert_eq!(serve_sig(&seq), serve_sig(&par),
+                       "evals differ at jobs={jobs} staged={staged}");
+            assert_eq!(seq.frontier, par.frontier,
+                       "frontier differs at jobs={jobs} staged={staged}");
+            assert_eq!(stats_sig(&seq.stats), stats_sig(&par.stats),
+                       "stats differ at jobs={jobs} staged={staged}");
+        }
+        // bisection probes over the same plan share one cost table
+        assert!(seq.stats.memo_hits > 0, "staged={staged}");
+        assert!(seq.stats.memo_misses > 0, "staged={staged}");
+    }
+}
+
+/// Acceptance: on the single-replica space pinned by tests/autotune.rs,
+/// the staged parallel search reports the same min-GPU frontier point —
+/// same candidate, same GPU count, bit-identical capacity — as the
+/// exhaustive sequential search with every screen disabled.
+#[test]
+fn staged_search_reproduces_exhaustive_min_gpu_point() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(80).seed(7);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let target = 2.0;
+    let exhaustive = autotune_serve_exec(
+        &plat, &cfg, &EngineSpec::all(), &base, &slo, Some(target), (0.5, 16.0),
+        ReplicaSpace::default(), SearchBudget { max_costed: usize::MAX, early_prune: false },
+        ExecPolicy { jobs: 1, staged: false },
+    )
+    .unwrap();
+    let staged = autotune_serve_exec(
+        &plat, &cfg, &EngineSpec::all(), &base, &slo, Some(target), (0.5, 16.0),
+        ReplicaSpace::default(), SearchBudget::default(), ExecPolicy { jobs: 4, staged: true },
+    )
+    .unwrap();
+    let (e, s) = (exhaustive.min_gpu_point().unwrap(), staged.min_gpu_point().unwrap());
+    assert_eq!(e.cand.label(), s.cand.label());
+    assert_eq!(e.gpus, s.gpus);
+    assert_eq!(e.max_qps.map(f64::to_bits), s.max_qps.map(f64::to_bits));
+    // accounting: everything enumerated is pruned, costed, or skipped
+    assert_eq!(staged.stats.enumerated,
+               staged.stats.pruned_infeasible + staged.stats.costed + staged.stats.skipped);
+}
+
+/// Acceptance: same fidelity on the multi-replica cluster space from
+/// tests/cluster.rs, widened to replicas {1,2,3} so the space (11
+/// candidates) is large enough to engage the coarse-to-fine pipeline
+/// rather than fall back to full evaluation.
+#[test]
+fn staged_search_reproduces_exhaustive_min_gpu_point_on_clusters() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(60).seed(9);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let target = 2.0;
+    let rep = ReplicaSpace {
+        max_replicas: 3,
+        gpu_budget: Some(16),
+        balancer: Balancer::JoinShortestQueue,
+    };
+    let exhaustive = autotune_serve_exec(
+        &plat, &cfg, &[EngineSpec::vllm()], &base, &slo, Some(target), (0.5, 512.0), rep,
+        SearchBudget { max_costed: usize::MAX, early_prune: false },
+        ExecPolicy { jobs: 1, staged: false },
+    )
+    .unwrap();
+    let staged = autotune_serve_exec(
+        &plat, &cfg, &[EngineSpec::vllm()], &base, &slo, Some(target), (0.5, 512.0), rep,
+        SearchBudget::default(), ExecPolicy { jobs: 4, staged: true },
+    )
+    .unwrap();
+    assert_eq!(staged.stats.enumerated, 11, "vLLM TP×replicas under 16 GPUs");
+    let (e, s) = (exhaustive.min_gpu_point().unwrap(), staged.min_gpu_point().unwrap());
+    assert_eq!(e.cand.label(), s.cand.label());
+    assert_eq!(e.gpus, s.gpus);
+    assert_eq!(e.max_qps.map(f64::to_bits), s.max_qps.map(f64::to_bits));
+}
