@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
-"""CI perf tracking: run three pinned llmperf scenarios, record wall
+"""CI perf tracking: run four pinned llmperf scenarios, record wall
 time plus key model outputs into BENCH_ci.json, and warn (never fail) on
 >10% regression against the committed baseline.
 
-The third scenario is a pair: the same >=200-candidate autotune-serve
+The last scenario is a pair: the same >=200-candidate autotune-serve
 space once through the default staged/parallel/memoized pipeline and
 once with --exhaustive --jobs 1 --no-early-prune (full sequential
 evaluation).  It records the staged-over-exhaustive wall-clock speedup
@@ -45,9 +45,11 @@ import subprocess
 import sys
 import time
 
-# The two pinned scenarios: the sweep-load SLO knee for 7B on A800, and
-# the autotune-serve min-GPU search (with the dp>1 replica axis open).
-# Keep these stable — the whole point is a comparable trajectory.
+# The pinned scenarios: the sweep-load SLO knee for 7B on A800, the
+# autotune-serve min-GPU search (with the dp>1 replica axis open), and
+# the autoscaled diurnal fleet's GPU-hour savings vs the static-peak
+# baseline.  Keep these stable — the whole point is a comparable
+# trajectory.
 SCENARIOS = [
     {
         "name": "sweep-load-knee-7b-a800",
@@ -75,6 +77,22 @@ SCENARIOS = [
         "metrics": {
             "min_gpus": r"— ([0-9]+) GPU\(s\)",
             "max_qps_at_min_gpu": r"max ([0-9.]+) QPS",
+        },
+    },
+    {
+        "name": "autoscale-diurnal-7b-a800",
+        "argv": [
+            "sim-autoscale", "--model", "7b", "--platform", "a800", "--engine", "vllm",
+            "--arrival", "diurnal:2:10:90", "--requests", "600", "--seed", "42",
+            "--min-replicas", "1", "--max-replicas", "4", "--interval", "15",
+            "--cold-start", "10", "--drain", "20",
+            "--slo-ttft", "4.0", "--slo-tpot", "0.25", "--tenants", "two-class",
+        ],
+        # "GPU-hours: autoscale 0.123 vs static peak (4 replicas) 0.456 —
+        #  saved 73.0% (...)" and "overall SLO attainment: 98.5% (...)"
+        "metrics": {
+            "gpu_hours_saved_pct": r"saved ([0-9.]+)%",
+            "overall_attainment_pct": r"overall SLO attainment: ([0-9.]+)%",
         },
     },
 ]
@@ -108,6 +126,7 @@ TOLERANCE = 0.10  # warn beyond ±10%
 HIGHER_IS_BETTER = {
     "max_qps_under_slo", "max_qps_at_min_gpu", "frontier_rows",
     "speedup_staged_vs_exhaustive", "memo_hit_pct",
+    "gpu_hours_saved_pct", "overall_attainment_pct",
 }
 
 

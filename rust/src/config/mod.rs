@@ -7,6 +7,7 @@ pub mod method;
 pub mod model;
 pub mod profile;
 pub mod slo;
+pub mod tenant;
 pub mod trace;
 pub mod workload;
 
@@ -14,5 +15,6 @@ pub use method::{Method, Tuning, ZeroStage};
 pub use model::LlamaConfig;
 pub use profile::{LinkProfile, LinkScope, TopologyProfile};
 pub use slo::SloSpec;
+pub use tenant::{PriorityClass, TenantMix, TenantSpec};
 pub use trace::{Trace, TraceEntry};
 pub use workload::{Arrival, LengthDist, ServeWorkload, TrainWorkload, WorkloadSpec};

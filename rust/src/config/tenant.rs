@@ -1,0 +1,297 @@
+//! Multi-tenant serving: priority classes, per-tenant SLOs and traffic
+//! shares.
+//!
+//! A [`TenantMix`] splits one workload's request stream across named
+//! tenants, each with a [`PriorityClass`], a traffic `share`, and its
+//! own [`SloSpec`].  The split is sampled from a dedicated RNG stream
+//! (independent of the arrival and length streams, like
+//! `config/workload.rs`), so the same seed always maps the same request
+//! to the same tenant regardless of the offered load.  The autoscaler's
+//! admission controller (`serve/autoscale.rs`) sheds the lowest class
+//! first when the fleet is saturated at its replica ceiling — the
+//! standard priority-based load-shedding contract (DESIGN.md
+//! §Autoscaling).
+
+use crate::config::slo::SloSpec;
+use crate::err;
+use crate::serve::request::Request;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Priority class of a tenant, in ascending shedding order: under
+/// overload `Batch` is shed first, `Premium` last (never, when it is
+/// the highest class present).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PriorityClass {
+    /// offline / best-effort traffic: first to be shed
+    Batch,
+    /// ordinary interactive traffic
+    Standard,
+    /// latency-critical traffic: shed last
+    Premium,
+}
+
+impl PriorityClass {
+    /// Every class, in ascending priority order.
+    pub const ALL: [PriorityClass; 3] =
+        [PriorityClass::Batch, PriorityClass::Standard, PriorityClass::Premium];
+
+    /// Shedding rank: 0 = shed first (`Batch`), 2 = shed last
+    /// (`Premium`).  A request is shed when its rank is below the
+    /// autoscaler's current shed level.
+    pub fn rank(&self) -> u8 {
+        match self {
+            PriorityClass::Batch => 0,
+            PriorityClass::Standard => 1,
+            PriorityClass::Premium => 2,
+        }
+    }
+
+    /// Parse the CLI spelling: `batch`, `standard`, or `premium`.
+    pub fn parse(s: &str) -> Option<PriorityClass> {
+        match s {
+            "batch" => Some(PriorityClass::Batch),
+            "standard" => Some(PriorityClass::Standard),
+            "premium" => Some(PriorityClass::Premium),
+            _ => None,
+        }
+    }
+
+    /// Table / caption label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PriorityClass::Batch => "batch",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Premium => "premium",
+        }
+    }
+
+    /// The class's default SLO when a tenant spec names none: premium is
+    /// the chat-style interactive budget, standard doubles it, batch is
+    /// throughput-oriented (p90 TTFT ≤ 30 s, TPOT ≤ 1 s/token).
+    pub fn default_slo(&self) -> SloSpec {
+        match self {
+            PriorityClass::Premium => SloSpec::interactive(),
+            PriorityClass::Standard => SloSpec::new(0.9, 4.0, 0.2),
+            PriorityClass::Batch => SloSpec::new(0.9, 30.0, 1.0),
+        }
+    }
+}
+
+/// One tenant: a named slice of the traffic with its own priority and
+/// latency contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// tenant name (report rows; must be unique within a mix)
+    pub name: String,
+    /// priority class governing shedding order
+    pub class: PriorityClass,
+    /// fraction of the request stream this tenant offers (> 0;
+    /// shares are normalized over the mix, so they need not sum to 1)
+    pub share: f64,
+    /// the tenant's own latency contract, evaluated per request
+    pub slo: SloSpec,
+}
+
+// Seed offset keeping tenant assignment independent of the arrival and
+// length streams (same convention as `config/workload.rs`).
+const TENANT_STREAM: u64 = 0x7E4A_47A5_5E5E_u64;
+
+/// A full multi-tenant traffic split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    /// the tenants, in declaration order (assignment indexes into this)
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantMix {
+    /// The degenerate single-tenant mix: all traffic from one
+    /// `Standard`-class tenant named `default` under its class SLO.
+    pub fn single() -> Self {
+        TenantMix {
+            tenants: vec![TenantSpec {
+                name: "default".into(),
+                class: PriorityClass::Standard,
+                share: 1.0,
+                slo: PriorityClass::Standard.default_slo(),
+            }],
+        }
+    }
+
+    /// The canonical two-class mix: 70% latency-critical `prod`
+    /// (premium, interactive SLO) + 30% `batch` (shed first, relaxed
+    /// SLO).
+    pub fn two_class() -> Self {
+        TenantMix {
+            tenants: vec![
+                TenantSpec {
+                    name: "prod".into(),
+                    class: PriorityClass::Premium,
+                    share: 0.7,
+                    slo: PriorityClass::Premium.default_slo(),
+                },
+                TenantSpec {
+                    name: "batch".into(),
+                    class: PriorityClass::Batch,
+                    share: 0.3,
+                    slo: PriorityClass::Batch.default_slo(),
+                },
+            ],
+        }
+    }
+
+    /// Parse the CLI spelling: the named presets `single` / `two-class`,
+    /// or a comma list of `NAME:CLASS:SHARE[:TTFT:TPOT]` entries, e.g.
+    /// `prod:premium:0.7,batch:batch:0.3` (omitted budgets fall back to
+    /// the class default SLO at p90).
+    pub fn parse(s: &str) -> Result<TenantMix> {
+        match s {
+            "single" => return Ok(TenantMix::single()),
+            "two-class" => return Ok(TenantMix::two_class()),
+            _ => {}
+        }
+        let mut tenants = Vec::new();
+        for entry in s.split(',') {
+            let parts: Vec<&str> = entry.split(':').collect();
+            let (name, class, share, slo) = match parts.as_slice() {
+                [name, class, share] => (*name, *class, *share, None),
+                [name, class, share, ttft, tpot] => (*name, *class, *share, Some((*ttft, *tpot))),
+                _ => {
+                    return Err(err!(
+                        "bad tenant entry '{entry}' (NAME:CLASS:SHARE[:TTFT:TPOT])"
+                    ))
+                }
+            };
+            let class = PriorityClass::parse(class)
+                .ok_or_else(|| err!("bad tenant class '{class}' (batch|standard|premium)"))?;
+            let share: f64 = share
+                .parse()
+                .map_err(|_| err!("bad tenant share '{share}' in '{entry}'"))?;
+            let slo = match slo {
+                None => class.default_slo(),
+                Some((ttft, tpot)) => {
+                    let ttft: f64 =
+                        ttft.parse().map_err(|_| err!("bad tenant TTFT in '{entry}'"))?;
+                    let tpot: f64 =
+                        tpot.parse().map_err(|_| err!("bad tenant TPOT in '{entry}'"))?;
+                    SloSpec::new(0.9, ttft, tpot)
+                }
+            };
+            tenants.push(TenantSpec { name: name.to_string(), class, share, slo });
+        }
+        let mix = TenantMix { tenants };
+        mix.validate()?;
+        Ok(mix)
+    }
+
+    /// Check the mix is usable: non-empty, unique non-empty names,
+    /// every share > 0 and finite.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(err!("tenant mix: no tenants"));
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                return Err(err!("tenant mix: empty tenant name"));
+            }
+            if !(t.share.is_finite() && t.share > 0.0) {
+                return Err(err!("tenant '{}': share must be > 0, got {}", t.name, t.share));
+            }
+            if self.tenants[..i].iter().any(|u| u.name == t.name) {
+                return Err(err!("tenant mix: duplicate tenant name '{}'", t.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Assign each request (in slice order) to a tenant index by
+    /// sampling the normalized shares from the dedicated tenant RNG
+    /// stream — deterministic in `seed`, independent of arrivals and
+    /// lengths.
+    pub fn assign(&self, requests: &[Request], seed: u64) -> Vec<usize> {
+        let total: f64 = self.tenants.iter().map(|t| t.share).sum();
+        let mut rng = Rng::new(seed ^ TENANT_STREAM);
+        requests
+            .iter()
+            .map(|_| {
+                let u = rng.f64() * total;
+                let mut acc = 0.0;
+                for (i, t) in self.tenants.iter().enumerate() {
+                    acc += t.share;
+                    if u < acc {
+                        return i;
+                    }
+                }
+                self.tenants.len() - 1 // float round-off on the last edge
+            })
+            .collect()
+    }
+
+    /// The highest priority rank present in the mix.  The autoscaler
+    /// caps its shed level here, so the highest class present is never
+    /// shed.
+    pub fn max_rank(&self) -> u8 {
+        self.tenants.iter().map(|t| t.class.rank()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+
+    #[test]
+    fn class_order_and_ranks() {
+        assert!(PriorityClass::Batch < PriorityClass::Standard);
+        assert!(PriorityClass::Standard < PriorityClass::Premium);
+        for (i, c) in PriorityClass::ALL.iter().enumerate() {
+            assert_eq!(c.rank() as usize, i);
+            assert_eq!(PriorityClass::parse(c.label()), Some(*c));
+        }
+        assert_eq!(PriorityClass::parse("gold"), None);
+    }
+
+    #[test]
+    fn presets_validate_and_cap_shedding() {
+        let two = TenantMix::two_class();
+        two.validate().unwrap();
+        assert_eq!(two.tenants.len(), 2);
+        assert_eq!(two.max_rank(), PriorityClass::Premium.rank());
+        let one = TenantMix::single();
+        one.validate().unwrap();
+        assert_eq!(one.max_rank(), PriorityClass::Standard.rank());
+    }
+
+    #[test]
+    fn parse_grammar_and_validation() {
+        let mix = TenantMix::parse("prod:premium:0.6,bulk:batch:0.4:20:0.5").unwrap();
+        assert_eq!(mix.tenants[0].name, "prod");
+        assert_eq!(mix.tenants[0].class, PriorityClass::Premium);
+        assert_eq!(mix.tenants[0].slo, SloSpec::interactive());
+        assert_eq!(mix.tenants[1].slo, SloSpec::new(0.9, 20.0, 0.5));
+        assert_eq!(TenantMix::parse("two-class").unwrap(), TenantMix::two_class());
+        assert!(TenantMix::parse("a:gold:0.5").is_err(), "unknown class");
+        assert!(TenantMix::parse("a:batch:0").is_err(), "zero share");
+        assert!(TenantMix::parse("a:batch:0.5,a:batch:0.5").is_err(), "duplicate name");
+        assert!(TenantMix::parse("a:batch").is_err(), "missing share");
+    }
+
+    #[test]
+    fn assignment_is_seeded_share_weighted_and_load_invariant() {
+        let reqs = WorkloadSpec::new(4000).generate().unwrap();
+        let mix = TenantMix::two_class();
+        let a = mix.assign(&reqs, 7);
+        assert_eq!(a, mix.assign(&reqs, 7), "same seed, same split");
+        assert_ne!(a, mix.assign(&reqs, 8), "different seed diverges");
+        let prod = a.iter().filter(|&&t| t == 0).count() as f64 / reqs.len() as f64;
+        assert!((prod - 0.7).abs() < 0.03, "prod share {prod}");
+        // the split depends only on (seed, request order), not lengths
+        // or arrival times — same count, same assignment
+        let other = WorkloadSpec::new(4000)
+            .arrival(crate::config::Arrival::Poisson { qps: 3.0 })
+            .seed(99)
+            .generate()
+            .unwrap();
+        assert_eq!(a, mix.assign(&other, 7));
+    }
+}

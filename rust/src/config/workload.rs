@@ -5,8 +5,9 @@
 //! 350 tokens ([`TrainWorkload`]); the paper's serving benchmark is a
 //! burst of 1000 requests × 512 input tokens ([`ServeWorkload`]).
 //! [`WorkloadSpec`] generalizes the latter into a generator over an
-//! [`Arrival`] process (at-once burst, Poisson, bursty on/off, trace
-//! replay) and per-request [`LengthDist`] prompt/output distributions —
+//! [`Arrival`] process (at-once burst, Poisson, bursty on/off, shaped
+//! diurnal/ramp/flash-crowd rates, trace replay) and per-request
+//! [`LengthDist`] prompt/output distributions —
 //! the arrival process and length spread are what dominate observed
 //! TTFT/TPOT tails under load, so the closed burst alone mis-ranks
 //! engine configurations (see DESIGN.md §Serving workloads & SLOs).
@@ -119,13 +120,50 @@ pub enum Arrival {
         /// off-phase duration, seconds (>= 0)
         off_s: f64,
     },
+    /// sinusoidal day/night cycle: the rate starts at the `base_qps`
+    /// trough at t=0, peaks at `peak_qps` half a period later, and
+    /// repeats every `period_s` seconds — the canonical diurnal shape
+    /// an autoscaler has to track
+    Diurnal {
+        /// trough rate, requests per second (> 0)
+        base_qps: f64,
+        /// peak rate, requests per second (>= base_qps)
+        peak_qps: f64,
+        /// full cycle duration, seconds (> 0)
+        period_s: f64,
+    },
+    /// linear ramp: the rate moves from `from_qps` to `to_qps` over the
+    /// first `over_s` seconds and holds at `to_qps` afterwards (a
+    /// launch ramp-up, or a drain when `to_qps < from_qps`)
+    Ramp {
+        /// rate at t=0, requests per second (> 0)
+        from_qps: f64,
+        /// rate after the ramp, requests per second (> 0)
+        to_qps: f64,
+        /// ramp duration, seconds (> 0)
+        over_s: f64,
+    },
+    /// flash crowd: steady `base_qps` background except a `spike_qps`
+    /// plateau on `[at_s, at_s + dur_s)` — the worst case for scale-up
+    /// cold starts
+    Spike {
+        /// background rate, requests per second (> 0)
+        base_qps: f64,
+        /// rate during the spike, requests per second (>= base_qps)
+        spike_qps: f64,
+        /// spike onset, seconds (>= 0)
+        at_s: f64,
+        /// spike duration, seconds (> 0)
+        dur_s: f64,
+    },
     /// replay arrival timestamps from the spec's [`Trace`]
     Trace,
 }
 
 impl Arrival {
     /// Parse the CLI spelling: `atonce`, `poisson:QPS`,
-    /// `bursty:QPS:ON_S:OFF_S`, or `trace`.
+    /// `bursty:QPS:ON_S:OFF_S`, `diurnal:BASE:PEAK:PERIOD`,
+    /// `ramp:FROM:TO:OVER`, `spike:BASE:SPIKE:AT:DUR`, or `trace`.
     pub fn parse(s: &str) -> Option<Arrival> {
         let parts: Vec<&str> = s.split(':').collect();
         match parts.as_slice() {
@@ -141,7 +179,65 @@ impl Arrival {
                 (qps > 0.0 && on_s > 0.0 && off_s >= 0.0)
                     .then_some(Arrival::Bursty { qps, on_s, off_s })
             }
+            ["diurnal", base, peak, period] => {
+                let (base_qps, peak_qps, period_s): (f64, f64, f64) =
+                    (base.parse().ok()?, peak.parse().ok()?, period.parse().ok()?);
+                (base_qps > 0.0 && peak_qps >= base_qps && period_s > 0.0)
+                    .then_some(Arrival::Diurnal { base_qps, peak_qps, period_s })
+            }
+            ["ramp", from, to, over] => {
+                let (from_qps, to_qps, over_s): (f64, f64, f64) =
+                    (from.parse().ok()?, to.parse().ok()?, over.parse().ok()?);
+                (from_qps > 0.0 && to_qps > 0.0 && over_s > 0.0)
+                    .then_some(Arrival::Ramp { from_qps, to_qps, over_s })
+            }
+            ["spike", base, spike, at, dur] => {
+                let (base_qps, spike_qps, at_s, dur_s): (f64, f64, f64, f64) = (
+                    base.parse().ok()?,
+                    spike.parse().ok()?,
+                    at.parse().ok()?,
+                    dur.parse().ok()?,
+                );
+                (base_qps > 0.0 && spike_qps >= base_qps && at_s >= 0.0 && dur_s > 0.0)
+                    .then_some(Arrival::Spike { base_qps, spike_qps, at_s, dur_s })
+            }
             _ => None,
+        }
+    }
+
+    /// Instantaneous arrival rate λ(t) in requests/s, for the shaped
+    /// processes that define one (`None` for the closed burst and trace
+    /// replay).  This is the exact rate function the thinning sampler
+    /// draws from, so reports and tests can plot/check against it.
+    pub fn rate_at(&self, t: f64) -> Option<f64> {
+        match *self {
+            Arrival::AtOnce | Arrival::Trace => None,
+            Arrival::Poisson { qps } => Some(qps),
+            Arrival::Bursty { qps, on_s, off_s } => {
+                let cycle = t.rem_euclid(on_s + off_s);
+                Some(if cycle < on_s { qps } else { 0.0 })
+            }
+            Arrival::Diurnal { base_qps, peak_qps, period_s } => {
+                let phase = (2.0 * std::f64::consts::PI * t / period_s).cos();
+                Some(base_qps + (peak_qps - base_qps) * 0.5 * (1.0 - phase))
+            }
+            Arrival::Ramp { from_qps, to_qps, over_s } => {
+                Some(from_qps + (to_qps - from_qps) * (t / over_s).min(1.0))
+            }
+            Arrival::Spike { base_qps, spike_qps, at_s, dur_s } => {
+                Some(if t >= at_s && t < at_s + dur_s { spike_qps } else { base_qps })
+            }
+        }
+    }
+
+    /// The rate function's supremum, for the thinning sampler.
+    fn peak_rate(&self) -> f64 {
+        match *self {
+            Arrival::Diurnal { peak_qps, .. } => peak_qps,
+            Arrival::Ramp { from_qps, to_qps, .. } => from_qps.max(to_qps),
+            Arrival::Spike { spike_qps, .. } => spike_qps,
+            Arrival::Poisson { qps } | Arrival::Bursty { qps, .. } => qps,
+            Arrival::AtOnce | Arrival::Trace => 0.0,
         }
     }
 
@@ -168,6 +264,23 @@ impl Arrival {
                         (t_on / on_s).floor() * off_s + t_on
                     })
                     .collect()
+            }
+            // inhomogeneous Poisson by thinning (Lewis–Shedler): draw
+            // candidates from a homogeneous process at the peak rate and
+            // accept each with probability λ(t)/peak.  Both draws come
+            // from the caller's arrival stream, so shaped workloads stay
+            // deterministic in the seed and independent of the lengths.
+            Arrival::Diurnal { .. } | Arrival::Ramp { .. } | Arrival::Spike { .. } => {
+                let peak = self.peak_rate();
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n as usize);
+                while (out.len() as u64) < n {
+                    t += rng.exp(1.0 / peak);
+                    if rng.f64() * peak < self.rate_at(t).unwrap_or(0.0) {
+                        out.push(t);
+                    }
+                }
+                out
             }
             Arrival::Trace => Vec::new(), // resolved from the trace by generate()
         }
@@ -390,11 +503,18 @@ impl WorkloadSpec {
     }
 
     /// Mean offered load in requests/s, if the process defines one.
+    /// For the shaped processes this is the natural long-run mean:
+    /// the sinusoid average `(base+peak)/2` for `Diurnal`, the
+    /// ramp-window average `(from+to)/2` for `Ramp`, and the background
+    /// `base_qps` for `Spike` (the spike is a transient, not a rate).
     pub fn offered_qps(&self) -> Option<f64> {
         match self.arrival {
             Arrival::AtOnce => None,
             Arrival::Poisson { qps } => Some(qps),
             Arrival::Bursty { qps, on_s, off_s } => Some(qps * on_s / (on_s + off_s)),
+            Arrival::Diurnal { base_qps, peak_qps, .. } => Some((base_qps + peak_qps) / 2.0),
+            Arrival::Ramp { from_qps, to_qps, .. } => Some((from_qps + to_qps) / 2.0),
+            Arrival::Spike { base_qps, .. } => Some(base_qps),
             Arrival::Trace => self.trace.as_ref().and_then(|t| t.mean_qps()),
         }
     }
@@ -408,6 +528,9 @@ impl WorkloadSpec {
     /// * `Poisson` is set to `qps`,
     /// * `Bursty` keeps its duty cycle and scales the on-phase rate so
     ///   the long-run mean hits `qps`,
+    /// * `Diurnal` / `Ramp` / `Spike` scale every rate by the same
+    ///   factor, keeping the peak:base (resp. to:from, spike:base)
+    ///   ratio and all time parameters — the *shape* is load-invariant,
     /// * `Trace` is time-compressed (arrivals rescaled, mix and order
     ///   preserved) so the recorded mean rate becomes `qps`.
     ///
@@ -424,6 +547,28 @@ impl WorkloadSpec {
             }
             Arrival::Bursty { on_s, off_s, .. } => {
                 spec.arrival = Arrival::Bursty { qps: qps * (on_s + off_s) / on_s, on_s, off_s };
+            }
+            Arrival::Diurnal { base_qps, peak_qps, period_s } => {
+                let k = qps / ((base_qps + peak_qps) / 2.0);
+                spec.arrival = Arrival::Diurnal {
+                    base_qps: base_qps * k,
+                    peak_qps: peak_qps * k,
+                    period_s,
+                };
+            }
+            Arrival::Ramp { from_qps, to_qps, over_s } => {
+                let k = qps / ((from_qps + to_qps) / 2.0);
+                spec.arrival =
+                    Arrival::Ramp { from_qps: from_qps * k, to_qps: to_qps * k, over_s };
+            }
+            Arrival::Spike { base_qps, spike_qps, at_s, dur_s } => {
+                let k = qps / base_qps;
+                spec.arrival = Arrival::Spike {
+                    base_qps: qps,
+                    spike_qps: spike_qps * k,
+                    at_s,
+                    dur_s,
+                };
             }
             Arrival::Trace => {
                 let trace = self
@@ -579,6 +724,39 @@ mod tests {
     }
 
     #[test]
+    fn shaped_rate_functions_are_exact() {
+        let d = Arrival::Diurnal { base_qps: 2.0, peak_qps: 10.0, period_s: 100.0 };
+        assert!((d.rate_at(0.0).unwrap() - 2.0).abs() < 1e-12, "trough at t=0");
+        assert!((d.rate_at(50.0).unwrap() - 10.0).abs() < 1e-12, "peak at half period");
+        assert!((d.rate_at(100.0).unwrap() - 2.0).abs() < 1e-9, "periodic");
+        let r = Arrival::Ramp { from_qps: 1.0, to_qps: 9.0, over_s: 10.0 };
+        assert!((r.rate_at(0.0).unwrap() - 1.0).abs() < 1e-12);
+        assert!((r.rate_at(5.0).unwrap() - 5.0).abs() < 1e-12);
+        assert!((r.rate_at(100.0).unwrap() - 9.0).abs() < 1e-12, "holds after the ramp");
+        let s = Arrival::Spike { base_qps: 2.0, spike_qps: 20.0, at_s: 60.0, dur_s: 10.0 };
+        assert_eq!(s.rate_at(59.9), Some(2.0));
+        assert_eq!(s.rate_at(60.0), Some(20.0));
+        assert_eq!(s.rate_at(70.0), Some(2.0), "spike window is half-open");
+        // the closed burst and trace replay define no rate
+        assert_eq!(Arrival::AtOnce.rate_at(0.0), None);
+        assert_eq!(Arrival::Trace.rate_at(0.0), None);
+    }
+
+    #[test]
+    fn spike_concentrates_arrivals_in_its_window() {
+        // base 1 QPS with a 20 QPS spike on [30, 40): over ~80 requests,
+        // roughly 200/280 of the arrival mass sits inside the window
+        let reqs = WorkloadSpec::new(80)
+            .arrival(Arrival::Spike { base_qps: 1.0, spike_qps: 20.0, at_s: 30.0, dur_s: 10.0 })
+            .seed(9)
+            .generate()
+            .unwrap();
+        let inside = reqs.iter().filter(|r| r.arrival >= 30.0 && r.arrival < 40.0).count();
+        assert!(inside > reqs.len() / 2, "only {inside}/{} arrivals in the spike", reqs.len());
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
     fn trace_replay_sorts_and_uses_recorded_values() {
         let trace = Trace {
             name: "t".into(),
@@ -611,6 +789,23 @@ mod tests {
         assert_eq!(Arrival::parse("trace"), Some(Arrival::Trace));
         assert_eq!(Arrival::parse("poisson:-1"), None);
         assert_eq!(Arrival::parse("nope"), None);
+        assert_eq!(
+            Arrival::parse("diurnal:2:10:300"),
+            Some(Arrival::Diurnal { base_qps: 2.0, peak_qps: 10.0, period_s: 300.0 })
+        );
+        assert_eq!(
+            Arrival::parse("ramp:1:8:120"),
+            Some(Arrival::Ramp { from_qps: 1.0, to_qps: 8.0, over_s: 120.0 })
+        );
+        assert_eq!(
+            Arrival::parse("spike:2:20:60:10"),
+            Some(Arrival::Spike { base_qps: 2.0, spike_qps: 20.0, at_s: 60.0, dur_s: 10.0 })
+        );
+        assert_eq!(Arrival::parse("diurnal:10:2:300"), None, "peak below base");
+        assert_eq!(Arrival::parse("diurnal:2:10:0"), None, "zero period");
+        assert_eq!(Arrival::parse("ramp:0:8:120"), None);
+        assert_eq!(Arrival::parse("spike:2:1:60:10"), None, "spike below base");
+        assert_eq!(Arrival::parse("spike:2:20:60:0"), None, "zero duration");
 
         assert_eq!(LengthDist::parse("512"), Some(LengthDist::Fixed(512)));
         assert_eq!(LengthDist::parse("uniform:16:64"), Some(LengthDist::Uniform { lo: 16, hi: 64 }));

@@ -4,6 +4,7 @@
 //!   table N | figure N | report-all      — regenerate paper tables/figures
 //!   sim-pretrain | sim-serve             — one simulator cell
 //!   sim-cluster                          — dp>1 replica cluster + load balancer
+//!   sim-autoscale                        — shaped traffic + autoscaling multi-tenant fleet
 //!   sweep-load                           — QPS sweep + max-QPS-under-SLO search
 //!   sweep-parallel                       — TP×PP×DP plan comparison
 //!   autotune-train | autotune-serve      — Pareto-frontier configuration search
@@ -15,16 +16,20 @@ use llm_perf_lab::calibrate::comm::{fit_alpha_beta, parse_log, CommLog};
 use llm_perf_lab::cli::Cli;
 use llm_perf_lab::comm::Collective;
 use llm_perf_lab::config::{
-    Arrival, LengthDist, LinkProfile, LinkScope, LlamaConfig, Method, SloSpec, TopologyProfile,
-    Trace, TrainWorkload, WorkloadSpec,
+    Arrival, LengthDist, LinkProfile, LinkScope, LlamaConfig, Method, SloSpec, TenantMix,
+    TopologyProfile, Trace, TrainWorkload, WorkloadSpec,
 };
 use llm_perf_lab::err;
 use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
 use llm_perf_lab::search::{
-    autotune_serve_exec, autotune_train_exec, ExecPolicy, ReplicaSpace, SearchBudget,
+    autotune_autoscale, autotune_serve_exec, autotune_train_exec, policy_space, ExecPolicy,
+    ReplicaSpace, SearchBudget,
 };
-use llm_perf_lab::serve::{simulate_cluster, simulate_requests, Balancer, ClusterSpec, EngineSpec};
+use llm_perf_lab::serve::{
+    simulate_autoscale, simulate_cluster, simulate_requests, AutoscalePolicy, AutoscaleSpec,
+    Balancer, ClusterSpec, EngineSpec,
+};
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
 use llm_perf_lab::util::fmt;
@@ -57,6 +62,25 @@ simulators:
                  work, join-shortest-queue; seeded tie-break): merged
                  cluster metrics + per-replica utilization table;
                  --balancer all prints a per-policy comparison instead
+  sim-autoscale  --model 7b --platform a800 --engine vllm [--tp N]
+                 [--min-replicas 1] [--max-replicas 4] [--balancer rr|lo|jsq]
+                 [--target-util 0.6] [--queue-depth 8] [--interval 15]
+                 [--cold-start 30] [--drain 30] [--shed-queue Q]
+                 [--tenants single|two-class|NAME:CLASS:SHARE[:TTFT:TPOT],...]
+                 [--requests 400] [--seed 42] [--tune]
+                 [--arrival diurnal:BASE:PEAK:PERIOD | ramp:FROM:TO:OVER |
+                  spike:BASE:SPIKE:AT:DUR | poisson:QPS | ...]
+                 [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 replay time-varying traffic against an autoscaling fleet
+                 (target-utilization + queue-depth scale triggers, cold
+                 starts, drain-before-retire, and — with --shed-queue —
+                 lowest-priority-class-first admission shedding): prints
+                 the replicas(t) timeline, per-tenant SLO attainment, and
+                 GPU-hours / $ vs the static peak-provisioned baseline
+                 (the baseline is replayed too, so savings are judged at
+                 equal-or-better attainment); tenants carry per-class SLOs
+                 (--slo-* overrides all of them uniformly); --tune costs a
+                 policy grid instead and prints its attainment x $ frontier
   sweep-load     --model 7b --platform a800 --engine vllm [--requests 200]
                  [--qps-min 0.5] [--qps-max 32] [--points 6]
                  [--arrival poisson:1|bursty:QPS:ON_S:OFF_S|trace] [--trace FILE]
@@ -212,6 +236,7 @@ fn run(cli: &Cli) -> Result<()> {
         "validate-comm" => validate_comm(cli)?,
         "sim-serve" => sim_serve(cli)?,
         "sim-cluster" => sim_cluster(cli)?,
+        "sim-autoscale" => sim_autoscale(cli)?,
         "sweep-load" => sweep_load(cli)?,
         "autotune-train" => autotune_train_cmd(cli)?,
         "autotune-serve" => autotune_serve_cmd(cli)?,
@@ -396,7 +421,8 @@ fn workload_flags(cli: &Cli, default_requests: u64) -> Result<WorkloadSpec> {
     let arrival_s = cli.flag_or("arrival", "atonce");
     let arrival = Arrival::parse(&arrival_s)
         .ok_or_else(|| err!("bad --arrival '{arrival_s}' (atonce | poisson:QPS | \
-                             bursty:QPS:ON_S:OFF_S | trace)"))?;
+                             bursty:QPS:ON_S:OFF_S | diurnal:BASE:PEAK:PERIOD | \
+                             ramp:FROM:TO:OVER | spike:BASE:SPIKE:AT:DUR | trace)"))?;
     let dist = |key: &str, default: &str| -> Result<LengthDist> {
         let s = cli.flag_or(key, default);
         LengthDist::parse(&s)
@@ -566,6 +592,95 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
                  m.goodput(&slo), m.slo_attainment(&slo) * 100.0);
     }
     println!("{}", report::load::replica_table(&r, &cluster).render());
+    Ok(())
+}
+
+/// `llmperf sim-autoscale` — replay a (typically time-varying) traffic
+/// stream against an autoscaling, multi-tenant fleet and price it
+/// against the static peak-provisioned baseline; `--tune` costs a
+/// policy grid and prints its attainment × $ frontier instead.
+fn sim_autoscale(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "7b")?;
+    let plat = platform_flag(cli)?;
+    let engine = engine_flag(cli)?;
+    let spec = workload_flags(cli, 400)?;
+    let slo = slo_flags(cli)?;
+    let plan = match cli.flag("tp") {
+        Some(v) => {
+            let tp: u32 = v.parse().map_err(|e| err!("bad --tp '{v}': {e}"))?;
+            engine.plan_with_tp(&plat, &cfg, tp).ok_or_else(|| {
+                err!("{} cannot deploy {} at TP{} on {} (per-replica memory check failed)",
+                     engine.name, cfg.name, tp, plat.id.label())
+            })?
+        }
+        None => engine.plan(&plat, &cfg).ok_or_else(|| {
+            err!("{} cannot deploy {} on {} (OOM)", engine.name, cfg.name, plat.id.label())
+        })?,
+    };
+    let min = cli.flag_u64("min-replicas", 1) as u32;
+    let max = cli.flag_u64("max-replicas", 4) as u32;
+    let mut policy = AutoscalePolicy::new(min, max)
+        .target_util(cli.flag_f64("target-util", 0.6))
+        .queue_depth(cli.flag_f64("queue-depth", 8.0))
+        .cold_start(cli.flag_f64("cold-start", 30.0))
+        .drain(cli.flag_f64("drain", 30.0))
+        .interval(cli.flag_f64("interval", 15.0));
+    if let Some(v) = cli.flag("shed-queue") {
+        let q: f64 = v.parse().map_err(|e| err!("bad --shed-queue '{v}': {e}"))?;
+        policy = policy.shed_queue(q);
+    }
+    policy.validate()?;
+    let tenants_s = cli.flag_or("tenants", "single");
+    let mut tenants = TenantMix::parse(&tenants_s)?;
+    if let Some(slo) = slo {
+        // a uniform --slo-* override replaces every tenant's class SLO
+        for t in &mut tenants.tenants {
+            t.slo = slo;
+        }
+    }
+    let bal = cli.flag_or("balancer", "jsq");
+    let balancer = Balancer::parse(&bal)
+        .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq)"))?;
+    let reqs = spec.generate()?;
+
+    if cli.has("tune") {
+        let policies = policy_space(policy);
+        let (evals, frontier) = autotune_autoscale(&plat, &cfg, &engine, plan, balancer,
+                                                   &tenants, spec.seed, &policies, &reqs);
+        println!("{} / {} / {} — policy search around {} on {} requests ({:?} arrivals)",
+                 plat.id.label(), cfg.name, engine.name, policy.label(), reqs.len(),
+                 spec.arrival);
+        println!("{}", report::autoscale::policy_table(&evals, &frontier).render());
+        return Ok(());
+    }
+
+    let aspec =
+        AutoscaleSpec { plan, balancer, policy, tenants, seed: spec.seed };
+    let r = simulate_autoscale(&plat, &cfg, &engine, &aspec, &reqs);
+    println!("{} / {} / {} — {} fleet × TP{}, {} balancer, {} tenant(s), {} requests \
+              ({:?} arrivals)",
+             plat.id.label(), cfg.name, engine.name, policy.label(), plan.tp(),
+             balancer.describe(), aspec.tenants.tenants.len(), reqs.len(), spec.arrival);
+    print!("{}", report::autoscale::summary_lines(&r, &aspec, &plat));
+    // replay the same traffic on the static peak fleet so the savings
+    // line is judged at equal-or-better attainment, not just cheaper
+    let static_policy = AutoscalePolicy {
+        min_replicas: policy.max_replicas,
+        shed_queue: f64::INFINITY,
+        ..policy
+    };
+    let sspec = AutoscaleSpec { policy: static_policy, ..aspec.clone() };
+    let sr = simulate_autoscale(&plat, &cfg, &engine, &sspec, &reqs);
+    println!("static baseline attainment: {:.1}% — autoscale {}",
+             sr.overall_attainment * 100.0,
+             if r.overall_attainment >= sr.overall_attainment {
+                 "matches or beats it"
+             } else {
+                 "trades some of it for the savings"
+             });
+    println!("{}", report::autoscale::timeline_table(&r).render());
+    println!("{}", report::autoscale::tenant_table(&r).render());
+    println!("{}", report::autoscale::lives_table(&r).render());
     Ok(())
 }
 

@@ -1,0 +1,207 @@
+//! Autoscaling report (`llmperf sim-autoscale`): the replicas(t)
+//! timeline, per-tenant SLO attainment, replica lifecycles, GPU-hour
+//! economics vs a static peak-provisioned fleet priced at
+//! `Platform::gpu_hour_usd`, and the policy-search table for
+//! `--tune`.
+
+use crate::hw::Platform;
+use crate::search::autoscale::PolicyEval;
+use crate::serve::autoscale::{AutoscaleResult, AutoscaleSpec};
+use crate::util::table::{f0, f2, oom, Table};
+
+/// Max rows the timeline table prints; longer runs are subsampled.
+const TIMELINE_ROWS: usize = 24;
+
+/// The replicas(t) timeline: one row per control step (subsampled to
+/// ~[`TIMELINE_ROWS`] rows, always keeping the final step), with the
+/// fleet split into serving / cold-starting / draining and the two
+/// scaling signals the policy reads.
+pub fn timeline_table(r: &AutoscaleResult) -> Table {
+    let mut t = Table::new(
+        "Autoscale timeline (control steps)",
+        &["t (s)", "serving", "cold", "draining", "in-flight", "booked", "shed level"],
+    );
+    let n = r.samples.len();
+    let step = n.div_ceil(TIMELINE_ROWS).max(1);
+    for (i, s) in r.samples.iter().enumerate() {
+        if i % step != 0 && i != n - 1 {
+            continue;
+        }
+        t.row(vec![
+            f0(s.t),
+            s.available.to_string(),
+            s.pending.to_string(),
+            s.draining.to_string(),
+            f0(s.inflight),
+            f2(s.booked),
+            s.shed_level.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Per-tenant outcomes, each judged against its own SLO.  `attainment`
+/// counts shed and rejected requests in the denominator, so admission
+/// control shows up as lost SLO, not as a smaller sample.
+pub fn tenant_table(r: &AutoscaleResult) -> Table {
+    let mut t = Table::new(
+        "Per-tenant SLO attainment (shed + rejected count against)",
+        &["tenant", "class", "offered", "shed", "rejected", "done", "met SLO", "attainment"],
+    )
+    .align_left(0)
+    .align_left(1);
+    for o in &r.tenants {
+        t.row(vec![
+            o.name.clone(),
+            o.class.label().to_string(),
+            o.offered.to_string(),
+            o.shed.to_string(),
+            o.rejected.to_string(),
+            o.completed.to_string(),
+            o.met_slo.to_string(),
+            format!("{:.1}%", o.attainment * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Replica lifecycles: when each slot spawned, started serving,
+/// drained, and retired, with the traffic it handled.  Slots alive at
+/// the end show "-" in the drain columns.
+pub fn lives_table(r: &AutoscaleResult) -> Table {
+    let mut t = Table::new(
+        "Replica lifecycles",
+        &["replica", "spawned (s)", "ready (s)", "drained (s)", "retired (s)", "requests", "done"],
+    );
+    for life in &r.lives {
+        let stats = r.cluster.replicas.iter().find(|s| s.replica == life.replica);
+        t.row(vec![
+            life.replica.to_string(),
+            f0(life.spawned_at),
+            f0(life.ready_at),
+            life.drained_at.map(f0).unwrap_or_else(oom),
+            life.retired_at.map(f0).unwrap_or_else(oom),
+            stats.map(|s| s.requests.to_string()).unwrap_or_else(|| "0".into()),
+            stats.map(|s| s.completions.to_string()).unwrap_or_else(|| "0".into()),
+        ]);
+    }
+    t
+}
+
+/// The `--tune` policy table: every costed policy with its GPU-hour
+/// economics and attainment, frontier rows starred.
+pub fn policy_table(evals: &[PolicyEval], frontier: &[usize]) -> Table {
+    let mut t = Table::new(
+        "Autoscale policy search (* = Pareto on attainment x -$)",
+        &["", "policy", "GPU-h", "saved", "cost $", "cold starts", "shed", "attainment"],
+    )
+    .align_left(1);
+    for (i, e) in evals.iter().enumerate() {
+        t.row(vec![
+            if frontier.contains(&i) { "*".to_string() } else { String::new() },
+            e.policy.label(),
+            f2(e.gpu_hours),
+            format!("{:.1}%", e.saved_pct),
+            f2(e.cost_usd),
+            e.cold_starts.to_string(),
+            e.shed.to_string(),
+            format!("{:.1}%", e.attainment * 100.0),
+        ]);
+    }
+    t
+}
+
+/// The headline economics lines (greppable; CI's bench harness parses
+/// the "saved" and "attainment" percentages): dynamic vs static
+/// GPU-hours and dollars, cold-start overhead, and conservation.
+pub fn summary_lines(r: &AutoscaleResult, spec: &AutoscaleSpec, plat: &Platform) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "GPU-hours: autoscale {:.3} vs static peak ({} replicas) {:.3} — saved {:.1}% \
+         (${:.2} vs ${:.2} at ${:.2}/GPU-h)\n",
+        r.gpu_hours,
+        spec.policy.max_replicas,
+        r.static_gpu_hours,
+        r.gpu_hours_saved_pct(),
+        r.gpu_hours * plat.gpu_hour_usd,
+        r.static_gpu_hours * plat.gpu_hour_usd,
+        plat.gpu_hour_usd,
+    ));
+    s.push_str(&format!(
+        "cold starts: {} ({:.3} GPU-h provisioned but cold)\n",
+        r.cold_starts, r.cold_start_gpu_hours,
+    ));
+    s.push_str(&format!(
+        "overall SLO attainment: {:.1}% (offered {}, shed {}, rejected {}, completed {})\n",
+        r.overall_attainment * 100.0,
+        r.offered,
+        r.shed,
+        r.cluster.merged.rejected,
+        r.cluster.merged.completions.len(),
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tenant::TenantMix;
+    use crate::config::{Arrival, LlamaConfig, WorkloadSpec};
+    use crate::hw::PlatformId;
+    use crate::serve::autoscale::{simulate_autoscale, AutoscalePolicy};
+    use crate::serve::{Balancer, EngineSpec};
+
+    fn small_run() -> (AutoscaleResult, AutoscaleSpec, Platform) {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let reqs = WorkloadSpec::new(120)
+            .arrival(Arrival::Ramp { from_qps: 1.0, to_qps: 12.0, over_s: 25.0 })
+            .seed(7)
+            .generate()
+            .unwrap();
+        let spec = AutoscaleSpec {
+            plan,
+            balancer: Balancer::JoinShortestQueue,
+            policy: AutoscalePolicy::new(1, 3).interval(5.0).cold_start(5.0).drain(5.0),
+            tenants: TenantMix::two_class(),
+            seed: 7,
+        };
+        let r = simulate_autoscale(&plat, &cfg, &engine, &spec, &reqs);
+        (r, spec, plat)
+    }
+
+    #[test]
+    fn tables_render_and_subsample() {
+        let (r, spec, plat) = small_run();
+        let tl = timeline_table(&r);
+        assert!(!tl.is_empty());
+        assert!(tl.n_rows() <= TIMELINE_ROWS + 1, "timeline stays compact");
+        let tt = tenant_table(&r);
+        assert_eq!(tt.n_rows(), 2, "one row per tenant");
+        assert!(tt.render().contains("prod"));
+        let lt = lives_table(&r);
+        assert_eq!(lt.n_rows(), r.lives.len());
+        let s = summary_lines(&r, &spec, &plat);
+        assert!(s.contains("saved "), "bench-greppable savings line: {s}");
+        assert!(s.contains("overall SLO attainment: "), "attainment line: {s}");
+    }
+
+    #[test]
+    fn policy_table_stars_the_frontier() {
+        let evals = vec![PolicyEval {
+            policy: AutoscalePolicy::new(2, 2),
+            gpu_hours: 1.0,
+            saved_pct: 0.0,
+            attainment: 1.0,
+            cost_usd: 2.1,
+            cold_starts: 0,
+            shed: 0,
+        }];
+        let t = policy_table(&evals, &[0]);
+        let out = t.render();
+        assert!(out.contains('*'));
+        assert!(out.contains("static-2"));
+    }
+}

@@ -54,6 +54,9 @@ pub fn sweep_load(
 ) -> Result<Table> {
     let shape = match base.arrival {
         crate::config::Arrival::Bursty { .. } => "bursty",
+        crate::config::Arrival::Diurnal { .. } => "diurnal",
+        crate::config::Arrival::Ramp { .. } => "ramp",
+        crate::config::Arrival::Spike { .. } => "spike",
         crate::config::Arrival::Trace => "trace-compressed",
         _ => "Poisson",
     };

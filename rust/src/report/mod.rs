@@ -2,6 +2,7 @@
 //! (DESIGN.md experiment index).  `llmperf table N` / `llmperf figure N`
 //! print them; `report_all` writes text + CSV under results/.
 
+pub mod autoscale;
 pub mod finetune;
 pub mod load;
 pub mod micro;

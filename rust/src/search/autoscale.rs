@@ -1,0 +1,131 @@
+//! Autoscale-policy axis for the autotuner: cost a small grid of
+//! scaling policies — always including the static peak-provisioned
+//! baseline — on one traffic shape, and keep the (SLO attainment × −$)
+//! Pareto frontier, so reports can show "policy X beats static peak
+//! provisioning at equal SLO for a fraction of the $" (`llmperf
+//! sim-autoscale --tune`).
+
+use crate::config::tenant::TenantMix;
+use crate::config::LlamaConfig;
+use crate::hw::Platform;
+use crate::search::pareto::pareto_indices;
+use crate::serve::autoscale::{simulate_autoscale, AutoscalePolicy, AutoscaleSpec};
+use crate::serve::cluster::Balancer;
+use crate::serve::engine::{DeployPlan, EngineSpec};
+use crate::serve::request::Request;
+
+/// One costed autoscale policy.
+#[derive(Debug, Clone)]
+pub struct PolicyEval {
+    /// the policy that was replayed
+    pub policy: AutoscalePolicy,
+    /// GPU-hours the dynamic fleet was provisioned
+    pub gpu_hours: f64,
+    /// GPU-hours saved vs this policy's static `max_replicas` fleet, %
+    pub saved_pct: f64,
+    /// fraction of offered requests meeting their tenant's SLO
+    pub attainment: f64,
+    /// provisioned cost, USD (`gpu_hours` × the platform rate)
+    pub cost_usd: f64,
+    /// scale-up events (cold starts paid)
+    pub cold_starts: u32,
+    /// requests refused at admission
+    pub shed: u64,
+}
+
+/// The policy grid explored around a base policy: the static
+/// peak-provisioned fleet first (the baseline every row is judged
+/// against), then a utilization-target sweep and two queue-depth
+/// variants, all between the base's replica bounds.
+pub fn policy_space(base: AutoscalePolicy) -> Vec<AutoscalePolicy> {
+    let mut v = vec![AutoscalePolicy { min_replicas: base.max_replicas, ..base }];
+    for u in [0.45, 0.6, 0.75, 0.9] {
+        v.push(base.target_util(u));
+    }
+    v.push(base.target_util(0.6).queue_depth(4.0));
+    v.push(base.target_util(0.6).queue_depth(16.0));
+    v
+}
+
+/// Replay every policy against the same request list and keep the
+/// (attainment × −$) Pareto frontier.  Returns the evals in `policies`
+/// order plus the frontier indices into them.  Deterministic: every
+/// replay shares the (seeded) workload, tenant mix, and balancer.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_autoscale(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: DeployPlan,
+    balancer: Balancer,
+    tenants: &TenantMix,
+    seed: u64,
+    policies: &[AutoscalePolicy],
+    requests: &[Request],
+) -> (Vec<PolicyEval>, Vec<usize>) {
+    let evals: Vec<PolicyEval> = policies
+        .iter()
+        .map(|&policy| {
+            let spec =
+                AutoscaleSpec { plan, balancer, policy, tenants: tenants.clone(), seed };
+            let r = simulate_autoscale(plat, cfg, engine, &spec, requests);
+            PolicyEval {
+                policy,
+                gpu_hours: r.gpu_hours,
+                saved_pct: r.gpu_hours_saved_pct(),
+                attainment: r.overall_attainment,
+                cost_usd: r.gpu_hours * plat.gpu_hour_usd,
+                cold_starts: r.cold_starts,
+                shed: r.shed,
+            }
+        })
+        .collect();
+    let points: Vec<Vec<f64>> =
+        evals.iter().map(|e| vec![e.attainment, -e.cost_usd]).collect();
+    let frontier = pareto_indices(&points);
+    (evals, frontier)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arrival, WorkloadSpec};
+    use crate::hw::PlatformId;
+
+    #[test]
+    fn space_leads_with_the_static_baseline() {
+        let space = policy_space(AutoscalePolicy::new(1, 4));
+        assert_eq!(space.len(), 7);
+        assert!(space[0].is_static(), "first policy is the static peak fleet");
+        assert_eq!(space[0].max_replicas, 4);
+        assert!(space[1..].iter().all(|p| p.min_replicas == 1 && p.max_replicas == 4));
+    }
+
+    #[test]
+    fn tuner_frontier_prefers_cheaper_at_equal_slo() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let reqs = WorkloadSpec::new(150)
+            .arrival(Arrival::Diurnal { base_qps: 1.0, peak_qps: 5.0, period_s: 40.0 })
+            .seed(42)
+            .generate()
+            .unwrap();
+        let policies =
+            vec![AutoscalePolicy::new(3, 3).interval(5.0), AutoscalePolicy::new(1, 3).interval(5.0)];
+        let (evals, frontier) = autotune_autoscale(
+            &plat, &cfg, &engine, plan, Balancer::JoinShortestQueue, &TenantMix::single(), 42,
+            &policies, &reqs,
+        );
+        assert_eq!(evals.len(), 2);
+        // light diurnal load: both attain fully, so the cheaper dynamic
+        // policy must dominate the static one out of the frontier
+        if (evals[0].attainment - evals[1].attainment).abs() < 1e-12 {
+            assert!(evals[1].cost_usd < evals[0].cost_usd);
+            assert_eq!(frontier, vec![1]);
+        } else {
+            assert!(!frontier.is_empty());
+        }
+    }
+}

@@ -30,7 +30,13 @@
 //! simulations → full bisection) while provably preserving the
 //! exhaustive frontier's min-GPU point.  `report::search` renders the
 //! frontiers (DESIGN.md §Configuration search).
+//!
+//! [`autoscale`] adds a separate autoscale-policy axis: it replays a
+//! small policy grid (static peak provisioning + dynamic variants)
+//! against one shaped traffic stream and keeps the (attainment × −$)
+//! frontier (`llmperf sim-autoscale --tune`).
 
+pub mod autoscale;
 pub mod exec;
 pub mod memo;
 pub mod objective;
@@ -46,6 +52,7 @@ use crate::util::error::Result;
 use exec::{par_map, SaturationFrontier};
 use stage::staged_serve;
 
+pub use autoscale::{autotune_autoscale, policy_space, PolicyEval};
 pub use exec::ExecPolicy;
 pub use memo::MemoCache;
 pub use objective::{

@@ -1,0 +1,697 @@
+//! Autoscaling serving clusters: dynamic replica counts replayed
+//! against time-varying traffic, with multi-tenant admission control.
+//!
+//! `serve/cluster.rs` answers "N replicas behind which balancer?" for a
+//! *fixed* N; real fleets track the diurnal/ramp/spike shapes of
+//! `config/workload.rs` by scaling N at runtime.  This module replays
+//! one arrival stream through a control loop that evaluates an
+//! [`AutoscalePolicy`] every `interval_s` seconds:
+//!
+//! 1. **scale up** when the booked fraction of the next interval
+//!    exceeds `target_util` or the per-replica in-flight estimate
+//!    exceeds `queue_depth` — the new replica serves only after a
+//!    `cold_start_s` provisioning delay (billed, not serving);
+//! 2. **scale down** when both signals sit below half their thresholds:
+//!    the least-loaded replica stops *receiving* immediately, finishes
+//!    its in-flight work (no request is ever lost in a drain), and is
+//!    billed until `drain_s` later or its last completion, whichever is
+//!    later;
+//! 3. **shed** at admission when the fleet is at `max_replicas` and
+//!    still over `shed_queue`: the shed level rises one priority class
+//!    at a time ([`crate::config::PriorityClass`], lowest first, capped
+//!    so the highest class present is never shed) and decays when the
+//!    queue clears.
+//!
+//! Dispatch reuses the fixed cluster's balancer machinery (`route`,
+//! seeded tie-breaks, saturation retry) over the currently *available*
+//! replicas, and every scale decision breaks ties deterministically
+//! without consuming the balancer RNG stream — so a static policy
+//! (`min == max`, shedding off) reproduces `simulate_cluster` bit for
+//! bit, and `tests/autoscale.rs` pins that equivalence along with
+//! request conservation and seeded determinism (DESIGN.md
+//! §Autoscaling & multi-tenant serving).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::tenant::{PriorityClass, TenantMix};
+use crate::config::LlamaConfig;
+use crate::err;
+use crate::hw::Platform;
+use crate::serve::cluster::{
+    merge_replicas, route, Balancer, ClusterResult, ReplicaLoad, ServiceEstimate, BALANCER_STREAM,
+};
+use crate::serve::engine::{DeployPlan, EngineSpec};
+use crate::serve::request::Request;
+use crate::serve::sim::{simulate_requests_on, SimResult};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Scale-decision policy the control loop evaluates every `interval_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalePolicy {
+    /// replicas provisioned at t=0 and never drained below (>= 1)
+    pub min_replicas: u32,
+    /// hard replica ceiling (>= min_replicas); the static baseline the
+    /// GPU-hours comparison provisions permanently
+    pub max_replicas: u32,
+    /// scale up when the fleet's booked fraction of the next control
+    /// interval (estimated outstanding service seconds per available
+    /// replica, over `interval_s`) exceeds this; scale down below half
+    pub target_util: f64,
+    /// scale up when estimated in-flight requests per available replica
+    /// exceed this; scale down below half (both signals must be quiet)
+    pub queue_depth: f64,
+    /// provisioning delay before a scaled-up replica serves, seconds
+    /// (billed from the scale decision)
+    pub cold_start_s: f64,
+    /// drain window of a scaled-down replica, seconds: it stops
+    /// receiving at the decision and is billed until the window ends or
+    /// its last in-flight request completes, whichever is later
+    pub drain_s: f64,
+    /// control-loop period, seconds (> 0)
+    pub interval_s: f64,
+    /// per-replica in-flight estimate beyond which admission starts
+    /// shedding the lowest priority class while at `max_replicas`
+    /// (`f64::INFINITY` disables shedding entirely)
+    pub shed_queue: f64,
+}
+
+impl AutoscalePolicy {
+    /// A policy between `min_replicas` and `max_replicas` with the
+    /// reference triggers: target utilization 0.6, queue depth 8 (the
+    /// dispatcher's nominal decode batch), 30 s cold start, 30 s drain,
+    /// 15 s control interval, shedding disabled.
+    pub fn new(min_replicas: u32, max_replicas: u32) -> Self {
+        AutoscalePolicy {
+            min_replicas,
+            max_replicas,
+            target_util: 0.6,
+            queue_depth: 8.0,
+            cold_start_s: 30.0,
+            drain_s: 30.0,
+            interval_s: 15.0,
+            shed_queue: f64::INFINITY,
+        }
+    }
+
+    /// Set the target-utilization trigger.
+    pub fn target_util(mut self, u: f64) -> Self {
+        self.target_util = u;
+        self
+    }
+
+    /// Set the queue-depth trigger.
+    pub fn queue_depth(mut self, q: f64) -> Self {
+        self.queue_depth = q;
+        self
+    }
+
+    /// Set the scale-up cold-start penalty, seconds.
+    pub fn cold_start(mut self, s: f64) -> Self {
+        self.cold_start_s = s;
+        self
+    }
+
+    /// Set the scale-down drain window, seconds.
+    pub fn drain(mut self, s: f64) -> Self {
+        self.drain_s = s;
+        self
+    }
+
+    /// Set the control-loop period, seconds.
+    pub fn interval(mut self, s: f64) -> Self {
+        self.interval_s = s;
+        self
+    }
+
+    /// Set the shedding queue threshold (`f64::INFINITY` disables).
+    pub fn shed_queue(mut self, q: f64) -> Self {
+        self.shed_queue = q;
+        self
+    }
+
+    /// Whether this policy can never change the fleet: fixed replica
+    /// count and no shedding — the configuration that reproduces
+    /// `simulate_cluster` bit for bit.
+    pub fn is_static(&self) -> bool {
+        self.min_replicas == self.max_replicas && self.shed_queue.is_infinite()
+    }
+
+    /// Validate the policy's numeric ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.min_replicas < 1 || self.max_replicas < self.min_replicas {
+            return Err(err!(
+                "autoscale: need 1 <= min ({}) <= max ({}) replicas",
+                self.min_replicas,
+                self.max_replicas
+            ));
+        }
+        if !(self.target_util > 0.0 && self.target_util.is_finite()) {
+            return Err(err!("autoscale: target utilization must be > 0"));
+        }
+        if !(self.queue_depth > 0.0) {
+            return Err(err!("autoscale: queue depth must be > 0"));
+        }
+        if !(self.interval_s > 0.0 && self.interval_s.is_finite()) {
+            return Err(err!("autoscale: control interval must be > 0"));
+        }
+        if self.cold_start_s < 0.0 || self.drain_s < 0.0 {
+            return Err(err!("autoscale: cold-start and drain must be >= 0"));
+        }
+        if !(self.shed_queue > 0.0) {
+            return Err(err!("autoscale: shed queue threshold must be > 0"));
+        }
+        Ok(())
+    }
+
+    /// Short label for report rows, e.g. `1..4 util0.6 q8`.
+    pub fn label(&self) -> String {
+        if self.is_static() {
+            return format!("static-{}", self.max_replicas);
+        }
+        format!(
+            "{}..{} util{} q{}{}",
+            self.min_replicas,
+            self.max_replicas,
+            self.target_util,
+            self.queue_depth,
+            if self.shed_queue.is_finite() { " shed" } else { "" }
+        )
+    }
+}
+
+/// A full autoscaling simulation input: the per-replica deployment, the
+/// balancer splitting traffic over the live fleet, the scaling policy,
+/// and the tenant mix admission control classifies by.
+#[derive(Debug, Clone)]
+pub struct AutoscaleSpec {
+    /// the deployment every replica runs (TP degree + KV capacity)
+    pub plan: DeployPlan,
+    /// how arrivals are split across currently available replicas
+    pub balancer: Balancer,
+    /// the scaling policy
+    pub policy: AutoscalePolicy,
+    /// the tenant mix (request → tenant assignment is seeded)
+    pub tenants: TenantMix,
+    /// seed for the balancer tie-break and the tenant assignment
+    pub seed: u64,
+}
+
+/// One control-step snapshot of the fleet (the report timeline rows).
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSample {
+    /// control-step time, seconds
+    pub t: f64,
+    /// replicas serving traffic
+    pub available: u32,
+    /// replicas provisioned but still cold-starting
+    pub pending: u32,
+    /// replicas draining (finishing work, receiving nothing)
+    pub draining: u32,
+    /// estimated in-flight requests across available replicas
+    pub inflight: f64,
+    /// booked fraction of the next control interval (the
+    /// target-utilization signal)
+    pub booked: f64,
+    /// current shed level (requests below this class rank are refused)
+    pub shed_level: u8,
+}
+
+/// One autoscaler decision.
+#[derive(Debug, Clone, Copy)]
+pub enum ScaleEvent {
+    /// a scale-up: the replica starts serving after its cold start
+    Up {
+        /// decision time, seconds
+        t: f64,
+        /// index of the spawned replica
+        replica: u32,
+        /// when it starts serving (t + cold_start_s)
+        ready_at: f64,
+    },
+    /// a scale-down: the replica stops receiving and drains
+    Down {
+        /// decision time, seconds
+        t: f64,
+        /// index of the drained replica
+        replica: u32,
+        /// end of its drain window (t + drain_s)
+        gone_at: f64,
+    },
+}
+
+/// Lifecycle of one replica slot over the run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaLife {
+    /// replica index (spawn order; initial fleet first)
+    pub replica: u32,
+    /// when it was provisioned (0 for the initial fleet)
+    pub spawned_at: f64,
+    /// when it started serving (spawn + cold start; == spawned_at for
+    /// the initial fleet)
+    pub ready_at: f64,
+    /// when it stopped receiving, if it was scaled down
+    pub drained_at: Option<f64>,
+    /// end of its drain window, if it was scaled down (billing runs to
+    /// this or its last completion, whichever is later)
+    pub retired_at: Option<f64>,
+}
+
+/// Per-tenant outcome, judged against the tenant's own SLO.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// tenant name
+    pub name: String,
+    /// tenant priority class
+    pub class: PriorityClass,
+    /// requests the tenant offered
+    pub offered: u64,
+    /// requests refused at admission by the shed level
+    pub shed: u64,
+    /// requests dispatched but rejected as unservable by a replica
+    pub rejected: u64,
+    /// requests that completed
+    pub completed: u64,
+    /// completions meeting the tenant's own TTFT/TPOT budgets
+    pub met_slo: u64,
+    /// per-request SLO attainment with shed and rejected requests in
+    /// the denominator (1.0 when the tenant offered nothing)
+    pub attainment: f64,
+}
+
+/// Autoscaling simulation output.
+#[derive(Debug)]
+pub struct AutoscaleResult {
+    /// merged cluster-level result over every replica slot that existed
+    /// (shed requests never reach a replica and are absent here)
+    pub cluster: ClusterResult,
+    /// control-step timeline, one sample per interval plus a closing
+    /// sample at the last arrival
+    pub samples: Vec<ScaleSample>,
+    /// every scale decision, in time order
+    pub events: Vec<ScaleEvent>,
+    /// lifecycle of every replica slot
+    pub lives: Vec<ReplicaLife>,
+    /// per-tenant outcomes, in tenant-mix order
+    pub tenants: Vec<TenantOutcome>,
+    /// total requests offered
+    pub offered: u64,
+    /// total requests refused at admission
+    pub shed: u64,
+    /// scale-up events (each paid one cold start)
+    pub cold_starts: u32,
+    /// GPU-hours the dynamic fleet was provisioned (cold starts and
+    /// drains included), replicas × TP GPUs each
+    pub gpu_hours: f64,
+    /// GPU-hours a static fleet of `max_replicas` would have been
+    /// provisioned over the same horizon
+    pub static_gpu_hours: f64,
+    /// GPU-hours spent provisioned-but-cold (inside `gpu_hours`)
+    pub cold_start_gpu_hours: f64,
+    /// fraction of offered requests that met their tenant's SLO (shed
+    /// and rejected requests count against)
+    pub overall_attainment: f64,
+}
+
+impl AutoscaleResult {
+    /// Requests that passed admission (offered − shed).
+    pub fn admitted(&self) -> u64 {
+        self.offered - self.shed
+    }
+
+    /// GPU-hours saved vs the static `max_replicas` fleet, percent.
+    pub fn gpu_hours_saved_pct(&self) -> f64 {
+        if self.static_gpu_hours <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.gpu_hours / self.static_gpu_hours) * 100.0
+    }
+}
+
+/// One replica slot's lifecycle state during the replay.
+struct Slot {
+    spawned_at: f64,
+    ready_at: f64,
+    drained_at: Option<f64>,
+    retired_at: Option<f64>,
+    list: Vec<Request>,
+}
+
+impl Slot {
+    fn available(&self, now: f64) -> bool {
+        self.drained_at.is_none() && now >= self.ready_at
+    }
+}
+
+/// Replay `requests` through the autoscaling control loop, then run
+/// each replica slot's list through the unmodified event loop and merge
+/// (exactly as [`crate::serve::simulate_cluster`] does for a fixed
+/// fleet).  Panics on an invalid policy or tenant mix — CLI callers
+/// validate first.  Request ids must be unique (as
+/// `WorkloadSpec::generate` guarantees); tenant assignment and shedding
+/// key off them.
+pub fn simulate_autoscale(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &AutoscaleSpec,
+    requests: &[Request],
+) -> AutoscaleResult {
+    let policy = spec.policy;
+    policy.validate().expect("autoscale: invalid policy");
+    spec.tenants.validate().expect("autoscale: invalid tenant mix");
+
+    let mut sorted = requests.to_vec();
+    sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let tenant_of = spec.tenants.assign(&sorted, spec.seed);
+    let shed_cap = spec.tenants.max_rank();
+    let n_tenants = spec.tenants.tenants.len();
+
+    let mut slots: Vec<Slot> = (0..policy.min_replicas)
+        .map(|_| Slot { spawned_at: 0.0, ready_at: 0.0, drained_at: None, retired_at: None,
+                        list: Vec::new() })
+        .collect();
+    let mut loads: Vec<ReplicaLoad> =
+        (0..policy.min_replicas).map(|_| ReplicaLoad::new()).collect();
+    let mut est = ServiceEstimate::new(plat, cfg, engine, spec.plan);
+    let mut rng = Rng::new(spec.seed ^ BALANCER_STREAM);
+    let mut rr_next = 0usize;
+    let cap = engine.max_num_seqs as f64;
+
+    let mut shed_level: u8 = 0;
+    let mut next_eval = policy.interval_s;
+    let mut samples: Vec<ScaleSample> = Vec::new();
+    let mut events: Vec<ScaleEvent> = Vec::new();
+    let mut cold_starts: u32 = 0;
+    let mut offered_by = vec![0u64; n_tenants];
+    let mut shed_by = vec![0u64; n_tenants];
+    let mut admitted = vec![false; sorted.len()];
+
+    // read-only fleet snapshot for control decisions and samples
+    let fleet_at = |slots: &[Slot], loads: &[ReplicaLoad], t: f64| {
+        let avail: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.available(t))
+            .map(|(i, _)| i)
+            .collect();
+        let pending =
+            slots.iter().filter(|s| s.drained_at.is_none() && s.ready_at > t).count() as u32;
+        let draining = slots
+            .iter()
+            .filter(|s| s.drained_at.is_some() && s.retired_at.unwrap_or(0.0) > t)
+            .count() as u32;
+        let n_avail = avail.len().max(1) as f64;
+        let inflight: f64 = avail.iter().map(|&i| loads[i].count()).sum();
+        let booked: f64 = avail.iter().map(|&i| loads[i].remaining(t)).sum::<f64>()
+            / (n_avail * policy.interval_s);
+        (avail, pending, draining, inflight, booked)
+    };
+
+    for (i, req) in sorted.iter().enumerate() {
+        // control steps due before this arrival
+        while next_eval <= req.arrival {
+            let t = next_eval;
+            for l in loads.iter_mut() {
+                l.expire(t);
+            }
+            let (avail, pending, draining, inflight, booked) = fleet_at(&slots, &loads, t);
+            let per_replica = inflight / avail.len().max(1) as f64;
+            let capacity = avail.len() as u32 + pending;
+            if (booked > policy.target_util || per_replica > policy.queue_depth)
+                && capacity < policy.max_replicas
+            {
+                let replica = slots.len() as u32;
+                let ready_at = t + policy.cold_start_s;
+                slots.push(Slot {
+                    spawned_at: t,
+                    ready_at,
+                    drained_at: None,
+                    retired_at: None,
+                    list: Vec::new(),
+                });
+                loads.push(ReplicaLoad::new());
+                cold_starts += 1;
+                events.push(ScaleEvent::Up { t, replica, ready_at });
+            } else if booked < policy.target_util * 0.5
+                && per_replica < policy.queue_depth * 0.5
+                && pending == 0
+                && avail.len() as u32 > policy.min_replicas
+            {
+                // drain the least-loaded available replica; ties break
+                // to the lowest index with no RNG draw, so the balancer
+                // stream stays aligned with the fixed-cluster dispatch
+                let mut victim = avail[0];
+                for &r in &avail[1..] {
+                    if loads[r].count() < loads[victim].count() {
+                        victim = r;
+                    }
+                }
+                slots[victim].drained_at = Some(t);
+                slots[victim].retired_at = Some(t + policy.drain_s);
+                events.push(ScaleEvent::Down {
+                    t,
+                    replica: victim as u32,
+                    gone_at: t + policy.drain_s,
+                });
+            }
+            if policy.shed_queue.is_finite() {
+                if capacity >= policy.max_replicas && per_replica > policy.shed_queue {
+                    shed_level = (shed_level + 1).min(shed_cap);
+                } else if per_replica < policy.shed_queue * 0.5 {
+                    shed_level = shed_level.saturating_sub(1);
+                }
+            }
+            samples.push(ScaleSample {
+                t,
+                available: avail.len() as u32,
+                pending,
+                draining,
+                inflight,
+                booked,
+                shed_level,
+            });
+            next_eval += policy.interval_s;
+        }
+
+        offered_by[tenant_of[i]] += 1;
+        if spec.tenants.tenants[tenant_of[i]].class.rank() < shed_level {
+            shed_by[tenant_of[i]] += 1;
+            continue;
+        }
+
+        let now = req.arrival;
+        for l in loads.iter_mut() {
+            l.expire(now);
+        }
+        let avail: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.available(now))
+            .map(|(k, _)| k)
+            .collect();
+        debug_assert!(!avail.is_empty(), "fleet never drains below min_replicas >= 1");
+        let r = route(spec.balancer, &loads, &avail, &mut rr_next, &mut rng, true, cap);
+        let s = est.seconds(req);
+        loads[r].in_flight.push((now + s, s));
+        slots[r].list.push(req.clone());
+        admitted[i] = true;
+    }
+
+    let last_arrival = sorted.last().map(|r| r.arrival).unwrap_or(0.0);
+    {
+        // closing sample so short runs still render a timeline
+        let (avail, pending, draining, inflight, booked) =
+            fleet_at(&slots, &loads, last_arrival);
+        samples.push(ScaleSample {
+            t: last_arrival,
+            available: avail.len() as u32,
+            pending,
+            draining,
+            inflight,
+            booked,
+            shed_level,
+        });
+    }
+
+    // replay every slot's list through the unmodified event loop
+    let lists: Vec<Vec<Request>> = slots.iter().map(|s| s.list.clone()).collect();
+    let results: Vec<SimResult> = lists
+        .iter()
+        .map(|list| simulate_requests_on(plat, cfg, engine, &spec.plan, list))
+        .collect();
+    let cluster = merge_replicas(lists, results);
+
+    // GPU-hour accounting: a slot is billed from its spawn until it
+    // retires (drain window or last completion, whichever is later) or,
+    // if never drained, until the end of the run
+    let horizon = cluster.merged.makespan.max(last_arrival);
+    let tp = spec.plan.tp() as f64;
+    let mut gpu_hours = 0.0;
+    let mut cold_start_gpu_hours = 0.0;
+    let mut lives: Vec<ReplicaLife> = Vec::new();
+    for (i, s) in slots.iter().enumerate() {
+        let end = match s.retired_at {
+            Some(rt) => rt.max(cluster.replicas[i].makespan),
+            None => horizon.max(s.ready_at),
+        };
+        gpu_hours += (end - s.spawned_at).max(0.0) * tp / 3600.0;
+        cold_start_gpu_hours += (s.ready_at - s.spawned_at) * tp / 3600.0;
+        lives.push(ReplicaLife {
+            replica: i as u32,
+            spawned_at: s.spawned_at,
+            ready_at: s.ready_at,
+            drained_at: s.drained_at,
+            retired_at: s.retired_at,
+        });
+    }
+    let static_gpu_hours = policy.max_replicas as f64 * tp * horizon / 3600.0;
+
+    // per-tenant outcomes against each tenant's own SLO
+    let tenant_by_id: HashMap<u64, usize> =
+        sorted.iter().zip(tenant_of.iter()).map(|(r, &t)| (r.id, t)).collect();
+    let completed_ids: HashSet<u64> = cluster.merged.completions.iter().map(|c| c.id).collect();
+    let mut completed_by = vec![0u64; n_tenants];
+    let mut met_by = vec![0u64; n_tenants];
+    let mut rejected_by = vec![0u64; n_tenants];
+    for c in &cluster.merged.completions {
+        let ti = tenant_by_id[&c.id];
+        completed_by[ti] += 1;
+        if spec.tenants.tenants[ti].slo.admits(c.ttft, c.tpot()) {
+            met_by[ti] += 1;
+        }
+    }
+    for (i, req) in sorted.iter().enumerate() {
+        if admitted[i] && !completed_ids.contains(&req.id) {
+            rejected_by[tenant_of[i]] += 1;
+        }
+    }
+    let tenants: Vec<TenantOutcome> = spec
+        .tenants
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| TenantOutcome {
+            name: t.name.clone(),
+            class: t.class,
+            offered: offered_by[ti],
+            shed: shed_by[ti],
+            rejected: rejected_by[ti],
+            completed: completed_by[ti],
+            met_slo: met_by[ti],
+            attainment: if offered_by[ti] == 0 {
+                1.0
+            } else {
+                met_by[ti] as f64 / offered_by[ti] as f64
+            },
+        })
+        .collect();
+
+    let offered = sorted.len() as u64;
+    let shed: u64 = shed_by.iter().sum();
+    let met: u64 = met_by.iter().sum();
+    let overall_attainment = if offered == 0 { 1.0 } else { met as f64 / offered as f64 };
+
+    AutoscaleResult {
+        cluster,
+        samples,
+        events,
+        lives,
+        tenants,
+        offered,
+        shed,
+        cold_starts,
+        gpu_hours,
+        static_gpu_hours,
+        cold_start_gpu_hours,
+        overall_attainment,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arrival, WorkloadSpec};
+    use crate::hw::PlatformId;
+
+    fn setup() -> (Platform, LlamaConfig, EngineSpec) {
+        (Platform::get(PlatformId::A800), LlamaConfig::llama2_7b(), EngineSpec::vllm())
+    }
+
+    #[test]
+    fn policy_labels_and_validation() {
+        let p = AutoscalePolicy::new(1, 4);
+        p.validate().unwrap();
+        assert!(!p.is_static());
+        assert!(AutoscalePolicy::new(2, 2).is_static());
+        assert!(!AutoscalePolicy::new(2, 2).shed_queue(8.0).is_static());
+        assert_eq!(AutoscalePolicy::new(3, 3).label(), "static-3");
+        assert!(AutoscalePolicy::new(0, 4).validate().is_err());
+        assert!(AutoscalePolicy::new(4, 1).validate().is_err());
+        assert!(AutoscalePolicy::new(1, 4).interval(0.0).validate().is_err());
+        assert!(AutoscalePolicy::new(1, 4).target_util(0.0).validate().is_err());
+    }
+
+    #[test]
+    fn ramp_traffic_scales_up_and_accounts_cold_starts() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        // steep ramp into sustained overload of a single replica
+        let reqs = WorkloadSpec::new(400)
+            .arrival(Arrival::Ramp { from_qps: 1.0, to_qps: 24.0, over_s: 30.0 })
+            .seed(11)
+            .generate()
+            .unwrap();
+        let spec = AutoscaleSpec {
+            plan,
+            balancer: Balancer::JoinShortestQueue,
+            policy: AutoscalePolicy::new(1, 4).interval(5.0).cold_start(5.0),
+            tenants: TenantMix::single(),
+            seed: 11,
+        };
+        let r = simulate_autoscale(&plat, &cfg, &engine, &spec, &reqs);
+        assert!(r.cold_starts >= 1, "overload must trigger a scale-up");
+        assert!(r.lives.len() > 1);
+        assert!(r.cold_start_gpu_hours > 0.0);
+        assert!(r.gpu_hours < r.static_gpu_hours, "dynamic fleet beats peak provisioning");
+        assert!(r.gpu_hours_saved_pct() > 0.0);
+        // conservation: every offered request is shed, rejected, or done
+        let done = r.cluster.merged.completions.len() as u64;
+        assert_eq!(r.shed + done + r.cluster.merged.rejected, r.offered);
+        assert_eq!(r.shed, 0, "shedding is disabled by default");
+        // the timeline is monotone in t and ends at the last arrival
+        assert!(r.samples.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn quiet_traffic_scales_down_and_drains_safely() {
+        let (plat, cfg, engine) = setup();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        // hot start that decays to a trickle: the fleet scales up
+        // during the rush, then drains back toward the floor — and no
+        // request is lost doing it
+        let reqs = WorkloadSpec::new(340)
+            .arrival(Arrival::Ramp { from_qps: 20.0, to_qps: 0.5, over_s: 30.0 })
+            .seed(3)
+            .generate()
+            .unwrap();
+        let spec = AutoscaleSpec {
+            plan,
+            balancer: Balancer::RoundRobin,
+            policy: AutoscalePolicy::new(1, 3).interval(5.0).cold_start(2.0).drain(5.0),
+            tenants: TenantMix::single(),
+            seed: 3,
+        };
+        let r = simulate_autoscale(&plat, &cfg, &engine, &spec, &reqs);
+        assert!(
+            r.events.iter().any(|e| matches!(e, ScaleEvent::Up { .. })),
+            "the rush must trigger a scale-up"
+        );
+        assert!(
+            r.events.iter().any(|e| matches!(e, ScaleEvent::Down { .. })),
+            "the quiet tail must drain a replica"
+        );
+        let done = r.cluster.merged.completions.len() as u64;
+        assert_eq!(r.shed + done + r.cluster.merged.rejected, r.offered, "drain lost a request");
+    }
+}

@@ -20,6 +20,13 @@
 //! Replicas never share KV or requests — a dispatched request lives and
 //! dies on its replica, so with `replicas == 1` the cluster result *is*
 //! the single-box result, bit for bit (`tests/cluster.rs` pins this).
+//!
+//! One cross-replica interaction exists at dispatch time: when the
+//! balancer's choice is already saturated (estimated in-flight at the
+//! engine's admission cap), the request is re-dispatched *once* to the
+//! least-loaded other replica — the way a fronting proxy retries a 429
+//! — so a momentarily hot replica no longer queues work a neighbour
+//! could start immediately ([`ClusterSpec::retry`], default on).
 
 use crate::config::LlamaConfig;
 use crate::hw::Platform;
@@ -100,18 +107,29 @@ pub struct ClusterSpec {
     pub balancer: Balancer,
     /// seed for the balancer's random tie-break
     pub seed: u64,
+    /// re-dispatch a request once to the least-loaded other replica
+    /// when the balancer's choice is saturated (estimated in-flight at
+    /// the engine's admission cap); off reverts to strict single-shot
+    /// dispatch
+    pub retry: bool,
 }
 
 impl ClusterSpec {
     /// A cluster of `replicas` copies of `plan` behind `balancer`
-    /// (tie-break seed 42).
+    /// (tie-break seed 42, saturation retry on).
     pub fn new(replicas: u32, plan: DeployPlan, balancer: Balancer) -> Self {
-        ClusterSpec { replicas, plan, balancer, seed: 42 }
+        ClusterSpec { replicas, plan, balancer, seed: 42, retry: true }
     }
 
     /// Set the tie-break seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Enable or disable the saturation retry.
+    pub fn retry(mut self, retry: bool) -> Self {
+        self.retry = retry;
         self
     }
 
@@ -178,7 +196,7 @@ impl ClusterResult {
 /// are bucketed to 32 tokens so the estimate is a lookup after the
 /// first request of a size class (same trick as the simulator's
 /// iteration-cost cache).
-struct ServiceEstimate<'a> {
+pub(crate) struct ServiceEstimate<'a> {
     plat: &'a Platform,
     cfg: &'a LlamaConfig,
     engine: &'a EngineSpec,
@@ -192,7 +210,7 @@ struct ServiceEstimate<'a> {
 const NOMINAL_DECODE_BATCH: u64 = 8;
 
 impl<'a> ServiceEstimate<'a> {
-    fn new(
+    pub(crate) fn new(
         plat: &'a Platform,
         cfg: &'a LlamaConfig,
         engine: &'a EngineSpec,
@@ -201,7 +219,7 @@ impl<'a> ServiceEstimate<'a> {
         ServiceEstimate { plat, cfg, engine, plan, cache: std::collections::HashMap::new() }
     }
 
-    fn seconds(&mut self, req: &Request) -> f64 {
+    pub(crate) fn seconds(&mut self, req: &Request) -> f64 {
         let key = (req.input_len / 32, req.output_len / 32);
         if let Some(&s) = self.cache.get(&key) {
             return s;
@@ -222,27 +240,37 @@ impl<'a> ServiceEstimate<'a> {
 
 /// In-flight (estimated finish, estimated service seconds) pairs the
 /// dispatcher tracks per replica.
-struct ReplicaLoad {
-    in_flight: Vec<(f64, f64)>,
+pub(crate) struct ReplicaLoad {
+    pub(crate) in_flight: Vec<(f64, f64)>,
 }
 
 impl ReplicaLoad {
-    fn expire(&mut self, now: f64) {
+    pub(crate) fn new() -> Self {
+        ReplicaLoad { in_flight: Vec::new() }
+    }
+
+    pub(crate) fn expire(&mut self, now: f64) {
         self.in_flight.retain(|&(finish, _)| finish > now);
     }
 
-    fn count(&self) -> f64 {
+    pub(crate) fn count(&self) -> f64 {
         self.in_flight.len() as f64
     }
 
-    fn work(&self) -> f64 {
+    pub(crate) fn work(&self) -> f64 {
         self.in_flight.iter().map(|&(_, s)| s).sum()
+    }
+
+    /// Estimated service seconds still outstanding at `now` — the
+    /// autoscaler's "booked work" signal (expired entries count zero).
+    pub(crate) fn remaining(&self, now: f64) -> f64 {
+        self.in_flight.iter().map(|&(finish, _)| (finish - now).max(0.0)).sum()
     }
 }
 
 /// Index of the minimum score; exact ties are broken by `rng` (the
 /// seeded tie-break — relevant at t=0 when every replica is empty).
-fn pick_min(scores: &[f64], rng: &mut Rng) -> usize {
+pub(crate) fn pick_min(scores: &[f64], rng: &mut Rng) -> usize {
     let mut best = f64::INFINITY;
     let mut tied: Vec<usize> = Vec::new();
     for (r, &s) in scores.iter().enumerate() {
@@ -259,7 +287,53 @@ fn pick_min(scores: &[f64], rng: &mut Rng) -> usize {
 
 // Keeps the tie-break stream independent of workload-generation streams
 // seeded from the same user seed.
-const BALANCER_STREAM: u64 = 0xBA1A_4CE5_EED5_u64;
+pub(crate) const BALANCER_STREAM: u64 = 0xBA1A_4CE5_EED5_u64;
+
+/// Pick the destination replica among `avail` (indices into `loads`):
+/// the balancer's choice, then — with `retry` — one bounce to the
+/// least-loaded *other* replica if the choice is already saturated
+/// (estimated in-flight at `cap`, the engine's `max_num_seqs` admission
+/// cap).  If the whole fleet is saturated the original choice stands:
+/// nothing is ever dropped at dispatch.  Shared with the autoscale loop
+/// (`serve/autoscale.rs`) so the static-policy equivalence its tests
+/// pin is structural, not coincidental.
+pub(crate) fn route(
+    balancer: Balancer,
+    loads: &[ReplicaLoad],
+    avail: &[usize],
+    rr_next: &mut usize,
+    rng: &mut Rng,
+    retry: bool,
+    cap: f64,
+) -> usize {
+    let k = match balancer {
+        Balancer::RoundRobin => {
+            let k = *rr_next % avail.len();
+            *rr_next = (k + 1) % avail.len();
+            k
+        }
+        Balancer::LeastOutstanding => {
+            let scores: Vec<f64> = avail.iter().map(|&i| loads[i].work()).collect();
+            pick_min(&scores, rng)
+        }
+        Balancer::JoinShortestQueue => {
+            let scores: Vec<f64> = avail.iter().map(|&i| loads[i].count()).collect();
+            pick_min(&scores, rng)
+        }
+    };
+    let r = avail[k];
+    if retry && avail.len() > 1 && loads[r].count() >= cap {
+        let scores: Vec<f64> = avail
+            .iter()
+            .map(|&i| if i == r { f64::INFINITY } else { loads[i].count() })
+            .collect();
+        let alt = avail[pick_min(&scores, rng)];
+        if loads[alt].count() < cap {
+            return alt;
+        }
+    }
+    r
+}
 
 /// Split `requests` (any order; sorted by arrival internally) into one
 /// list per replica under the cluster's balancing policy.  Pure
@@ -278,31 +352,18 @@ pub fn dispatch(
     sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
 
     let mut lists: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
-    let mut loads: Vec<ReplicaLoad> =
-        (0..n).map(|_| ReplicaLoad { in_flight: Vec::new() }).collect();
+    let mut loads: Vec<ReplicaLoad> = (0..n).map(|_| ReplicaLoad::new()).collect();
     let mut est = ServiceEstimate::new(plat, cfg, engine, spec.plan);
     let mut rng = Rng::new(spec.seed ^ BALANCER_STREAM);
     let mut rr_next = 0usize;
+    let avail: Vec<usize> = (0..n).collect();
+    let cap = engine.max_num_seqs as f64;
 
     for req in sorted {
         for load in loads.iter_mut() {
             load.expire(req.arrival);
         }
-        let r = match spec.balancer {
-            Balancer::RoundRobin => {
-                let r = rr_next;
-                rr_next = (rr_next + 1) % n;
-                r
-            }
-            Balancer::LeastOutstanding => {
-                let scores: Vec<f64> = loads.iter().map(|l| l.work()).collect();
-                pick_min(&scores, &mut rng)
-            }
-            Balancer::JoinShortestQueue => {
-                let scores: Vec<f64> = loads.iter().map(|l| l.count()).collect();
-                pick_min(&scores, &mut rng)
-            }
-        };
+        let r = route(spec.balancer, &loads, &avail, &mut rr_next, &mut rng, spec.retry, cap);
         let s = est.seconds(&req);
         loads[r].in_flight.push((req.arrival + s, s));
         lists[r].push(req);
@@ -348,7 +409,7 @@ pub fn simulate_cluster_shared(
     merge_replicas(lists, results)
 }
 
-fn merge_replicas(lists: Vec<Vec<Request>>, results: Vec<SimResult>) -> ClusterResult {
+pub(crate) fn merge_replicas(lists: Vec<Vec<Request>>, results: Vec<SimResult>) -> ClusterResult {
 
     let replicas: Vec<ReplicaStats> = results
         .iter()

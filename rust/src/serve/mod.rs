@@ -3,10 +3,12 @@
 //! a discrete-event continuous-batching simulator that replays either
 //! the paper's closed burst or any open-loop `config::WorkloadSpec`
 //! (arrival processes, length distributions, trace replay) with
-//! TTFT/TPOT/SLO accounting, and a replica-cluster layer (`cluster`)
-//! that load-balances one arrival stream across dp>1 copies of a
-//! deployment.
+//! TTFT/TPOT/SLO accounting, a replica-cluster layer (`cluster`) that
+//! load-balances one arrival stream across dp>1 copies of a deployment,
+//! and an autoscaling control loop (`autoscale`) that scales the fleet
+//! against time-varying traffic with multi-tenant admission control.
 
+pub mod autoscale;
 pub mod cluster;
 pub mod engine;
 pub mod kv_cache;
@@ -14,6 +16,10 @@ pub mod request;
 pub mod sim;
 pub mod token_kv;
 
+pub use autoscale::{
+    simulate_autoscale, AutoscalePolicy, AutoscaleResult, AutoscaleSpec, ReplicaLife,
+    ScaleEvent, ScaleSample, TenantOutcome,
+};
 pub use cluster::{
     dispatch, simulate_cluster, simulate_cluster_shared, Balancer, ClusterResult, ClusterSpec,
     ReplicaStats,

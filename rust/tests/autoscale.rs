@@ -1,0 +1,214 @@
+//! Invariant harness for the autoscaling, multi-tenant serving layer
+//! (ISSUE 7): request conservation across scale events (nothing lost in
+//! a cold start or a drain), bit-for-bit determinism under a fixed
+//! seed, static-policy equivalence with the fixed-size cluster loop,
+//! and per-class shedding monotonicity (shedding a lower class never
+//! hurts a higher one).
+
+use llm_perf_lab::config::tenant::{PriorityClass, TenantMix};
+use llm_perf_lab::config::{Arrival, LlamaConfig, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::serve::{
+    simulate_autoscale, simulate_cluster, AutoscalePolicy, AutoscaleResult, AutoscaleSpec,
+    Balancer, ClusterSpec, EngineSpec, ScaleEvent,
+};
+
+fn lab() -> (Platform, LlamaConfig, EngineSpec) {
+    (Platform::get(PlatformId::A800), LlamaConfig::llama2_7b(), EngineSpec::vllm())
+}
+
+/// Every offered request is shed once, rejected once, or completed
+/// exactly once — across cold starts and drains — and the per-tenant
+/// books balance and sum to the fleet totals.
+fn assert_conserved(r: &AutoscaleResult, offered: u64) {
+    assert_eq!(r.offered, offered);
+    assert_eq!(
+        r.shed + r.cluster.merged.rejected + r.cluster.merged.completions.len() as u64,
+        r.offered,
+        "requests lost or duplicated across scale events"
+    );
+    let mut ids: Vec<u64> = r.cluster.merged.completions.iter().map(|c| c.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), r.cluster.merged.completions.len(), "duplicate completions");
+    for t in &r.tenants {
+        assert_eq!(t.shed + t.rejected + t.completed, t.offered, "tenant {}", t.name);
+    }
+    assert_eq!(r.tenants.iter().map(|t| t.offered).sum::<u64>(), r.offered);
+    assert_eq!(r.tenants.iter().map(|t| t.shed).sum::<u64>(), r.shed);
+}
+
+/// A rush-then-quiet ramp forces scale-ups during the rush and a drain
+/// in the tail; conservation must hold across both transitions (a
+/// draining replica finishes its in-flight work — nothing is lost).
+#[test]
+fn conservation_across_scale_up_and_drain() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(340)
+        .arrival(Arrival::Ramp { from_qps: 20.0, to_qps: 0.5, over_s: 30.0 })
+        .seed(3)
+        .generate()
+        .unwrap();
+    let spec = AutoscaleSpec {
+        plan,
+        balancer: Balancer::RoundRobin,
+        policy: AutoscalePolicy::new(1, 3).interval(5.0).cold_start(2.0).drain(5.0),
+        tenants: TenantMix::two_class(),
+        seed: 3,
+    };
+    let r = simulate_autoscale(&plat, &cfg, &engine, &spec, &reqs);
+    assert!(r.events.iter().any(|e| matches!(e, ScaleEvent::Up { .. })),
+            "the rush must scale the fleet up");
+    assert!(r.events.iter().any(|e| matches!(e, ScaleEvent::Down { .. })),
+            "the quiet tail must drain a replica");
+    assert_conserved(&r, reqs.len() as u64);
+    // billing sanity: a dynamic fleet that spent time below peak costs
+    // less than peak provisioning, and cold starts were paid
+    assert!(r.gpu_hours < r.static_gpu_hours);
+    assert!(r.cold_starts >= 1 && r.cold_start_gpu_hours > 0.0);
+}
+
+/// Bit-for-bit determinism under a fixed seed: repeated runs of both
+/// the fixed cluster loop and the autoscale loop produce identical
+/// per-request records, timelines, and billing — the contract that
+/// makes CI comparisons and the policy search meaningful.
+#[test]
+fn fixed_seed_runs_are_bit_identical() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(200)
+        .arrival(Arrival::Diurnal { base_qps: 1.0, peak_qps: 10.0, period_s: 40.0 })
+        .seed(57)
+        .generate()
+        .unwrap();
+
+    let cspec = ClusterSpec::new(3, plan, Balancer::JoinShortestQueue).seed(57);
+    let c1 = simulate_cluster(&plat, &cfg, &engine, &cspec, &reqs);
+    let c2 = simulate_cluster(&plat, &cfg, &engine, &cspec, &reqs);
+    assert_eq!(c1.merged.makespan.to_bits(), c2.merged.makespan.to_bits());
+    assert_eq!(c1.merged.completions.len(), c2.merged.completions.len());
+    for (a, b) in c1.merged.completions.iter().zip(c2.merged.completions.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+    }
+
+    let aspec = AutoscaleSpec {
+        plan,
+        balancer: Balancer::JoinShortestQueue,
+        policy: AutoscalePolicy::new(1, 3).interval(5.0).cold_start(3.0).drain(5.0),
+        tenants: TenantMix::two_class(),
+        seed: 57,
+    };
+    let a1 = simulate_autoscale(&plat, &cfg, &engine, &aspec, &reqs);
+    let a2 = simulate_autoscale(&plat, &cfg, &engine, &aspec, &reqs);
+    assert_eq!(a1.gpu_hours.to_bits(), a2.gpu_hours.to_bits());
+    assert_eq!(a1.overall_attainment.to_bits(), a2.overall_attainment.to_bits());
+    assert_eq!(a1.events.len(), a2.events.len());
+    assert_eq!(a1.samples.len(), a2.samples.len());
+    for (s1, s2) in a1.samples.iter().zip(a2.samples.iter()) {
+        assert_eq!(s1.t.to_bits(), s2.t.to_bits());
+        assert_eq!(s1.available, s2.available);
+        assert_eq!(s1.booked.to_bits(), s2.booked.to_bits());
+    }
+    assert_eq!(a1.cluster.merged.completions.len(), a2.cluster.merged.completions.len());
+    for (a, b) in a1.cluster.merged.completions.iter().zip(a2.cluster.merged.completions.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+    }
+}
+
+/// A static autoscale policy (min == max, shedding off) is the fixed
+/// `ClusterSpec` cluster, bit for bit, under every balancer: the
+/// control loop must be a pure observer when it has no freedom — same
+/// RNG stream, same routing, same per-request records.
+#[test]
+fn static_policy_matches_fixed_cluster_bit_for_bit() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(150)
+        .arrival(Arrival::Spike { base_qps: 2.0, spike_qps: 15.0, at_s: 10.0, dur_s: 8.0 })
+        .seed(71)
+        .generate()
+        .unwrap();
+    for balancer in Balancer::ALL {
+        let cspec = ClusterSpec::new(2, plan, balancer).seed(71);
+        let fixed = simulate_cluster(&plat, &cfg, &engine, &cspec, &reqs);
+        let aspec = AutoscaleSpec {
+            plan,
+            balancer,
+            policy: AutoscalePolicy::new(2, 2).interval(7.0),
+            tenants: TenantMix::single(),
+            seed: 71,
+        };
+        let auto_r = simulate_autoscale(&plat, &cfg, &engine, &aspec, &reqs);
+        assert!(aspec.policy.is_static());
+        assert!(auto_r.events.is_empty(), "{}: static policy must not scale", balancer.label());
+        assert_eq!(auto_r.shed, 0);
+        let (m, f) = (&auto_r.cluster.merged, &fixed.merged);
+        assert_eq!(m.makespan.to_bits(), f.makespan.to_bits(), "{}", balancer.label());
+        assert_eq!(m.decode_iters, f.decode_iters);
+        assert_eq!(m.rejected, f.rejected);
+        assert_eq!(m.completions.len(), f.completions.len());
+        for (a, b) in m.completions.iter().zip(f.completions.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        }
+        // min == max: the dynamic bill equals peak provisioning exactly
+        assert_eq!(auto_r.gpu_hours.to_bits(), auto_r.static_gpu_hours.to_bits());
+        assert_eq!(auto_r.gpu_hours_saved_pct().to_bits(), 0.0_f64.to_bits());
+    }
+}
+
+/// Shedding monotonicity: turning on lowest-class-first admission
+/// shedding on an overloaded fleet never lowers the premium tenant's
+/// attainment — the premium class itself is never shed (the shed level
+/// is capped below the highest class present), and the capacity freed
+/// by refusing batch work can only help it.
+#[test]
+fn shedding_batch_never_hurts_premium() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    // sustained offered load well above one replica's capacity, pinned
+    // fleet (min == max == 1) so relief can only come from shedding
+    let reqs = WorkloadSpec::new(300)
+        .arrival(Arrival::Poisson { qps: 30.0 })
+        .seed(41)
+        .generate()
+        .unwrap();
+    let run = |shed_queue: f64| {
+        let spec = AutoscaleSpec {
+            plan,
+            balancer: Balancer::JoinShortestQueue,
+            policy: AutoscalePolicy::new(1, 1).interval(5.0).shed_queue(shed_queue),
+            tenants: TenantMix::two_class(),
+            seed: 41,
+        };
+        simulate_autoscale(&plat, &cfg, &engine, &spec, &reqs)
+    };
+    let without = run(f64::INFINITY);
+    let with = run(3.0);
+    assert_eq!(without.shed, 0);
+    assert!(with.shed > 0, "overload at a pinned fleet must trip the shed trigger");
+    assert_conserved(&with, reqs.len() as u64);
+    let premium = |r: &AutoscaleResult| {
+        r.tenants
+            .iter()
+            .find(|t| t.class == PriorityClass::Premium)
+            .expect("two_class has a premium tenant")
+            .clone()
+    };
+    let (p_with, p_without) = (premium(&with), premium(&without));
+    assert_eq!(p_with.shed, 0, "the highest class present is never shed");
+    assert_eq!(p_without.shed, 0);
+    assert!(
+        p_with.attainment >= p_without.attainment,
+        "shedding batch lowered premium attainment: {:.3} < {:.3}",
+        p_with.attainment,
+        p_without.attainment
+    );
+}

@@ -2,9 +2,10 @@
 //! the request-conservation invariant across replicas, the
 //! RoundRobin-vs-LeastOutstanding tail ordering under skewed lengths,
 //! bit-for-bit equivalence of a 1-replica cluster with the plain
-//! deployment event loop, and a seeded multi-replica `autotune-serve`
-//! whose chosen cluster is replayed through the cluster loop and meets
-//! the SLO it was selected for.
+//! deployment event loop, the cross-replica saturation retry, and a
+//! seeded multi-replica `autotune-serve` whose chosen cluster is
+//! replayed through the cluster loop and meets the SLO it was selected
+//! for.
 
 use llm_perf_lab::config::{Arrival, LengthDist, LlamaConfig, SloSpec, WorkloadSpec};
 use llm_perf_lab::hw::{Platform, PlatformId};
@@ -126,6 +127,60 @@ fn one_replica_cluster_equals_plain_event_loop() {
         assert_eq!(c.replicas.len(), 1);
         assert_eq!(c.replicas[0].requests, reqs.len() as u64);
     }
+}
+
+/// Cross-replica retry (the ROADMAP residual): a request routed to a
+/// saturated replica (dispatch-time in-flight count at the engine's
+/// `max_num_seqs`) is re-dispatched once to the least-loaded other
+/// replica.  Conservation holds either way, the reroute demonstrably
+/// engages under blind round-robin with heavy-tailed work, and SLO
+/// attainment does not get worse.
+#[test]
+fn saturation_retry_conserves_and_helps_attainment() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let mut engine = EngineSpec::vllm();
+    // a tiny admission cap makes dispatch-time saturation reachable
+    // with a small workload (the stock caps of 96-768 never are); the
+    // load is kept moderate so saturation is *partial* — some replica
+    // below the cap to retry onto
+    engine.max_num_seqs = 3;
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(120)
+        .arrival(Arrival::Poisson { qps: 2.0 })
+        .input(LengthDist::Fixed(256))
+        .output(LengthDist::log_normal(128.0, 2.0))
+        .seed(31)
+        .generate()
+        .unwrap();
+    let slo = SloSpec::new(0.9, 6.0, 0.5);
+    let run = |retry: bool| {
+        let spec = ClusterSpec::new(3, plan, Balancer::RoundRobin).seed(11).retry(retry);
+        simulate_cluster(&plat, &cfg, &engine, &spec, &reqs)
+    };
+    let with = run(true);
+    let without = run(false);
+    for r in [&with, &without] {
+        assert_eq!(r.merged.completions.len() + r.merged.rejected as usize, reqs.len());
+        let routed: u64 = r.replicas.iter().map(|s| s.requests).sum();
+        assert_eq!(routed, reqs.len() as u64, "retry must never drop or double-route");
+    }
+    // the reroute must actually engage: blind round-robin splits 120
+    // requests exactly 40/40/40, retry shifts some of them
+    let counts = |r: &llm_perf_lab::serve::ClusterResult| {
+        r.replicas.iter().map(|s| s.requests).collect::<Vec<_>>()
+    };
+    assert_eq!(counts(&without), vec![40, 40, 40]);
+    assert_ne!(counts(&with), counts(&without), "no request was ever rerouted");
+    let (a_with, a_without) =
+        (with.merged.slo_attainment(&slo), without.merged.slo_attainment(&slo));
+    assert!(a_with >= a_without, "retry lowered attainment: {a_with:.3} < {a_without:.3}");
+    // steering around saturated replicas must not hurt the TTFT tail
+    assert!(
+        with.merged.ttft_cdf().quantile(0.9)
+            <= without.merged.ttft_cdf().quantile(0.9) * 1.05,
+        "retry hurt the p90 TTFT"
+    );
 }
 
 /// Acceptance: a seeded multi-replica `autotune-serve` with a GPU

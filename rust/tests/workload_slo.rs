@@ -142,6 +142,123 @@ fn max_qps_search_finds_a_knee() {
     assert!(!at(q * 2.0).meets_slo(&slo), "well past the knee must miss the SLO");
 }
 
+/// Every rate-bearing arrival shape pins its documented mean offered
+/// QPS over a long seeded horizon: Poisson and bursty at their
+/// long-run rates, diurnal at (base+peak)/2 across full periods, ramp
+/// at (from+to)/2 inside its window, and spike at the base rate with
+/// the flash crowd concentrated in its window.
+#[test]
+fn arrival_shapes_pin_mean_offered_qps() {
+    let arrivals = |arrival: Arrival, n: u64| -> Vec<f64> {
+        let reqs = WorkloadSpec::new(n).arrival(arrival).seed(101).generate().unwrap();
+        reqs.iter().map(|r| r.arrival).collect()
+    };
+    let mean = |ts: &[f64]| ts.len() as f64 / ts.last().unwrap();
+
+    for r in arrivals(Arrival::AtOnce, 50) {
+        assert_eq!(r, 0.0, "AtOnce arrives at t=0");
+    }
+    let m = mean(&arrivals(Arrival::Poisson { qps: 4.0 }, 2000));
+    assert!((m - 4.0).abs() / 4.0 < 0.1, "poisson mean {m:.2} != 4");
+    // bursty long-run mean is the duty-cycled rate: 8 * 2/(2+6) = 2
+    let m = mean(&arrivals(Arrival::Bursty { qps: 8.0, on_s: 2.0, off_s: 6.0 }, 2000));
+    assert!((m - 2.0).abs() / 2.0 < 0.1, "bursty mean {m:.2} != 2");
+    // diurnal over ~10 full periods: (2+6)/2 = 4
+    let d = Arrival::Diurnal { base_qps: 2.0, peak_qps: 6.0, period_s: 50.0 };
+    let m = mean(&arrivals(d, 2000));
+    assert!((m - 4.0).abs() / 4.0 < 0.1, "diurnal mean {m:.2} != 4");
+    // ramp measured inside its window (the rate holds at to_qps after):
+    // 430 of the ~500 arrivals the 100 s window carries, mean ~(1+9)/2
+    let ts = arrivals(Arrival::Ramp { from_qps: 1.0, to_qps: 9.0, over_s: 100.0 }, 430);
+    assert!(*ts.last().unwrap() <= 100.0, "430 arrivals fit the ramp window");
+    let m = mean(&ts);
+    assert!((m - 5.0).abs() / 5.0 < 0.1, "ramp mean {m:.2} != 5");
+    // spike: base-rate mean outside the window, the crowd inside it
+    let ts = arrivals(
+        Arrival::Spike { base_qps: 2.0, spike_qps: 20.0, at_s: 60.0, dur_s: 10.0 },
+        500,
+    );
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+    let in_window = ts.iter().filter(|&&t| (60.0..70.0).contains(&t)).count();
+    assert!(
+        (150..=250).contains(&in_window),
+        "expected ~200 of 500 arrivals in the 10 s spike window, got {in_window}"
+    );
+    let outside = (500 - in_window) as f64 / (ts.last().unwrap() - 10.0);
+    assert!((outside - 2.0).abs() / 2.0 < 0.25, "off-spike rate {outside:.2} != 2");
+}
+
+/// A bursty process with a zero off-phase *is* Poisson: same draws from
+/// the arrival stream, bit-identical request lists.
+#[test]
+fn bursty_with_zero_off_phase_is_poisson_bit_for_bit() {
+    let p = WorkloadSpec::new(400)
+        .arrival(Arrival::Poisson { qps: 3.0 })
+        .seed(77)
+        .generate()
+        .unwrap();
+    let b = WorkloadSpec::new(400)
+        .arrival(Arrival::Bursty { qps: 3.0, on_s: 5.0, off_s: 0.0 })
+        .seed(77)
+        .generate()
+        .unwrap();
+    assert_eq!(p.len(), b.len());
+    for (x, y) in p.iter().zip(b.iter()) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        assert_eq!((x.input_len, x.output_len), (y.input_len, y.output_len));
+    }
+}
+
+/// `with_offered_qps` preserves each new shape: diurnal keeps its
+/// peak:base ratio and period, ramp keeps its to:from ratio and
+/// duration, spike keeps its spike:base ratio and window — only the
+/// overall level moves.
+#[test]
+fn rescaling_preserves_shaped_arrivals() {
+    let base = WorkloadSpec::new(64);
+    let d = base
+        .clone()
+        .arrival(Arrival::Diurnal { base_qps: 2.0, peak_qps: 10.0, period_s: 300.0 })
+        .with_offered_qps(12.0)
+        .unwrap();
+    match d.arrival {
+        Arrival::Diurnal { base_qps, peak_qps, period_s } => {
+            assert_eq!(period_s, 300.0);
+            assert!((peak_qps / base_qps - 5.0).abs() < 1e-9, "peak:base ratio kept");
+            assert!(((base_qps + peak_qps) / 2.0 - 12.0).abs() < 1e-9);
+        }
+        other => panic!("diurnal shape lost: {other:?}"),
+    }
+    assert!((d.offered_qps().unwrap() - 12.0).abs() < 1e-9);
+    let r = base
+        .clone()
+        .arrival(Arrival::Ramp { from_qps: 1.0, to_qps: 4.0, over_s: 30.0 })
+        .with_offered_qps(10.0)
+        .unwrap();
+    match r.arrival {
+        Arrival::Ramp { from_qps, to_qps, over_s } => {
+            assert_eq!(over_s, 30.0);
+            assert!((to_qps / from_qps - 4.0).abs() < 1e-9, "endpoint ratio kept");
+            assert!(((from_qps + to_qps) / 2.0 - 10.0).abs() < 1e-9);
+        }
+        other => panic!("ramp shape lost: {other:?}"),
+    }
+    let s = base
+        .clone()
+        .arrival(Arrival::Spike { base_qps: 2.0, spike_qps: 20.0, at_s: 60.0, dur_s: 10.0 })
+        .with_offered_qps(8.0)
+        .unwrap();
+    match s.arrival {
+        Arrival::Spike { base_qps, spike_qps, at_s, dur_s } => {
+            assert_eq!((at_s, dur_s), (60.0, 10.0), "window kept");
+            assert!((spike_qps / base_qps - 10.0).abs() < 1e-9, "spike:base ratio kept");
+            assert!((base_qps - 8.0).abs() < 1e-9, "spike offered load is the base rate");
+        }
+        other => panic!("spike shape lost: {other:?}"),
+    }
+}
+
 /// The sweep table covers the grid and degrades monotonically enough to
 /// read: goodput never exceeds throughput at any point.
 #[test]
