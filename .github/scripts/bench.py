@@ -1,16 +1,18 @@
 #!/usr/bin/env python3
-"""CI perf tracking: run four pinned llmperf scenarios, record wall
+"""CI perf tracking: run five pinned llmperf scenarios, record wall
 time plus key model outputs into BENCH_ci.json, and warn (never fail) on
 >10% regression against the committed baseline.
 
-The last scenario is a pair: the same >=200-candidate autotune-serve
-space once through the default staged/parallel/memoized pipeline and
-once with --exhaustive --jobs 1 --no-early-prune (full sequential
-evaluation).  It records the staged-over-exhaustive wall-clock speedup
-and the memo hit rate, cross-checks that both runs report the identical
-min-GPU answer (a hard failure on mismatch — that is the staged-search
-fidelity guarantee), and warns when the speedup drops below 5x or the
-hit rate below 50%.
+The last two scenarios are pairs: an autotune-serve space run once
+through the default staged/parallel/memoized pipeline and once with
+--exhaustive --jobs 1 --no-early-prune (full sequential evaluation).
+Each records the staged-over-exhaustive wall-clock speedup and the memo
+hit rate, cross-checks that both runs report the identical min-GPU
+answer (a hard failure on mismatch — that is the staged-search fidelity
+guarantee), and warns when the speedup drops below 5x or the hit rate
+below 50%.  The fifth pair widens the space along the quantization /
+speculative-decoding axes (--weight-bits/--kv-bits/--spec) and adds a
+sweep-load capacity probe for the INT4-vs-fp16 capacity ratio.
 
 Schema of BENCH_ci.json (documented in DESIGN.md §CI perf tracking):
 
@@ -119,6 +121,36 @@ PAIRED_SCENARIO = {
     },
 }
 
+# The fifth scenario: the same staged-vs-exhaustive pair over the
+# quantized serving space — one engine widened along the weight-precision
+# × KV-precision × speculative-decoding axes (12 variants × TP × replica
+# count).  On top of the paired metrics it runs one sweep-load capacity
+# table over the {fp16, INT4-weight} pair and records the INT4-over-fp16
+# max-QPS ratio: the headline "quantization buys capacity" claim tracked
+# as a single number.
+QUANT_SCENARIO = {
+    "name": "autotune-serve-quant-spec-7b-a800",
+    "argv": [
+        "autotune-serve", "--model", "7b", "--platform", "a800", "--engine", "vllm",
+        "--weight-bits", "16,8,4", "--kv-bits", "16,8", "--spec", "off,0.7:4",
+        "--requests", "50", "--qps", "1", "--qps-min", "0.5", "--qps-max", "24",
+        "--slo-ttft", "4.0", "--slo-tpot", "0.25", "--seed", "42",
+        "--max-replicas", "2",
+    ],
+    "exhaustive_extra": ["--exhaustive", "--jobs", "1", "--no-early-prune"],
+    "capacity_argv": [
+        "sweep-load", "--model", "7b", "--platform", "a800", "--engines", "vllm",
+        "--weight-bits", "16,4", "--requests", "60", "--arrival", "poisson:2",
+        "--qps-min", "0.5", "--qps-max", "32",
+        "--slo-ttft", "4.0", "--slo-tpot", "0.25", "--seed", "42",
+    ],
+    "metrics": {
+        "min_gpus": r"— ([0-9]+) GPU\(s\)",
+        "max_qps_at_min_gpu": r"max ([0-9.]+) QPS",
+        "candidates": r"([0-9]+) enumerated",
+    },
+}
+
 TOLERANCE = 0.10  # warn beyond ±10%
 
 # Metrics where *lower* is a regression (throughput-like); wall_s is the
@@ -127,6 +159,7 @@ HIGHER_IS_BETTER = {
     "max_qps_under_slo", "max_qps_at_min_gpu", "frontier_rows",
     "speedup_staged_vs_exhaustive", "memo_hit_pct",
     "gpu_hours_saved_pct", "overall_attainment_pct",
+    "int4_fp16_capacity_ratio",
 }
 
 
@@ -212,6 +245,53 @@ def run_paired(binary, scenario):
             "wall_s": round(staged_wall, 3), "metrics": metrics}
 
 
+def capacity_by_engine(output):
+    """Max-QPS column of the engine capacity table, keyed by the Engine
+    cell (variant-suffixed names like 'vLLM[w4]' included).  Rows whose
+    capacity cell is not a number (header, OOM notes) are skipped."""
+    caps = {}
+    for line in output.splitlines():
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.split("|")]
+        if len(cells) < 6:
+            continue
+        try:
+            caps[cells[1]] = float(cells[4])
+        except ValueError:
+            continue
+    return caps
+
+
+def run_quant_paired(binary, scenario):
+    """The widened-space pair plus a capacity probe: run_paired over the
+    precision × spec autotune space (same fidelity cross-check and
+    speedup/memo warnings), then one sweep-load capacity table over the
+    {fp16, INT4-weight} variants for the INT4-vs-fp16 capacity ratio.
+    wall_s stays the staged autotune run's wall time, comparable with the
+    other paired scenario."""
+    res = run_paired(binary, scenario)
+    proc = subprocess.run(
+        [binary] + scenario["capacity_argv"], capture_output=True, text=True, timeout=1800
+    )
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError(f"{scenario['name']}: capacity probe exit {proc.returncode}")
+    caps = capacity_by_engine(proc.stdout)
+    fp16, int4 = caps.get("vLLM"), caps.get("vLLM[w4]")
+    if not fp16 or not int4:
+        sys.stderr.write(proc.stdout)
+        raise RuntimeError(
+            f"{scenario['name']}: capacity rows for vLLM / vLLM[w4] missing ({caps})"
+        )
+    ratio = round(int4 / fp16, 3)
+    res["metrics"]["int4_fp16_capacity_ratio"] = ratio
+    if ratio < 1.0:
+        warn(f"{scenario['name']}: INT4 capacity ratio {ratio} < 1 — "
+             "weight quantization stopped buying serving capacity")
+    return res
+
+
 def warn(msg):
     # GitHub annotation; plain stderr elsewhere
     print(f"::warning title=bench regression::{msg}")
@@ -254,7 +334,8 @@ def main():
         "schema": "llmperf-bench-ci/v1",
         "commit": os.environ.get("GITHUB_SHA", "unknown"),
         "scenarios": [run_scenario(args.binary, s) for s in SCENARIOS]
-        + [run_paired(args.binary, PAIRED_SCENARIO)],
+        + [run_paired(args.binary, PAIRED_SCENARIO),
+           run_quant_paired(args.binary, QUANT_SCENARIO)],
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

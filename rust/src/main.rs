@@ -23,12 +23,12 @@ use llm_perf_lab::err;
 use llm_perf_lab::hw::{Link, LinkKind, Platform, PlatformId, Topology};
 use llm_perf_lab::report;
 use llm_perf_lab::search::{
-    autotune_autoscale, autotune_serve_exec, autotune_train_exec, policy_space, ExecPolicy,
-    ReplicaSpace, SearchBudget,
+    autotune_autoscale, autotune_serve_exec, autotune_train_exec, expand_engine_variants,
+    policy_space, ExecPolicy, ReplicaSpace, SearchBudget,
 };
 use llm_perf_lab::serve::{
     simulate_autoscale, simulate_cluster, simulate_requests, AutoscalePolicy, AutoscaleSpec,
-    Balancer, ClusterSpec, EngineSpec,
+    Balancer, ClusterSpec, EngineSpec, KvPrecision, SpecDecode, WeightPrecision,
 };
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
@@ -48,14 +48,18 @@ simulators:
                  [--arrival atonce|poisson:QPS|bursty:QPS:ON_S:OFF_S|trace]
                  [--input LEN|uniform:LO:HI|lognormal:MEAN:CV|trace]
                  [--output ...same grammar...] [--trace FILE] [--seed 42]
+                 [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
                  [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
                  one serving cell; open-loop arrivals + length
                  distributions + trace replay (bare --trace FILE = full
                  replay); reports TTFT/TPOT percentiles and, with
-                 --slo-*, goodput
+                 --slo-*, goodput; --weight-bits/--kv-bits quantize the
+                 weight and KV storage, --spec ACCEPT:LOOKAHEAD turns on
+                 speculative decoding at that draft acceptance rate
   sim-cluster    --model 7b --platform a800 --engine vllm --replicas 2
                  [--tp N] [--balancer rr|lo|jsq|all] [--requests 200]
                  [--arrival ...] [--input ...] [--output ...] [--trace FILE]
+                 [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
                  [--seed 42] [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
                  one workload on N identical replicas of a deployment
                  behind a load balancer (round-robin, least-outstanding
@@ -85,6 +89,7 @@ simulators:
                  [--qps-min 0.5] [--qps-max 32] [--points 6]
                  [--arrival poisson:1|bursty:QPS:ON_S:OFF_S|trace] [--trace FILE]
                  [--input ...] [--output ...] [--seed 42] [--engines all]
+                 [--weight-bits 16,8,4] [--kv-bits 16,8] [--spec 0.7:4,off]
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
                  sweep mean offered load over a QPS grid (TTFT/TPOT
                  p50/p90/p99 + goodput per point) and binary-search the
@@ -92,6 +97,9 @@ simulators:
                  base arrival shape (Poisson stays Poisson, bursty keeps
                  its duty cycle, traces are time-compressed);
                  --engines all prints one capacity row per engine instead
+                 (comma-listed --weight-bits/--kv-bits/--spec expand each
+                 engine into quantized / speculative variants so capacity
+                 rows are comparable at one SLO)
   sweep-parallel [--model 70b] [--platform a800] [--nodes 1] [--bs 8] [--seq 350]
                  [--profile comm_profile.json]
                  rank every valid TP x PP x DP plan (step time, tokens/s,
@@ -118,9 +126,14 @@ configuration autotuner (DESIGN.md §Configuration search):
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
                  [--qps-min 0.25] [--qps-max 64] [--max-configs N]
                  [--max-replicas 1] [--gpu-budget N] [--balancer rr|lo|jsq]
+                 [--weight-bits 16,8,4] [--kv-bits 16,8] [--spec 0.7:4,off]
                  [--jobs N] [--exhaustive] [--no-early-prune]
                  [--show-pruned] [--profile FILE]
-                 joint engine x TP-degree x replica-count x load search:
+                 joint engine x TP-degree x replica-count x load search
+                 (comma-listed --weight-bits/--kv-bits/--spec add the
+                 weight-precision, KV-precision, and speculative-decoding
+                 axes to the space — memory-infeasible variants are
+                 pruned before costing like any other candidate):
                  bisect each feasible deployment's (or cluster's) max QPS
                  under the SLO and print the capacity x total-GPUs x $/h
                  Pareto frontier over candidates meeting --qps (all
@@ -338,6 +351,95 @@ fn parse_engines(spec: &str) -> Result<Vec<EngineSpec>> {
     spec.split(',').map(|s| engine_by_name(s.trim())).collect()
 }
 
+/// Parse a `--weight-bits` comma list (`16,8,4`).
+fn parse_weight_bits(spec: &str) -> Result<Vec<WeightPrecision>> {
+    spec.split(',')
+        .map(|s| {
+            WeightPrecision::parse(s.trim())
+                .ok_or_else(|| err!("bad --weight-bits '{}' (16 | 8 | 4)", s.trim()))
+        })
+        .collect()
+}
+
+/// Parse a `--kv-bits` comma list (`16,8,4`).
+fn parse_kv_bits(spec: &str) -> Result<Vec<KvPrecision>> {
+    spec.split(',')
+        .map(|s| {
+            KvPrecision::parse(s.trim())
+                .ok_or_else(|| err!("bad --kv-bits '{}' (16 | 8 | 4)", s.trim()))
+        })
+        .collect()
+}
+
+/// Parse a `--spec` comma list of ACCEPT:LOOKAHEAD pairs
+/// (`0.7:4,0.8:8`; `off` spells the disabled baseline).
+fn parse_spec_list(spec: &str) -> Result<Vec<SpecDecode>> {
+    spec.split(',')
+        .map(|s| {
+            let s = s.trim();
+            if s == "off" {
+                return Ok(SpecDecode::off());
+            }
+            SpecDecode::parse(s).ok_or_else(|| {
+                err!("bad --spec '{s}' (ACCEPT:LOOKAHEAD with 0 <= ACCEPT <= 1 and \
+                      LOOKAHEAD >= 1, e.g. 0.7:4, or 'off')")
+            })
+        })
+        .collect()
+}
+
+/// Apply the single-valued serving-variant flags (`--weight-bits`,
+/// `--kv-bits`, `--spec`) to one engine — the `sim-serve` / `sim-cluster`
+/// path, where exactly one variant runs.  Comma lists are rejected here;
+/// the search commands (`autotune-serve`, `sweep-load --engines`) take
+/// lists and cross-product them instead.
+fn engine_variant_flags(cli: &Cli, mut engine: EngineSpec) -> Result<EngineSpec> {
+    if let Some(v) = cli.flag("weight-bits") {
+        let mut ws = parse_weight_bits(v)?;
+        if ws.len() != 1 {
+            return Err(err!("--weight-bits takes one value here (lists are for the \
+                             search commands)"));
+        }
+        engine = engine.with_weight_precision(ws.remove(0));
+    }
+    if let Some(v) = cli.flag("kv-bits") {
+        let mut ks = parse_kv_bits(v)?;
+        if ks.len() != 1 {
+            return Err(err!("--kv-bits takes one value here (lists are for the \
+                             search commands)"));
+        }
+        engine = engine.with_kv_precision(ks.remove(0));
+    }
+    if let Some(v) = cli.flag("spec") {
+        let mut ss = parse_spec_list(v)?;
+        if ss.len() != 1 {
+            return Err(err!("--spec takes one value here (lists are for the \
+                             search commands)"));
+        }
+        engine = engine.with_spec_decode(ss.remove(0));
+    }
+    Ok(engine)
+}
+
+/// Cross-product an engine list with the `--weight-bits` / `--kv-bits` /
+/// `--spec` comma lists (absent flag = the fp16 / no-speculation
+/// default, so the expansion is the identity without any of them).
+fn expand_variant_flags(cli: &Cli, engines: Vec<EngineSpec>) -> Result<Vec<EngineSpec>> {
+    let ws = match cli.flag("weight-bits") {
+        Some(v) => parse_weight_bits(v)?,
+        None => Vec::new(),
+    };
+    let ks = match cli.flag("kv-bits") {
+        Some(v) => parse_kv_bits(v)?,
+        None => Vec::new(),
+    };
+    let ss = match cli.flag("spec") {
+        Some(v) => parse_spec_list(v)?,
+        None => Vec::new(),
+    };
+    Ok(expand_engine_variants(&engines, &ws, &ks, &ss))
+}
+
 /// Parse a comma list of positive integers (`--bs 4,8,16`).
 fn parse_u64_list(spec: &str) -> Result<Vec<u64>> {
     let v: Vec<u64> = spec
@@ -488,19 +590,20 @@ fn slo_flags(cli: &Cli) -> Result<Option<SloSpec>> {
 fn sim_serve(cli: &Cli) -> Result<()> {
     let cfg = model_flag(cli, "7b")?;
     let plat = platform_flag(cli)?;
-    let engine = engine_flag(cli)?;
+    let engine = engine_variant_flags(cli, engine_flag(cli)?)?;
     let spec = workload_flags(cli, 1000)?;
     let slo = slo_flags(cli)?; // validate before simulating
     let requests = spec.generate()?;
     match simulate_requests(&plat, &cfg, &engine, &requests) {
         None => {
-            println!("{} / {} / {}: OOM (cannot deploy)", plat.id.label(), cfg.name, engine.name)
+            println!("{} / {} / {}: OOM (cannot deploy)",
+                     plat.id.label(), cfg.name, engine.variant_name())
         }
         Some(r) => {
             let cdf = r.latency_cdf();
             let (ttft, tpot) = (r.ttft_summary(), r.tpot_summary());
             println!("{} / {} / {}: {} requests ({:?} arrivals)", plat.id.label(), cfg.name,
-                     engine.name, requests.len(), spec.arrival);
+                     engine.variant_name(), requests.len(), spec.arrival);
             if r.rejected > 0 {
                 println!("  WARNING: {} unservable request(s) rejected \
                           (prompt beyond the engine's prefill/KV budget)", r.rejected);
@@ -531,7 +634,7 @@ fn sim_serve(cli: &Cli) -> Result<()> {
 fn sim_cluster(cli: &Cli) -> Result<()> {
     let cfg = model_flag(cli, "7b")?;
     let plat = platform_flag(cli)?;
-    let engine = engine_flag(cli)?;
+    let engine = engine_variant_flags(cli, engine_flag(cli)?)?;
     let spec = workload_flags(cli, 200)?;
     let slo = slo_flags(cli)?;
     let replicas_s = cli.flag_or("replicas", "2");
@@ -572,8 +675,9 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
     let m = &r.merged;
     println!("{} / {} / {} — {} replica(s) × TP{} = {} GPUs, {} balancer, {} requests \
               ({:?} arrivals)",
-             plat.id.label(), cfg.name, engine.name, cluster.replicas, cluster.plan.tp(),
-             cluster.total_gpus(), balancer.describe(), reqs.len(), spec.arrival);
+             plat.id.label(), cfg.name, engine.variant_name(), cluster.replicas,
+             cluster.plan.tp(), cluster.total_gpus(), balancer.describe(), reqs.len(),
+             spec.arrival);
     if m.rejected > 0 {
         println!("  WARNING: {} unservable request(s) rejected \
                   (prompt beyond the engine's prefill/KV budget)", m.rejected);
@@ -705,16 +809,16 @@ fn sweep_load(cli: &Cli) -> Result<()> {
             return Err(err!("--points has no effect with --engines (the capacity table \
                              bisects, it does not grid)"));
         }
-        let engines = parse_engines(spec)?;
+        let engines = expand_variant_flags(cli, parse_engines(spec)?)?;
         println!("{}",
                  report::load::engine_capacity_table(&plat, &cfg, &engines, &base, &slo, lo, hi)?
                      .render());
         return Ok(());
     }
-    let engine = engine_flag(cli)?;
+    let engine = engine_variant_flags(cli, engine_flag(cli)?)?;
     if engine.plan(&plat, &cfg).is_none() {
         println!("{} / {} / {}: OOM (cannot deploy — no load sweep to run)",
-                 plat.id.label(), cfg.name, engine.name);
+                 plat.id.label(), cfg.name, engine.variant_name());
         return Ok(());
     }
     let grid = report::load::qps_grid(lo, hi, cli.flag_u64("points", 6) as usize);
@@ -798,6 +902,9 @@ fn autotune_serve_cmd(cli: &Cli) -> Result<()> {
         (None, Some(one)) => vec![engine_by_name(one)?],
         (None, None) => EngineSpec::all(),
     };
+    // widen the space with the precision / speculation axes (identity
+    // expansion when none of the flags is given)
+    let engines = expand_variant_flags(cli, engines)?;
     let base = workload_flags(cli, 200)?;
     let slo = slo_flags(cli)?.unwrap_or_else(SloSpec::interactive);
     let target = match cli.flag("qps") {

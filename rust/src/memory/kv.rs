@@ -37,10 +37,29 @@ pub fn serve_memory(
     dt: Dtype,
     gpu_mem_util: f64,
 ) -> ServeMemory {
-    let weights_per_gpu = plan.model_shard(cfg.param_count() * dt.bytes());
+    serve_memory_quant(plat, cfg, plan, dt, dt, 1.0, gpu_mem_util)
+}
+
+/// [`serve_memory`] with weights and KV cache priced at independent
+/// storage precisions (weight-only INT8/INT4 + quantized KV serving).
+/// `weight_scale` multiplies the weight bytes — 1.0 for a plain
+/// deployment, `1.0 + DRAFT_MEM_FRAC` when a speculative-decoding draft
+/// model rides along.  With `weight_dt == kv_dt` and `weight_scale ==
+/// 1.0` this is exactly [`serve_memory`] (the fp16 path is the same
+/// code, so the fp16 equivalence tests pin both).
+pub fn serve_memory_quant(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    plan: &ParallelPlan,
+    weight_dt: Dtype,
+    kv_dt: Dtype,
+    weight_scale: f64,
+    gpu_mem_util: f64,
+) -> ServeMemory {
+    let weights_per_gpu = plan.model_shard(cfg.param_count() * weight_dt.bytes()) * weight_scale;
     let budget = plat.gpu.mem_bytes * gpu_mem_util - plat.base_overhead;
     let kv_pool = (budget - weights_per_gpu).max(0.0);
-    let per_tok = plan.kv_shard(kv_bytes_per_token(cfg, dt));
+    let per_tok = plan.kv_shard(kv_bytes_per_token(cfg, kv_dt));
     let capacity = if per_tok > 0.0 { (kv_pool / per_tok) as u64 } else { 0 };
     ServeMemory { weights_per_gpu, kv_pool_per_gpu: kv_pool, kv_token_capacity: capacity }
 }
@@ -50,8 +69,19 @@ pub fn serve_memory(
 /// Fig. 6).
 pub fn min_serving_plan(plat: &Platform, cfg: &LlamaConfig, dt: Dtype,
                         gpu_mem_util: f64, min_kv_tokens: u64) -> Option<ParallelPlan> {
+    min_serving_plan_quant(plat, cfg, dt, dt, 1.0, gpu_mem_util, min_kv_tokens)
+}
+
+/// [`min_serving_plan`] under the split-precision byte model of
+/// [`serve_memory_quant`] — quantized weights can make a TP degree
+/// feasible that fp16 OOMs (the autotuner's INT4-fits-where-fp16-doesn't
+/// frontier points come from here).
+pub fn min_serving_plan_quant(plat: &Platform, cfg: &LlamaConfig, weight_dt: Dtype,
+                              kv_dt: Dtype, weight_scale: f64, gpu_mem_util: f64,
+                              min_kv_tokens: u64) -> Option<ParallelPlan> {
     for plan in ParallelPlan::serving_candidates(plat.n_gpus) {
-        let m = serve_memory(plat, cfg, &plan, dt, gpu_mem_util);
+        let m = serve_memory_quant(plat, cfg, &plan, weight_dt, kv_dt, weight_scale,
+                                   gpu_mem_util);
         if m.kv_pool_per_gpu > 0.0 && m.kv_token_capacity >= min_kv_tokens {
             return Some(plan);
         }
@@ -115,6 +145,37 @@ mod tests {
         let p = Platform::get(PlatformId::Rtx4090);
         let cfg = LlamaConfig::llama2_70b();
         assert_eq!(min_tp_that_fits(&p, &cfg, Dtype::Bf16, 0.8, 40_000), None);
+    }
+
+    #[test]
+    fn quant_weights_fit_where_fp16_ooms_and_kv_quant_grows_capacity() {
+        // 13B fp16 needs TP2 on a 24 GB card; INT4 weights fit on one GPU
+        let p = Platform::get(PlatformId::Rtx3090Nvl);
+        let cfg = LlamaConfig::llama2_13b();
+        assert!(min_serving_plan(&p, &cfg, Dtype::Bf16, 0.9, 12_288).unwrap().tp >= 2);
+        let q = min_serving_plan_quant(&p, &cfg, Dtype::Nf4, Dtype::Int8, 1.0, 0.9, 12_288)
+            .unwrap();
+        assert_eq!(q.tp, 1);
+        // quantized KV strictly multiplies token capacity at equal weights
+        let fp = serve_memory_quant(&p, &cfg, &tp(2), Dtype::Bf16, Dtype::Bf16, 1.0, 0.9);
+        let kv8 = serve_memory_quant(&p, &cfg, &tp(2), Dtype::Bf16, Dtype::Int8, 1.0, 0.9);
+        assert!(kv8.kv_token_capacity > fp.kv_token_capacity);
+        assert_eq!(kv8.weights_per_gpu.to_bits(), fp.weights_per_gpu.to_bits());
+        // the draft-model surcharge shrinks the pool, never the weights' 4x win
+        let spec = serve_memory_quant(&p, &cfg, &tp(2), Dtype::Bf16, Dtype::Bf16, 1.1, 0.9);
+        assert!(spec.weights_per_gpu > fp.weights_per_gpu);
+        assert!(spec.kv_token_capacity < fp.kv_token_capacity);
+    }
+
+    #[test]
+    fn serve_memory_quant_fp16_path_is_bit_identical() {
+        let p = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let a = serve_memory(&p, &cfg, &tp(1), Dtype::Bf16, 0.9);
+        let b = serve_memory_quant(&p, &cfg, &tp(1), Dtype::Bf16, Dtype::Bf16, 1.0, 0.9);
+        assert_eq!(a.weights_per_gpu.to_bits(), b.weights_per_gpu.to_bits());
+        assert_eq!(a.kv_pool_per_gpu.to_bits(), b.kv_pool_per_gpu.to_bits());
+        assert_eq!(a.kv_token_capacity, b.kv_token_capacity);
     }
 
     #[test]

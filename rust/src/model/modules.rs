@@ -193,8 +193,24 @@ pub fn backward_modules(
 /// Decode-iteration ops for serving: one new token per sequence in the
 /// batch, attending over `ctx` cached positions.
 pub fn decode_modules(cfg: &LlamaConfig, batch: u64, ctx: u64, quant: bool) -> Vec<ModuleOps> {
-    let dt = Dtype::Bf16;
     let wdt = if quant { Dtype::Nf4 } else { Dtype::Bf16 };
+    decode_modules_prec(cfg, batch, ctx, wdt, Dtype::Bf16.bytes())
+}
+
+/// [`decode_modules`] generalized over the weight-storage dtype and the
+/// per-element KV-cache byte width (quantized serving): `wdt` reprices
+/// every weight GEMM's B-operand read, `kv_elem_bytes` reprices the
+/// decode-attention cache scan.  `decode_modules` delegates here with
+/// (bf16, 2.0), so the fp16 path is literally the same code — the
+/// serving equivalence tests pin both at once.
+pub fn decode_modules_prec(
+    cfg: &LlamaConfig,
+    batch: u64,
+    ctx: u64,
+    wdt: Dtype,
+    kv_elem_bytes: f64,
+) -> Vec<ModuleOps> {
+    let dt = Dtype::Bf16;
     let d = cfg.d_model;
     let kv_out = cfg.n_kv_heads * cfg.head_dim();
     let l = cfg.n_layers;
@@ -217,8 +233,9 @@ pub fn decode_modules(cfg: &LlamaConfig, batch: u64, ctx: u64, quant: bool) -> V
         // serving engines run fused kernels: one launch, not eager torch
         (ModuleKind::Rope, vec![Op::ew(batch as f64 * (d + kv_out) as f64, dt, 4.0, 1.0)]),
     ];
-    // decode attention: reads the whole KV cache — memory-bound
-    let kv_bytes = 2.0 * batch as f64 * kv_out as f64 * ctx as f64 * dt.bytes();
+    // decode attention: reads the whole KV cache — memory-bound; the
+    // cache is stored at the (possibly quantized) KV precision
+    let kv_bytes = 2.0 * batch as f64 * kv_out as f64 * ctx as f64 * kv_elem_bytes;
     per_layer.push((ModuleKind::FlashAttn, vec![
         Op::Gemm(Gemm { m: batch * cfg.n_heads, n: ctx, k: cfg.head_dim(),
                         weight_dtype: dt, act_dtype: dt })
@@ -333,6 +350,26 @@ mod tests {
         let bf16 = t(&decode_modules(&cfg, 4, 512, false), &gpu);
         let nf4 = t(&decode_modules(&cfg, 4, 512, true), &gpu);
         assert!(nf4 < bf16, "nf4 {nf4} !< bf16 {bf16}");
+    }
+
+    #[test]
+    fn decode_modules_prec_bf16_matches_legacy_and_kv_quant_speeds_up() {
+        let cfg = LlamaConfig::llama2_7b();
+        let gpu = GpuSpec::a800();
+        // the delegating fp16 path prices bit-identically
+        let legacy = t(&decode_modules(&cfg, 8, 1024, false), &gpu);
+        let prec = t(&decode_modules_prec(&cfg, 8, 1024, Dtype::Bf16, Dtype::Bf16.bytes()),
+                     &gpu);
+        assert_eq!(legacy.to_bits(), prec.to_bits());
+        // quantized KV shrinks the dominant long-context cache read
+        let kv8 = t(&decode_modules_prec(&cfg, 8, 4096, Dtype::Bf16, 1.0), &gpu);
+        let fp = t(&decode_modules_prec(&cfg, 8, 4096, Dtype::Bf16, 2.0), &gpu);
+        assert!(kv8 < fp, "kv8 {kv8} !< fp16 {fp}");
+        // int8 weights sit between bf16 and nf4 on the weight-bound decode
+        let w8 = t(&decode_modules_prec(&cfg, 4, 512, Dtype::Int8, 2.0), &gpu);
+        let w16 = t(&decode_modules_prec(&cfg, 4, 512, Dtype::Bf16, 2.0), &gpu);
+        let w4 = t(&decode_modules_prec(&cfg, 4, 512, Dtype::Nf4, 2.0), &gpu);
+        assert!(w4 < w8 && w8 < w16, "w4 {w4} w8 {w8} w16 {w16}");
     }
 
     #[test]

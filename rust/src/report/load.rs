@@ -372,7 +372,7 @@ pub fn engine_capacity_table(
     for engine in engines {
         match engine.plan(plat, cfg) {
             None => t.row(vec![
-                engine.name.to_string(),
+                engine.variant_name(),
                 oom(),
                 oom(),
                 oom(),
@@ -383,7 +383,7 @@ pub fn engine_capacity_table(
             Some(plan) => {
                 match bisect_max_qps(plat, cfg, engine, &plan, base, slo, lo, hi)? {
                     None => t.row(vec![
-                        engine.name.to_string(),
+                        engine.variant_name(),
                         plan.tp().to_string(),
                         plan.kv_capacity_tokens.to_string(),
                         oom(),
@@ -394,7 +394,7 @@ pub fn engine_capacity_table(
                     Some((q, r)) => {
                         let note = if q >= hi { "not the bottleneck at hi" } else { "" };
                         t.row(vec![
-                            engine.name.to_string(),
+                            engine.variant_name(),
                             plan.tp().to_string(),
                             plan.kv_capacity_tokens.to_string(),
                             f2(q),

@@ -89,7 +89,7 @@ pub fn serve_frontier_table(search: &ServeSearch, plat: &Platform, cfg: &LlamaCo
     .align_left(0);
     for e in search.frontier_evals() {
         t.row(vec![
-            e.cand.engine.name.to_string(),
+            e.cand.engine.variant_name(),
             e.cand.plan.tp().to_string(),
             e.cand.replicas.to_string(),
             e.gpus.to_string(),

@@ -106,6 +106,8 @@ pub fn table10() -> Table {
     let plan = e.plan(&plat, &cfg).unwrap_or(DeployPlan {
         parallel: ParallelPlan::tensor_parallel(1),
         kv_capacity_tokens: 0,
+        weight_precision: crate::serve::WeightPrecision::Fp16,
+        kv_precision: crate::serve::KvPrecision::Fp16,
     });
     let batch = 1024u64;
     let ctx = 512 + 32; // mid-generation context

@@ -60,8 +60,8 @@ pub use objective::{
 };
 pub use pareto::{dominates, pareto_indices};
 pub use space::{
-    serve_space, train_space, ConfigSpace, PrunedCandidate, ReplicaSpace, ServeCandidate,
-    TrainCandidate, TrainStack,
+    expand_engine_variants, serve_space, train_space, ConfigSpace, PrunedCandidate, ReplicaSpace,
+    ServeCandidate, TrainCandidate, TrainStack,
 };
 
 /// Driver knobs bounding how much of a space gets costed.
@@ -322,7 +322,7 @@ pub fn autotune_serve_exec(
         // canonical skip set so the outcome is timing-independent.
         let sat = SaturationFrontier::new();
         let speculative: Vec<Option<Result<ServeEval>>> = par_map(cands, jobs, |i, cand| {
-            if budget.early_prune && sat.should_skip(cand.engine.name, cand.gpus(), i) {
+            if budget.early_prune && sat.should_skip(&cand.engine.variant_name(), cand.gpus(), i) {
                 return None;
             }
             let r = eval_serve_shared(
@@ -331,7 +331,7 @@ pub fn autotune_serve_exec(
             if budget.early_prune {
                 if let Ok(e) = &r {
                     if e.saturates(bracket.1) {
-                        sat.publish(cand.engine.name, e.gpus, i);
+                        sat.publish(&cand.engine.variant_name(), e.gpus, i);
                     }
                 }
             }
@@ -340,7 +340,7 @@ pub fn autotune_serve_exec(
         for (cand, slot) in cands.iter().zip(speculative) {
             let canonical_skip = budget.early_prune
                 && evals.iter().any(|e| {
-                    e.cand.engine.name == cand.engine.name
+                    e.cand.engine.variant_name() == cand.engine.variant_name()
                         && e.gpus < cand.gpus()
                         && e.saturates(bracket.1)
                 });

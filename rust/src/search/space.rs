@@ -13,7 +13,7 @@ use crate::config::{LlamaConfig, Method, TrainWorkload};
 use crate::hw::{Platform, Topology};
 use crate::memory::{check_fit, training_memory_plan, Fit, MemoryBreakdown};
 use crate::parallel::{megatron_memory_micro, ParallelPlan};
-use crate::serve::{Balancer, DeployPlan, EngineSpec};
+use crate::serve::{Balancer, DeployPlan, EngineSpec, KvPrecision, SpecDecode, WeightPrecision};
 use crate::train::megatron::MEGATRON_ACT_DISCOUNT;
 
 /// Which training stack prices a candidate — the repo models two:
@@ -95,9 +95,10 @@ impl ServeCandidate {
         self.plan.tp() * self.replicas
     }
 
-    /// Config label ("vLLM TP4", "vLLM TP2×3" for a 3-replica cluster).
+    /// Config label ("vLLM TP4", "vLLM TP2×3" for a 3-replica cluster,
+    /// "vLLM[w4+kv8] TP1" for a quantized variant).
     pub fn label(&self) -> String {
-        serve_label(self.engine.name, self.plan.tp(), self.replicas)
+        serve_label(&self.engine.variant_name(), self.plan.tp(), self.replicas)
     }
 }
 
@@ -265,7 +266,7 @@ pub fn serve_space(
                     // independent: one why-not row per TP degree, not
                     // one per replica count
                     space.pruned.push(PrunedCandidate {
-                        label: serve_label(engine.name, plan.tp, 1),
+                        label: serve_label(&engine.variant_name(), plan.tp, 1),
                         reason: "weights + KV floor exceed the group's memory".to_string(),
                     });
                     continue;
@@ -284,6 +285,42 @@ pub fn serve_space(
         }
     }
     space
+}
+
+/// Cross-product an engine list with the precision / decode-strategy
+/// axes: every engine × every weight precision × every KV precision ×
+/// every speculative-decoding setting, in that nesting order (engines
+/// outermost) so the expansion is deterministic and the baseline
+/// variants keep their original relative order.  An empty axis list
+/// means "don't widen this axis" — it expands as the default singleton
+/// (fp16 weights / fp16 KV / speculation off), so
+/// `expand_engine_variants(&engines, &[], &[], &[])` returns the input
+/// engines unchanged (same `variant_name`s, bit-identical specs).
+pub fn expand_engine_variants(
+    engines: &[EngineSpec],
+    weights: &[WeightPrecision],
+    kvs: &[KvPrecision],
+    specs: &[SpecDecode],
+) -> Vec<EngineSpec> {
+    let ws = if weights.is_empty() { vec![WeightPrecision::Fp16] } else { weights.to_vec() };
+    let ks = if kvs.is_empty() { vec![KvPrecision::Fp16] } else { kvs.to_vec() };
+    let ss = if specs.is_empty() { vec![SpecDecode::off()] } else { specs.to_vec() };
+    let mut out = Vec::with_capacity(engines.len() * ws.len() * ks.len() * ss.len());
+    for e in engines {
+        for &w in &ws {
+            for &k in &ks {
+                for &s in &ss {
+                    out.push(
+                        e.clone()
+                            .with_weight_precision(w)
+                            .with_kv_precision(k)
+                            .with_spec_decode(s),
+                    );
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -392,6 +429,39 @@ mod tests {
             assert!(c.engine.plan_with_tp(&plat, &cfg, c.plan.tp()).is_some());
         }
         assert!(!s.pruned.is_empty());
+    }
+
+    #[test]
+    fn expand_engine_variants_cross_products_and_defaults_are_identity() {
+        let engines = EngineSpec::all();
+        // empty axes: the identity expansion, same bare variant names
+        let same = expand_engine_variants(&engines, &[], &[], &[]);
+        assert_eq!(same.len(), engines.len());
+        for (a, b) in same.iter().zip(engines.iter()) {
+            assert_eq!(a.variant_name(), b.variant_name());
+            assert_eq!(a.variant_name(), b.name);
+        }
+        // full cross product: engines outermost, all names distinct
+        let sd = SpecDecode { accept_rate: 0.7, lookahead: 4 };
+        let wide = expand_engine_variants(
+            &engines,
+            &[WeightPrecision::Fp16, WeightPrecision::Int4],
+            &[KvPrecision::Fp16, KvPrecision::Int8],
+            &[SpecDecode::off(), sd],
+        );
+        assert_eq!(wide.len(), 3 * 2 * 2 * 2);
+        let names: std::collections::BTreeSet<String> =
+            wide.iter().map(|e| e.variant_name()).collect();
+        assert_eq!(names.len(), wide.len(), "variant names must be unique");
+        assert!(names.contains("vLLM"));
+        assert!(names.contains("vLLM[w4+kv8+sd0.70:4]"));
+        // variant labels flow into serve-space candidate + pruned rows
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engines4 = expand_engine_variants(
+            &[EngineSpec::vllm()], &[WeightPrecision::Int4], &[], &[]);
+        let s = serve_space(&plat, &cfg, &engines4, &ReplicaSpace::default());
+        assert!(s.candidates.iter().any(|c| c.label() == "vLLM[w4] TP1"), "labels carry variants");
     }
 
     #[test]

@@ -108,7 +108,10 @@ pub(crate) fn staged_serve(
         let b = NOMINAL_BATCH.min(c.engine.max_num_seqs).max(1);
         // decode context grows from mean_in to mean_in + mean_out; take the midpoint
         let ctx = mean_in + mean_out / 2;
-        let t_iter = decode_iter_time(plat, cfg, &c.plan, b, ctx) + c.engine.effective_overhead();
+        let t_iter = c.engine.spec_decode.per_token_time(
+            decode_iter_time(plat, cfg, &c.plan, b, ctx),
+            c.engine.effective_overhead(),
+        );
         let req_time = prefill_time(plat, cfg, &c.plan, mean_in) + mean_out as f64 * t_iter;
         f64::from(c.replicas) * b as f64 / req_time.max(1e-12)
     });

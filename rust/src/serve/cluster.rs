@@ -230,8 +230,10 @@ impl<'a> ServiceEstimate<'a> {
         let input = key.0 * 32 + 16;
         let output = key.1 * 32 + 16;
         let ctx = input + output / 2;
-        let tpot = decode_iter_time(self.plat, self.cfg, &self.plan, NOMINAL_DECODE_BATCH, ctx)
-            + self.engine.effective_overhead();
+        let tpot = self.engine.spec_decode.per_token_time(
+            decode_iter_time(self.plat, self.cfg, &self.plan, NOMINAL_DECODE_BATCH, ctx),
+            self.engine.effective_overhead(),
+        );
         let s = prefill_time(self.plat, self.cfg, &self.plan, input) + output as f64 * tpot;
         self.cache.insert(key, s);
         s

@@ -18,7 +18,7 @@
 
 use crate::config::LlamaConfig;
 use crate::hw::{Dtype, Platform};
-use crate::memory::kv::{min_serving_plan, serve_memory};
+use crate::memory::kv::{min_serving_plan_quant, serve_memory_quant};
 use crate::parallel::ParallelPlan;
 
 /// KV allocator flavor.
@@ -30,6 +30,172 @@ pub enum KvPolicy {
     TokenLevel,
     /// reserve (input + max_new) contiguously at admission
     ReserveMax,
+}
+
+/// Weight-storage precision of a serving deployment (weight-only
+/// quantization: activations stay bf16, weights are stored and streamed
+/// at this width and dequantized in-kernel).  Decode GEMMs are
+/// weight-read bound, so the bytes saved translate almost directly into
+/// iteration speed (`ops/gemm.rs` streaming path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WeightPrecision {
+    /// 16-bit weights (the bf16 baseline every engine ships with)
+    Fp16,
+    /// 8-bit weight-only quantization
+    Int8,
+    /// 4-bit weight-only quantization (NF4-style storage)
+    Int4,
+}
+
+impl WeightPrecision {
+    /// Storage dtype the GEMM byte model prices weight reads at.
+    pub fn dtype(self) -> Dtype {
+        match self {
+            WeightPrecision::Fp16 => Dtype::Bf16,
+            WeightPrecision::Int8 => Dtype::Int8,
+            WeightPrecision::Int4 => Dtype::Nf4,
+        }
+    }
+
+    /// Bits per weight (the `--weight-bits` CLI spelling).
+    pub fn bits(self) -> u32 {
+        match self {
+            WeightPrecision::Fp16 => 16,
+            WeightPrecision::Int8 => 8,
+            WeightPrecision::Int4 => 4,
+        }
+    }
+
+    /// Parse the CLI spelling (`16`, `8`, or `4`).
+    pub fn parse(s: &str) -> Option<WeightPrecision> {
+        match s.trim() {
+            "16" => Some(WeightPrecision::Fp16),
+            "8" => Some(WeightPrecision::Int8),
+            "4" => Some(WeightPrecision::Int4),
+            _ => None,
+        }
+    }
+}
+
+/// KV-cache storage precision.  Quantizing the cache shrinks the bytes
+/// both sides of the knee: per-token pool bytes (bigger batches before
+/// saturation) and the decode-attention cache read (faster iterations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KvPrecision {
+    /// 16-bit KV entries (baseline)
+    Fp16,
+    /// 8-bit KV entries
+    Int8,
+    /// 4-bit KV entries (sub-byte: 0.5 bytes per element)
+    Int4,
+}
+
+impl KvPrecision {
+    /// Storage dtype the KV byte model prices cache entries at.
+    pub fn dtype(self) -> Dtype {
+        match self {
+            KvPrecision::Fp16 => Dtype::Bf16,
+            KvPrecision::Int8 => Dtype::Int8,
+            KvPrecision::Int4 => Dtype::Nf4,
+        }
+    }
+
+    /// Bytes per cached element (0.5 for INT4 — sub-byte accounting).
+    pub fn bytes(self) -> f64 {
+        self.dtype().bytes()
+    }
+
+    /// Bits per cached element (the `--kv-bits` CLI spelling).
+    pub fn bits(self) -> u32 {
+        match self {
+            KvPrecision::Fp16 => 16,
+            KvPrecision::Int8 => 8,
+            KvPrecision::Int4 => 4,
+        }
+    }
+
+    /// Parse the CLI spelling (`16`, `8`, or `4`).
+    pub fn parse(s: &str) -> Option<KvPrecision> {
+        match s.trim() {
+            "16" => Some(KvPrecision::Fp16),
+            "8" => Some(KvPrecision::Int8),
+            "4" => Some(KvPrecision::Int4),
+            _ => None,
+        }
+    }
+}
+
+/// Draft-model decode cost as a fraction of the target model's decode
+/// iteration, per drafted token (a ~10%-sized draft model).
+pub const DRAFT_COST_FRAC: f64 = 0.1;
+
+/// Extra weight memory the resident draft model occupies, as a fraction
+/// of the target model's weights.
+pub const DRAFT_MEM_FRAC: f64 = 0.1;
+
+/// Acceptance-rate-parameterized speculative decoding: a draft model
+/// proposes `lookahead` tokens per target step, each independently
+/// accepted with probability `accept_rate`.  Expected tokens committed
+/// per step follows the standard geometric truncation
+/// `E = (1 - a^L) / (1 - a)`; the amortized per-token decode time is
+/// `(t_decode · (1 + DRAFT_COST_FRAC · L) + t_overhead) / E`.
+/// With `accept_rate == 0` or `lookahead <= 1` the engine is *disabled*
+/// and executes the vanilla per-token expression unchanged
+/// (`tests/quant_serve.rs` pins bit-for-bit equality).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecDecode {
+    /// per-token draft acceptance probability, clamped to [0, 1)
+    pub accept_rate: f64,
+    /// draft tokens proposed per target verification step (>= 1)
+    pub lookahead: u32,
+}
+
+impl SpecDecode {
+    /// Speculative decoding disabled (the default on every engine).
+    pub fn off() -> Self {
+        SpecDecode { accept_rate: 0.0, lookahead: 1 }
+    }
+
+    /// True when the draft model actually runs (accept_rate > 0 and a
+    /// lookahead worth verifying).
+    pub fn enabled(&self) -> bool {
+        self.accept_rate > 0.0 && self.lookahead > 1
+    }
+
+    /// Expected tokens committed per verification step,
+    /// `(1 - a^L) / (1 - a)` (1.0 when disabled; `L` in the a→1 limit).
+    pub fn expected_tokens_per_step(&self) -> f64 {
+        if !self.enabled() {
+            return 1.0;
+        }
+        let a = self.accept_rate.min(1.0);
+        let l = self.lookahead as f64;
+        if (1.0 - a).abs() < 1e-12 { l } else { (1.0 - a.powf(l)) / (1.0 - a) }
+    }
+
+    /// Amortized wall time per generated token given the target model's
+    /// decode-iteration time and the engine's per-iteration overhead.
+    /// Disabled → exactly `decode_iter + overhead` (the vanilla decode
+    /// expression, bit for bit).
+    pub fn per_token_time(&self, decode_iter: f64, overhead: f64) -> f64 {
+        if !self.enabled() {
+            return decode_iter + overhead;
+        }
+        let l = self.lookahead as f64;
+        (decode_iter * (1.0 + DRAFT_COST_FRAC * l) + overhead) / self.expected_tokens_per_step()
+    }
+
+    /// Parse the CLI spelling `accept:lookahead` (e.g. `0.7:4`);
+    /// `0:1` spells "off".  None on malformed input or accept ∉ [0, 1].
+    pub fn parse(s: &str) -> Option<SpecDecode> {
+        let (a, l) = s.split_once(':')?;
+        let accept_rate: f64 = a.trim().parse().ok()?;
+        let lookahead: u32 = l.trim().parse().ok()?;
+        if !(0.0..=1.0).contains(&accept_rate) || lookahead == 0 {
+            return None;
+        }
+        Some(SpecDecode { accept_rate, lookahead })
+    }
 }
 
 /// One serving framework's policy parameters.
@@ -61,6 +227,12 @@ pub struct EngineSpec {
     /// scheduler reserves before admitting (LightLLM estimates the full
     /// growth; vLLM admits optimistically and preempts)
     pub admit_reserve_frac: f64,
+    /// weight-storage precision (weight-only quantization; fp16 default)
+    pub weight_precision: WeightPrecision,
+    /// KV-cache storage precision (fp16 default)
+    pub kv_precision: KvPrecision,
+    /// speculative-decoding configuration (off by default)
+    pub spec_decode: SpecDecode,
 }
 
 impl EngineSpec {
@@ -77,6 +249,9 @@ impl EngineSpec {
             assume_mha_kv: true, // pre-GQA KV reservation (Fig. 6 70B OOM)
             min_kv_tokens: 8192,
             admit_reserve_frac: 1.0, // ReserveMax already holds the budget
+            weight_precision: WeightPrecision::Fp16,
+            kv_precision: KvPrecision::Fp16,
+            spec_decode: SpecDecode::off(),
         }
     }
 
@@ -93,6 +268,9 @@ impl EngineSpec {
             assume_mha_kv: false,
             min_kv_tokens: 12288,
             admit_reserve_frac: 0.35, // optimistic; recompute-preempts
+            weight_precision: WeightPrecision::Fp16,
+            kv_precision: KvPrecision::Fp16,
+            spec_decode: SpecDecode::off(),
         }
     }
 
@@ -109,6 +287,9 @@ impl EngineSpec {
             assume_mha_kv: false,
             min_kv_tokens: 12288,
             admit_reserve_frac: 1.0, // Token Attention reserves exact growth
+            weight_precision: WeightPrecision::Fp16,
+            kv_precision: KvPrecision::Fp16,
+            spec_decode: SpecDecode::off(),
         }
     }
 
@@ -122,6 +303,56 @@ impl EngineSpec {
         self.iter_overhead * (1.0 - self.async_overlap)
     }
 
+    /// Builder: set the weight-storage precision.
+    pub fn with_weight_precision(mut self, w: WeightPrecision) -> Self {
+        self.weight_precision = w;
+        self
+    }
+
+    /// Builder: set the KV-cache storage precision.
+    pub fn with_kv_precision(mut self, k: KvPrecision) -> Self {
+        self.kv_precision = k;
+        self
+    }
+
+    /// Builder: set the speculative-decoding configuration.
+    pub fn with_spec_decode(mut self, s: SpecDecode) -> Self {
+        self.spec_decode = s;
+        self
+    }
+
+    /// Variant qualifier for non-default precision / spec-decode axes:
+    /// empty for the fp16 no-spec baseline, else e.g. `[w4+kv8+sd0.70:4]`.
+    /// Keeping the baseline suffix empty keeps every pre-existing label
+    /// and report row byte-identical.
+    pub fn variant_suffix(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.weight_precision != WeightPrecision::Fp16 {
+            parts.push(format!("w{}", self.weight_precision.bits()));
+        }
+        if self.kv_precision != KvPrecision::Fp16 {
+            parts.push(format!("kv{}", self.kv_precision.bits()));
+        }
+        if self.spec_decode.enabled() {
+            parts.push(format!("sd{:.2}:{}", self.spec_decode.accept_rate,
+                               self.spec_decode.lookahead));
+        }
+        if parts.is_empty() { String::new() } else { format!("[{}]", parts.join("+")) }
+    }
+
+    /// Engine name qualified by the variant suffix — the identity report
+    /// tables and the search's saturation frontier key on, so precision /
+    /// spec variants of one engine never collide or cross-prune.
+    pub fn variant_name(&self) -> String {
+        format!("{}{}", self.name, self.variant_suffix())
+    }
+
+    /// Weight-memory multiplier: the resident draft model's surcharge
+    /// when speculative decoding is on.
+    fn weight_mem_scale(&self) -> f64 {
+        if self.spec_decode.enabled() { 1.0 + DRAFT_MEM_FRAC } else { 1.0 }
+    }
+
     /// The model's architecture with this engine's KV-reservation quirk
     /// applied (pre-GQA TGI reserves MHA-sized KV).
     fn kv_config(&self, cfg: &LlamaConfig) -> LlamaConfig {
@@ -133,13 +364,24 @@ impl EngineSpec {
     }
 
     /// Deployment plan: smallest TP group that fits, with the engine's
-    /// memory budget, or None (the Fig. 6 OOM cells).
+    /// memory budget, or None (the Fig. 6 OOM cells).  Weights are priced
+    /// at the engine's weight precision (plus the draft-model surcharge
+    /// when speculative decoding is on) and the KV pool at its KV
+    /// precision, so quantized variants can fit where fp16 OOMs.
     pub fn plan(&self, plat: &Platform, cfg: &LlamaConfig) -> Option<DeployPlan> {
         let kv_cfg = self.kv_config(cfg);
-        let parallel = min_serving_plan(plat, &kv_cfg, Dtype::Bf16,
-                                        self.gpu_mem_util, self.min_kv_tokens)?;
-        let mem = serve_memory(plat, &kv_cfg, &parallel, Dtype::Bf16, self.gpu_mem_util);
-        Some(DeployPlan { parallel, kv_capacity_tokens: mem.kv_token_capacity })
+        let parallel = min_serving_plan_quant(
+            plat, &kv_cfg, self.weight_precision.dtype(), self.kv_precision.dtype(),
+            self.weight_mem_scale(), self.gpu_mem_util, self.min_kv_tokens)?;
+        let mem = serve_memory_quant(plat, &kv_cfg, &parallel, self.weight_precision.dtype(),
+                                     self.kv_precision.dtype(), self.weight_mem_scale(),
+                                     self.gpu_mem_util);
+        Some(DeployPlan {
+            parallel,
+            kv_capacity_tokens: mem.kv_token_capacity,
+            weight_precision: self.weight_precision,
+            kv_precision: self.kv_precision,
+        })
     }
 
     /// Deployment forced onto a specific TP degree (the autotuner's
@@ -153,20 +395,33 @@ impl EngineSpec {
         }
         let kv_cfg = self.kv_config(cfg);
         let parallel = ParallelPlan::tensor_parallel(tp);
-        let mem = serve_memory(plat, &kv_cfg, &parallel, Dtype::Bf16, self.gpu_mem_util);
+        let mem = serve_memory_quant(plat, &kv_cfg, &parallel, self.weight_precision.dtype(),
+                                     self.kv_precision.dtype(), self.weight_mem_scale(),
+                                     self.gpu_mem_util);
         (mem.kv_pool_per_gpu > 0.0 && mem.kv_token_capacity >= self.min_kv_tokens)
-            .then_some(DeployPlan { parallel, kv_capacity_tokens: mem.kv_token_capacity })
+            .then_some(DeployPlan {
+                parallel,
+                kv_capacity_tokens: mem.kv_token_capacity,
+                weight_precision: self.weight_precision,
+                kv_precision: self.kv_precision,
+            })
     }
 }
 
 /// Resolved deployment: a (TP-only) `ParallelPlan` + whole-group KV
-/// token capacity.
+/// token capacity, carrying the storage precisions it was priced at so
+/// every downstream cost kernel (and the shared-cost memo keys) sees
+/// them without extra plumbing.
 #[derive(Debug, Clone, Copy)]
 pub struct DeployPlan {
     /// the TP-only plan the engine deploys on
     pub parallel: ParallelPlan,
     /// whole-group KV pool size, tokens
     pub kv_capacity_tokens: u64,
+    /// weight-storage precision the deployment was priced at
+    pub weight_precision: WeightPrecision,
+    /// KV-cache storage precision the deployment was priced at
+    pub kv_precision: KvPrecision,
 }
 
 impl DeployPlan {
@@ -235,6 +490,60 @@ mod tests {
         }
         assert!(e.plan_with_tp(&plat, &cfg, 0).is_none());
         assert!(e.plan_with_tp(&plat, &cfg, 16).is_none());
+    }
+
+    #[test]
+    fn variant_names_default_to_bare_engine_names() {
+        for e in EngineSpec::all() {
+            assert_eq!(e.variant_name(), e.name, "fp16 no-spec must keep the bare label");
+        }
+        let q = EngineSpec::vllm()
+            .with_weight_precision(WeightPrecision::Int4)
+            .with_kv_precision(KvPrecision::Int8)
+            .with_spec_decode(SpecDecode { accept_rate: 0.7, lookahead: 4 });
+        assert_eq!(q.variant_name(), "vLLM[w4+kv8+sd0.70:4]");
+        assert_eq!(EngineSpec::vllm().with_kv_precision(KvPrecision::Int4).variant_name(),
+                   "vLLM[kv4]");
+    }
+
+    #[test]
+    fn spec_decode_parse_and_expected_tokens() {
+        let s = SpecDecode::parse("0.7:4").unwrap();
+        assert!(s.enabled());
+        let e = s.expected_tokens_per_step();
+        assert!((e - (1.0 - 0.7f64.powi(4)) / 0.3).abs() < 1e-12);
+        assert!(e > 1.0 && e < 4.0);
+        // disabled spellings execute the vanilla per-token expression
+        for off in ["0:1", "0:4", "0.7:1"] {
+            let s = SpecDecode::parse(off).unwrap();
+            assert!(!s.enabled(), "{off}");
+            assert_eq!(s.per_token_time(0.012, 0.003).to_bits(), (0.012 + 0.003f64).to_bits());
+        }
+        // a→1 limit commits the whole lookahead
+        assert_eq!(SpecDecode { accept_rate: 1.0, lookahead: 4 }.expected_tokens_per_step(), 4.0);
+        assert!(SpecDecode::parse("1.5:4").is_none());
+        assert!(SpecDecode::parse("0.5").is_none());
+        assert!(SpecDecode::parse("0.5:0").is_none());
+    }
+
+    #[test]
+    fn quantized_plans_fit_where_fp16_ooms_and_grow_kv() {
+        // 13B fp16 needs TP2 on 24 GB; INT4 weights deploy on one GPU
+        let plat = Platform::get(PlatformId::Rtx3090Nvl);
+        let cfg = LlamaConfig::llama2_13b();
+        let e = EngineSpec::vllm();
+        assert!(e.plan(&plat, &cfg).unwrap().tp() >= 2);
+        let q = e.clone().with_weight_precision(WeightPrecision::Int4);
+        assert_eq!(q.plan(&plat, &cfg).unwrap().tp(), 1);
+        // KV8 strictly increases capacity at the same TP degree
+        let tp2 = e.plan_with_tp(&plat, &cfg, 2).unwrap();
+        let kv8 = e.clone().with_kv_precision(KvPrecision::Int8)
+            .plan_with_tp(&plat, &cfg, 2).unwrap();
+        assert!(kv8.kv_capacity_tokens > tp2.kv_capacity_tokens);
+        // the draft model's weight surcharge shrinks the pool
+        let sd = e.clone().with_spec_decode(SpecDecode { accept_rate: 0.7, lookahead: 4 })
+            .plan_with_tp(&plat, &cfg, 2).unwrap();
+        assert!(sd.kv_capacity_tokens < tp2.kv_capacity_tokens);
     }
 
     #[test]

@@ -79,6 +79,14 @@ impl PagedKvCache {
         self.seqs.len()
     }
 
+    /// Bytes the allocated blocks pin at `bytes_per_token` storage cost.
+    /// Sub-byte entry sizes (quantized KV: INT4 stores 0.5 B/element)
+    /// are rounded *up* to the next whole byte so byte accounting never
+    /// under-reports a reservation.
+    pub fn reserved_bytes(&self, bytes_per_token: f64) -> u64 {
+        ((self.used_blocks() * self.block_tokens) as f64 * bytes_per_token).ceil() as u64
+    }
+
     /// Internal fragmentation in tokens given per-seq true token counts.
     pub fn waste(&self, true_tokens: &HashMap<u64, u64>) -> u64 {
         self.seqs
@@ -152,5 +160,24 @@ mod tests {
         let mut kv = PagedKvCache::new(1024, 16);
         assert!(kv.admit(1, 10));
         assert!(!kv.admit(1, 10));
+    }
+
+    #[test]
+    fn reserved_bytes_rounds_up_under_sub_byte_entries() {
+        let mut kv = PagedKvCache::new(1024, 16);
+        assert!(kv.admit(1, 17)); // 2 blocks = 32 tokens
+        // INT4 KV: 0.5 B per token-element — a fractional total must
+        // round *up*, never truncate away reserved bytes
+        assert_eq!(kv.reserved_bytes(0.5), 16);
+        assert_eq!(kv.reserved_bytes(2.5), 80);
+        assert_eq!(kv.reserved_bytes(0.3), (32.0f64 * 0.3).ceil() as u64);
+        // quantized reservations never exceed the fp16 reservation
+        assert!(kv.reserved_bytes(0.5) <= kv.reserved_bytes(2.0));
+        assert!(kv.reserved_bytes(1.0) <= kv.reserved_bytes(2.0));
+        // release returns every byte (idempotent, exact zero)
+        kv.release(1);
+        kv.release(1);
+        assert_eq!(kv.reserved_bytes(0.5), 0);
+        assert_eq!(kv.free_tokens(), 1024 / 16 * 16);
     }
 }

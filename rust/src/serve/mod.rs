@@ -24,7 +24,10 @@ pub use cluster::{
     dispatch, simulate_cluster, simulate_cluster_shared, Balancer, ClusterResult, ClusterSpec,
     ReplicaStats,
 };
-pub use engine::{DeployPlan, EngineSpec, KvPolicy};
+pub use engine::{
+    DeployPlan, EngineSpec, KvPolicy, KvPrecision, SpecDecode, WeightPrecision,
+    DRAFT_COST_FRAC, DRAFT_MEM_FRAC,
+};
 pub use sim::{
     simulate, simulate_requests, simulate_requests_on, simulate_requests_shared,
     simulate_workload, SharedCosts, SimResult,

@@ -16,10 +16,10 @@ use crate::comm::Collective;
 use crate::config::{LlamaConfig, ServeWorkload, SloSpec, WorkloadSpec};
 use crate::hw::{Dtype, Platform, Topology};
 use crate::model::breakdown::total as mods_total;
-use crate::model::modules::decode_modules;
+use crate::model::modules::decode_modules_prec;
 use crate::ops::{op_time, Gemm, Op};
 use crate::parallel::{Axis, ParallelPlan, PlanCost};
-use crate::serve::engine::{DeployPlan, EngineSpec, KvPolicy};
+use crate::serve::engine::{DeployPlan, EngineSpec, KvPolicy, KvPrecision, WeightPrecision};
 use crate::serve::kv_cache::PagedKvCache;
 use crate::serve::request::{Completion, Request, RunningSeq};
 use crate::serve::token_kv::TokenKv;
@@ -207,7 +207,11 @@ impl SimResult {
 }
 
 /// Per-GPU decode-iteration compute time under the deployment's TP
-/// group, plus the per-layer activation AllReduces TP requires.
+/// group, plus the per-layer activation AllReduces TP requires.  Weight
+/// GEMMs and the KV-cache scan are priced at the plan's storage
+/// precisions (fp16 plans execute the pre-quantization code path
+/// unchanged); TP activation traffic stays bf16 — weight-only
+/// quantization does not shrink activations.
 pub fn decode_iter_time(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -222,7 +226,8 @@ pub fn decode_iter_time(
     // column/row parallel splits the inner dim)
     let shard = plan.parallel.shard_config(cfg);
     let compute: f64 = mods_total(
-        &decode_modules(&shard, batch, avg_ctx.max(1), false)
+        &decode_modules_prec(&shard, batch, avg_ctx.max(1),
+                             plan.weight_precision.dtype(), plan.kv_precision.bytes())
             .iter()
             .flat_map(|m| m.ops.iter().cloned())
             .map(|op| crate::model::breakdown::ModuleTime {
@@ -248,12 +253,15 @@ pub fn decode_iter_time(
 }
 
 /// Prefill time for `tokens` prompt tokens (batched, fused kernels):
-/// GEMM-dominated forward at M = tokens.
+/// GEMM-dominated forward at M = tokens, weight reads priced at the
+/// plan's weight precision (a bf16 weight dtype reproduces `Gemm::new`
+/// exactly, so fp16 plans are unchanged).
 pub fn prefill_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan, tokens: u64) -> f64 {
     if tokens == 0 {
         return 0.0;
     }
     let par = &plan.parallel;
+    let wdt = plan.weight_precision.dtype();
     let d = cfg.d_model;
     let ff = par.shard_dim(cfg.d_ff);
     let kv = par.shard_dim(cfg.n_kv_heads * cfg.head_dim());
@@ -262,7 +270,7 @@ pub fn prefill_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan, token
     for _ in 0..cfg.n_layers {
         for (n, k) in [(dcol, d), (kv, d), (kv, d), (d, dcol),
                        (ff, d), (ff, d), (d, ff)] {
-            t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, n, k)));
+            t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, n, k).with_weight_dtype(wdt)));
         }
         // fused attention (causal) + norms
         let shape = crate::ops::AttnShape {
@@ -272,7 +280,7 @@ pub fn prefill_time(plat: &Platform, cfg: &LlamaConfig, plan: &DeployPlan, token
         t += op_time(&plat.gpu, &crate::ops::attention::flash_op(&shape, Dtype::Bf16, 128));
         t += op_time(&plat.gpu, &Op::ew((tokens * d) as f64, Dtype::Bf16, 6.0, 2.0));
     }
-    t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, cfg.vocab, d)));
+    t += op_time(&plat.gpu, &Op::Gemm(Gemm::new(tokens, cfg.vocab, d).with_weight_dtype(wdt)));
     let comm = if plan.tp() > 1 {
         let topo = Topology::single_node(plat);
         let cost = PlanCost::new(&plan.parallel, &topo);
@@ -319,9 +327,11 @@ impl IterCostCache {
 /// Cross-simulation memo of the pure per-iteration cost kernels, shared
 /// between the candidates of one autotuner search (`search::memo`).
 ///
-/// Keys carry the `ParallelPlan`'s value identity, so every candidate
-/// (and every bisection probe) that prices the same plan shares one
-/// computation; the engine is deliberately *not* part of the key —
+/// Keys carry the `ParallelPlan`'s value identity plus the plan's
+/// storage precisions (weight + KV dtype), so every candidate (and every
+/// bisection probe) that prices the same quantization variant of a plan
+/// shares one computation while precision variants never collide; the
+/// engine is deliberately *not* part of the key —
 /// [`decode_iter_time`] and [`prefill_time`] are engine-independent (the
 /// per-iteration engine overhead is added separately by the event loop),
 /// so vLLM/TGI/LightLLM candidates on the same plan all hit the same
@@ -336,8 +346,8 @@ impl IterCostCache {
 /// racing fills store bit-identical values (the kernels are pure).
 #[derive(Debug, Default)]
 pub struct SharedCosts {
-    decode: Mutex<HashMap<(ParallelPlan, u64, u64), f64>>,
-    prefill: Mutex<HashMap<(ParallelPlan, u64), f64>>,
+    decode: Mutex<HashMap<(ParallelPlan, WeightPrecision, KvPrecision, u64, u64), f64>>,
+    prefill: Mutex<HashMap<(ParallelPlan, WeightPrecision, u64), f64>>,
     lookups: AtomicU64,
 }
 
@@ -356,11 +366,11 @@ impl SharedCosts {
         avg_ctx: u64,
     ) -> f64 {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let key = (plan.parallel, batch, avg_ctx / 32);
+        let key = (plan.parallel, plan.weight_precision, plan.kv_precision, batch, avg_ctx / 32);
         if let Some(&t) = self.decode.lock().unwrap().get(&key) {
             return t;
         }
-        let t = decode_iter_time(plat, cfg, plan, batch, (key.2 * 32).max(1));
+        let t = decode_iter_time(plat, cfg, plan, batch, (key.4 * 32).max(1));
         self.decode.lock().unwrap().insert(key, t);
         t
     }
@@ -373,7 +383,7 @@ impl SharedCosts {
         tokens: u64,
     ) -> f64 {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let key = (plan.parallel, tokens);
+        let key = (plan.parallel, plan.weight_precision, tokens);
         if let Some(&t) = self.prefill.lock().unwrap().get(&key) {
             return t;
         }
@@ -620,7 +630,9 @@ fn run_event_loop(
         // ---- one decode iteration over the running batch
         let batch = running.len() as u64;
         let avg_ctx = (running.iter().map(|s| s.context()).sum::<u64>() / batch).max(1);
-        let t = decode_cost(batch, avg_ctx) + engine.effective_overhead();
+        let t = engine
+            .spec_decode
+            .per_token_time(decode_cost(batch, avg_ctx), engine.effective_overhead());
         clock += t;
         decode_iters += 1;
         iter_time_sum += t;

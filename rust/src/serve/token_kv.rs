@@ -61,6 +61,14 @@ impl TokenKv {
     pub fn waste(&self) -> u64 {
         0
     }
+
+    /// Bytes the admitted tokens pin at `bytes_per_token` storage cost.
+    /// Sub-byte entry sizes (quantized KV: INT4 stores 0.5 B/element)
+    /// are rounded *up* to the next whole byte so byte accounting never
+    /// under-reports a reservation.
+    pub fn reserved_bytes(&self, bytes_per_token: f64) -> u64 {
+        (self.used as f64 * bytes_per_token).ceil() as u64
+    }
 }
 
 #[cfg(test)]
@@ -103,5 +111,22 @@ mod tests {
             }
         }
         assert!(n_tok > n_paged, "token {n_tok} !> paged {n_paged}");
+    }
+
+    #[test]
+    fn reserved_bytes_rounds_up_under_sub_byte_entries() {
+        let mut kv = TokenKv::new(1000);
+        assert!(kv.admit(1, 33)); // odd token count × 0.5 B is fractional
+        assert_eq!(kv.reserved_bytes(0.5), 17); // ceil(16.5), not 16
+        assert_eq!(kv.reserved_bytes(2.0), 66);
+        // quantized reserve never exceeds the fp16 reserve for any pool
+        assert!(kv.reserved_bytes(0.5) <= kv.reserved_bytes(2.0));
+        // growth then idempotent release: saturates back to exact zero
+        assert!(kv.append_token(1, 34));
+        assert_eq!(kv.reserved_bytes(0.5), 17);
+        kv.release(1);
+        kv.release(1);
+        assert_eq!(kv.reserved_bytes(0.5), 0);
+        assert_eq!(kv.free_tokens(), 1000);
     }
 }

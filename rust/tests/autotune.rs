@@ -11,10 +11,12 @@ use llm_perf_lab::memory::check_fit;
 use llm_perf_lab::memory::Fit;
 use llm_perf_lab::report::parallel::sweep_plans;
 use llm_perf_lab::search::{
-    autotune_serve, autotune_train, dominates, serve_space, train_space, ReplicaSpace,
-    SearchBudget, TrainStack,
+    autotune_serve, autotune_train, dominates, expand_engine_variants, serve_space, train_space,
+    ReplicaSpace, SearchBudget, TrainStack,
 };
-use llm_perf_lab::serve::{simulate_requests_on, EngineSpec};
+use llm_perf_lab::serve::{
+    simulate_requests_on, EngineSpec, KvPrecision, SpecDecode, WeightPrecision,
+};
 
 fn budget() -> SearchBudget {
     SearchBudget::default()
@@ -181,6 +183,45 @@ fn autotune_serve_min_gpu_point_meets_slo_end_to_end() {
     for e in search.frontier_evals() {
         assert!(e.gpus >= min.gpus);
     }
+}
+
+/// The widened precision × spec-decode serving space obeys the same
+/// pruned-never-costed invariant as the base space: every enumerated
+/// variant is either costed or pruned-with-a-reason, variant names never
+/// collide with their fp16 baselines, and the quantized/spec variants
+/// really reach the costing stage.
+#[test]
+fn widened_precision_space_candidates_are_costed_or_pruned() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let engines = expand_engine_variants(
+        &[EngineSpec::vllm()],
+        &[WeightPrecision::Fp16, WeightPrecision::Int4],
+        &[KvPrecision::Fp16],
+        &[SpecDecode::off(), SpecDecode { accept_rate: 0.7, lookahead: 4 }],
+    );
+    assert_eq!(engines.len(), 4, "2 weight × 1 kv × 2 spec variants");
+    let names: Vec<String> = engines.iter().map(|e| e.variant_name()).collect();
+    let unique: std::collections::HashSet<&String> = names.iter().collect();
+    assert_eq!(unique.len(), names.len(), "variant names must be distinct: {names:?}");
+    let base = WorkloadSpec::new(40).seed(7);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let search = autotune_serve(&plat, &cfg, &engines, &base, &slo, Some(2.0), (0.5, 16.0),
+                                ReplicaSpace::default(),
+                                SearchBudget { max_costed: usize::MAX, early_prune: false })
+        .unwrap();
+    assert_eq!(search.stats.enumerated,
+               search.stats.costed + search.stats.pruned_infeasible + search.stats.skipped);
+    let costed: Vec<String> = search.evals.iter().map(|e| e.cand.label()).collect();
+    for p in &search.pruned {
+        assert!(!p.reason.is_empty(), "{}", p.label);
+        assert!(!costed.contains(&p.label), "pruned {} was costed", p.label);
+    }
+    // the widened axes actually reached the costing stage under their
+    // suffixed labels — nothing silently folded into the fp16 baseline
+    assert!(costed.iter().any(|l| l.contains("[w4")), "{costed:?}");
+    assert!(costed.iter().any(|l| l.contains("sd0.70:4")), "{costed:?}");
+    assert!(costed.iter().any(|l| l.starts_with("vLLM TP")), "{costed:?}");
 }
 
 /// The serving frontier is a real trade-off curve when the SLO knee

@@ -1,0 +1,220 @@
+//! Equivalence/invariant harness for the quantized-serving + speculative-
+//! decoding axes (ISSUE 8): explicit fp16/fp16/no-spec engines are
+//! bit-for-bit the stock engines across every simulation path, disabled
+//! spec-decode spellings are bit-for-bit vanilla, KV quantization grows
+//! capacity without ever shrinking SLO capacity, precision variants never
+//! collide in the shared cost tables, and on a 24 GB card the widened
+//! autotune-serve space finds a quantized deployment that meets the SLO
+//! with strictly fewer GPUs than the best fp16 point.
+
+use llm_perf_lab::config::{Arrival, LlamaConfig, SloSpec, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::report::load::max_qps_under_slo_on;
+use llm_perf_lab::search::{autotune_serve, expand_engine_variants, ReplicaSpace, SearchBudget};
+use llm_perf_lab::serve::{
+    simulate_cluster, simulate_requests, simulate_requests_on, simulate_requests_shared, Balancer,
+    ClusterSpec, EngineSpec, KvPrecision, SharedCosts, SimResult, SpecDecode, WeightPrecision,
+};
+
+/// Bit-level signature of a simulation: makespan, iteration counts, and
+/// every completion's (id, ttft, latency) down to the f64 bit pattern.
+fn sim_sig(r: &SimResult) -> (u64, u64, u64, u64, Vec<(u64, u64, u64)>) {
+    (
+        r.makespan.to_bits(),
+        r.decode_iters,
+        r.prefill_iters,
+        r.preemptions,
+        r.completions.iter().map(|c| (c.id, c.ttft.to_bits(), c.latency.to_bits())).collect(),
+    )
+}
+
+/// Tentpole equivalence: an engine explicitly configured to fp16 weights,
+/// fp16 KV, and no speculative decoding is bit-for-bit the stock engine —
+/// same variant name, same plan, same event-loop trajectory — for every
+/// modeled engine.
+#[test]
+fn explicit_fp16_no_spec_is_bit_identical_to_stock_engines() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let reqs = WorkloadSpec::new(40).seed(7).generate().unwrap();
+    for stock in EngineSpec::all() {
+        let explicit = stock
+            .clone()
+            .with_weight_precision(WeightPrecision::Fp16)
+            .with_kv_precision(KvPrecision::Fp16)
+            .with_spec_decode(SpecDecode::off());
+        assert_eq!(explicit.variant_name(), stock.name, "fp16 defaults must not rename");
+        let sp = stock.plan(&plat, &cfg).unwrap();
+        let ep = explicit.plan(&plat, &cfg).unwrap();
+        assert_eq!(sp.kv_capacity_tokens, ep.kv_capacity_tokens, "{}", stock.name);
+        assert_eq!(sp.tp(), ep.tp(), "{}", stock.name);
+        let a = simulate_requests(&plat, &cfg, &stock, &reqs).unwrap();
+        let b = simulate_requests(&plat, &cfg, &explicit, &reqs).unwrap();
+        assert_eq!(sim_sig(&a), sim_sig(&b), "{}", stock.name);
+    }
+}
+
+/// Both "off" spellings of speculative decoding — zero acceptance and a
+/// lookahead of one — replay bit-for-bit as the vanilla engine through
+/// the single-box event loop and the replica-cluster path.
+#[test]
+fn disabled_spec_spellings_match_vanilla_across_sim_and_cluster() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let engine = EngineSpec::vllm();
+    let reqs = WorkloadSpec::new(48)
+        .seed(11)
+        .arrival(Arrival::Poisson { qps: 4.0 })
+        .generate()
+        .unwrap();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let vanilla = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+    let cluster = ClusterSpec::new(2, plan, Balancer::RoundRobin);
+    let cvanilla = simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
+    for spelled in [
+        SpecDecode { accept_rate: 0.0, lookahead: 8 },
+        SpecDecode { accept_rate: 0.6, lookahead: 1 },
+    ] {
+        assert!(!spelled.enabled());
+        let off = engine.clone().with_spec_decode(spelled);
+        let r = simulate_requests_on(&plat, &cfg, &off, &plan, &reqs);
+        assert_eq!(sim_sig(&vanilla), sim_sig(&r), "{spelled:?}");
+        let cr = simulate_cluster(&plat, &cfg, &off, &cluster, &reqs);
+        assert_eq!(sim_sig(&cvanilla.merged), sim_sig(&cr.merged), "{spelled:?}");
+    }
+}
+
+/// The shared cost tables key on precision: an fp16 run through a shared
+/// table is bit-identical to the unshared path, quantized variants with
+/// the same parallel shape pull strictly faster (not colliding) entries,
+/// and replaying fp16 through the now-populated table is still identical.
+#[test]
+fn shared_cost_tables_keep_precision_variants_distinct() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let engine = EngineSpec::vllm();
+    let reqs = WorkloadSpec::new(40).seed(7).generate().unwrap();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let costs = SharedCosts::new();
+    let unshared = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+    let shared = simulate_requests_shared(&plat, &cfg, &engine, &plan, &reqs, &costs);
+    assert_eq!(sim_sig(&unshared), sim_sig(&shared));
+    // same parallel shape + same KV capacity, different precision key:
+    // a collision would hand the quantized run fp16 costs (or vice versa)
+    let mut p8 = plan;
+    p8.kv_precision = KvPrecision::Int8;
+    let kv8 = engine.clone().with_kv_precision(KvPrecision::Int8);
+    let r8 = simulate_requests_shared(&plat, &cfg, &kv8, &p8, &reqs, &costs);
+    assert!(r8.makespan < shared.makespan, "INT8 KV must shrink decode reads");
+    let mut p4 = plan;
+    p4.weight_precision = WeightPrecision::Int4;
+    let w4 = engine.clone().with_weight_precision(WeightPrecision::Int4);
+    let r4 = simulate_requests_shared(&plat, &cfg, &w4, &p4, &reqs, &costs);
+    assert!(r4.makespan < shared.makespan, "INT4 weights must shrink GEMM reads");
+    let replay = simulate_requests_shared(&plat, &cfg, &engine, &plan, &reqs, &costs);
+    assert_eq!(sim_sig(&shared), sim_sig(&replay), "fp16 entries survived unclobbered");
+}
+
+/// KV quantization grows the admissible batch (KV pool tokens) strictly
+/// and monotonically with precision, and never shrinks the bisected
+/// max-QPS-under-SLO capacity of the same TP degree.
+#[test]
+fn kv8_grows_max_batch_and_never_shrinks_slo_capacity() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(40).seed(7);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let fp = EngineSpec::vllm();
+    let kv8 = fp.clone().with_kv_precision(KvPrecision::Int8);
+    let kv4 = fp.clone().with_kv_precision(KvPrecision::Int4);
+    let pf = fp.plan_with_tp(&plat, &cfg, 1).unwrap();
+    let p8 = kv8.plan_with_tp(&plat, &cfg, 1).unwrap();
+    let p4 = kv4.plan_with_tp(&plat, &cfg, 1).unwrap();
+    assert!(p8.kv_capacity_tokens > pf.kv_capacity_tokens);
+    assert!(p4.kv_capacity_tokens > p8.kv_capacity_tokens);
+    let qf = max_qps_under_slo_on(&plat, &cfg, &fp, &pf, &base, &slo, 0.5, 16.0).unwrap();
+    let q8 = max_qps_under_slo_on(&plat, &cfg, &kv8, &p8, &base, &slo, 0.5, 16.0).unwrap();
+    assert!(qf.is_some(), "7B TP1 on A800 must have some SLO capacity");
+    assert!(
+        q8.unwrap_or(0.0) >= qf.unwrap_or(0.0),
+        "KV8 capacity {q8:?} < fp16 capacity {qf:?}"
+    );
+}
+
+/// Acceptance-rate speculative decoding is a modeled trade, not a free
+/// win: high acceptance beats vanilla on the same plan, and a draft that
+/// is almost never accepted pays its overhead and loses.
+#[test]
+fn spec_decode_speedup_tracks_acceptance_rate_on_a_fixed_plan() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let engine = EngineSpec::vllm();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(40).seed(7).generate().unwrap();
+    let vanilla = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+    let good = engine.clone().with_spec_decode(SpecDecode { accept_rate: 0.9, lookahead: 4 });
+    let fast = simulate_requests_on(&plat, &cfg, &good, &plan, &reqs);
+    assert_eq!(fast.completions.len(), vanilla.completions.len());
+    assert!(fast.makespan < vanilla.makespan, "90% acceptance must beat vanilla");
+    let bad = engine.clone().with_spec_decode(SpecDecode { accept_rate: 0.1, lookahead: 8 });
+    let slow = simulate_requests_on(&plat, &cfg, &bad, &plan, &reqs);
+    assert!(slow.makespan > vanilla.makespan, "10% acceptance must pay for its draft");
+}
+
+/// ISSUE 8 acceptance: on a 24 GB card where fp16 13B needs TP2, the
+/// widened precision space finds a quantized deployment on the frontier
+/// that meets the same SLO target with strictly fewer GPUs than the best
+/// fp16 point — and the claim replays through the serving event loop.
+#[test]
+fn quantized_frontier_point_beats_best_fp16_on_a_24gb_card() {
+    let plat = Platform::get(PlatformId::Rtx3090Nvl);
+    let cfg = LlamaConfig::llama2_13b();
+    let base = WorkloadSpec::new(40).seed(7);
+    let slo = SloSpec::new(0.9, 10.0, 0.5);
+    let target = 0.25;
+    let fp16 = autotune_serve(
+        &plat,
+        &cfg,
+        &[EngineSpec::vllm()],
+        &base,
+        &slo,
+        Some(target),
+        (0.25, 8.0),
+        ReplicaSpace::default(),
+        SearchBudget { max_costed: usize::MAX, early_prune: false },
+    )
+    .unwrap();
+    let best_fp16 = fp16.min_gpu_point().expect("fp16 13B must deploy at TP2 on 24 GB");
+    assert!(best_fp16.gpus >= 2, "fp16 13B weights cannot fit one 24 GB card");
+    let engines = expand_engine_variants(
+        &[EngineSpec::vllm()],
+        &[WeightPrecision::Fp16, WeightPrecision::Int4],
+        &[KvPrecision::Fp16, KvPrecision::Int8],
+        &[],
+    );
+    let wide = autotune_serve(
+        &plat,
+        &cfg,
+        &engines,
+        &base,
+        &slo,
+        Some(target),
+        (0.25, 8.0),
+        ReplicaSpace::default(),
+        SearchBudget { max_costed: usize::MAX, early_prune: false },
+    )
+    .unwrap();
+    let best = wide.min_gpu_point().expect("the widened space must keep a feasible point");
+    assert!(
+        best.gpus < best_fp16.gpus,
+        "quantized best ({} GPUs) must undercut fp16 best ({} GPUs)",
+        best.gpus,
+        best_fp16.gpus
+    );
+    let name = best.cand.engine.variant_name();
+    assert_ne!(name, "vLLM", "the min-GPU winner must be a quantized variant, got {name}");
+    let reqs =
+        base.clone().arrival(Arrival::Poisson { qps: target }).generate().unwrap();
+    let replay = simulate_requests_on(&plat, &cfg, &best.cand.engine, &best.cand.plan, &reqs);
+    assert!(replay.meets_slo(&slo), "{name} misses the SLO it was selected for");
+}

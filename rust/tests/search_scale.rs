@@ -8,10 +8,10 @@
 use llm_perf_lab::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use llm_perf_lab::hw::{Platform, PlatformId, Topology};
 use llm_perf_lab::search::{
-    autotune_serve_exec, autotune_train_exec, ExecPolicy, ReplicaSpace, SearchBudget,
-    ServeSearch, TrainSearch,
+    autotune_serve_exec, autotune_train_exec, expand_engine_variants, ExecPolicy, ReplicaSpace,
+    SearchBudget, ServeSearch, TrainSearch,
 };
-use llm_perf_lab::serve::{Balancer, EngineSpec};
+use llm_perf_lab::serve::{Balancer, EngineSpec, KvPrecision, SpecDecode, WeightPrecision};
 
 fn train_sig(s: &TrainSearch) -> Vec<(String, u64, u64)> {
     s.evals
@@ -118,6 +118,41 @@ fn staged_search_reproduces_exhaustive_min_gpu_point() {
     // accounting: everything enumerated is pruned, costed, or skipped
     assert_eq!(staged.stats.enumerated,
                staged.stats.pruned_infeasible + staged.stats.costed + staged.stats.skipped);
+}
+
+/// The determinism and staged-fidelity contracts extend to the widened
+/// precision × spec-decode space: evals, frontier, and memo counters are
+/// bit-identical across worker counts, and the staged pipeline reports
+/// the exhaustive search's min-GPU point over the same widened space.
+#[test]
+fn widened_space_search_is_bit_identical_and_staged_matches_exhaustive() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(40).seed(7);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let engines = expand_engine_variants(
+        &[EngineSpec::vllm()],
+        &[WeightPrecision::Fp16, WeightPrecision::Int4],
+        &[KvPrecision::Fp16, KvPrecision::Int8],
+        &[SpecDecode::off(), SpecDecode { accept_rate: 0.7, lookahead: 4 }],
+    );
+    assert_eq!(engines.len(), 8, "2 weight × 2 kv × 2 spec variants");
+    let run = |jobs, staged, budget| {
+        autotune_serve_exec(&plat, &cfg, &engines, &base, &slo, Some(2.0), (0.5, 512.0),
+                            ReplicaSpace::default(), budget, ExecPolicy { jobs, staged })
+            .unwrap()
+    };
+    let seq = run(1, false, SearchBudget { max_costed: usize::MAX, early_prune: false });
+    assert!(!seq.frontier.is_empty(), "widened 7B space must stay servable");
+    let par = run(8, false, SearchBudget { max_costed: usize::MAX, early_prune: false });
+    assert_eq!(serve_sig(&seq), serve_sig(&par), "evals differ at jobs=8");
+    assert_eq!(seq.frontier, par.frontier, "frontier differs at jobs=8");
+    assert_eq!(stats_sig(&seq.stats), stats_sig(&par.stats), "stats differ at jobs=8");
+    let staged = run(4, true, SearchBudget::default());
+    let (e, s) = (seq.min_gpu_point().unwrap(), staged.min_gpu_point().unwrap());
+    assert_eq!(e.cand.label(), s.cand.label());
+    assert_eq!(e.gpus, s.gpus);
+    assert_eq!(e.max_qps.map(f64::to_bits), s.max_qps.map(f64::to_bits));
 }
 
 /// Acceptance: same fidelity on the multi-replica cluster space from
