@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""CI perf tracking: run five pinned llmperf scenarios, record wall
+"""CI perf tracking: run six pinned llmperf scenarios, record wall
 time plus key model outputs into BENCH_ci.json, and warn (never fail) on
 >10% regression against the committed baseline.
 
@@ -13,6 +13,14 @@ guarantee), and warns when the speedup drops below 5x or the hit rate
 below 50%.  The fifth pair widens the space along the quantization /
 speculative-decoding axes (--weight-bits/--kv-bits/--spec) and adds a
 sweep-load capacity probe for the INT4-vs-fp16 capacity ratio.
+
+The sixth scenario is also a pair, but for the observability layer: the
+same seeded sim-cluster replay run untraced and with
+--trace-out/--metrics-out, recording trace_overhead_ratio = traced /
+untraced wall-clock (lower is better; the untraced run is the tracked
+wall_s and the null baseline entry).  It hard-fails if the two runs'
+summary output differs — tracing must be a pure observer — and warns
+when the overhead ratio climbs past 1.5x.
 
 Schema of BENCH_ci.json (documented in DESIGN.md §CI perf tracking):
 
@@ -149,6 +157,23 @@ QUANT_SCENARIO = {
         "max_qps_at_min_gpu": r"max ([0-9.]+) QPS",
         "candidates": r"([0-9]+) enumerated",
     },
+}
+
+# The sixth scenario: trace-export overhead on a seeded cluster replay.
+# Run once untraced (the null baseline / tracked wall_s) and once with
+# both observability exports; the ratio of the two wall clocks is the
+# cost of the tracing layer.  More requests than the CI smoke so the
+# event loop dominates process startup.
+TRACE_SCENARIO = {
+    "name": "trace-overhead-cluster-7b-a800",
+    "argv": [
+        "sim-cluster", "--model", "7b", "--platform", "a800", "--engine", "vllm",
+        "--replicas", "2", "--balancer", "jsq",
+        "--arrival", "poisson:4", "--requests", "300", "--seed", "42",
+    ],
+    "trace_extra": [
+        "--trace-out", "bench.trace.json", "--metrics-out", "bench.metrics.json",
+    ],
 }
 
 TOLERANCE = 0.10  # warn beyond ±10%
@@ -292,6 +317,55 @@ def run_quant_paired(binary, scenario):
     return res
 
 
+def run_trace_paired(binary, scenario):
+    """Run the pinned cluster replay untraced and with both observability
+    exports; record the traced-over-untraced wall-clock ratio.  The
+    summary output of the two runs must be identical modulo the `wrote
+    ...` confirmation lines — the tracing layer's pure-observer contract,
+    enforced here at the CLI level on top of the bit-for-bit unit tests."""
+    def timed(argv):
+        t0 = time.monotonic()
+        proc = subprocess.run([binary] + argv, capture_output=True, text=True, timeout=1800)
+        wall = time.monotonic() - t0
+        if proc.returncode != 0:
+            sys.stderr.write(proc.stdout + proc.stderr)
+            raise RuntimeError(f"{scenario['name']}: exit {proc.returncode}")
+        return wall, proc.stdout
+
+    try:
+        plain_wall, plain_out = timed(scenario["argv"])
+        traced_wall, traced_out = timed(scenario["argv"] + scenario["trace_extra"])
+    finally:
+        for path in scenario["trace_extra"][1::2]:
+            if os.path.exists(path):
+                os.remove(path)
+
+    traced_summary = "\n".join(
+        line for line in traced_out.splitlines() if not line.startswith("wrote ")
+    )
+    if traced_summary != plain_out.rstrip("\n"):
+        sys.stderr.write(plain_out + traced_out)
+        raise RuntimeError(
+            f"{scenario['name']}: traced and untraced summary output differ — "
+            "tracing is no longer a pure observer"
+        )
+    events = re.search(r"wrote Chrome trace \(([0-9]+) event\(s\)\)", traced_out)
+    if not events:
+        sys.stderr.write(traced_out)
+        raise RuntimeError(f"{scenario['name']}: no trace confirmation line")
+
+    ratio = round(traced_wall / max(plain_wall, 1e-9), 3)
+    if ratio > 1.5:
+        warn(f"{scenario['name']}: trace overhead ratio {ratio} above the 1.5x target")
+    metrics = {
+        "trace_overhead_ratio": ratio,
+        "traced_wall_s": round(traced_wall, 3),
+        "trace_events": float(events.group(1)),
+    }
+    return {"name": scenario["name"], "argv": scenario["argv"],
+            "wall_s": round(plain_wall, 3), "metrics": metrics}
+
+
 def warn(msg):
     # GitHub annotation; plain stderr elsewhere
     print(f"::warning title=bench regression::{msg}")
@@ -335,7 +409,8 @@ def main():
         "commit": os.environ.get("GITHUB_SHA", "unknown"),
         "scenarios": [run_scenario(args.binary, s) for s in SCENARIOS]
         + [run_paired(args.binary, PAIRED_SCENARIO),
-           run_quant_paired(args.binary, QUANT_SCENARIO)],
+           run_quant_paired(args.binary, QUANT_SCENARIO),
+           run_trace_paired(args.binary, TRACE_SCENARIO)],
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

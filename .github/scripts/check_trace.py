@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Validate llmperf observability exports in CI.
+
+Usage:
+    check_trace.py trace FILE [--metrics METRICS_FILE]
+    check_trace.py metrics FILE
+
+`trace` checks a `--trace-out` Chrome trace export: every event carries
+the ph/ts/pid/tid schema keys, complete-span durations are non-negative,
+per-request child spans nest inside their `req N` parent, and (with
+--metrics) the number of request spans equals the metrics file's
+`completions` counter — request-id conservation across the two exports
+of the same run.
+
+`metrics` checks a `--metrics-out` export: schema tag, non-negative
+integer counters, bounded monotonic gauge series, and histograms whose
+bucket counts sum to their totals.
+
+Exits non-zero with a message on the first violation (CI fails the
+step); prints a one-line summary on success.
+"""
+
+import argparse
+import json
+import sys
+
+GAUGE_CAP = 4096  # mirrors trace::metrics::GAUGE_CAP
+KNOWN_PHASES = {"X", "i", "M"}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: cannot load JSON: {e}")
+
+
+def check_trace(path, metrics_path=None):
+    doc = load(path)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    req_spans = {}  # (pid, tid) -> (ts, ts+dur) of the `req N` parent
+    children = []  # (pid, tid, ts, end, name) of per-request child spans
+    for i, ev in enumerate(events):
+        for key in ("ph", "ts", "pid", "tid"):
+            if key not in ev:
+                fail(f"{path}: event {i} missing '{key}': {ev}")
+        if ev["ph"] not in KNOWN_PHASES:
+            fail(f"{path}: event {i} has unknown phase {ev['ph']!r}")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            fail(f"{path}: event {i} has bad ts {ev['ts']!r}")
+        if ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                fail(f"{path}: span {i} ({ev.get('name')}) has bad dur")
+            name = ev.get("name", "")
+            lane = (ev["pid"], ev["tid"])
+            if name.startswith("req "):
+                req_spans[lane] = (ev["ts"], ev["ts"] + ev["dur"])
+            elif ev["tid"] != 0:
+                children.append((*lane, ev["ts"], ev["ts"] + ev["dur"], name))
+    if not req_spans:
+        fail(f"{path}: no `req N` request spans found")
+    slack = 1.0  # µs of float rounding headroom
+    for pid, tid, t0, t1, name in children:
+        parent = req_spans.get((pid, tid))
+        if parent is None:
+            fail(f"{path}: child span {name!r} on ({pid}, {tid}) has no req parent")
+        if t0 < parent[0] - slack or t1 > parent[1] + slack:
+            fail(f"{path}: child span {name!r} [{t0}, {t1}] escapes its "
+                 f"req parent [{parent[0]}, {parent[1]}]")
+    if metrics_path is not None:
+        completions = load(metrics_path).get("counters", {}).get("completions")
+        if completions != len(req_spans):
+            fail(f"{path}: {len(req_spans)} request spans but {metrics_path} "
+                 f"counts {completions} completions — request ids not conserved")
+    print(f"check_trace: OK: {path}: {len(events)} events, "
+          f"{len(req_spans)} request spans, "
+          f"{len({e['pid'] for e in events})} lanes")
+
+
+def check_metrics(path):
+    doc = load(path)
+    if doc.get("schema") != "llmperf-metrics/v1":
+        fail(f"{path}: bad schema tag {doc.get('schema')!r}")
+    counters = doc.get("counters")
+    if not isinstance(counters, dict):
+        fail(f"{path}: counters missing")
+    for name, v in counters.items():
+        if not isinstance(v, (int, float)) or v < 0 or v != int(v):
+            fail(f"{path}: counter {name!r} is not a non-negative integer: {v!r}")
+    for g in doc.get("gauges", []):
+        samples = g.get("samples", [])
+        if len(samples) > GAUGE_CAP:
+            fail(f"{path}: gauge {g.get('name')!r} exceeds the {GAUGE_CAP}-sample cap")
+        times = [s[0] for s in samples]
+        if times != sorted(times):
+            fail(f"{path}: gauge {g.get('name')!r} timestamps are not monotonic")
+    for h in doc.get("histograms", []):
+        total = sum(c for _, c in h.get("buckets", []))
+        if total != h.get("count"):
+            fail(f"{path}: histogram {h.get('name')!r} buckets sum to {total}, "
+                 f"count says {h.get('count')}")
+    print(f"check_trace: OK: {path}: {len(counters)} counters, "
+          f"{len(doc.get('gauges', []))} gauge series, "
+          f"{len(doc.get('histograms', []))} histograms")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("mode", choices=["trace", "metrics"])
+    ap.add_argument("file")
+    ap.add_argument("--metrics", default=None,
+                    help="trace mode: companion metrics file for the "
+                         "request-conservation cross-check")
+    args = ap.parse_args()
+    if args.mode == "trace":
+        check_trace(args.file, args.metrics)
+    else:
+        check_metrics(args.file)
+
+
+if __name__ == "__main__":
+    main()

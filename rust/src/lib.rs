@@ -49,6 +49,7 @@ pub mod parallel;
 pub mod report;
 pub mod search;
 pub mod serve;
+pub mod trace;
 pub mod train;
 pub mod util;
 

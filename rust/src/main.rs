@@ -27,9 +27,11 @@ use llm_perf_lab::search::{
     policy_space, ExecPolicy, ReplicaSpace, SearchBudget,
 };
 use llm_perf_lab::serve::{
-    simulate_autoscale, simulate_cluster, simulate_requests, AutoscalePolicy, AutoscaleSpec,
-    Balancer, ClusterSpec, EngineSpec, KvPrecision, SpecDecode, WeightPrecision,
+    simulate_autoscale, simulate_autoscale_traced, simulate_cluster, simulate_cluster_traced,
+    simulate_requests, simulate_requests_on_traced, AutoscalePolicy, AutoscaleSpec, Balancer,
+    ClusterSpec, EngineSpec, KvPrecision, SpecDecode, WeightPrecision,
 };
+use llm_perf_lab::trace::{chrome_trace, MetricsRegistry, TraceBuffer};
 use llm_perf_lab::train::simulate_step;
 use llm_perf_lab::util::error::Result;
 use llm_perf_lab::util::fmt;
@@ -50,22 +52,31 @@ simulators:
                  [--output ...same grammar...] [--trace FILE] [--seed 42]
                  [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
                  [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 [--trace-out FILE] [--metrics-out FILE]
                  one serving cell; open-loop arrivals + length
                  distributions + trace replay (bare --trace FILE = full
-                 replay); reports TTFT/TPOT percentiles and, with
-                 --slo-*, goodput; --weight-bits/--kv-bits quantize the
-                 weight and KV storage, --spec ACCEPT:LOOKAHEAD turns on
-                 speculative decoding at that draft acceptance rate
+                 replay); reports TTFT/TPOT percentiles, batch/KV
+                 occupancy peaks and, with --slo-*, goodput;
+                 --weight-bits/--kv-bits quantize the weight and KV
+                 storage, --spec ACCEPT:LOOKAHEAD turns on speculative
+                 decoding at that draft acceptance rate; --trace-out
+                 writes a Perfetto-loadable Chrome trace of the replay,
+                 --metrics-out a metrics time-series JSON (neither
+                 perturbs the simulation — results are bit-identical)
   sim-cluster    --model 7b --platform a800 --engine vllm --replicas 2
                  [--tp N] [--balancer rr|lo|jsq|all] [--requests 200]
                  [--arrival ...] [--input ...] [--output ...] [--trace FILE]
                  [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
                  [--seed 42] [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 [--trace-out FILE] [--metrics-out FILE]
                  one workload on N identical replicas of a deployment
                  behind a load balancer (round-robin, least-outstanding
                  work, join-shortest-queue; seeded tie-break): merged
                  cluster metrics + per-replica utilization table;
-                 --balancer all prints a per-policy comparison instead
+                 --balancer all prints a per-policy comparison instead;
+                 --trace-out writes a Chrome trace with one process
+                 lane per replica, --metrics-out per-replica gauge
+                 series (batch size, queue depth, KV utilization)
   sim-autoscale  --model 7b --platform a800 --engine vllm [--tp N]
                  [--min-replicas 1] [--max-replicas 4] [--balancer rr|lo|jsq]
                  [--target-util 0.6] [--queue-depth 8] [--interval 15]
@@ -75,6 +86,7 @@ simulators:
                  [--arrival diurnal:BASE:PEAK:PERIOD | ramp:FROM:TO:OVER |
                   spike:BASE:SPIKE:AT:DUR | poisson:QPS | ...]
                  [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 [--trace-out FILE] [--metrics-out FILE]
                  replay time-varying traffic against an autoscaling fleet
                  (target-utilization + queue-depth scale triggers, cold
                  starts, drain-before-retire, and — with --shed-queue —
@@ -84,18 +96,25 @@ simulators:
                  (the baseline is replayed too, so savings are judged at
                  equal-or-better attainment); tenants carry per-class SLOs
                  (--slo-* overrides all of them uniformly); --tune costs a
-                 policy grid instead and prints its attainment x $ frontier
+                 policy grid instead and prints its attainment x $ frontier;
+                 --trace-out writes a Chrome trace of the dynamic run
+                 (replica lifecycle spans, shed/dispatch instants, one
+                 lane per replica slot), --metrics-out the per-tenant
+                 goodput + per-replica gauge time series
   sweep-load     --model 7b --platform a800 --engine vllm [--requests 200]
                  [--qps-min 0.5] [--qps-max 32] [--points 6]
                  [--arrival poisson:1|bursty:QPS:ON_S:OFF_S|trace] [--trace FILE]
                  [--input ...] [--output ...] [--seed 42] [--engines all]
                  [--weight-bits 16,8,4] [--kv-bits 16,8] [--spec 0.7:4,off]
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
+                 [--json FILE]
                  sweep mean offered load over a QPS grid (TTFT/TPOT
                  p50/p90/p99 + goodput per point) and binary-search the
                  max QPS that still meets the SLO; the grid re-arms the
                  base arrival shape (Poisson stays Poisson, bursty keeps
-                 its duty cycle, traces are time-compressed);
+                 its duty cycle, traces are time-compressed); --json
+                 additionally writes the grid + max-QPS answer as a
+                 machine-readable JSON document;
                  --engines all prints one capacity row per engine instead
                  (comma-listed --weight-bits/--kv-bits/--spec expand each
                  engine into quantized / speculative variants so capacity
@@ -586,6 +605,30 @@ fn slo_flags(cli: &Cli) -> Result<Option<SloSpec>> {
     )))
 }
 
+/// True when either observability export flag (`--trace-out` /
+/// `--metrics-out`) was given — the signal to run the traced simulation
+/// variant (bit-identical results, plus a recorded event stream).
+fn wants_trace(cli: &Cli) -> bool {
+    cli.flag("trace-out").is_some() || cli.flag("metrics-out").is_some()
+}
+
+/// Write the `--trace-out` (Chrome trace event format, Perfetto /
+/// chrome://tracing loadable) and/or `--metrics-out` (metrics
+/// time-series JSON) exports from one recorded trace buffer.
+fn write_trace_outputs(cli: &Cli, buf: &TraceBuffer) -> Result<()> {
+    if let Some(path) = cli.flag("trace-out") {
+        std::fs::write(&path, chrome_trace(buf.events()).render())
+            .map_err(|e| err!("cannot write --trace-out {path}: {e}"))?;
+        println!("wrote Chrome trace ({} event(s)) to {path}", buf.len());
+    }
+    if let Some(path) = cli.flag("metrics-out") {
+        std::fs::write(&path, MetricsRegistry::from_events(buf.events()).to_json().render())
+            .map_err(|e| err!("cannot write --metrics-out {path}: {e}"))?;
+        println!("wrote metrics time series to {path}");
+    }
+    Ok(())
+}
+
 /// `llmperf sim-serve` — one serving cell under any workload.
 fn sim_serve(cli: &Cli) -> Result<()> {
     let cfg = model_flag(cli, "7b")?;
@@ -594,7 +637,15 @@ fn sim_serve(cli: &Cli) -> Result<()> {
     let spec = workload_flags(cli, 1000)?;
     let slo = slo_flags(cli)?; // validate before simulating
     let requests = spec.generate()?;
-    match simulate_requests(&plat, &cfg, &engine, &requests) {
+    let mut buf = TraceBuffer::new();
+    let sim = if wants_trace(cli) {
+        engine.plan(&plat, &cfg).map(|plan| {
+            simulate_requests_on_traced(&plat, &cfg, &engine, &plan, &requests, &mut buf)
+        })
+    } else {
+        simulate_requests(&plat, &cfg, &engine, &requests)
+    };
+    match sim {
         None => {
             println!("{} / {} / {}: OOM (cannot deploy)",
                      plat.id.label(), cfg.name, engine.variant_name())
@@ -618,6 +669,8 @@ fn sim_serve(cli: &Cli) -> Result<()> {
                      tpot.p50 * 1e3, tpot.p90 * 1e3, tpot.p99 * 1e3);
             println!("  iters: {} decode / {} prefill, {} preemptions",
                      r.decode_iters, r.prefill_iters, r.preemptions);
+            println!("  batch   mean {:.1} / peak {}, peak KV util {:.1}%",
+                     r.mean_batch, r.peak_batch, r.peak_kv_util * 100.0);
             if let Some(slo) = slo {
                 println!("  SLO {}: {} | goodput {:.0} tokens/s | attainment {:.1}%",
                          slo.describe(),
@@ -626,6 +679,7 @@ fn sim_serve(cli: &Cli) -> Result<()> {
             }
         }
     }
+    write_trace_outputs(cli, &buf)?;
     Ok(())
 }
 
@@ -657,6 +711,10 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
     };
     let bal = cli.flag_or("balancer", "rr");
     if bal == "all" {
+        if wants_trace(cli) {
+            return Err(err!("--trace-out/--metrics-out record one cluster replay — pick a \
+                             single --balancer"));
+        }
         // policy comparison: same cluster shape and workload, one row
         // per balancer (the balancer field of `cluster` is ignored)
         let cluster = ClusterSpec::new(replicas, plan, Balancer::RoundRobin).seed(spec.seed);
@@ -671,7 +729,12 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
         .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq | all)"))?;
     let cluster = ClusterSpec::new(replicas, plan, balancer).seed(spec.seed);
     let reqs = spec.generate()?;
-    let r = simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
+    let mut buf = TraceBuffer::new();
+    let r = if wants_trace(cli) {
+        simulate_cluster_traced(&plat, &cfg, &engine, &cluster, &reqs, &mut buf)
+    } else {
+        simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs)
+    };
     let m = &r.merged;
     println!("{} / {} / {} — {} replica(s) × TP{} = {} GPUs, {} balancer, {} requests \
               ({:?} arrivals)",
@@ -686,6 +749,8 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
     println!("  throughput {:.0} output tokens/s, makespan {:.1}s, \
               utilization skew {:.2}",
              m.throughput(), m.makespan, r.utilization_skew());
+    println!("  batch   mean {:.1} / peak {} per replica, peak KV util {:.1}%",
+             m.mean_batch, m.peak_batch, m.peak_kv_util * 100.0);
     println!("  ttft    p50 {:.2}s  p90 {:.2}s  p99 {:.2}s", ttft.p50, ttft.p90, ttft.p99);
     println!("  tpot    p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
              tpot.p50 * 1e3, tpot.p90 * 1e3, tpot.p99 * 1e3);
@@ -696,6 +761,7 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
                  m.goodput(&slo), m.slo_attainment(&slo) * 100.0);
     }
     println!("{}", report::load::replica_table(&r, &cluster).render());
+    write_trace_outputs(cli, &buf)?;
     Ok(())
 }
 
@@ -748,6 +814,10 @@ fn sim_autoscale(cli: &Cli) -> Result<()> {
     let reqs = spec.generate()?;
 
     if cli.has("tune") {
+        if wants_trace(cli) {
+            return Err(err!("--trace-out/--metrics-out record one fleet replay — they do not \
+                             combine with the --tune policy grid"));
+        }
         let policies = policy_space(policy);
         let (evals, frontier) = autotune_autoscale(&plat, &cfg, &engine, plan, balancer,
                                                    &tenants, spec.seed, &policies, &reqs);
@@ -760,7 +830,14 @@ fn sim_autoscale(cli: &Cli) -> Result<()> {
 
     let aspec =
         AutoscaleSpec { plan, balancer, policy, tenants, seed: spec.seed };
-    let r = simulate_autoscale(&plat, &cfg, &engine, &aspec, &reqs);
+    // the trace records the dynamic run only — the static baseline
+    // replay below is a pricing reference, not part of the timeline
+    let mut buf = TraceBuffer::new();
+    let r = if wants_trace(cli) {
+        simulate_autoscale_traced(&plat, &cfg, &engine, &aspec, &reqs, &mut buf)
+    } else {
+        simulate_autoscale(&plat, &cfg, &engine, &aspec, &reqs)
+    };
     println!("{} / {} / {} — {} fleet × TP{}, {} balancer, {} tenant(s), {} requests \
               ({:?} arrivals)",
              plat.id.label(), cfg.name, engine.name, policy.label(), plan.tp(),
@@ -785,6 +862,7 @@ fn sim_autoscale(cli: &Cli) -> Result<()> {
     println!("{}", report::autoscale::timeline_table(&r).render());
     println!("{}", report::autoscale::tenant_table(&r).render());
     println!("{}", report::autoscale::lives_table(&r).render());
+    write_trace_outputs(cli, &buf)?;
     Ok(())
 }
 
@@ -805,6 +883,10 @@ fn sweep_load(cli: &Cli) -> Result<()> {
         if cli.flag("engine").is_some() {
             return Err(err!("--engines and --engine conflict — pass one of them"));
         }
+        if cli.flag("json").is_some() {
+            return Err(err!("--json exports the single-engine QPS grid — it does not combine \
+                             with --engines"));
+        }
         if cli.flag("points").is_some() {
             return Err(err!("--points has no effect with --engines (the capacity table \
                              bisects, it does not grid)"));
@@ -823,13 +905,21 @@ fn sweep_load(cli: &Cli) -> Result<()> {
     }
     let grid = report::load::qps_grid(lo, hi, cli.flag_u64("points", 6) as usize);
     println!("{}", report::load::sweep_load(&plat, &cfg, &engine, &base, &grid, &slo)?.render());
-    match report::load::max_qps_under_slo(&plat, &cfg, &engine, &base, &slo, lo, hi)? {
+    let max_qps = report::load::max_qps_under_slo(&plat, &cfg, &engine, &base, &slo, lo, hi)?;
+    match max_qps {
         None => println!("SLO {} is missed even at {lo:.2} QPS — lower the load \
                           range or relax the SLO", slo.describe()),
         Some(q) if q >= hi => println!("max QPS under SLO ({}) >= {hi:.2} — the \
                                         deployment is not the bottleneck in this range",
                                        slo.describe()),
         Some(q) => println!("max QPS under SLO ({}) ~= {q:.2}", slo.describe()),
+    }
+    if let Some(path) = cli.flag("json") {
+        let doc = report::load::sweep_load_json(&plat, &cfg, &engine, &base, &grid, &slo,
+                                                max_qps, (lo, hi))?;
+        std::fs::write(&path, doc.render())
+            .map_err(|e| err!("cannot write --json {path}: {e}"))?;
+        println!("wrote sweep JSON to {path}");
     }
     Ok(())
 }
@@ -955,6 +1045,9 @@ fn autotune_serve_cmd(cli: &Cli) -> Result<()> {
     println!("{}",
              report::search::exec_summary_line(&search.stats, policy.effective_jobs(),
                                                policy.staged));
+    for line in report::search::funnel_lines(&search.stats, policy.staged) {
+        println!("{line}");
+    }
     if cli.has("show-pruned") && !search.pruned.is_empty() {
         println!("{}",
                  report::search::pruned_table("Pruned before costing", &search.pruned).render());

@@ -18,6 +18,7 @@ use crate::serve::{
     Balancer, ClusterResult, ClusterSpec, DeployPlan, EngineSpec, SharedCosts, SimResult,
 };
 use crate::util::error::Result;
+use crate::util::json::Json;
 use crate::util::table::{f0, f1, f2, oom, Table};
 
 /// A geometric QPS grid from `lo` to `hi` with `n >= 2` points.
@@ -103,6 +104,68 @@ pub fn sweep_load(
         }
     }
     Ok(t)
+}
+
+/// Machine-readable companion to [`sweep_load`] (`llmperf sweep-load
+/// --json FILE`): the same probed grid as a JSON document — schema
+/// `llmperf-sweep-load/v1` — plus the caller's bisected max QPS under
+/// the SLO (`None` renders as JSON `null`: even the bracket floor
+/// missed), so downstream tooling ingests capacity curves without
+/// scraping the table.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_load_json(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    base: &WorkloadSpec,
+    grid: &[f64],
+    slo: &SloSpec,
+    max_qps: Option<f64>,
+    bracket: (f64, f64),
+) -> Result<Json> {
+    let plan = engine.plan(plat, cfg);
+    let mut rows = Vec::new();
+    for &qps in grid {
+        rows.push(match &plan {
+            Some(p) => {
+                let r = probe(plat, cfg, engine, p, base, qps)?;
+                let (ttft, tpot) = (r.ttft_summary(), r.tpot_summary());
+                let pct = |s: crate::util::stats::PctSummary| {
+                    Json::Obj(vec![
+                        ("p50".into(), Json::Num(s.p50)),
+                        ("p90".into(), Json::Num(s.p90)),
+                        ("p99".into(), Json::Num(s.p99)),
+                    ])
+                };
+                Json::Obj(vec![
+                    ("qps".into(), Json::Num(qps)),
+                    ("tok_s".into(), Json::Num(r.throughput())),
+                    ("goodput_tok_s".into(), Json::Num(r.goodput(slo))),
+                    ("ttft_s".into(), pct(ttft)),
+                    ("tpot_s".into(), pct(tpot)),
+                    ("peak_kv_util".into(), Json::Num(r.peak_kv_util)),
+                    ("mean_batch".into(), Json::Num(r.mean_batch)),
+                    ("peak_batch".into(), Json::Num(r.peak_batch as f64)),
+                    ("meets_slo".into(), Json::Bool(r.meets_slo(slo))),
+                ])
+            }
+            None => Json::Obj(vec![
+                ("qps".into(), Json::Num(qps)),
+                ("oom".into(), Json::Bool(true)),
+            ]),
+        });
+    }
+    Ok(Json::Obj(vec![
+        ("schema".into(), Json::Str("llmperf-sweep-load/v1".into())),
+        ("platform".into(), Json::Str(plat.id.label().into())),
+        ("model".into(), Json::Str(cfg.name.into())),
+        ("engine".into(), Json::Str(engine.variant_name())),
+        ("slo".into(), Json::Str(slo.describe())),
+        ("n_requests".into(), Json::Num(base.n_requests as f64)),
+        ("bracket_qps".into(), Json::Arr(vec![Json::Num(bracket.0), Json::Num(bracket.1)])),
+        ("max_qps_under_slo".into(), max_qps.map_or(Json::Null, Json::Num)),
+        ("grid".into(), Json::Arr(rows)),
+    ]))
 }
 
 /// The bisection core over any probe (single deployment or replica
@@ -448,6 +511,32 @@ mod tests {
         let t = sweep_load(&plat, &cfg, &EngineSpec::vllm(), &base, &[0.5, 2.0], &slo).unwrap();
         assert_eq!(t.n_rows(), 2);
         assert!(t.title.contains("bursty"), "{}", t.title);
+    }
+
+    #[test]
+    fn sweep_load_json_round_trips_schema_and_max_qps() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let doc = sweep_load_json(&plat, &cfg, &EngineSpec::vllm(), &base, &[0.5, 4.0], &slo,
+                                  Some(4.0), (0.5, 4.0))
+            .unwrap();
+        let parsed = Json::parse(&doc.render()).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("llmperf-sweep-load/v1"));
+        let grid = parsed.get("grid").and_then(Json::as_arr).unwrap();
+        assert_eq!(grid.len(), 2);
+        assert!(grid[0].get("ttft_s").and_then(|t| t.get("p50")).and_then(Json::as_f64).is_some());
+        assert!(grid[0].get("peak_kv_util").and_then(Json::as_f64).is_some());
+        assert_eq!(parsed.get("max_qps_under_slo").and_then(Json::as_f64), Some(4.0));
+        // OOM deployments degrade to `oom` rows and a null max QPS
+        let doc2 = sweep_load_json(&Platform::get(PlatformId::Rtx4090),
+                                   &LlamaConfig::llama2_70b(), &EngineSpec::tgi(), &base,
+                                   &[1.0], &slo, None, (0.5, 4.0))
+            .unwrap();
+        assert!(matches!(doc2.get("max_qps_under_slo"), Some(Json::Null)));
+        let oom_row = &doc2.get("grid").and_then(Json::as_arr).unwrap()[0];
+        assert!(matches!(oom_row.get("oom"), Some(Json::Bool(true))));
     }
 
     #[test]

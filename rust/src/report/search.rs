@@ -29,6 +29,49 @@ pub fn exec_summary_line(stats: &SearchStats, jobs: usize, staged: bool) -> Stri
     )
 }
 
+/// Candidate-funnel + per-stage wall-clock lines printed under the
+/// exec summary (`llmperf autotune-serve`): how the space narrowed
+/// through the staged pipeline (enumerated → pruned → screened →
+/// quarter-sim → full-bisect) and where the search spent its
+/// wall-clock.  Exhaustive runs collapse to a two-hop funnel and a
+/// single wall figure.
+pub fn funnel_lines(stats: &SearchStats, staged: bool) -> Vec<String> {
+    if staged && stats.stage_screened > 0 {
+        vec![
+            format!(
+                "funnel: {} enumerated → {} pruned infeasible → {} screened → {} quarter-sim \
+                 → {} full-bisect",
+                stats.enumerated,
+                stats.pruned_infeasible,
+                stats.stage_screened,
+                stats.stage_quarter,
+                stats.stage_full
+            ),
+            format!(
+                "stage wall-clock: screen {:.3}s · quarter-sim {:.3}s · full-bisect {:.3}s \
+                 · total {:.3}s",
+                stats.stage_wall_s[0], stats.stage_wall_s[1], stats.stage_wall_s[2], stats.wall_s
+            ),
+        ]
+    } else {
+        let wall = if stats.stage_wall_s[2] > 0.0 {
+            format!(
+                "stage wall-clock: full-bisect {:.3}s · total {:.3}s",
+                stats.stage_wall_s[2], stats.wall_s
+            )
+        } else {
+            format!("search wall-clock: total {:.3}s", stats.wall_s)
+        };
+        vec![
+            format!(
+                "funnel: {} enumerated → {} pruned infeasible → {} full-bisect",
+                stats.enumerated, stats.pruned_infeasible, stats.stage_full
+            ),
+            wall,
+        ]
+    }
+}
+
 /// The training frontier: plan + stack + batch per row, with step time,
 /// throughput, per-GPU memory and headroom below the budget.
 pub fn train_frontier_table(
@@ -155,5 +198,35 @@ mod tests {
         assert!(line.contains("2 job(s)") && line.contains("exhaustive"), "{line}");
         let empty = exec_summary_line(&SearchStats::default(), 1, true);
         assert!(empty.contains("0% hit rate") && empty.contains("staged"), "{empty}");
+    }
+
+    #[test]
+    fn funnel_lines_cover_staged_and_exhaustive_shapes() {
+        let stats = SearchStats {
+            enumerated: 40,
+            pruned_infeasible: 10,
+            costed: 12,
+            skipped: 18,
+            stage_screened: 30,
+            stage_quarter: 15,
+            stage_full: 12,
+            stage_wall_s: [0.01, 0.5, 1.5],
+            wall_s: 2.1,
+            ..Default::default()
+        };
+        let lines = funnel_lines(&stats, true);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("40 enumerated") && lines[0].contains("30 screened"), "{}",
+                lines[0]);
+        assert!(lines[0].contains("15 quarter-sim") && lines[0].contains("12 full-bisect"));
+        assert!(lines[1].contains("quarter-sim 0.500s"), "{}", lines[1]);
+        // exhaustive runs (and staged runs on bypassed small spaces)
+        // collapse to the two-hop funnel
+        let ex = funnel_lines(
+            &SearchStats { enumerated: 8, stage_full: 8, wall_s: 0.3, ..Default::default() },
+            false,
+        );
+        assert!(ex[0].contains("8 enumerated") && ex[0].contains("8 full-bisect"), "{}", ex[0]);
+        assert!(ex[1].contains("total 0.300s"), "{}", ex[1]);
     }
 }

@@ -101,6 +101,21 @@ pub struct SearchStats {
     pub memo_hits: usize,
     /// memo-cache misses (distinct cost-table entries computed)
     pub memo_misses: usize,
+    /// staged-pipeline funnel: candidates ranked by the stage-A
+    /// analytic screen (0 on exhaustive runs and bypassed small spaces)
+    pub stage_screened: usize,
+    /// staged-pipeline funnel: survivors bisected against the
+    /// quarter-length workload (stage B)
+    pub stage_quarter: usize,
+    /// candidates fully bisected against the real workload (stage-C
+    /// finalists plus the min-GPU escalation pass; on exhaustive runs,
+    /// every costed candidate)
+    pub stage_full: usize,
+    /// wall-clock seconds per staged stage `[screen, quarter-sim,
+    /// full-bisect]` — observability only, never part of any result
+    pub stage_wall_s: [f64; 3],
+    /// total search wall-clock seconds (enumeration through frontier)
+    pub wall_s: f64,
 }
 
 /// Result of a training search.
@@ -174,6 +189,7 @@ pub fn autotune_train_exec(
     budget: SearchBudget,
     policy: ExecPolicy,
 ) -> TrainSearch {
+    let t_start = std::time::Instant::now();
     let space = train_space(plat, topo, cfg, seq_len, batch_sizes, methods, mem_budget);
     let mut stats = SearchStats {
         enumerated: space.enumerated(),
@@ -188,8 +204,10 @@ pub fn autotune_train_exec(
             eval_train_memo(plat, topo, cfg, cand, mem_budget, Some(&memo.train))
         });
     stats.costed = evals.len();
+    stats.stage_full = evals.len();
     (stats.memo_hits, stats.memo_misses) = memo.counters();
     let frontier = pareto_indices(&evals.iter().map(|e| e.objectives()).collect::<Vec<_>>());
+    stats.wall_s = t_start.elapsed().as_secs_f64();
     TrainSearch { evals, frontier, pruned: space.pruned, stats }
 }
 
@@ -288,6 +306,7 @@ pub fn autotune_serve_exec(
     budget: SearchBudget,
     policy: ExecPolicy,
 ) -> Result<ServeSearch> {
+    let t_start = std::time::Instant::now();
     let space = serve_space(plat, cfg, engines, &replicas);
     let mut stats = SearchStats {
         enumerated: space.enumerated(),
@@ -304,9 +323,13 @@ pub fn autotune_serve_exec(
         // coarse-to-fine: screened-out candidates are "skipped", fully
         // bisected ones are "costed"; the early-prune is subsumed by the
         // pipeline's own cuts.
-        let slots = staged_serve(
+        let (slots, funnel) = staged_serve(
             plat, cfg, cands, base, slo, target_qps, bracket, replicas.balancer, &memo, jobs,
         )?;
+        stats.stage_screened = funnel.screened;
+        stats.stage_quarter = funnel.quarter;
+        stats.stage_full = funnel.full;
+        stats.stage_wall_s = funnel.wall_s;
         for slot in slots {
             match slot {
                 Some(e) => evals.push(e),
@@ -361,6 +384,9 @@ pub fn autotune_serve_exec(
         }
     }
     stats.costed = evals.len();
+    if !policy.staged {
+        stats.stage_full = evals.len();
+    }
     (stats.memo_hits, stats.memo_misses) = memo.counters();
     // frontier over qualifying candidates only; indices stay into
     // `evals`.  Without a target, a candidate still needs *some*
@@ -375,6 +401,7 @@ pub fn autotune_serve_exec(
         .collect();
     let points: Vec<Vec<f64>> = qualifying.iter().map(|&i| evals[i].objectives()).collect();
     let frontier: Vec<usize> = pareto_indices(&points).into_iter().map(|k| qualifying[k]).collect();
+    stats.wall_s = t_start.elapsed().as_secs_f64();
     Ok(ServeSearch { evals, frontier, pruned: space.pruned, stats, target_qps })
 }
 

@@ -28,6 +28,7 @@
 //! pipeline is deterministic at any `--jobs` level.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
 
 use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::hw::Platform;
@@ -45,6 +46,21 @@ const MIN_STAGED: usize = 9;
 
 /// Nominal steady-state decode batch for the stage-A estimate.
 const NOMINAL_BATCH: u64 = 8;
+
+/// Candidate-funnel counts and per-stage wall-clock of one staged run —
+/// observability only (rendered by `report::search`); never feeds back
+/// into the search, so frontiers stay bit-identical run to run.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct StageFunnel {
+    /// Candidates ranked by the stage-A analytic screen.
+    pub screened: usize,
+    /// Survivors bisected against the quarter-length workload (stage B).
+    pub quarter: usize,
+    /// Candidates fully bisected (stage C finalists + escalation).
+    pub full: usize,
+    /// Wall-clock seconds per stage: [screen, quarter-sim, full-bisect].
+    pub wall_s: [f64; 3],
+}
 
 /// Rank `idxs` by `(key desc, idx asc)` and keep the top `keep_n` plus
 /// the best-ranked candidate at each distinct GPU count.  Returned in
@@ -64,9 +80,10 @@ fn cut(idxs: &[usize], key: &[f64], gpus: &[u32], keep_n: usize) -> Vec<usize> {
 }
 
 /// Run the staged pipeline over `cands`, returning one slot per
-/// candidate in enumeration order: `Some` = fully evaluated against the
-/// real workload (bit-identical to [`eval_serve_shared`]), `None` =
-/// screened out before full bisection.
+/// candidate in enumeration order — `Some` = fully evaluated against
+/// the real workload (bit-identical to [`eval_serve_shared`]), `None` =
+/// screened out before full bisection — plus the [`StageFunnel`]
+/// observability record.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn staged_serve(
     plat: &Platform,
@@ -79,9 +96,10 @@ pub(crate) fn staged_serve(
     balancer: Balancer,
     memo: &MemoCache,
     jobs: usize,
-) -> Result<Vec<Option<ServeEval>>> {
+) -> Result<(Vec<Option<ServeEval>>, StageFunnel)> {
     let n = cands.len();
     let mut out: Vec<Option<ServeEval>> = vec![None; n];
+    let mut funnel = StageFunnel::default();
     let full_eval = |idxs: &[usize], out: &mut Vec<Option<ServeEval>>| -> Result<()> {
         let evals = par_map(idxs, jobs, |_, &i| {
             eval_serve_shared(plat, cfg, &cands[i], base, slo, bracket, balancer, &memo.serve)
@@ -93,13 +111,17 @@ pub(crate) fn staged_serve(
     };
 
     if n < MIN_STAGED {
+        let t0 = Instant::now();
         let all: Vec<usize> = (0..n).collect();
         full_eval(&all, &mut out)?;
-        return Ok(out);
+        funnel.full = n;
+        funnel.wall_s[2] = t0.elapsed().as_secs_f64();
+        return Ok((out, funnel));
     }
     let gpus: Vec<u32> = cands.iter().map(|c| c.gpus()).collect();
 
     // Stage A: closed-form capacity estimate from the mean request shape.
+    let t_screen = Instant::now();
     let reqs = base.generate()?;
     let n_req = reqs.len().max(1) as u64;
     let mean_in = (reqs.iter().map(|r| r.input_len).sum::<u64>() / n_req).max(1);
@@ -117,8 +139,11 @@ pub(crate) fn staged_serve(
     });
     let all: Vec<usize> = (0..n).collect();
     let survivors = cut(&all, &score_a, &gpus, n.div_ceil(2));
+    funnel.screened = n;
+    funnel.wall_s[0] = t_screen.elapsed().as_secs_f64();
 
     // Stage B: bisect the survivors against a quarter-length workload.
+    let t_quarter = Instant::now();
     let mut short = base.clone();
     short.n_requests = (base.n_requests / 4).max(16).min(base.n_requests);
     let short_evals = par_map(&survivors, jobs, |_, &i| {
@@ -129,8 +154,11 @@ pub(crate) fn staged_serve(
         score_b[i] = e?.max_qps.unwrap_or(f64::NEG_INFINITY);
     }
     let finalists = cut(&survivors, &score_b, &gpus, survivors.len().div_ceil(2));
+    funnel.quarter = survivors.len();
+    funnel.wall_s[1] = t_quarter.elapsed().as_secs_f64();
 
     // Stage C: full bisection on the finalists.
+    let t_full = Instant::now();
     full_eval(&finalists, &mut out)?;
 
     // Escalation: nothing cheaper than the winning GPU count may remain
@@ -146,7 +174,9 @@ pub(crate) fn staged_serve(
         None => (0..n).filter(|&i| out[i].is_none()).collect(),
     };
     full_eval(&pending, &mut out)?;
-    Ok(out)
+    funnel.full = finalists.len() + pending.len();
+    funnel.wall_s[2] = t_full.elapsed().as_secs_f64();
+    Ok((out, funnel))
 }
 
 #[cfg(test)]

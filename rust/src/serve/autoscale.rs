@@ -42,7 +42,8 @@ use crate::serve::cluster::{
 };
 use crate::serve::engine::{DeployPlan, EngineSpec};
 use crate::serve::request::Request;
-use crate::serve::sim::{simulate_requests_on, SimResult};
+use crate::serve::sim::{simulate_requests_on_traced, SimResult};
+use crate::trace::{NullSink, ReplicaPhase, TraceEvent, TraceSink};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -357,6 +358,23 @@ pub fn simulate_autoscale(
     spec: &AutoscaleSpec,
     requests: &[Request],
 ) -> AutoscaleResult {
+    simulate_autoscale_traced(plat, cfg, engine, spec, requests, &mut NullSink)
+}
+
+/// [`simulate_autoscale`] narrating the run into a [`TraceSink`]:
+/// scale-up/down decisions, shed and dispatch events, each replica
+/// slot's event loop on its own lane, replica lifecycle phases
+/// (warming / serving / draining), and per-tenant completion samples.
+/// Pure observer: the returned [`AutoscaleResult`] is bit-for-bit
+/// identical to [`simulate_autoscale`]'s (pinned by `tests/trace.rs`).
+pub fn simulate_autoscale_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &AutoscaleSpec,
+    requests: &[Request],
+    sink: &mut dyn TraceSink,
+) -> AutoscaleResult {
     let policy = spec.policy;
     policy.validate().expect("autoscale: invalid policy");
     spec.tenants.validate().expect("autoscale: invalid tenant mix");
@@ -432,6 +450,9 @@ pub fn simulate_autoscale(
                 });
                 loads.push(ReplicaLoad::new());
                 cold_starts += 1;
+                if sink.active() {
+                    sink.record(TraceEvent::ScaleUp { t, replica, ready_at });
+                }
                 events.push(ScaleEvent::Up { t, replica, ready_at });
             } else if booked < policy.target_util * 0.5
                 && per_replica < policy.queue_depth * 0.5
@@ -449,6 +470,13 @@ pub fn simulate_autoscale(
                 }
                 slots[victim].drained_at = Some(t);
                 slots[victim].retired_at = Some(t + policy.drain_s);
+                if sink.active() {
+                    sink.record(TraceEvent::ScaleDown {
+                        t,
+                        replica: victim as u32,
+                        gone_at: t + policy.drain_s,
+                    });
+                }
                 events.push(ScaleEvent::Down {
                     t,
                     replica: victim as u32,
@@ -477,6 +505,13 @@ pub fn simulate_autoscale(
         offered_by[tenant_of[i]] += 1;
         if spec.tenants.tenants[tenant_of[i]].class.rank() < shed_level {
             shed_by[tenant_of[i]] += 1;
+            if sink.active() {
+                sink.record(TraceEvent::Shed {
+                    t: req.arrival,
+                    id: req.id,
+                    tenant: tenant_of[i] as u32,
+                });
+            }
             continue;
         }
 
@@ -491,7 +526,16 @@ pub fn simulate_autoscale(
             .map(|(k, _)| k)
             .collect();
         debug_assert!(!avail.is_empty(), "fleet never drains below min_replicas >= 1");
-        let r = route(spec.balancer, &loads, &avail, &mut rr_next, &mut rng, true, cap);
+        let (r, retried) =
+            route(spec.balancer, &loads, &avail, &mut rr_next, &mut rng, true, cap);
+        if sink.active() {
+            sink.record(TraceEvent::Dispatched {
+                t: now,
+                id: req.id,
+                replica: r as u32,
+                retried,
+            });
+        }
         let s = est.seconds(req);
         loads[r].in_flight.push((now + s, s));
         slots[r].list.push(req.clone());
@@ -514,12 +558,18 @@ pub fn simulate_autoscale(
         });
     }
 
-    // replay every slot's list through the unmodified event loop
+    // replay every slot's list through the unmodified event loop, each
+    // slot on its own trace lane
     let lists: Vec<Vec<Request>> = slots.iter().map(|s| s.list.clone()).collect();
     let results: Vec<SimResult> = lists
         .iter()
-        .map(|list| simulate_requests_on(plat, cfg, engine, &spec.plan, list))
+        .enumerate()
+        .map(|(r, list)| {
+            sink.set_lane(r as u32);
+            simulate_requests_on_traced(plat, cfg, engine, &spec.plan, list, sink)
+        })
         .collect();
+    sink.set_lane(0);
     let cluster = merge_replicas(lists, results);
 
     // GPU-hour accounting: a slot is billed from its spawn until it
@@ -537,6 +587,28 @@ pub fn simulate_autoscale(
         };
         gpu_hours += (end - s.spawned_at).max(0.0) * tp / 3600.0;
         cold_start_gpu_hours += (s.ready_at - s.spawned_at) * tp / 3600.0;
+        if sink.active() {
+            sink.record(TraceEvent::ReplicaPhase {
+                replica: i as u32,
+                phase: ReplicaPhase::Warming,
+                t0: s.spawned_at,
+                t1: s.ready_at,
+            });
+            sink.record(TraceEvent::ReplicaPhase {
+                replica: i as u32,
+                phase: ReplicaPhase::Serving,
+                t0: s.ready_at,
+                t1: s.drained_at.unwrap_or(end),
+            });
+            if let (Some(d), Some(rt)) = (s.drained_at, s.retired_at) {
+                sink.record(TraceEvent::ReplicaPhase {
+                    replica: i as u32,
+                    phase: ReplicaPhase::Draining,
+                    t0: d,
+                    t1: rt.max(cluster.replicas[i].makespan),
+                });
+            }
+        }
         lives.push(ReplicaLife {
             replica: i as u32,
             spawned_at: s.spawned_at,
@@ -554,11 +626,25 @@ pub fn simulate_autoscale(
     let mut completed_by = vec![0u64; n_tenants];
     let mut met_by = vec![0u64; n_tenants];
     let mut rejected_by = vec![0u64; n_tenants];
+    if sink.active() {
+        for (ti, t) in spec.tenants.tenants.iter().enumerate() {
+            sink.record(TraceEvent::TenantLabel { tenant: ti as u32, name: t.name.clone() });
+        }
+    }
     for c in &cluster.merged.completions {
         let ti = tenant_by_id[&c.id];
         completed_by[ti] += 1;
-        if spec.tenants.tenants[ti].slo.admits(c.ttft, c.tpot()) {
+        let met = spec.tenants.tenants[ti].slo.admits(c.ttft, c.tpot());
+        if met {
             met_by[ti] += 1;
+        }
+        if sink.active() {
+            sink.record(TraceEvent::TenantCompletion {
+                t: c.finish,
+                tenant: ti as u32,
+                output_tokens: c.output_tokens,
+                met_slo: met,
+            });
         }
     }
     for (i, req) in sorted.iter().enumerate() {

@@ -33,9 +33,10 @@ use crate::hw::Platform;
 use crate::serve::engine::{DeployPlan, EngineSpec};
 use crate::serve::request::{Completion, Request};
 use crate::serve::sim::{
-    decode_iter_time, prefill_time, simulate_requests_on, simulate_requests_shared, SharedCosts,
-    SimResult,
+    decode_iter_time, prefill_time, simulate_requests_on_traced, simulate_requests_shared_traced,
+    SharedCosts, SimResult,
 };
+use crate::trace::{NullSink, TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 
 /// Cluster-level request-routing policy.  All three dispatch on
@@ -296,7 +297,9 @@ pub(crate) const BALANCER_STREAM: u64 = 0xBA1A_4CE5_EED5_u64;
 /// least-loaded *other* replica if the choice is already saturated
 /// (estimated in-flight at `cap`, the engine's `max_num_seqs` admission
 /// cap).  If the whole fleet is saturated the original choice stands:
-/// nothing is ever dropped at dispatch.  Shared with the autoscale loop
+/// nothing is ever dropped at dispatch.  Returns the destination and
+/// whether the saturation retry redirected the choice (trace
+/// attribution only).  Shared with the autoscale loop
 /// (`serve/autoscale.rs`) so the static-policy equivalence its tests
 /// pin is structural, not coincidental.
 pub(crate) fn route(
@@ -307,7 +310,7 @@ pub(crate) fn route(
     rng: &mut Rng,
     retry: bool,
     cap: f64,
-) -> usize {
+) -> (usize, bool) {
     let k = match balancer {
         Balancer::RoundRobin => {
             let k = *rr_next % avail.len();
@@ -331,10 +334,10 @@ pub(crate) fn route(
             .collect();
         let alt = avail[pick_min(&scores, rng)];
         if loads[alt].count() < cap {
-            return alt;
+            return (alt, true);
         }
     }
-    r
+    (r, false)
 }
 
 /// Split `requests` (any order; sorted by arrival internally) into one
@@ -347,6 +350,20 @@ pub fn dispatch(
     engine: &EngineSpec,
     spec: &ClusterSpec,
     requests: &[Request],
+) -> Vec<Vec<Request>> {
+    dispatch_traced(plat, cfg, engine, spec, requests, &mut NullSink)
+}
+
+/// [`dispatch`] narrating each routing decision (destination replica,
+/// saturation-retry flag) into a [`TraceSink`].  Pure observer:
+/// identical partition with any sink.
+pub fn dispatch_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &ClusterSpec,
+    requests: &[Request],
+    sink: &mut dyn TraceSink,
 ) -> Vec<Vec<Request>> {
     assert!(spec.replicas >= 1, "cluster needs at least one replica");
     let n = spec.replicas as usize;
@@ -365,7 +382,16 @@ pub fn dispatch(
         for load in loads.iter_mut() {
             load.expire(req.arrival);
         }
-        let r = route(spec.balancer, &loads, &avail, &mut rr_next, &mut rng, spec.retry, cap);
+        let (r, retried) =
+            route(spec.balancer, &loads, &avail, &mut rr_next, &mut rng, spec.retry, cap);
+        if sink.active() {
+            sink.record(TraceEvent::Dispatched {
+                t: req.arrival,
+                id: req.id,
+                replica: r as u32,
+                retried,
+            });
+        }
         let s = est.seconds(&req);
         loads[r].in_flight.push((req.arrival + s, s));
         lists[r].push(req);
@@ -384,11 +410,31 @@ pub fn simulate_cluster(
     spec: &ClusterSpec,
     requests: &[Request],
 ) -> ClusterResult {
-    let lists = dispatch(plat, cfg, engine, spec, requests);
+    simulate_cluster_traced(plat, cfg, engine, spec, requests, &mut NullSink)
+}
+
+/// [`simulate_cluster`] narrating dispatch decisions and every
+/// replica's event loop into a [`TraceSink`], one lane per replica
+/// (`TraceSink::set_lane`).  Pure observer: the returned
+/// [`ClusterResult`] is bit-identical to [`simulate_cluster`]'s.
+pub fn simulate_cluster_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &ClusterSpec,
+    requests: &[Request],
+    sink: &mut dyn TraceSink,
+) -> ClusterResult {
+    let lists = dispatch_traced(plat, cfg, engine, spec, requests, sink);
     let results: Vec<SimResult> = lists
         .iter()
-        .map(|list| simulate_requests_on(plat, cfg, engine, &spec.plan, list))
+        .enumerate()
+        .map(|(r, list)| {
+            sink.set_lane(r as u32);
+            simulate_requests_on_traced(plat, cfg, engine, &spec.plan, list, sink)
+        })
         .collect();
+    sink.set_lane(0);
     merge_replicas(lists, results)
 }
 
@@ -403,11 +449,31 @@ pub fn simulate_cluster_shared(
     requests: &[Request],
     costs: &SharedCosts,
 ) -> ClusterResult {
-    let lists = dispatch(plat, cfg, engine, spec, requests);
+    simulate_cluster_shared_traced(plat, cfg, engine, spec, requests, costs, &mut NullSink)
+}
+
+/// [`simulate_cluster_shared`] narrating the run into a [`TraceSink`],
+/// one lane per replica.  Pure observer: bit-identical results and
+/// identical [`SharedCosts`] counter contributions with any sink.
+pub fn simulate_cluster_shared_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &ClusterSpec,
+    requests: &[Request],
+    costs: &SharedCosts,
+    sink: &mut dyn TraceSink,
+) -> ClusterResult {
+    let lists = dispatch_traced(plat, cfg, engine, spec, requests, sink);
     let results: Vec<SimResult> = lists
         .iter()
-        .map(|list| simulate_requests_shared(plat, cfg, engine, &spec.plan, list, costs))
+        .enumerate()
+        .map(|(r, list)| {
+            sink.set_lane(r as u32);
+            simulate_requests_shared_traced(plat, cfg, engine, &spec.plan, list, costs, sink)
+        })
         .collect();
+    sink.set_lane(0);
     merge_replicas(lists, results)
 }
 
@@ -447,6 +513,16 @@ pub(crate) fn merge_replicas(lists: Vec<Vec<Request>>, results: Vec<SimResult>) 
         preemptions: results.iter().map(|r| r.preemptions).sum(),
         rejected: results.iter().map(|r| r.rejected).sum(),
         mean_iter_time: if decode_iters > 0 { iter_time_sum / decode_iters as f64 } else { 0.0 },
+        // occupancy peaks are per-pool, so the fleet peak is the hottest
+        // replica; mean batch is decode-iteration weighted like iter time
+        peak_kv_util: results.iter().map(|r| r.peak_kv_util).fold(0.0, f64::max),
+        mean_batch: if decode_iters > 0 {
+            results.iter().map(|r| r.mean_batch * r.decode_iters as f64).sum::<f64>()
+                / decode_iters as f64
+        } else {
+            0.0
+        },
+        peak_batch: results.iter().map(|r| r.peak_batch).max().unwrap_or(0),
     };
     ClusterResult { merged, replicas }
 }

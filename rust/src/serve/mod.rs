@@ -17,18 +17,20 @@ pub mod sim;
 pub mod token_kv;
 
 pub use autoscale::{
-    simulate_autoscale, AutoscalePolicy, AutoscaleResult, AutoscaleSpec, ReplicaLife,
-    ScaleEvent, ScaleSample, TenantOutcome,
+    simulate_autoscale, simulate_autoscale_traced, AutoscalePolicy, AutoscaleResult,
+    AutoscaleSpec, ReplicaLife, ScaleEvent, ScaleSample, TenantOutcome,
 };
 pub use cluster::{
-    dispatch, simulate_cluster, simulate_cluster_shared, Balancer, ClusterResult, ClusterSpec,
-    ReplicaStats,
+    dispatch, dispatch_traced, simulate_cluster, simulate_cluster_shared,
+    simulate_cluster_shared_traced, simulate_cluster_traced, Balancer, ClusterResult,
+    ClusterSpec, ReplicaStats,
 };
 pub use engine::{
     DeployPlan, EngineSpec, KvPolicy, KvPrecision, SpecDecode, WeightPrecision,
     DRAFT_COST_FRAC, DRAFT_MEM_FRAC,
 };
 pub use sim::{
-    simulate, simulate_requests, simulate_requests_on, simulate_requests_shared,
-    simulate_workload, SharedCosts, SimResult,
+    simulate, simulate_requests, simulate_requests_on, simulate_requests_on_traced,
+    simulate_requests_shared, simulate_requests_shared_traced, simulate_workload, SharedCosts,
+    SimResult,
 };

@@ -23,6 +23,7 @@ use crate::serve::engine::{DeployPlan, EngineSpec, KvPolicy, KvPrecision, Weight
 use crate::serve::kv_cache::PagedKvCache;
 use crate::serve::request::{Completion, Request, RunningSeq};
 use crate::serve::token_kv::TokenKv;
+use crate::trace::{NullSink, TraceEvent, TraceSink};
 use crate::util::stats::{Cdf, PctSummary};
 
 /// Unified KV-manager facade over the three allocator policies.
@@ -125,6 +126,13 @@ pub struct SimResult {
     pub rejected: u64,
     /// mean decode-iteration wall time (Table X denominator)
     pub mean_iter_time: f64,
+    /// peak KV-pool occupancy as a fraction of capacity (sampled after
+    /// each iteration's admissions/appends, before releases)
+    pub peak_kv_util: f64,
+    /// mean running batch size over decode iterations
+    pub mean_batch: f64,
+    /// peak running batch size over decode iterations
+    pub peak_batch: u64,
 }
 
 impl SimResult {
@@ -460,6 +468,22 @@ pub fn simulate_requests_on(
     plan: &DeployPlan,
     requests: &[Request],
 ) -> SimResult {
+    simulate_requests_on_traced(plat, cfg, engine, plan, requests, &mut NullSink)
+}
+
+/// [`simulate_requests_on`] narrating the run into a [`TraceSink`]:
+/// request lifecycle events, per-iteration spans, and tick gauge
+/// snapshots.  The sink is a pure observer — the returned [`SimResult`]
+/// is bit-for-bit identical to [`simulate_requests_on`]'s (pinned by
+/// `tests/trace.rs`).
+pub fn simulate_requests_on_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    requests: &[Request],
+    sink: &mut dyn TraceSink,
+) -> SimResult {
     let mut cost = IterCostCache::new();
     run_event_loop(
         engine,
@@ -467,6 +491,7 @@ pub fn simulate_requests_on(
         requests,
         |batch, avg_ctx| cost.decode(plat, cfg, plan, batch, avg_ctx),
         |tokens| prefill_time(plat, cfg, plan, tokens),
+        sink,
     )
 }
 
@@ -486,6 +511,21 @@ pub fn simulate_requests_shared(
     plan: &DeployPlan,
     requests: &[Request],
     costs: &SharedCosts,
+) -> SimResult {
+    simulate_requests_shared_traced(plat, cfg, engine, plan, requests, costs, &mut NullSink)
+}
+
+/// [`simulate_requests_shared`] narrating the run into a [`TraceSink`].
+/// Pure observer: bit-identical results and identical [`SharedCosts`]
+/// counter contributions with any sink.
+pub fn simulate_requests_shared_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    requests: &[Request],
+    costs: &SharedCosts,
+    sink: &mut dyn TraceSink,
 ) -> SimResult {
     let mut l1_decode: HashMap<(u64, u64), f64> = HashMap::new();
     let mut l1_prefill: HashMap<u64, f64> = HashMap::new();
@@ -512,6 +552,7 @@ pub fn simulate_requests_shared(
                 t
             }
         },
+        sink,
     )
 }
 
@@ -525,6 +566,7 @@ fn run_event_loop(
     requests: &[Request],
     mut decode_cost: impl FnMut(u64, u64) -> f64,
     mut prefill_cost: impl FnMut(u64) -> f64,
+    sink: &mut dyn TraceSink,
 ) -> SimResult {
     let mut kv = Kv::new(engine.kv, plan.kv_capacity_tokens);
 
@@ -550,6 +592,11 @@ fn run_event_loop(
     let mut output_tokens = 0u64;
     let mut generated_tokens = 0u64;
     let mut iter_time_sum = 0.0f64;
+    // occupancy/batch accounting surfaced in the summary output; cheap
+    // integer updates, so tracked unconditionally (not sink-gated)
+    let mut kv_used_peak = 0u64;
+    let mut batch_sum = 0u64;
+    let mut peak_batch = 0u64;
 
     let max_iters = 100_000_000u64;
     let mut guard = 0u64;
@@ -566,7 +613,13 @@ fn run_event_loop(
                 + (engine.admit_reserve_frac * req.output_len as f64) as u64;
             if req.input_len > engine.max_prefill_tokens || reserve > plan.kv_capacity_tokens {
                 rejected += 1;
+                if sink.active() {
+                    sink.record(TraceEvent::Rejected { t: clock, id: req.id });
+                }
                 continue;
+            }
+            if sink.active() {
+                sink.record(TraceEvent::Queued { t: req.arrival, id: req.id });
             }
             waiting.push_back(req);
         }
@@ -595,13 +648,27 @@ fn run_event_loop(
             seq.first_token_at = first_tokens.get(&seq.id).copied();
             prefill_tokens += req.input_len;
             admitted += 1;
+            if sink.active() {
+                sink.record(TraceEvent::Admitted { t: clock, id: seq.id });
+            }
             running.push(seq);
             waiting.pop_front();
         }
         if admitted > 0 {
+            let t0 = clock;
             let t = prefill_cost(prefill_tokens) + engine.effective_overhead();
             clock += t;
             prefill_iters += 1;
+            kv_used_peak =
+                kv_used_peak.max(plan.kv_capacity_tokens.saturating_sub(kv.free_tokens()));
+            if sink.active() {
+                sink.record(TraceEvent::Prefill {
+                    t0,
+                    t1: clock,
+                    tokens: prefill_tokens,
+                    admitted,
+                });
+            }
             continue; // prefill-priority scheduling (all three engines)
         }
 
@@ -622,20 +689,26 @@ fn run_event_loop(
             // than the prefill budget or the whole pool).  Reject just
             // that request and keep going; silently truncating the rest
             // of the workload here would poison every SLO metric.
-            waiting.pop_front();
+            let req = waiting.pop_front().expect("non-empty: checked above");
             rejected += 1;
+            if sink.active() {
+                sink.record(TraceEvent::Rejected { t: clock, id: req.id });
+            }
             continue;
         }
 
         // ---- one decode iteration over the running batch
         let batch = running.len() as u64;
         let avg_ctx = (running.iter().map(|s| s.context()).sum::<u64>() / batch).max(1);
+        let t0 = clock;
         let t = engine
             .spec_decode
             .per_token_time(decode_cost(batch, avg_ctx), engine.effective_overhead());
         clock += t;
         decode_iters += 1;
         iter_time_sum += t;
+        batch_sum += batch;
+        peak_batch = peak_batch.max(batch);
 
         // account KV growth; preempt the newest sequences on exhaustion
         let mut preempted: Vec<RunningSeq> = Vec::new();
@@ -656,9 +729,13 @@ fn run_event_loop(
                     first_tokens.insert(seq.id, t);
                 }
                 preemptions += 1;
+                if sink.active() {
+                    sink.record(TraceEvent::Preempted { t: clock, id: seq.id });
+                }
                 preempted.push(seq);
             }
         }
+        kv_used_peak = kv_used_peak.max(plan.kv_capacity_tokens.saturating_sub(kv.free_tokens()));
         for seq in preempted {
             // back of the queue: an immediately re-admitted sequence would
             // just thrash at the capacity edge
@@ -667,6 +744,16 @@ fn run_event_loop(
                 input_len: seq.prompt_len,
                 output_len: seq.target_output,
                 arrival: seq.arrival,
+            });
+        }
+        if sink.active() {
+            sink.record(TraceEvent::Decode {
+                t0,
+                t1: clock,
+                batch,
+                queue_depth: waiting.len() as u64,
+                kv_free: kv.free_tokens(),
+                kv_capacity: plan.kv_capacity_tokens,
             });
         }
 
@@ -678,6 +765,15 @@ fn run_event_loop(
                 kv.release(seq.id);
                 first_tokens.remove(&seq.id);
                 output_tokens += seq.generated;
+                if sink.active() {
+                    sink.record(TraceEvent::Completed {
+                        t: clock,
+                        id: seq.id,
+                        arrival: seq.arrival,
+                        ttft: seq.first_token_at.unwrap_or(clock) - seq.arrival,
+                        output_tokens: seq.generated,
+                    });
+                }
                 completions.push(Completion {
                     id: seq.id,
                     finish: clock,
@@ -701,6 +797,13 @@ fn run_event_loop(
         preemptions,
         rejected,
         mean_iter_time: if decode_iters > 0 { iter_time_sum / decode_iters as f64 } else { 0.0 },
+        peak_kv_util: if plan.kv_capacity_tokens > 0 {
+            kv_used_peak as f64 / plan.kv_capacity_tokens as f64
+        } else {
+            0.0
+        },
+        mean_batch: if decode_iters > 0 { batch_sum as f64 / decode_iters as f64 } else { 0.0 },
+        peak_batch,
     }
 }
 

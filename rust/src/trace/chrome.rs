@@ -1,0 +1,287 @@
+//! Chrome Trace Event Format exporter: turns one recorded run into a
+//! JSON document loadable in `chrome://tracing` or Perfetto
+//! (DESIGN.md §Tracing & metrics).
+//!
+//! Lane mapping: `pid` is the replica lane the event was recorded on
+//! (single-deployment runs are all pid 0), `tid 0` is that replica's
+//! engine lane (one complete-span per prefill/decode iteration, with
+//! the replica's lifecycle phases as enclosing spans), and each request
+//! gets its own thread lane at `tid = id + 1` holding a parent
+//! `req <id>` span from arrival to finish with nested `wait+prefill`
+//! (arrival → first token) and `decode` (first token → finish) child
+//! spans.  Queueing, admission, preemption, rejection, shedding, and
+//! scaling decisions are instant events; timestamps are simulated
+//! seconds scaled to microseconds.
+
+use crate::trace::sink::TraceEvent;
+use crate::util::json::Json;
+
+/// Microseconds for the Chrome `ts`/`dur` fields.
+fn us(t: f64) -> Json {
+    Json::Num(t * 1e6)
+}
+
+fn obj(kvs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// One complete (`ph: "X"`) span.
+fn span(name: String, pid: u32, tid: u64, t0: f64, t1: f64, args: Vec<(&str, Json)>) -> Json {
+    let mut kvs = vec![
+        ("name", Json::Str(name)),
+        ("ph", Json::Str("X".into())),
+        ("ts", us(t0)),
+        ("dur", us((t1 - t0).max(0.0))),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+    ];
+    if !args.is_empty() {
+        kvs.push(("args", obj(args)));
+    }
+    obj(kvs)
+}
+
+/// One instant (`ph: "i"`, thread-scoped) event.
+fn instant(name: String, pid: u32, tid: u64, t: f64, args: Vec<(&str, Json)>) -> Json {
+    let mut kvs = vec![
+        ("name", Json::Str(name)),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("ts", us(t)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+    ];
+    if !args.is_empty() {
+        kvs.push(("args", obj(args)));
+    }
+    obj(kvs)
+}
+
+/// One metadata (`ph: "M"`) event naming a process or thread lane.
+fn meta(what: &str, pid: u32, tid: u64, name: String) -> Json {
+    obj(vec![
+        ("name", Json::Str(what.into())),
+        ("ph", Json::Str("M".into())),
+        ("ts", Json::Num(0.0)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name))])),
+    ])
+}
+
+/// Export one recorded run as a Chrome trace document:
+/// `{"displayTimeUnit": "ms", "traceEvents": [...]}` with events sorted
+/// by timestamp.  Every event carries `ph`/`ts`/`pid`/`tid` (the schema
+/// the CI validator and `tests/trace.rs` pin); each completed request
+/// contributes exactly one top-level `req <id>` span.
+pub fn chrome_trace(events: &[(u32, TraceEvent)]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    let mut lanes: Vec<u32> = Vec::new();
+    for (lane, ev) in events {
+        if !lanes.contains(lane) {
+            lanes.push(*lane);
+        }
+        let pid = *lane;
+        match ev {
+            TraceEvent::Queued { t, id } => {
+                out.push(instant(format!("queued {id}"), pid, id + 1, *t, vec![]));
+            }
+            TraceEvent::Rejected { t, id } => {
+                out.push(instant(format!("rejected {id}"), pid, id + 1, *t, vec![]));
+            }
+            TraceEvent::Admitted { t, id } => {
+                out.push(instant(format!("admitted {id}"), pid, id + 1, *t, vec![]));
+            }
+            TraceEvent::Prefill { t0, t1, tokens, admitted } => {
+                out.push(span(
+                    "prefill".into(),
+                    pid,
+                    0,
+                    *t0,
+                    *t1,
+                    vec![
+                        ("tokens", Json::Num(*tokens as f64)),
+                        ("admitted", Json::Num(*admitted as f64)),
+                    ],
+                ));
+            }
+            TraceEvent::Decode { t0, t1, batch, queue_depth, kv_free, kv_capacity } => {
+                let used = kv_capacity.saturating_sub(*kv_free);
+                out.push(span(
+                    "decode".into(),
+                    pid,
+                    0,
+                    *t0,
+                    *t1,
+                    vec![
+                        ("batch", Json::Num(*batch as f64)),
+                        ("queue_depth", Json::Num(*queue_depth as f64)),
+                        ("kv_used_tokens", Json::Num(used as f64)),
+                        ("kv_capacity_tokens", Json::Num(*kv_capacity as f64)),
+                    ],
+                ));
+            }
+            TraceEvent::Preempted { t, id } => {
+                out.push(instant(format!("preempted {id}"), pid, id + 1, *t, vec![]));
+            }
+            TraceEvent::Completed { t, id, arrival, ttft, output_tokens } => {
+                let first = arrival + ttft;
+                out.push(span(
+                    format!("req {id}"),
+                    pid,
+                    id + 1,
+                    *arrival,
+                    *t,
+                    vec![("output_tokens", Json::Num(*output_tokens as f64))],
+                ));
+                out.push(span("wait+prefill".into(), pid, id + 1, *arrival, first, vec![]));
+                out.push(span("decode".into(), pid, id + 1, first, *t, vec![]));
+            }
+            TraceEvent::Dispatched { t, id, replica, retried } => {
+                out.push(instant(
+                    format!("dispatch {id} -> r{replica}"),
+                    pid,
+                    id + 1,
+                    *t,
+                    vec![("retried", Json::Bool(*retried))],
+                ));
+            }
+            TraceEvent::Shed { t, id, tenant } => {
+                out.push(instant(
+                    format!("shed {id}"),
+                    pid,
+                    id + 1,
+                    *t,
+                    vec![("tenant", Json::Num(*tenant as f64))],
+                ));
+            }
+            TraceEvent::ScaleUp { t, replica, ready_at } => {
+                out.push(instant(
+                    format!("scale-up r{replica}"),
+                    *replica,
+                    0,
+                    *t,
+                    vec![("ready_at_s", Json::Num(*ready_at))],
+                ));
+            }
+            TraceEvent::ScaleDown { t, replica, gone_at } => {
+                out.push(instant(
+                    format!("scale-down r{replica}"),
+                    *replica,
+                    0,
+                    *t,
+                    vec![("gone_at_s", Json::Num(*gone_at))],
+                ));
+            }
+            TraceEvent::ReplicaPhase { replica, phase, t0, t1 } => {
+                if t1 > t0 {
+                    out.push(span(phase.label().into(), *replica, 0, *t0, *t1, vec![]));
+                }
+                if !lanes.contains(replica) {
+                    lanes.push(*replica);
+                }
+            }
+            // Tenant samples feed the metrics registry, not the trace.
+            TraceEvent::TenantCompletion { .. } | TraceEvent::TenantLabel { .. } => {}
+        }
+    }
+    for lane in &lanes {
+        out.push(meta("process_name", *lane, 0, format!("replica {lane}")));
+        out.push(meta("thread_name", *lane, 0, "engine".into()));
+    }
+    // Stable sort by ts so the document streams in time order; metadata
+    // (ts 0) floats to the front of each lane.
+    out.sort_by(|a, b| {
+        let ta = a.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        let tb = b.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Json::Obj(vec![
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+        ("traceEvents".into(), Json::Arr(out)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_event_has_schema_keys_and_request_spans_nest() {
+        let events = vec![
+            (0u32, TraceEvent::Queued { t: 0.0, id: 7 }),
+            (0, TraceEvent::Admitted { t: 0.1, id: 7 }),
+            (0, TraceEvent::Prefill { t0: 0.1, t1: 0.2, tokens: 128, admitted: 1 }),
+            (
+                0,
+                TraceEvent::Decode {
+                    t0: 0.2,
+                    t1: 0.25,
+                    batch: 1,
+                    queue_depth: 0,
+                    kv_free: 100,
+                    kv_capacity: 200,
+                },
+            ),
+            (
+                0,
+                TraceEvent::Completed { t: 1.0, id: 7, arrival: 0.0, ttft: 0.2, output_tokens: 16 },
+            ),
+        ];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!evs.is_empty());
+        for e in evs {
+            for key in ["ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "missing {key}: {}", e.render());
+            }
+        }
+        // the parent req span encloses both children on the same lane
+        let req: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("req 7"))
+            .collect();
+        assert_eq!(req.len(), 1);
+        let (ts, dur) = (
+            req[0].get("ts").and_then(Json::as_f64).unwrap(),
+            req[0].get("dur").and_then(Json::as_f64).unwrap(),
+        );
+        for child in ["wait+prefill", "decode"] {
+            let c = evs
+                .iter()
+                .find(|e| {
+                    e.get("name").and_then(Json::as_str) == Some(child)
+                        && e.get("tid").and_then(Json::as_u64) == Some(8)
+                })
+                .unwrap_or_else(|| panic!("no {child} child"));
+            let cts = c.get("ts").and_then(Json::as_f64).unwrap();
+            let cdur = c.get("dur").and_then(Json::as_f64).unwrap();
+            assert!(cts >= ts - 1e-9 && cts + cdur <= ts + dur + 1e-9, "{child} escapes parent");
+        }
+    }
+
+    #[test]
+    fn lanes_get_process_metadata() {
+        let events = vec![
+            (0u32, TraceEvent::Decode {
+                t0: 0.0,
+                t1: 0.1,
+                batch: 2,
+                queue_depth: 1,
+                kv_free: 10,
+                kv_capacity: 20,
+            }),
+            (1, TraceEvent::Decode {
+                t0: 0.0,
+                t1: 0.1,
+                batch: 3,
+                queue_depth: 0,
+                kv_free: 10,
+                kv_capacity: 20,
+            }),
+        ];
+        let doc = chrome_trace(&events);
+        let s = doc.render();
+        assert!(s.contains("replica 0") && s.contains("replica 1"), "{s}");
+    }
+}

@@ -1,0 +1,339 @@
+//! The metrics half of the tracing layer: counters, tick-sampled gauge
+//! time series with deterministic decimation, and log-bucketed latency
+//! histograms, built from one recorded run and exported as a compact
+//! `llmperf-metrics/v1` JSON document (DESIGN.md §Tracing & metrics).
+//!
+//! Gauges sample on event-loop ticks — one sample per decode iteration
+//! (batch size, queue depth, KV occupancy) — so a series' resolution is
+//! the simulator's own clock, not wall time.  To bound document size a
+//! series holds at most [`GAUGE_CAP`] samples: when full it drops every
+//! other retained sample and doubles its stride, so decimation depends
+//! only on the sample sequence (deterministic across runs).
+
+use crate::trace::sink::TraceEvent;
+use crate::util::json::Json;
+
+/// Maximum retained samples per gauge series before stride doubling.
+pub const GAUGE_CAP: usize = 4096;
+
+/// One tick-sampled time series: `(t_seconds, value)` pairs.
+#[derive(Debug, Clone)]
+pub struct GaugeSeries {
+    /// Series name, e.g. `batch_size` or `goodput_tokens{tenant=batch}`.
+    pub name: String,
+    samples: Vec<(f64, f64)>,
+    stride: u64,
+    tick: u64,
+}
+
+impl GaugeSeries {
+    fn new(name: &str) -> Self {
+        Self { name: name.to_string(), samples: Vec::new(), stride: 1, tick: 0 }
+    }
+
+    /// Offer one tick sample; kept only when the tick lands on the
+    /// current stride.  When the series fills, every other retained
+    /// sample is dropped and the stride doubles.
+    fn push(&mut self, t: f64, v: f64) {
+        if self.tick % self.stride == 0 {
+            self.samples.push((t, v));
+            if self.samples.len() > GAUGE_CAP {
+                let mut i = 0;
+                self.samples.retain(|_| {
+                    i += 1;
+                    i % 2 == 1
+                });
+                self.stride *= 2;
+            }
+        }
+        self.tick += 1;
+    }
+
+    /// The retained `(t, value)` samples.
+    pub fn samples(&self) -> &[(f64, f64)] {
+        &self.samples
+    }
+}
+
+/// A log-bucketed histogram (powers of two over seconds) with count and
+/// sum, for latency-shaped observations.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Histogram name, e.g. `ttft_s`.
+    pub name: String,
+    /// Upper bounds (`le`) of each bucket, seconds.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    fn new(name: &str) -> Self {
+        // 2^-10 s (~1 ms) .. 2^9 s (512 s), then +inf
+        let bounds: Vec<f64> = (-10..10).map(|e| (2.0f64).powi(e)).collect();
+        let counts = vec![0; bounds.len() + 1];
+        Self { name: name.to_string(), bounds, counts, count: 0, sum: 0.0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Counters, gauges, and histograms distilled from one recorded run.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<GaugeSeries>,
+    histograms: Vec<Histogram>,
+}
+
+impl MetricsRegistry {
+    fn counter(&mut self, name: &str, by: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += by,
+            None => self.counters.push((name.to_string(), by)),
+        }
+    }
+
+    fn gauge(&mut self, name: &str) -> &mut GaugeSeries {
+        if let Some(i) = self.gauges.iter().position(|g| g.name == name) {
+            return &mut self.gauges[i];
+        }
+        self.gauges.push(GaugeSeries::new(name));
+        self.gauges.last_mut().expect("just pushed")
+    }
+
+    fn histogram(&mut self, name: &str) -> &mut Histogram {
+        if let Some(i) = self.histograms.iter().position(|h| h.name == name) {
+            return &mut self.histograms[i];
+        }
+        self.histograms.push(Histogram::new(name));
+        self.histograms.last_mut().expect("just pushed")
+    }
+
+    /// The value of a counter, 0 when never incremented.
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// The gauge series with this name, if any samples were recorded.
+    pub fn gauge_series(&self, name: &str) -> Option<&GaugeSeries> {
+        self.gauges.iter().find(|g| g.name == name)
+    }
+
+    /// Distill one recorded run into counters (completions, rejections,
+    /// preemptions, sheds, dispatches, scale decisions, iteration
+    /// counts), tick-sampled gauges (batch size, queue depth, KV
+    /// occupancy — one sample per decode tick, per lane), per-tenant
+    /// cumulative goodput series, and TTFT/latency histograms.
+    pub fn from_events(events: &[(u32, TraceEvent)]) -> Self {
+        let mut m = MetricsRegistry::default();
+        let mut tenant_names: Vec<(u32, String)> = Vec::new();
+        for (_, ev) in events {
+            if let TraceEvent::TenantLabel { tenant, name } = ev {
+                if !tenant_names.iter().any(|(t, _)| t == tenant) {
+                    tenant_names.push((*tenant, name.clone()));
+                }
+            }
+        }
+        let tenant_tag = |tenant: u32, names: &[(u32, String)]| -> String {
+            match names.iter().find(|(t, _)| *t == tenant) {
+                Some((_, n)) => format!("goodput_tokens{{tenant={n}}}"),
+                None => format!("goodput_tokens{{tenant={tenant}}}"),
+            }
+        };
+        let mut goodput: Vec<(u32, u64)> = Vec::new();
+        for (lane, ev) in events {
+            match ev {
+                TraceEvent::Queued { .. } => m.counter("queued", 1),
+                TraceEvent::Rejected { .. } => m.counter("rejected", 1),
+                TraceEvent::Admitted { .. } => m.counter("admitted", 1),
+                TraceEvent::Prefill { tokens, .. } => {
+                    m.counter("prefill_iters", 1);
+                    m.counter("prefill_tokens", *tokens);
+                }
+                TraceEvent::Decode { t1, batch, queue_depth, kv_free, kv_capacity, .. } => {
+                    m.counter("decode_iters", 1);
+                    let t = *t1;
+                    m.gauge(&format!("batch_size{{replica={lane}}}")).push(t, *batch as f64);
+                    m.gauge(&format!("queue_depth{{replica={lane}}}"))
+                        .push(t, *queue_depth as f64);
+                    let util = if *kv_capacity > 0 {
+                        (kv_capacity - kv_free.min(kv_capacity)) as f64 / *kv_capacity as f64
+                    } else {
+                        0.0
+                    };
+                    m.gauge(&format!("kv_utilization{{replica={lane}}}")).push(t, util);
+                }
+                TraceEvent::Preempted { .. } => m.counter("preemptions", 1),
+                TraceEvent::Completed { t, arrival, ttft, output_tokens, .. } => {
+                    m.counter("completions", 1);
+                    m.counter("output_tokens", *output_tokens);
+                    m.histogram("ttft_s").observe(*ttft);
+                    m.histogram("latency_s").observe(t - arrival);
+                }
+                TraceEvent::Dispatched { retried, .. } => {
+                    m.counter("dispatched", 1);
+                    if *retried {
+                        m.counter("dispatch_retries", 1);
+                    }
+                }
+                TraceEvent::Shed { .. } => m.counter("shed", 1),
+                TraceEvent::ScaleUp { .. } => m.counter("scale_up", 1),
+                TraceEvent::ScaleDown { .. } => m.counter("scale_down", 1),
+                TraceEvent::ReplicaPhase { .. } | TraceEvent::TenantLabel { .. } => {}
+                TraceEvent::TenantCompletion { t, tenant, output_tokens, met_slo } => {
+                    m.counter("tenant_completions", 1);
+                    if *met_slo {
+                        let cum = match goodput.iter_mut().find(|(tn, _)| tn == tenant) {
+                            Some((_, c)) => {
+                                *c += output_tokens;
+                                *c
+                            }
+                            None => {
+                                goodput.push((*tenant, *output_tokens));
+                                *output_tokens
+                            }
+                        };
+                        m.gauge(&tenant_tag(*tenant, &tenant_names)).push(*t, cum as f64);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Export as an `llmperf-metrics/v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(n, v)| (n.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let gauges = Json::Arr(
+            self.gauges
+                .iter()
+                .map(|g| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(g.name.clone())),
+                        (
+                            "samples".into(),
+                            Json::Arr(
+                                g.samples
+                                    .iter()
+                                    .map(|(t, v)| Json::Arr(vec![Json::Num(*t), Json::Num(*v)]))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let histograms = Json::Arr(
+            self.histograms
+                .iter()
+                .map(|h| {
+                    let mut buckets: Vec<Json> = h
+                        .bounds
+                        .iter()
+                        .zip(&h.counts)
+                        .map(|(b, c)| Json::Arr(vec![Json::Num(*b), Json::Num(*c as f64)]))
+                        .collect();
+                    buckets.push(Json::Arr(vec![
+                        Json::Null,
+                        Json::Num(h.counts[h.bounds.len()] as f64),
+                    ]));
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(h.name.clone())),
+                        ("buckets".into(), Json::Arr(buckets)),
+                        ("count".into(), Json::Num(h.count as f64)),
+                        ("sum".into(), Json::Num(h.sum)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("schema".into(), Json::Str("llmperf-metrics/v1".into())),
+            ("counters".into(), counters),
+            ("gauges".into(), gauges),
+            ("histograms".into(), histograms),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let events = vec![
+            (0u32, TraceEvent::Queued { t: 0.0, id: 1 }),
+            (0, TraceEvent::Admitted { t: 0.0, id: 1 }),
+            (
+                0,
+                TraceEvent::Decode {
+                    t0: 0.0,
+                    t1: 0.1,
+                    batch: 4,
+                    queue_depth: 2,
+                    kv_free: 50,
+                    kv_capacity: 100,
+                },
+            ),
+            (
+                0,
+                TraceEvent::Completed { t: 0.5, id: 1, arrival: 0.0, ttft: 0.1, output_tokens: 8 },
+            ),
+        ];
+        let m = MetricsRegistry::from_events(&events);
+        assert_eq!(m.counter_value("completions"), 1);
+        assert_eq!(m.counter_value("decode_iters"), 1);
+        assert_eq!(m.counter_value("output_tokens"), 8);
+        let g = m.gauge_series("kv_utilization{replica=0}").unwrap();
+        assert_eq!(g.samples().len(), 1);
+        assert!((g.samples()[0].1 - 0.5).abs() < 1e-12);
+        let doc = m.to_json();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("llmperf-metrics/v1"));
+        assert!(doc.get("counters").and_then(|c| c.get("completions")).is_some());
+    }
+
+    #[test]
+    fn gauge_decimation_is_bounded_and_deterministic() {
+        let mut g = GaugeSeries::new("x");
+        for i in 0..(GAUGE_CAP as u64 * 8) {
+            g.push(i as f64, i as f64);
+        }
+        assert!(g.samples().len() <= GAUGE_CAP + 1, "len {}", g.samples().len());
+        let mut g2 = GaugeSeries::new("x");
+        for i in 0..(GAUGE_CAP as u64 * 8) {
+            g2.push(i as f64, i as f64);
+        }
+        assert_eq!(g.samples(), g2.samples());
+    }
+
+    #[test]
+    fn tenant_goodput_series_is_cumulative_and_named() {
+        let events = vec![
+            (0u32, TraceEvent::TenantLabel { tenant: 0, name: "interactive".into() }),
+            (0, TraceEvent::TenantCompletion { t: 1.0, tenant: 0, output_tokens: 10, met_slo: true }),
+            (0, TraceEvent::TenantCompletion { t: 2.0, tenant: 0, output_tokens: 5, met_slo: true }),
+            (
+                0,
+                TraceEvent::TenantCompletion { t: 3.0, tenant: 0, output_tokens: 7, met_slo: false },
+            ),
+        ];
+        let m = MetricsRegistry::from_events(&events);
+        let g = m.gauge_series("goodput_tokens{tenant=interactive}").unwrap();
+        assert_eq!(g.samples().len(), 2, "SLO-missing completion adds no sample");
+        assert!((g.samples()[1].1 - 15.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! Observability for the serving simulators (DESIGN.md §Tracing &
+//! metrics): a passive [`TraceSink`] the event loop, cluster
+//! dispatcher, and autoscaler narrate typed [`TraceEvent`]s into, plus
+//! exporters that turn one recorded run into a Chrome-trace JSON
+//! (`chrome://tracing` / Perfetto, one process lane per replica) and a
+//! compact metrics time-series document (counters, tick-sampled
+//! gauges, log-bucketed histograms).
+//!
+//! The contract that makes this a subsystem and not a print statement:
+//! the sink is a **pure observer**.  Every value it receives is already
+//! computed by the simulation; no simulation state ever reads back out
+//! of a sink.  `SimResult`, `AutoscaleResult`, and autotuner frontiers
+//! are bit-for-bit identical with tracing enabled, disabled, and across
+//! the shared-costs memoized paths — pinned by `tests/trace.rs`.  With
+//! the default [`NullSink`] every emission site is gated on
+//! [`TraceSink::active`], so the disabled path never constructs an
+//! event.
+
+pub mod chrome;
+pub mod metrics;
+pub mod sink;
+
+pub use chrome::chrome_trace;
+pub use metrics::MetricsRegistry;
+pub use sink::{NullSink, ReplicaPhase, TraceBuffer, TraceEvent, TraceSink};

@@ -1,0 +1,271 @@
+//! The sink half of the tracing layer: the typed event vocabulary
+//! ([`TraceEvent`]), the passive receiver trait ([`TraceSink`]), the
+//! zero-overhead default ([`NullSink`]), and the in-memory recorder the
+//! CLI exporters drain ([`TraceBuffer`]).
+
+/// Lifecycle phase of a replica in the autoscaled fleet, as rendered on
+/// its trace lane (`ScaleEvent` is the decision; this is the interval).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaPhase {
+    /// Spawned but still cold-starting; takes no traffic.
+    Warming,
+    /// Ready and taking dispatched traffic.
+    Serving,
+    /// Draining: finishes in-flight work, receives nothing new.
+    Draining,
+}
+
+impl ReplicaPhase {
+    /// Short label used for trace span names.
+    pub fn label(self) -> &'static str {
+        match self {
+            ReplicaPhase::Warming => "warming",
+            ReplicaPhase::Serving => "serving",
+            ReplicaPhase::Draining => "draining",
+        }
+    }
+}
+
+/// One typed observation narrated by a simulator into a [`TraceSink`].
+///
+/// Times are simulated seconds.  Every field is a value the simulation
+/// had already computed for its own purposes — recording an event never
+/// changes simulation state (the passive-observer contract).
+#[derive(Debug, Clone)]
+pub enum TraceEvent {
+    /// A request joined the waiting queue (at its arrival time).
+    Queued {
+        /// Queue-join time (= arrival), seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+    },
+    /// A request was rejected outright (can never fit the deployment).
+    Rejected {
+        /// Rejection time, seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+    },
+    /// A request left the queue and joined the running batch.
+    Admitted {
+        /// Admission time, seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+    },
+    /// One prefill iteration of the event loop.
+    Prefill {
+        /// Iteration start, seconds.
+        t0: f64,
+        /// Iteration end, seconds.
+        t1: f64,
+        /// Prompt tokens prefilled this iteration.
+        tokens: u64,
+        /// Sequences admitted into this prefill round.
+        admitted: u64,
+    },
+    /// One decode iteration of the event loop, with the gauge snapshot
+    /// sampled on this tick (batch size, queue depth, KV pool state
+    /// after the iteration's appends).
+    Decode {
+        /// Iteration start, seconds.
+        t0: f64,
+        /// Iteration end, seconds.
+        t1: f64,
+        /// Running batch size this iteration.
+        batch: u64,
+        /// Requests still waiting in the queue.
+        queue_depth: u64,
+        /// Free KV-pool tokens after this iteration's appends.
+        kv_free: u64,
+        /// Total KV-pool capacity in tokens.
+        kv_capacity: u64,
+    },
+    /// A running sequence was preempted back to the queue (KV pressure).
+    Preempted {
+        /// Preemption time, seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+    },
+    /// A request produced its last output token and retired.
+    Completed {
+        /// Finish time, seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+        /// Arrival time, seconds.
+        arrival: f64,
+        /// Time to first token, seconds.
+        ttft: f64,
+        /// Output tokens generated.
+        output_tokens: u64,
+    },
+    /// The load balancer routed a request to a replica.
+    Dispatched {
+        /// Dispatch time (= arrival), seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+        /// Destination replica lane.
+        replica: u32,
+        /// Whether the saturation-retry bounce redirected the choice.
+        retried: bool,
+    },
+    /// Admission control shed a request before dispatch.
+    Shed {
+        /// Shed time (= arrival), seconds.
+        t: f64,
+        /// Request id.
+        id: u64,
+        /// Tenant index the request belonged to.
+        tenant: u32,
+    },
+    /// The autoscaler decided to add a replica.
+    ScaleUp {
+        /// Decision time, seconds.
+        t: f64,
+        /// Replica lane being added.
+        replica: u32,
+        /// When it finishes cold-starting and can serve.
+        ready_at: f64,
+    },
+    /// The autoscaler started draining a replica.
+    ScaleDown {
+        /// Decision time, seconds.
+        t: f64,
+        /// Replica lane being drained.
+        replica: u32,
+        /// When the drain window closes and the replica retires.
+        gone_at: f64,
+    },
+    /// One lifecycle interval of a replica (derived from its life).
+    ReplicaPhase {
+        /// Replica lane.
+        replica: u32,
+        /// Which phase the interval covers.
+        phase: ReplicaPhase,
+        /// Interval start, seconds.
+        t0: f64,
+        /// Interval end, seconds.
+        t1: f64,
+    },
+    /// A tenant's request completed, with its per-tenant SLO verdict —
+    /// the sample the per-tenant goodput series is built from.
+    TenantCompletion {
+        /// Completion time, seconds.
+        t: f64,
+        /// Tenant index.
+        tenant: u32,
+        /// Output tokens the completion contributed.
+        output_tokens: u64,
+        /// Whether the request met its tenant's SLO.
+        met_slo: bool,
+    },
+    /// Name metadata for a tenant index (emitted once per tenant).
+    TenantLabel {
+        /// Tenant index.
+        tenant: u32,
+        /// Human-readable tenant name.
+        name: String,
+    },
+}
+
+/// A passive receiver of [`TraceEvent`]s.
+///
+/// Emission sites gate on [`TraceSink::active`] before constructing an
+/// event, so a sink that answers `false` (the [`NullSink`] default)
+/// costs one virtual call per site and nothing else.  Sinks observe;
+/// they must never feed anything back into the simulation.
+pub trait TraceSink {
+    /// Whether this sink wants events.  Sites skip event construction
+    /// entirely when this is `false`.
+    fn active(&self) -> bool {
+        false
+    }
+
+    /// Receive one event, attributed to the current lane.
+    fn record(&mut self, ev: TraceEvent);
+
+    /// Set the replica lane subsequent events are attributed to
+    /// (single-deployment runs stay on lane 0).
+    fn set_lane(&mut self, _lane: u32) {}
+}
+
+/// The do-nothing default sink: inactive, so every emission site skips
+/// event construction — the zero-overhead-when-disabled path.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// An in-memory recorder: every event is kept with the replica lane it
+/// was attributed to, in emission order, for the exporters
+/// ([`crate::trace::chrome_trace`], [`crate::trace::MetricsRegistry`])
+/// to drain after the run.
+#[derive(Debug, Default)]
+pub struct TraceBuffer {
+    lane: u32,
+    events: Vec<(u32, TraceEvent)>,
+}
+
+impl TraceBuffer {
+    /// An empty buffer on lane 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The recorded `(lane, event)` pairs, in emission order.
+    pub fn events(&self) -> &[(u32, TraceEvent)] {
+        &self.events
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl TraceSink for TraceBuffer {
+    fn active(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push((self.lane, ev));
+    }
+
+    fn set_lane(&mut self, lane: u32) {
+        self.lane = lane;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_inactive() {
+        assert!(!NullSink.active());
+    }
+
+    #[test]
+    fn buffer_records_with_lane_attribution() {
+        let mut b = TraceBuffer::new();
+        assert!(b.active() && b.is_empty());
+        b.record(TraceEvent::Queued { t: 0.0, id: 1 });
+        b.set_lane(3);
+        b.record(TraceEvent::Preempted { t: 1.0, id: 1 });
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.events()[0].0, 0);
+        assert_eq!(b.events()[1].0, 3);
+    }
+}

@@ -1,0 +1,241 @@
+//! Observability invariants (ISSUE 9): the trace sink is a pure
+//! observer — every simulator output is bit-for-bit identical with a
+//! recording sink attached, across the plain, shared-costs-memoized,
+//! cluster, and autoscale entry points — and the Chrome-trace export is
+//! schema-complete (every event carries `ph`/`ts`/`pid`/`tid`, request
+//! spans nest, and request ids are conserved against the completion
+//! list).
+
+use llm_perf_lab::config::{Arrival, LlamaConfig, SloSpec, TenantMix, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::search::{autotune_serve_exec, ExecPolicy, ReplicaSpace, SearchBudget};
+use llm_perf_lab::serve::{
+    simulate_autoscale, simulate_autoscale_traced, simulate_cluster, simulate_cluster_shared,
+    simulate_cluster_shared_traced, simulate_cluster_traced, simulate_requests_on,
+    simulate_requests_on_traced, simulate_requests_shared, simulate_requests_shared_traced,
+    AutoscalePolicy, AutoscaleResult, AutoscaleSpec, Balancer, ClusterSpec, EngineSpec,
+    SharedCosts, SimResult,
+};
+use llm_perf_lab::trace::{chrome_trace, MetricsRegistry, TraceBuffer, TraceEvent};
+use llm_perf_lab::util::json::Json;
+
+fn lab() -> (Platform, LlamaConfig, EngineSpec) {
+    (Platform::get(PlatformId::A800), LlamaConfig::llama2_7b(), EngineSpec::vllm())
+}
+
+/// A bursty stream dense enough to exercise queueing, batching, and
+/// (at cluster scale) retry dispatch.
+fn workload(n: u64) -> WorkloadSpec {
+    WorkloadSpec::new(n).arrival(Arrival::Bursty { qps: 14.0, on_s: 2.0, off_s: 3.0 }).seed(7)
+}
+
+/// Bit-for-bit equality — `to_bits`, not epsilon: the determinism
+/// contract says tracing must not perturb a single ULP.
+fn assert_bitwise_eq(a: &SimResult, b: &SimResult) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "makespan");
+    assert_eq!(a.output_tokens, b.output_tokens);
+    assert_eq!(a.generated_tokens, b.generated_tokens);
+    assert_eq!(a.decode_iters, b.decode_iters);
+    assert_eq!(a.prefill_iters, b.prefill_iters);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.mean_iter_time.to_bits(), b.mean_iter_time.to_bits(), "mean_iter_time");
+    assert_eq!(a.peak_kv_util.to_bits(), b.peak_kv_util.to_bits(), "peak_kv_util");
+    assert_eq!(a.mean_batch.to_bits(), b.mean_batch.to_bits(), "mean_batch");
+    assert_eq!(a.peak_batch, b.peak_batch);
+    assert_eq!(a.completions.len(), b.completions.len());
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "finish of {}", x.id);
+        assert_eq!(x.latency.to_bits(), y.latency.to_bits(), "latency of {}", x.id);
+        assert_eq!(x.ttft.to_bits(), y.ttft.to_bits(), "ttft of {}", x.id);
+        assert_eq!(x.output_tokens, y.output_tokens);
+    }
+}
+
+fn assert_autoscale_eq(a: &AutoscaleResult, b: &AutoscaleResult) {
+    assert_bitwise_eq(&a.cluster.merged, &b.cluster.merged);
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.cold_starts, b.cold_starts);
+    assert_eq!(a.gpu_hours.to_bits(), b.gpu_hours.to_bits(), "gpu_hours");
+    assert_eq!(a.static_gpu_hours.to_bits(), b.static_gpu_hours.to_bits());
+    assert_eq!(a.cold_start_gpu_hours.to_bits(), b.cold_start_gpu_hours.to_bits());
+    assert_eq!(a.overall_attainment.to_bits(), b.overall_attainment.to_bits(), "attainment");
+    assert_eq!(a.samples.len(), b.samples.len());
+    assert_eq!(a.events.len(), b.events.len());
+    assert_eq!(a.lives.len(), b.lives.len());
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!((x.offered, x.shed, x.rejected, x.completed),
+                   (y.offered, y.shed, y.rejected, y.completed), "tenant {}", x.name);
+    }
+}
+
+#[test]
+fn tracing_is_a_pure_observer_on_single_deployment() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = workload(120).generate().unwrap();
+    let plain = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+    let mut buf = TraceBuffer::new();
+    let traced = simulate_requests_on_traced(&plat, &cfg, &engine, &plan, &reqs, &mut buf);
+    assert_bitwise_eq(&plain, &traced);
+    assert!(!buf.is_empty(), "an active sink must record the replay");
+    let completed = buf
+        .events()
+        .iter()
+        .filter(|(_, e)| matches!(e, TraceEvent::Completed { .. }))
+        .count();
+    assert_eq!(completed, traced.completions.len(), "one Completed event per completion");
+}
+
+#[test]
+fn tracing_is_a_pure_observer_on_shared_costs_path() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = workload(100).generate().unwrap();
+    // fresh memo each side: the traced run must not change what gets
+    // memoized, only observe it
+    let plain = simulate_requests_shared(&plat, &cfg, &engine, &plan, &reqs, &SharedCosts::new());
+    let mut buf = TraceBuffer::new();
+    let traced = simulate_requests_shared_traced(&plat, &cfg, &engine, &plan, &reqs,
+                                                 &SharedCosts::new(), &mut buf);
+    assert_bitwise_eq(&plain, &traced);
+    // and both agree with the unmemoized event loop
+    let direct = simulate_requests_on(&plat, &cfg, &engine, &plan, &reqs);
+    assert_bitwise_eq(&direct, &traced);
+}
+
+#[test]
+fn tracing_is_a_pure_observer_on_clusters() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let cluster = ClusterSpec::new(3, plan, Balancer::JoinShortestQueue).seed(7);
+    let reqs = workload(150).generate().unwrap();
+    let plain = simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
+    let mut buf = TraceBuffer::new();
+    let traced = simulate_cluster_traced(&plat, &cfg, &engine, &cluster, &reqs, &mut buf);
+    assert_bitwise_eq(&plain.merged, &traced.merged);
+    for (x, y) in plain.replicas.iter().zip(&traced.replicas) {
+        assert_eq!(x.requests, y.requests, "replica {}", x.replica);
+        assert_eq!(x.completions, y.completions);
+        assert_eq!(x.output_tokens, y.output_tokens);
+        assert_eq!(x.makespan.to_bits(), y.makespan.to_bits());
+        assert_eq!(x.decode_iters, y.decode_iters);
+    }
+    let mut buf2 = TraceBuffer::new();
+    let shared = simulate_cluster_shared_traced(&plat, &cfg, &engine, &cluster, &reqs,
+                                                &SharedCosts::new(), &mut buf2);
+    assert_bitwise_eq(&plain.merged, &shared.merged);
+    let plain_shared =
+        simulate_cluster_shared(&plat, &cfg, &engine, &cluster, &reqs, &SharedCosts::new());
+    assert_bitwise_eq(&plain_shared.merged, &shared.merged);
+    // every dispatch decision was observed, one per offered request
+    let dispatched = buf
+        .events()
+        .iter()
+        .filter(|(_, e)| matches!(e, TraceEvent::Dispatched { .. }))
+        .count();
+    assert_eq!(dispatched as u64, reqs.len() as u64);
+}
+
+/// The acceptance scenario: fixed-seed diurnal traffic, two tenant
+/// classes, an autoscaling fleet — results bit-identical with tracing,
+/// and the exported Chrome trace carries one process lane per replica
+/// slot and at least one `req` span per completed request.
+#[test]
+fn autoscale_trace_is_bit_identical_and_exports_lanes_and_spans() {
+    let (plat, cfg, engine) = lab();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(200)
+        .arrival(Arrival::Diurnal { base_qps: 2.0, peak_qps: 8.0, period_s: 60.0 })
+        .seed(42)
+        .generate()
+        .unwrap();
+    let spec = AutoscaleSpec {
+        plan,
+        balancer: Balancer::JoinShortestQueue,
+        policy: AutoscalePolicy::new(1, 3).interval(10.0).cold_start(10.0).drain(15.0),
+        tenants: TenantMix::two_class(),
+        seed: 42,
+    };
+    let plain = simulate_autoscale(&plat, &cfg, &engine, &spec, &reqs);
+    let mut buf = TraceBuffer::new();
+    let traced = simulate_autoscale_traced(&plat, &cfg, &engine, &spec, &reqs, &mut buf);
+    assert_autoscale_eq(&plain, &traced);
+
+    let doc = Json::parse(&chrome_trace(buf.events()).render()).unwrap();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty());
+    let mut pids = std::collections::BTreeSet::new();
+    for ev in events {
+        // schema completeness: every record is Perfetto-ingestible
+        assert!(ev.get("ph").and_then(Json::as_str).is_some(), "missing ph");
+        assert!(ev.get("ts").and_then(Json::as_f64).is_some(), "missing ts");
+        assert!(ev.get("pid").and_then(Json::as_u64).is_some(), "missing pid");
+        assert!(ev.get("tid").and_then(Json::as_u64).is_some(), "missing tid");
+        pids.insert(ev.get("pid").and_then(Json::as_u64).unwrap());
+    }
+    assert_eq!(pids.len(), traced.lives.len(), "one process lane per replica slot");
+    let req_spans = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+                && e.get("name").and_then(Json::as_str).is_some_and(|n| n.starts_with("req "))
+        })
+        .count();
+    assert_eq!(req_spans, traced.cluster.merged.completions.len(),
+               ">= 1 lifecycle span per completed request, ids conserved");
+
+    // the metrics registry books balance against the same run
+    let m = MetricsRegistry::from_events(buf.events());
+    assert_eq!(m.counter_value("completions"),
+               traced.cluster.merged.completions.len() as u64);
+    assert_eq!(m.counter_value("shed"), traced.shed);
+    let metrics = Json::parse(&m.to_json().render()).unwrap();
+    assert_eq!(metrics.get("schema").and_then(Json::as_str), Some("llmperf-metrics/v1"));
+    let gauges = metrics.get("gauges").and_then(Json::as_arr).unwrap();
+    let tenant_series = gauges
+        .iter()
+        .filter_map(|g| g.get("name").and_then(Json::as_str))
+        .filter(|n| n.starts_with("goodput_tokens{tenant="))
+        .count();
+    assert_eq!(tenant_series, 2, "one goodput series per tenant class");
+}
+
+/// The staged and exhaustive autotuner pipelines fill the funnel
+/// counters consistently, and instrumentation never perturbs the
+/// frontier: two identical searches agree bit-for-bit.
+#[test]
+fn search_funnel_counters_are_consistent_and_frontier_stable() {
+    let (plat, cfg, _) = lab();
+    let base = WorkloadSpec::at_once(40, 256, 16);
+    let slo = SloSpec::new(0.9, 6.0, f64::MAX);
+    let run = |staged: bool| {
+        autotune_serve_exec(&plat, &cfg, &EngineSpec::all(), &base, &slo, None, (0.5, 8.0),
+                            ReplicaSpace::default(), SearchBudget::default(),
+                            ExecPolicy { jobs: 2, staged })
+            .unwrap()
+    };
+    let a = run(false);
+    let b = run(false);
+    assert_eq!(a.frontier.len(), b.frontier.len());
+    for (x, y) in a.frontier_evals().iter().zip(b.frontier_evals().iter()) {
+        assert_eq!(x.gpus, y.gpus);
+        assert_eq!(x.cost_per_hour.to_bits(), y.cost_per_hour.to_bits());
+        assert_eq!(x.max_qps.map(f64::to_bits), y.max_qps.map(f64::to_bits));
+    }
+    // exhaustive: everything costed goes through the full stage
+    assert_eq!(a.stats.stage_full, a.stats.costed);
+    assert!(a.stats.wall_s > 0.0, "wall-clock must be recorded");
+    let s = run(true);
+    // every stage-C entrant is fully evaluated, staged or bypassed
+    assert_eq!(s.stats.stage_full, s.stats.costed);
+    if s.stats.stage_screened > 0 {
+        // staged: the funnel narrows monotonically
+        assert!(s.stats.stage_quarter <= s.stats.stage_screened);
+        assert!(s.stats.stage_wall_s.iter().all(|&w| w >= 0.0));
+    }
+    assert!(s.stats.wall_s > 0.0);
+}
