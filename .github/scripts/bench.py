@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""CI perf tracking: run six pinned llmperf scenarios, record wall
+"""CI perf tracking: run seven pinned llmperf scenarios, record wall
 time plus key model outputs into BENCH_ci.json, and warn (never fail) on
 >10% regression against the committed baseline.
 
@@ -21,6 +21,14 @@ untraced wall-clock (lower is better; the untraced run is the tracked
 wall_s and the null baseline entry).  It hard-fails if the two runs'
 summary output differs — tracing must be a pure observer — and warns
 when the overhead ratio climbs past 1.5x.
+
+The seventh scenario pairs a chunked monolithic fleet against a
+disaggregated prefill/decode fleet at equal GPUs on a long-prefill /
+short-decode workload, recording the monolithic-over-disagg TTFT p99
+ratio (higher is better; >1 means disaggregation wins the tail).  It
+warns — never fails — when the ratio drops to 1 or below, i.e. when
+disaggregation stops beating the interference-protected monolithic
+configuration on the workload built for it.
 
 Schema of BENCH_ci.json (documented in DESIGN.md §CI perf tracking):
 
@@ -176,6 +184,27 @@ TRACE_SCENARIO = {
     ],
 }
 
+# The seventh scenario: disaggregated prefill/decode vs chunked
+# monolithic at equal GPUs (4 each way) on a long-prefill / short-decode
+# workload.  The monolithic fleet runs chunked prefill — the
+# configuration that protects decode TPOT, at the price of stretching
+# every 2048-token prompt over 16 decode-interleaved chunk iterations —
+# while the disagg fleet dedicates 3 replicas to pure batched prefill
+# and 1 to decode.  Tracked metric: monolithic TTFT p99 over disagg
+# TTFT p99 (>1 = disaggregation wins the first-token tail).
+DISAGG_SCENARIO = {
+    "name": "disagg-vs-monolithic-7b-a800",
+    "workload": [
+        "--model", "7b", "--platform", "a800", "--engine", "vllm",
+        "--arrival", "poisson:2", "--requests", "140",
+        "--input", "2048", "--output", "256", "--seed", "29",
+    ],
+    "mono_argv": ["sim-cluster", "--replicas", "4", "--chunk-tokens", "128"],
+    "disagg_argv": ["sim-disagg", "--prefill-replicas", "3", "--decode-replicas", "1"],
+}
+
+TTFT_RE = r"ttft\s+p50 ([0-9.]+)s\s+p90 ([0-9.]+)s\s+p99 ([0-9.]+)s"
+
 TOLERANCE = 0.10  # warn beyond ±10%
 
 # Metrics where *lower* is a regression (throughput-like); wall_s is the
@@ -184,7 +213,7 @@ HIGHER_IS_BETTER = {
     "max_qps_under_slo", "max_qps_at_min_gpu", "frontier_rows",
     "speedup_staged_vs_exhaustive", "memo_hit_pct",
     "gpu_hours_saved_pct", "overall_attainment_pct",
-    "int4_fp16_capacity_ratio",
+    "int4_fp16_capacity_ratio", "disagg_ttft_p99_win_ratio",
 }
 
 
@@ -366,6 +395,40 @@ def run_trace_paired(binary, scenario):
             "wall_s": round(plain_wall, 3), "metrics": metrics}
 
 
+def run_disagg_paired(binary, scenario):
+    """Run the equal-GPU chunked-monolithic and disaggregated fleets on
+    the same seeded long-prefill workload; record both TTFT p99s and the
+    monolithic-over-disagg ratio.  The disagg run's wall time is the
+    tracked wall_s."""
+    def timed(argv):
+        t0 = time.monotonic()
+        proc = subprocess.run([binary] + argv, capture_output=True, text=True, timeout=1800)
+        wall = time.monotonic() - t0
+        if proc.returncode != 0:
+            sys.stderr.write(proc.stdout + proc.stderr)
+            raise RuntimeError(f"{scenario['name']}: exit {proc.returncode}")
+        m = re.search(TTFT_RE, proc.stdout)
+        if not m:
+            sys.stderr.write(proc.stdout)
+            raise RuntimeError(f"{scenario['name']}: no ttft summary line ({TTFT_RE})")
+        return wall, float(m.group(3))
+
+    _, mono_p99 = timed(scenario["mono_argv"] + scenario["workload"])
+    disagg_wall, disagg_p99 = timed(scenario["disagg_argv"] + scenario["workload"])
+    ratio = round(mono_p99 / max(disagg_p99, 1e-9), 3)
+    if ratio <= 1.0:
+        warn(f"{scenario['name']}: disagg TTFT p99 {disagg_p99}s no better than "
+             f"chunked monolithic {mono_p99}s at equal GPUs (ratio {ratio})")
+    metrics = {
+        "mono_ttft_p99_s": mono_p99,
+        "disagg_ttft_p99_s": disagg_p99,
+        "disagg_ttft_p99_win_ratio": ratio,
+    }
+    return {"name": scenario["name"],
+            "argv": scenario["disagg_argv"] + scenario["workload"],
+            "wall_s": round(disagg_wall, 3), "metrics": metrics}
+
+
 def warn(msg):
     # GitHub annotation; plain stderr elsewhere
     print(f"::warning title=bench regression::{msg}")
@@ -410,7 +473,8 @@ def main():
         "scenarios": [run_scenario(args.binary, s) for s in SCENARIOS]
         + [run_paired(args.binary, PAIRED_SCENARIO),
            run_quant_paired(args.binary, QUANT_SCENARIO),
-           run_trace_paired(args.binary, TRACE_SCENARIO)],
+           run_trace_paired(args.binary, TRACE_SCENARIO),
+           run_disagg_paired(args.binary, DISAGG_SCENARIO)],
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

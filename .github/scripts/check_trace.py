@@ -7,7 +7,8 @@ Usage:
 
 `trace` checks a `--trace-out` Chrome trace export: every event carries
 the ph/ts/pid/tid schema keys, complete-span durations are non-negative,
-per-request child spans nest inside their `req N` parent, and (with
+per-request child spans nest inside their `req N` parent, counter
+(`ph:"C"`) gauge tracks carry a name and numeric args values, and (with
 --metrics) the number of request spans equals the metrics file's
 `completions` counter — request-id conservation across the two exports
 of the same run.
@@ -25,7 +26,7 @@ import json
 import sys
 
 GAUGE_CAP = 4096  # mirrors trace::metrics::GAUGE_CAP
-KNOWN_PHASES = {"X", "i", "M"}
+KNOWN_PHASES = {"X", "i", "M", "C"}
 
 
 def fail(msg):
@@ -48,6 +49,8 @@ def check_trace(path, metrics_path=None):
         fail(f"{path}: traceEvents missing or empty")
     req_spans = {}  # (pid, tid) -> (ts, ts+dur) of the `req N` parent
     children = []  # (pid, tid, ts, end, name) of per-request child spans
+    counters = 0  # ph:"C" gauge samples (batch / queue depth / KV util)
+    handoffs = 0  # disagg `kv handoff N` fabric-transfer spans
     for i, ev in enumerate(events):
         for key in ("ph", "ts", "pid", "tid"):
             if key not in ev:
@@ -56,6 +59,19 @@ def check_trace(path, metrics_path=None):
             fail(f"{path}: event {i} has unknown phase {ev['ph']!r}")
         if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
             fail(f"{path}: event {i} has bad ts {ev['ts']!r}")
+        if ev["ph"] == "C":
+            # counter tracks: a non-empty name and numeric args values
+            # (Perfetto silently drops counters that violate either)
+            if not ev.get("name"):
+                fail(f"{path}: counter event {i} has no name")
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                fail(f"{path}: counter {ev['name']!r} (event {i}) has no args")
+            for k, v in args.items():
+                if not isinstance(v, (int, float)):
+                    fail(f"{path}: counter {ev['name']!r} (event {i}) has "
+                         f"non-numeric series {k!r}: {v!r}")
+            counters += 1
         if ev["ph"] == "X":
             if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
                 fail(f"{path}: span {i} ({ev.get('name')}) has bad dur")
@@ -63,10 +79,21 @@ def check_trace(path, metrics_path=None):
             lane = (ev["pid"], ev["tid"])
             if name.startswith("req "):
                 req_spans[lane] = (ev["ts"], ev["ts"] + ev["dur"])
+            elif name.startswith("kv handoff "):
+                # cross-lane fabric transfer: starts on the prefill lane,
+                # its request's parent span lives on the decode lane — so
+                # it is exempt from the nesting rule, but must price bytes
+                b = ev.get("args", {}).get("bytes")
+                if not isinstance(b, (int, float)) or b <= 0:
+                    fail(f"{path}: handoff span {name!r} has bad bytes {b!r}")
+                handoffs += 1
             elif ev["tid"] != 0:
                 children.append((*lane, ev["ts"], ev["ts"] + ev["dur"], name))
     if not req_spans:
         fail(f"{path}: no `req N` request spans found")
+    if not counters:
+        fail(f"{path}: no counter (ph:'C') gauge samples found — every "
+             f"decode tick should emit batch/queue_depth/kv_util_pct")
     slack = 1.0  # µs of float rounding headroom
     for pid, tid, t0, t1, name in children:
         parent = req_spans.get((pid, tid))
@@ -81,8 +108,8 @@ def check_trace(path, metrics_path=None):
             fail(f"{path}: {len(req_spans)} request spans but {metrics_path} "
                  f"counts {completions} completions — request ids not conserved")
     print(f"check_trace: OK: {path}: {len(events)} events, "
-          f"{len(req_spans)} request spans, "
-          f"{len({e['pid'] for e in events})} lanes")
+          f"{len(req_spans)} request spans, {counters} counter samples, "
+          f"{handoffs} kv handoffs, {len({e['pid'] for e in events})} lanes")
 
 
 def check_metrics(path):

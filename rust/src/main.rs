@@ -4,6 +4,7 @@
 //!   table N | figure N | report-all      — regenerate paper tables/figures
 //!   sim-pretrain | sim-serve             — one simulator cell
 //!   sim-cluster                          — dp>1 replica cluster + load balancer
+//!   sim-disagg                           — disaggregated prefill/decode pools + KV handoff
 //!   sim-autoscale                        — shaped traffic + autoscaling multi-tenant fleet
 //!   sweep-load                           — QPS sweep + max-QPS-under-SLO search
 //!   sweep-parallel                       — TP×PP×DP plan comparison
@@ -27,9 +28,10 @@ use llm_perf_lab::search::{
     policy_space, ExecPolicy, ReplicaSpace, SearchBudget,
 };
 use llm_perf_lab::serve::{
-    simulate_autoscale, simulate_autoscale_traced, simulate_cluster, simulate_cluster_traced,
-    simulate_requests, simulate_requests_on_traced, AutoscalePolicy, AutoscaleSpec, Balancer,
-    ClusterSpec, EngineSpec, KvPrecision, SpecDecode, WeightPrecision,
+    kv_handoff_bytes_per_token, simulate_autoscale, simulate_autoscale_traced, simulate_cluster,
+    simulate_cluster_traced, simulate_disagg, simulate_disagg_traced, simulate_requests,
+    simulate_requests_on_traced, AutoscalePolicy, AutoscaleSpec, Balancer, ClusterSpec, DisaggSpec,
+    EngineSpec, KvPrecision, SpecDecode, WeightPrecision,
 };
 use llm_perf_lab::trace::{chrome_trace, MetricsRegistry, TraceBuffer};
 use llm_perf_lab::train::simulate_step;
@@ -51,6 +53,7 @@ simulators:
                  [--input LEN|uniform:LO:HI|lognormal:MEAN:CV|trace]
                  [--output ...same grammar...] [--trace FILE] [--seed 42]
                  [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
+                 [--chunk-tokens N]
                  [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
                  [--trace-out FILE] [--metrics-out FILE]
                  one serving cell; open-loop arrivals + length
@@ -59,13 +62,17 @@ simulators:
                  occupancy peaks and, with --slo-*, goodput;
                  --weight-bits/--kv-bits quantize the weight and KV
                  storage, --spec ACCEPT:LOOKAHEAD turns on speculative
-                 decoding at that draft acceptance rate; --trace-out
-                 writes a Perfetto-loadable Chrome trace of the replay,
-                 --metrics-out a metrics time-series JSON (neither
-                 perturbs the simulation — results are bit-identical)
+                 decoding at that draft acceptance rate; --chunk-tokens
+                 turns on Sarathi-style chunked prefill (prompts advance
+                 at most N tokens per iteration, interleaved with
+                 decode); --trace-out writes a Perfetto-loadable Chrome
+                 trace of the replay, --metrics-out a metrics
+                 time-series JSON (neither perturbs the simulation —
+                 results are bit-identical)
   sim-cluster    --model 7b --platform a800 --engine vllm --replicas 2
-                 [--tp N] [--balancer rr|lo|jsq|all] [--requests 200]
-                 [--arrival ...] [--input ...] [--output ...] [--trace FILE]
+                 [--tp N] [--chunk-tokens N] [--balancer rr|lo|jsq|all]
+                 [--requests 200] [--arrival ...] [--input ...]
+                 [--output ...] [--trace FILE]
                  [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
                  [--seed 42] [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
                  [--trace-out FILE] [--metrics-out FILE]
@@ -73,10 +80,30 @@ simulators:
                  behind a load balancer (round-robin, least-outstanding
                  work, join-shortest-queue; seeded tie-break): merged
                  cluster metrics + per-replica utilization table;
+                 --chunk-tokens runs every replica with chunked prefill;
                  --balancer all prints a per-policy comparison instead;
                  --trace-out writes a Chrome trace with one process
                  lane per replica, --metrics-out per-replica gauge
                  series (batch size, queue depth, KV utilization)
+  sim-disagg     --model 7b --platform a800 --engine vllm
+                 --prefill-replicas 1 --decode-replicas 2 [--tp N]
+                 [--chunk-tokens N] [--balancer rr|lo|jsq] [--requests 200]
+                 [--arrival ...] [--input ...] [--output ...] [--trace FILE]
+                 [--weight-bits 16|8|4] [--kv-bits 16|8|4] [--spec A:L|off]
+                 [--seed 42] [--profile FILE]
+                 [--slo-ttft S --slo-tpot S [--slo-q 0.9]]
+                 [--trace-out FILE] [--metrics-out FILE]
+                 disaggregated serving: a prefill pool computes prompt
+                 KV (optionally in --chunk-tokens chunks), hands it off
+                 per-request over the platform fabric (--profile
+                 reprices the link from a calibration profile), and a
+                 decode pool streams tokens with zero prefill compute;
+                 prints end-to-end TTFT/TPOT measured from the original
+                 arrivals, handoff volume/latency, and a per-pool
+                 replica table; --prefill-replicas 0 degenerates to the
+                 monolithic cluster (bit-identical to sim-cluster);
+                 --trace-out lanes: prefill replicas first, then decode
+                 replicas, with per-request KV-handoff spans
   sim-autoscale  --model 7b --platform a800 --engine vllm [--tp N]
                  [--min-replicas 1] [--max-replicas 4] [--balancer rr|lo|jsq]
                  [--target-util 0.6] [--queue-depth 8] [--interval 15]
@@ -145,6 +172,7 @@ configuration autotuner (DESIGN.md §Configuration search):
                  [--slo-ttft 2.0] [--slo-tpot 0.1] [--slo-q 0.9]
                  [--qps-min 0.25] [--qps-max 64] [--max-configs N]
                  [--max-replicas 1] [--gpu-budget N] [--balancer rr|lo|jsq]
+                 [--disagg]
                  [--weight-bits 16,8,4] [--kv-bits 16,8] [--spec 0.7:4,off]
                  [--jobs N] [--exhaustive] [--no-early-prune]
                  [--show-pruned] [--profile FILE]
@@ -157,7 +185,11 @@ configuration autotuner (DESIGN.md §Configuration search):
                  under the SLO and print the capacity x total-GPUs x $/h
                  Pareto frontier over candidates meeting --qps (all
                  candidates without it); --max-replicas opens the dp>1
-                 axis, --gpu-budget caps TP x replicas; candidates are
+                 axis, --gpu-budget caps TP x replicas; --disagg adds
+                 disaggregated prefill/decode pool splits of each fleet
+                 (every 'Np+Md' partition of the replica count) to the
+                 space, costed with the KV-handoff fabric model and
+                 labeled like 'vLLM TP1 1p+2d'; candidates are
                  costed in parallel on --jobs threads through a staged
                  coarse-to-fine pipeline (analytic screen -> short sims
                  -> full bisection, min-GPU point provably identical to
@@ -268,6 +300,7 @@ fn run(cli: &Cli) -> Result<()> {
         "validate-comm" => validate_comm(cli)?,
         "sim-serve" => sim_serve(cli)?,
         "sim-cluster" => sim_cluster(cli)?,
+        "sim-disagg" => sim_disagg(cli)?,
         "sim-autoscale" => sim_autoscale(cli)?,
         "sweep-load" => sweep_load(cli)?,
         "autotune-train" => autotune_train_cmd(cli)?,
@@ -438,6 +471,18 @@ fn engine_variant_flags(cli: &Cli, mut engine: EngineSpec) -> Result<EngineSpec>
         engine = engine.with_spec_decode(ss.remove(0));
     }
     Ok(engine)
+}
+
+/// The `--chunk-tokens` flag (Sarathi-style chunked prefill budget);
+/// absent or 0 means chunking off.
+fn chunk_tokens_flag(cli: &Cli) -> Result<Option<u64>> {
+    match cli.flag("chunk-tokens") {
+        None => Ok(None),
+        Some(v) => {
+            let n: u64 = v.parse().map_err(|e| err!("bad --chunk-tokens '{v}': {e}"))?;
+            Ok(if n == 0 { None } else { Some(n) })
+        }
+    }
 }
 
 /// Cross-product an engine list with the `--weight-bits` / `--kv-bits` /
@@ -633,7 +678,8 @@ fn write_trace_outputs(cli: &Cli, buf: &TraceBuffer) -> Result<()> {
 fn sim_serve(cli: &Cli) -> Result<()> {
     let cfg = model_flag(cli, "7b")?;
     let plat = platform_flag(cli)?;
-    let engine = engine_variant_flags(cli, engine_flag(cli)?)?;
+    let engine = engine_variant_flags(cli, engine_flag(cli)?)?
+        .with_chunked_prefill(chunk_tokens_flag(cli)?);
     let spec = workload_flags(cli, 1000)?;
     let slo = slo_flags(cli)?; // validate before simulating
     let requests = spec.generate()?;
@@ -688,7 +734,8 @@ fn sim_serve(cli: &Cli) -> Result<()> {
 fn sim_cluster(cli: &Cli) -> Result<()> {
     let cfg = model_flag(cli, "7b")?;
     let plat = platform_flag(cli)?;
-    let engine = engine_variant_flags(cli, engine_flag(cli)?)?;
+    let engine = engine_variant_flags(cli, engine_flag(cli)?)?
+        .with_chunked_prefill(chunk_tokens_flag(cli)?);
     let spec = workload_flags(cli, 200)?;
     let slo = slo_flags(cli)?;
     let replicas_s = cli.flag_or("replicas", "2");
@@ -761,6 +808,84 @@ fn sim_cluster(cli: &Cli) -> Result<()> {
                  m.goodput(&slo), m.slo_attainment(&slo) * 100.0);
     }
     println!("{}", report::load::replica_table(&r, &cluster).render());
+    write_trace_outputs(cli, &buf)?;
+    Ok(())
+}
+
+/// `llmperf sim-disagg` — one workload on disaggregated prefill/decode
+/// pools with per-request KV handoff over the platform fabric.
+fn sim_disagg(cli: &Cli) -> Result<()> {
+    let cfg = model_flag(cli, "7b")?;
+    let mut plat = platform_flag(cli)?;
+    apply_profile_to_platform(cli, &mut plat)?;
+    let engine = engine_variant_flags(cli, engine_flag(cli)?)?;
+    let spec = workload_flags(cli, 200)?;
+    let slo = slo_flags(cli)?;
+    let p_s = cli.flag_or("prefill-replicas", "1");
+    let prefill_replicas: u32 =
+        p_s.parse().map_err(|e| err!("bad --prefill-replicas '{p_s}': {e}"))?;
+    let d_s = cli.flag_or("decode-replicas", "2");
+    let decode_replicas: u32 =
+        d_s.parse().map_err(|e| err!("bad --decode-replicas '{d_s}': {e}"))?;
+    if decode_replicas == 0 {
+        return Err(err!("--decode-replicas must be >= 1"));
+    }
+    let plan = match cli.flag("tp") {
+        Some(v) => {
+            let tp: u32 = v.parse().map_err(|e| err!("bad --tp '{v}': {e}"))?;
+            engine.plan_with_tp(&plat, &cfg, tp).ok_or_else(|| {
+                err!("{} cannot deploy {} at TP{} on {} (per-replica memory check failed)",
+                     engine.name, cfg.name, tp, plat.id.label())
+            })?
+        }
+        None => engine.plan(&plat, &cfg).ok_or_else(|| {
+            err!("{} cannot deploy {} on {} (OOM)", engine.name, cfg.name, plat.id.label())
+        })?,
+    };
+    let bal = cli.flag_or("balancer", "rr");
+    let balancer = Balancer::parse(&bal)
+        .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq)"))?;
+    let dspec = DisaggSpec::new(prefill_replicas, decode_replicas, plan, balancer)
+        .seed(spec.seed)
+        .chunk_tokens(chunk_tokens_flag(cli)?);
+    let reqs = spec.generate()?;
+    let mut buf = TraceBuffer::new();
+    let r = if wants_trace(cli) {
+        simulate_disagg_traced(&plat, &cfg, &engine, &dspec, &reqs, &mut buf)
+    } else {
+        simulate_disagg(&plat, &cfg, &engine, &dspec, &reqs)
+    };
+    let m = &r.merged;
+    println!("{} / {} / {} — {}p+{}d × TP{} = {} GPUs, {} balancer, {} requests \
+              ({:?} arrivals)",
+             plat.id.label(), cfg.name, engine.variant_name(), dspec.prefill_replicas,
+             dspec.decode_replicas, dspec.plan.tp(), dspec.total_gpus(), balancer.describe(),
+             reqs.len(), spec.arrival);
+    if !dspec.disaggregated() {
+        println!("  (0 prefill replicas — running the monolithic cluster path)");
+    }
+    if m.rejected > 0 {
+        println!("  WARNING: {} unservable request(s) rejected \
+                  (prompt beyond the engine's prefill/KV budget)", m.rejected);
+    }
+    let (ttft, tpot) = (m.ttft_summary(), m.tpot_summary());
+    println!("  throughput {:.0} output tokens/s, makespan {:.1}s",
+             m.throughput(), m.makespan);
+    println!("  ttft    p50 {:.2}s  p90 {:.2}s  p99 {:.2}s", ttft.p50, ttft.p90, ttft.p99);
+    println!("  tpot    p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+             tpot.p50 * 1e3, tpot.p90 * 1e3, tpot.p99 * 1e3);
+    println!("  kv handoff: {} transfer(s), {:.2} GB total, mean {:.2} ms \
+              ({} B/token at {}-bit KV)",
+             r.handoffs, r.handoff_bytes / 1e9, r.mean_handoff_time * 1e3,
+             kv_handoff_bytes_per_token(&cfg, engine.kv_precision) as u64,
+             engine.kv_precision.bits());
+    if let Some(slo) = slo {
+        println!("  SLO {}: {} | goodput {:.0} tokens/s | attainment {:.1}%",
+                 slo.describe(),
+                 if m.meets_slo(&slo) { "met" } else { "MISSED" },
+                 m.goodput(&slo), m.slo_attainment(&slo) * 100.0);
+    }
+    println!("{}", report::load::disagg_pool_table(&r, &dspec).render());
     write_trace_outputs(cli, &buf)?;
     Ok(())
 }
@@ -1037,7 +1162,7 @@ fn autotune_serve_cmd(cli: &Cli) -> Result<()> {
     let bal = cli.flag_or("balancer", "rr");
     let balancer = Balancer::parse(&bal)
         .ok_or_else(|| err!("bad --balancer '{bal}' (rr | lo | jsq)"))?;
-    let replicas = ReplicaSpace { max_replicas, gpu_budget, balancer };
+    let replicas = ReplicaSpace { max_replicas, gpu_budget, balancer, disagg: cli.has("disagg") };
     let policy = exec_flags(cli, true);
     let search = autotune_serve_exec(&plat, &cfg, &engines, &base, &slo, target, (lo, hi),
                                      replicas, budget_flags(cli), policy)?;

@@ -14,8 +14,9 @@ use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::err;
 use crate::hw::Platform;
 use crate::serve::{
-    simulate_cluster, simulate_cluster_shared, simulate_requests_on, simulate_requests_shared,
-    Balancer, ClusterResult, ClusterSpec, DeployPlan, EngineSpec, SharedCosts, SimResult,
+    simulate_cluster, simulate_cluster_shared, simulate_disagg, simulate_disagg_shared,
+    simulate_requests_on, simulate_requests_shared, Balancer, ClusterResult, ClusterSpec,
+    DeployPlan, DisaggResult, DisaggSpec, EngineSpec, SharedCosts, SimResult,
 };
 use crate::util::error::Result;
 use crate::util::json::Json;
@@ -327,6 +328,51 @@ pub fn max_qps_under_slo_cluster_shared(
     Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
 }
 
+/// [`max_qps_under_slo_cluster`] for a disaggregated prefill/decode
+/// fleet: each probe runs the two-pool loop (KV handoff priced over the
+/// fabric) and the SLO is checked on the merged, end-to-end result —
+/// TTFT measured from the original arrival, through prefill queueing
+/// *and* the handoff (`llmperf sim-disagg`).
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_disagg(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &DisaggSpec,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+) -> Result<Option<f64>> {
+    let probe_at = |qps: f64| -> Result<SimResult> {
+        let reqs = base.with_offered_qps(qps)?.generate()?;
+        Ok(simulate_disagg(plat, cfg, engine, spec, &reqs).merged)
+    };
+    Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
+}
+
+/// [`max_qps_under_slo_disagg`] on a shared [`SharedCosts`] memo —
+/// bit-identical to it; the capacity signal `autotune-serve --disagg`
+/// bisects for pool-split candidates.
+#[allow(clippy::too_many_arguments)]
+pub fn max_qps_under_slo_disagg_shared(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    spec: &DisaggSpec,
+    base: &WorkloadSpec,
+    slo: &SloSpec,
+    lo: f64,
+    hi: f64,
+    costs: &SharedCosts,
+) -> Result<Option<f64>> {
+    let probe_at = |qps: f64| -> Result<SimResult> {
+        let reqs = base.with_offered_qps(qps)?.generate()?;
+        Ok(simulate_disagg_shared(plat, cfg, engine, spec, &reqs, costs).merged)
+    };
+    Ok(bisect_qps(probe_at, slo, lo, hi)?.map(|(q, _)| q))
+}
+
 /// Per-replica breakdown of one cluster run: requests routed, output
 /// tokens, throughput, makespan, decode iterations, preemptions — the
 /// balance view behind [`ClusterResult::utilization_skew`]
@@ -354,6 +400,52 @@ pub fn replica_table(result: &ClusterResult, spec: &ClusterSpec) -> Table {
             f1(r.makespan),
             r.decode_iters.to_string(),
             r.preemptions.to_string(),
+            r.rejected.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Per-replica breakdown of one disaggregated run, both pools in one
+/// table: prefill rows count prompt tokens and prefill iterations,
+/// decode rows count output tokens and decode iterations
+/// (`llmperf sim-disagg`).
+pub fn disagg_pool_table(result: &DisaggResult, spec: &DisaggSpec) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Per-pool breakdown — {}p+{}d × TP{}, {} balancer, {} handoffs ({:.2} GB, mean {:.2} ms)",
+            spec.prefill_replicas,
+            spec.decode_replicas,
+            spec.plan.tp(),
+            spec.balancer.describe(),
+            result.handoffs,
+            result.handoff_bytes / 1e9,
+            result.mean_handoff_time * 1e3
+        ),
+        &["Pool", "Replica", "Requests", "Done", "Tokens", "Iters", "Makespan (s)", "Rejected"],
+    )
+    .align_left(0);
+    for p in &result.prefill {
+        t.row(vec![
+            "prefill".to_string(),
+            p.replica.to_string(),
+            p.requests.to_string(),
+            p.requests.saturating_sub(p.rejected).to_string(),
+            p.tokens.to_string(),
+            p.prefill_iters.to_string(),
+            f1(p.makespan),
+            p.rejected.to_string(),
+        ]);
+    }
+    for r in &result.decode {
+        t.row(vec![
+            "decode".to_string(),
+            r.replica.to_string(),
+            r.requests.to_string(),
+            r.completions.to_string(),
+            r.output_tokens.to_string(),
+            r.decode_iters.to_string(),
+            f1(r.makespan),
             r.rejected.to_string(),
         ]);
     }
@@ -629,6 +721,31 @@ mod tests {
         let r = crate::serve::simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
         let per = replica_table(&r, &cluster);
         assert_eq!(per.n_rows(), 2, "one row per replica");
+    }
+
+    #[test]
+    fn disagg_capacity_bisects_and_pool_table_renders() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let spec = DisaggSpec::new(1, 2, plan, Balancer::RoundRobin);
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let q = max_qps_under_slo_disagg(&plat, &cfg, &engine, &spec, &base, &slo, 0.5, 4.0)
+            .unwrap();
+        assert_eq!(q, Some(4.0), "unbounded SLO passes at hi");
+        let costs = SharedCosts::new();
+        let qs = max_qps_under_slo_disagg_shared(&plat, &cfg, &engine, &spec, &base, &slo, 0.5,
+                                                 4.0, &costs)
+            .unwrap();
+        assert_eq!(qs.map(f64::to_bits), q.map(f64::to_bits), "shared memo is bit-identical");
+        let reqs = base.generate().unwrap();
+        let r = simulate_disagg(&plat, &cfg, &engine, &spec, &reqs);
+        let t = disagg_pool_table(&r, &spec);
+        assert_eq!(t.n_rows(), 3, "one row per replica across both pools");
+        let s = t.render();
+        assert!(s.contains("prefill") && s.contains("decode"), "{s}");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!
 //! 1. [`space`] enumerates candidates — ParallelPlan × training stack /
 //!    method × batch for training, engine × TP degree × replica count
+//!    (optionally split into disaggregated prefill/decode pool ratios)
 //!    for serving — and prunes memory-infeasible or over-GPU-budget
 //!    ones with the cheap analytical models *before* any costing;
 //! 2. [`objective`] costs the survivors (step simulation; bisected
@@ -464,6 +465,33 @@ mod tests {
         // both searches agree on the frontier's min-GPU point
         assert_eq!(pruned.min_gpu_point().unwrap().cand.label(),
                    full.min_gpu_point().unwrap().cand.label());
+    }
+
+    #[test]
+    fn serve_disagg_axis_searches_pool_splits() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let base = WorkloadSpec::at_once(20, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let engines = [EngineSpec::vllm()];
+        let rep = ReplicaSpace { max_replicas: 2, disagg: true, ..Default::default() };
+        let s = autotune_serve(&plat, &cfg, &engines, &base, &slo, None, (0.5, 4.0), rep,
+                               SearchBudget::default())
+            .unwrap();
+        // 4 TP degrees × replicas {1, 2} monolithic + a 1p+1d split per TP
+        assert_eq!(s.stats.enumerated, 8 + 4);
+        // everything saturates the bracket, so the early-prune stops at
+        // the 1-GPU monolithic candidate — pool splits stay enumerable
+        // without being costed when a cheaper config already wins
+        assert_eq!(s.stats.costed, 1);
+        assert_eq!(s.stats.skipped, 11);
+        assert_eq!(s.min_gpu_point().unwrap().cand.label(), "vLLM TP1");
+        // without the flag the space is untouched
+        let rep0 = ReplicaSpace { max_replicas: 2, ..Default::default() };
+        let s0 = autotune_serve(&plat, &cfg, &engines, &base, &slo, None, (0.5, 4.0), rep0,
+                                SearchBudget::default())
+            .unwrap();
+        assert_eq!(s0.stats.enumerated, 8);
     }
 
     #[test]

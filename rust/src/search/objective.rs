@@ -14,8 +14,10 @@
 
 use crate::config::{LlamaConfig, SloSpec, WorkloadSpec};
 use crate::hw::{Platform, Topology};
-use crate::report::load::{max_qps_under_slo_cluster_shared, max_qps_under_slo_on_shared};
-use crate::serve::{Balancer, ClusterSpec, SharedCosts};
+use crate::report::load::{
+    max_qps_under_slo_cluster_shared, max_qps_under_slo_disagg_shared, max_qps_under_slo_on_shared,
+};
+use crate::serve::{Balancer, ClusterSpec, DisaggSpec, SharedCosts};
 use crate::train::{simulate_megatron_plan_micro, simulate_step_plan, BreakdownCache};
 use crate::util::error::Result;
 
@@ -93,7 +95,8 @@ pub struct ServeEval {
     /// highest mean offered QPS meeting the SLO in the search bracket;
     /// None when even the bracket floor misses it
     pub max_qps: Option<f64>,
-    /// GPUs the deployment occupies (TP degree × replicas)
+    /// GPUs the deployment occupies (TP degree × all replicas — both
+    /// pools for a disaggregated candidate)
     pub gpus: u32,
     /// rental cost of those GPUs, USD per hour
     pub cost_per_hour: f64,
@@ -127,9 +130,10 @@ impl ServeEval {
 /// over `bracket`, preserving the base workload's arrival shape.
 /// Single-replica candidates run the plain deployment event loop;
 /// multi-replica candidates run the cluster loop under `balancer` (the
-/// tie-break seeded from the workload seed, so evals are reproducible),
-/// and the $/h objective prices *total* GPUs — replicas × TP ×
-/// [`Platform::gpu_hour_usd`].
+/// tie-break seeded from the workload seed, so evals are reproducible);
+/// disaggregated candidates (`prefill_replicas > 0`) run the two-pool
+/// loop with the KV handoff priced over the fabric.  The $/h objective
+/// prices *total* GPUs — all replicas × TP × [`Platform::gpu_hour_usd`].
 pub fn eval_serve(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -158,7 +162,14 @@ pub fn eval_serve_shared(
     balancer: Balancer,
     costs: &SharedCosts,
 ) -> Result<ServeEval> {
-    let max_qps = if cand.replicas == 1 {
+    let max_qps = if cand.prefill_replicas > 0 {
+        let spec = DisaggSpec::new(cand.prefill_replicas, cand.replicas, cand.plan, balancer)
+            .seed(base.seed)
+            .chunk_tokens(cand.engine.chunked_prefill);
+        max_qps_under_slo_disagg_shared(
+            plat, cfg, &cand.engine, &spec, base, slo, bracket.0, bracket.1, costs,
+        )?
+    } else if cand.replicas == 1 {
         max_qps_under_slo_on_shared(
             plat, cfg, &cand.engine, &cand.plan, base, slo, bracket.0, bracket.1, costs,
         )?
@@ -228,6 +239,7 @@ mod tests {
             plan: engine.plan_with_tp(&plat, &cfg, 2).unwrap(),
             engine,
             replicas: 1,
+            prefill_replicas: 0,
         };
         let base = WorkloadSpec::at_once(20, 256, 16);
         let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
@@ -261,6 +273,7 @@ mod tests {
             plan: engine.plan_with_tp(&plat, &cfg, 2).unwrap(),
             engine,
             replicas: 3,
+            prefill_replicas: 0,
         };
         let base = WorkloadSpec::at_once(24, 256, 16);
         let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
@@ -274,6 +287,27 @@ mod tests {
     }
 
     #[test]
+    fn serve_eval_disagg_runs_the_two_pool_loop_and_prices_both_pools() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engine = EngineSpec::vllm();
+        let cand = ServeCandidate {
+            plan: engine.plan_with_tp(&plat, &cfg, 1).unwrap(),
+            engine,
+            replicas: 2,
+            prefill_replicas: 1,
+        };
+        let base = WorkloadSpec::at_once(24, 256, 16);
+        let slo = SloSpec::new(0.9, f64::MAX, f64::MAX);
+        let e = eval_serve(&plat, &cfg, &cand, &base, &slo, (0.5, 4.0), Balancer::RoundRobin)
+            .unwrap();
+        assert_eq!(e.gpus, 3, "prefill + decode pools both count");
+        assert!((e.cost_per_hour - 3.0 * plat.gpu_hour_usd).abs() < 1e-12);
+        assert_eq!(e.max_qps, Some(4.0), "unbounded SLO passes at hi");
+        assert_eq!(e.cand.label(), "vLLM TP1 1p+2d");
+    }
+
+    #[test]
     fn saturation_uses_relative_tolerance_not_float_identity() {
         let plat = Platform::get(PlatformId::A800);
         let cfg = LlamaConfig::llama2_7b();
@@ -283,6 +317,7 @@ mod tests {
                 plan: engine.plan_with_tp(&plat, &cfg, 1).unwrap(),
                 engine: engine.clone(),
                 replicas: 1,
+                prefill_replicas: 0,
             },
             max_qps: q,
             gpus: 1,

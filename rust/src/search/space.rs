@@ -77,7 +77,8 @@ impl TrainCandidate {
 
 /// One point of the serving design space: `replicas` copies of an
 /// engine on a forced TP group (each replica already memory-checked —
-/// construction goes through [`EngineSpec::plan_with_tp`]).
+/// construction goes through [`EngineSpec::plan_with_tp`]), optionally
+/// split into a disaggregated prefill + decode fleet.
 #[derive(Debug, Clone)]
 pub struct ServeCandidate {
     /// the engine policy
@@ -85,20 +86,36 @@ pub struct ServeCandidate {
     /// the per-replica deployment (TP degree + whole-group KV capacity)
     pub plan: DeployPlan,
     /// identical replicas behind the load balancer (1 = one box, the
-    /// pre-cluster search space)
+    /// pre-cluster search space); for a disaggregated candidate
+    /// (`prefill_replicas > 0`) this counts the *decode* pool
     pub replicas: u32,
+    /// prefill-pool replicas of a disaggregated fleet; 0 = monolithic
+    /// (the pre-disaggregation search space)
+    pub prefill_replicas: u32,
 }
 
 impl ServeCandidate {
-    /// GPUs the whole candidate occupies (replicas × TP degree).
+    /// GPUs the whole candidate occupies — TP degree × all replicas,
+    /// both pools for a disaggregated candidate.
     pub fn gpus(&self) -> u32 {
-        self.plan.tp() * self.replicas
+        self.plan.tp() * (self.replicas + self.prefill_replicas)
     }
 
     /// Config label ("vLLM TP4", "vLLM TP2×3" for a 3-replica cluster,
-    /// "vLLM[w4+kv8] TP1" for a quantized variant).
+    /// "vLLM[w4+kv8] TP1" for a quantized variant, "vLLM TP1 1p+2d" for
+    /// a disaggregated 1-prefill + 2-decode fleet).
     pub fn label(&self) -> String {
-        serve_label(&self.engine.variant_name(), self.plan.tp(), self.replicas)
+        if self.prefill_replicas > 0 {
+            format!(
+                "{} TP{} {}p+{}d",
+                self.engine.variant_name(),
+                self.plan.tp(),
+                self.prefill_replicas,
+                self.replicas
+            )
+        } else {
+            serve_label(&self.engine.variant_name(), self.plan.tp(), self.replicas)
+        }
     }
 }
 
@@ -125,11 +142,21 @@ pub struct ReplicaSpace {
     pub gpu_budget: Option<u32>,
     /// balancing policy multi-replica candidates are costed under
     pub balancer: Balancer,
+    /// also enumerate disaggregated prefill/decode splits of each
+    /// multi-replica fleet (every `p + d = replicas` partition with
+    /// `p, d >= 1`); `false` keeps the monolithic-only space and its
+    /// pinned enumeration counts
+    pub disagg: bool,
 }
 
 impl Default for ReplicaSpace {
     fn default() -> Self {
-        ReplicaSpace { max_replicas: 1, gpu_budget: None, balancer: Balancer::RoundRobin }
+        ReplicaSpace {
+            max_replicas: 1,
+            gpu_budget: None,
+            balancer: Balancer::RoundRobin,
+            disagg: false,
+        }
     }
 }
 
@@ -249,6 +276,10 @@ fn micro_options(bs: u64) -> Vec<u64> {
 /// any costing.  A memory-infeasible TP degree is recorded once (the
 /// check does not depend on the replica count), so it contributes one
 /// row to [`ConfigSpace::enumerated`] regardless of `max_replicas`.
+/// With `rep.disagg`, every multi-replica fleet is additionally
+/// enumerated at each prefill/decode partition (`p + d = replicas`,
+/// both ≥ 1) — the pool-ratio axis `autotune-serve --disagg` searches —
+/// under the same GPU budget.
 pub fn serve_space(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -273,13 +304,30 @@ pub fn serve_space(
                 }
             };
             for replicas in 1..=max_replicas {
-                let cand = ServeCandidate { engine: engine.clone(), plan: deploy, replicas };
-                match rep.gpu_budget {
+                let mut consider = |cand: ServeCandidate| match rep.gpu_budget {
                     Some(budget) if cand.gpus() > budget => space.pruned.push(PrunedCandidate {
                         label: cand.label(),
                         reason: format!("over GPU budget: {} > {budget}", cand.gpus()),
                     }),
                     _ => space.candidates.push(cand),
+                };
+                consider(ServeCandidate {
+                    engine: engine.clone(),
+                    plan: deploy,
+                    replicas,
+                    prefill_replicas: 0,
+                });
+                if rep.disagg && replicas >= 2 {
+                    // every split of the same fleet size: p prefill
+                    // replicas feed replicas − p decode replicas
+                    for p in 1..replicas {
+                        consider(ServeCandidate {
+                            engine: engine.clone(),
+                            plan: deploy,
+                            replicas: replicas - p,
+                            prefill_replicas: p,
+                        });
+                    }
                 }
             }
         }
@@ -484,5 +532,37 @@ mod tests {
         // multi-replica labels carry the replica count
         assert!(s.candidates.iter().any(|c| c.label() == "vLLM TP1×3"));
         assert!(s.candidates.iter().any(|c| c.label() == "vLLM TP2"));
+        // the monolithic space never enumerates disaggregated splits
+        assert!(s.candidates.iter().all(|c| c.prefill_replicas == 0));
+    }
+
+    #[test]
+    fn serve_space_disagg_enumerates_pool_splits_under_budget() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let engines = [EngineSpec::vllm()];
+        let rep = ReplicaSpace {
+            max_replicas: 3,
+            gpu_budget: Some(8),
+            disagg: true,
+            ..Default::default()
+        };
+        let s = serve_space(&plat, &cfg, &engines, &rep);
+        // monolithic: 4 TP degrees × replicas {1,2,3} = 12; disagg adds
+        // one split at R=2 (1p+1d) and two at R=3 (1p+2d, 2p+1d) per TP
+        assert_eq!(s.enumerated(), 12 + 4 * 3);
+        let disagg: Vec<&ServeCandidate> =
+            s.candidates.iter().filter(|c| c.prefill_replicas > 0).collect();
+        assert!(!disagg.is_empty());
+        for c in &disagg {
+            assert!(c.replicas >= 1, "{}", c.label());
+            assert_eq!(c.gpus(), c.plan.tp() * (c.replicas + c.prefill_replicas));
+            assert!(c.gpus() <= 8, "{}", c.label());
+        }
+        assert!(s.candidates.iter().any(|c| c.label() == "vLLM TP1 1p+2d"));
+        assert!(s.candidates.iter().any(|c| c.label() == "vLLM TP1 2p+1d"));
+        // over-budget splits land in the why-not rows like any candidate
+        assert!(s.pruned.iter().any(|p| p.label.contains("p+") && p.reason.contains("budget")),
+                "{:?}", s.pruned);
     }
 }

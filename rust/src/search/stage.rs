@@ -134,8 +134,20 @@ pub(crate) fn staged_serve(
             decode_iter_time(plat, cfg, &c.plan, b, ctx),
             c.engine.effective_overhead(),
         );
-        let req_time = prefill_time(plat, cfg, &c.plan, mean_in) + mean_out as f64 * t_iter;
-        f64::from(c.replicas) * b as f64 / req_time.max(1e-12)
+        let prefill = prefill_time(plat, cfg, &c.plan, mean_in);
+        if c.prefill_replicas > 0 {
+            // disaggregated: the pools run concurrently, so capacity is
+            // the slower stage's rate — p prompts/s through the prefill
+            // pool vs the decode pool's batched token cadence
+            let pre_rate = f64::from(c.prefill_replicas)
+                / (prefill + c.engine.effective_overhead()).max(1e-12);
+            let dec_rate =
+                f64::from(c.replicas) * b as f64 / (mean_out as f64 * t_iter).max(1e-12);
+            pre_rate.min(dec_rate)
+        } else {
+            let req_time = prefill + mean_out as f64 * t_iter;
+            f64::from(c.replicas) * b as f64 / req_time.max(1e-12)
+        }
     });
     let all: Vec<usize> = (0..n).collect();
     let survivors = cut(&all, &score_a, &gpus, n.div_ceil(2));

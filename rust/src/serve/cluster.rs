@@ -203,6 +203,10 @@ pub(crate) struct ServiceEstimate<'a> {
     engine: &'a EngineSpec,
     plan: DeployPlan,
     cache: std::collections::HashMap<(u64, u64), f64>,
+    // stage-specific caches for the disaggregated dispatcher (prefill
+    // keys on the prompt bucket only; decode on the full pair)
+    prefill_cache: std::collections::HashMap<u64, f64>,
+    decode_cache: std::collections::HashMap<(u64, u64), f64>,
 }
 
 /// Decode batch the dispatcher assumes when estimating per-token
@@ -217,7 +221,47 @@ impl<'a> ServiceEstimate<'a> {
         engine: &'a EngineSpec,
         plan: DeployPlan,
     ) -> Self {
-        ServiceEstimate { plat, cfg, engine, plan, cache: std::collections::HashMap::new() }
+        ServiceEstimate {
+            plat,
+            cfg,
+            engine,
+            plan,
+            cache: std::collections::HashMap::new(),
+            prefill_cache: std::collections::HashMap::new(),
+            decode_cache: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Prefill-only service estimate (the disaggregated dispatcher's
+    /// stage-1 ranking): batched prefill at the prompt-bucket midpoint.
+    pub(crate) fn prefill_seconds(&mut self, req: &Request) -> f64 {
+        let key = req.input_len / 32;
+        if let Some(&s) = self.prefill_cache.get(&key) {
+            return s;
+        }
+        let s = prefill_time(self.plat, self.cfg, &self.plan, key * 32 + 16);
+        self.prefill_cache.insert(key, s);
+        s
+    }
+
+    /// Decode-only service estimate (stage-2 ranking): one decode
+    /// iteration per budgeted output token, no prefill term — the prompt
+    /// KV arrives precomputed over the interconnect.
+    pub(crate) fn decode_seconds(&mut self, req: &Request) -> f64 {
+        let key = (req.input_len / 32, req.output_len / 32);
+        if let Some(&s) = self.decode_cache.get(&key) {
+            return s;
+        }
+        let input = key.0 * 32 + 16;
+        let output = key.1 * 32 + 16;
+        let ctx = input + output / 2;
+        let tpot = self.engine.spec_decode.per_token_time(
+            decode_iter_time(self.plat, self.cfg, &self.plan, NOMINAL_DECODE_BATCH, ctx),
+            self.engine.effective_overhead(),
+        );
+        let s = output as f64 * tpot;
+        self.decode_cache.insert(key, s);
+        s
     }
 
     pub(crate) fn seconds(&mut self, req: &Request) -> f64 {
@@ -403,6 +447,28 @@ pub fn dispatch_traced(
 /// arrival stream, replay each replica through the unmodified
 /// single-deployment event loop, and merge.  The caller owns plan
 /// feasibility, exactly as with [`simulate_requests_on`].
+///
+/// The README's `sim-cluster` cell, as a library call:
+///
+/// ```
+/// use llm_perf_lab::config::{Arrival, LlamaConfig, WorkloadSpec};
+/// use llm_perf_lab::hw::{Platform, PlatformId};
+/// use llm_perf_lab::serve::{simulate_cluster, Balancer, ClusterSpec, EngineSpec};
+///
+/// let plat = Platform::get(PlatformId::A800);
+/// let cfg = LlamaConfig::llama2_7b();
+/// let engine = EngineSpec::vllm();
+/// let plan = engine.plan(&plat, &cfg).unwrap();
+/// let reqs = WorkloadSpec::new(30)
+///     .arrival(Arrival::Poisson { qps: 8.0 })
+///     .seed(42)
+///     .generate()
+///     .unwrap();
+/// let spec = ClusterSpec::new(2, plan, Balancer::JoinShortestQueue);
+/// assert_eq!(spec.total_gpus(), 2);
+/// let r = simulate_cluster(&plat, &cfg, &engine, &spec, &reqs);
+/// assert_eq!(r.merged.completions.len(), 30);
+/// ```
 pub fn simulate_cluster(
     plat: &Platform,
     cfg: &LlamaConfig,

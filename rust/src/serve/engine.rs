@@ -233,6 +233,12 @@ pub struct EngineSpec {
     pub kv_precision: KvPrecision,
     /// speculative-decoding configuration (off by default)
     pub spec_decode: SpecDecode,
+    /// Sarathi-style chunked prefill: when `Some(chunk_tokens)`, a
+    /// request's prefill is split into chunks of at most this many
+    /// tokens and interleaved with ongoing decode iterations, trading a
+    /// longer TTFT for steadier TPOT. `None` (the default on every
+    /// engine) keeps the monolithic prefill-priority loop bit-for-bit.
+    pub chunked_prefill: Option<u64>,
 }
 
 impl EngineSpec {
@@ -252,6 +258,7 @@ impl EngineSpec {
             weight_precision: WeightPrecision::Fp16,
             kv_precision: KvPrecision::Fp16,
             spec_decode: SpecDecode::off(),
+            chunked_prefill: None,
         }
     }
 
@@ -271,6 +278,7 @@ impl EngineSpec {
             weight_precision: WeightPrecision::Fp16,
             kv_precision: KvPrecision::Fp16,
             spec_decode: SpecDecode::off(),
+            chunked_prefill: None,
         }
     }
 
@@ -290,6 +298,7 @@ impl EngineSpec {
             weight_precision: WeightPrecision::Fp16,
             kv_precision: KvPrecision::Fp16,
             spec_decode: SpecDecode::off(),
+            chunked_prefill: None,
         }
     }
 
@@ -318,6 +327,14 @@ impl EngineSpec {
     /// Builder: set the speculative-decoding configuration.
     pub fn with_spec_decode(mut self, s: SpecDecode) -> Self {
         self.spec_decode = s;
+        self
+    }
+
+    /// Builder: set the chunked-prefill chunk size in tokens.
+    /// `Some(0)` is normalized to `None` (disabled), so every disabled
+    /// spelling reproduces the monolithic loop bit-for-bit.
+    pub fn with_chunked_prefill(mut self, chunk_tokens: Option<u64>) -> Self {
+        self.chunked_prefill = chunk_tokens.filter(|&c| c > 0);
         self
     }
 

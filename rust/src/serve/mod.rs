@@ -5,11 +5,14 @@
 //! (arrival processes, length distributions, trace replay) with
 //! TTFT/TPOT/SLO accounting, a replica-cluster layer (`cluster`) that
 //! load-balances one arrival stream across dp>1 copies of a deployment,
-//! and an autoscaling control loop (`autoscale`) that scales the fleet
-//! against time-varying traffic with multi-tenant admission control.
+//! a disaggregated prefill/decode topology (`disagg`) with KV handoff
+//! priced over the interconnect, and an autoscaling control loop
+//! (`autoscale`) that scales the fleet against time-varying traffic
+//! with multi-tenant admission control.
 
 pub mod autoscale;
 pub mod cluster;
+pub mod disagg;
 pub mod engine;
 pub mod kv_cache;
 pub mod request;
@@ -24,6 +27,10 @@ pub use cluster::{
     dispatch, dispatch_traced, simulate_cluster, simulate_cluster_shared,
     simulate_cluster_shared_traced, simulate_cluster_traced, Balancer, ClusterResult,
     ClusterSpec, ReplicaStats,
+};
+pub use disagg::{
+    kv_handoff_bytes_per_token, simulate_disagg, simulate_disagg_shared,
+    simulate_disagg_shared_traced, simulate_disagg_traced, DisaggResult, DisaggSpec, PrefillStats,
 };
 pub use engine::{
     DeployPlan, EngineSpec, KvPolicy, KvPrecision, SpecDecode, WeightPrecision,

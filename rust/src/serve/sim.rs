@@ -365,7 +365,7 @@ impl SharedCosts {
         Self::default()
     }
 
-    fn decode_cost(
+    pub(crate) fn decode_cost(
         &self,
         plat: &Platform,
         cfg: &LlamaConfig,
@@ -383,7 +383,7 @@ impl SharedCosts {
         t
     }
 
-    fn prefill_cost(
+    pub(crate) fn prefill_cost(
         &self,
         plat: &Platform,
         cfg: &LlamaConfig,
@@ -445,6 +445,27 @@ pub fn simulate_workload(
 /// [`SimResult::rejected`] and skipped.  An all-zero-arrival list
 /// reproduces [`simulate`] bit-for-bit.  Returns None if the model
 /// cannot be deployed.
+///
+/// The README's `sim-serve` cell, as a library call:
+///
+/// ```
+/// use llm_perf_lab::config::{Arrival, LengthDist, LlamaConfig, SloSpec, WorkloadSpec};
+/// use llm_perf_lab::hw::{Platform, PlatformId};
+/// use llm_perf_lab::serve::{simulate_requests, EngineSpec};
+///
+/// let plat = Platform::get(PlatformId::A800);
+/// let cfg = LlamaConfig::llama2_7b();
+/// let reqs = WorkloadSpec::new(24)
+///     .arrival(Arrival::Poisson { qps: 8.0 })
+///     .input(LengthDist::log_normal(512.0, 0.6))
+///     .output(LengthDist::Fixed(128))
+///     .seed(7)
+///     .generate()
+///     .unwrap();
+/// let r = simulate_requests(&plat, &cfg, &EngineSpec::vllm(), &reqs).unwrap();
+/// assert_eq!(r.completions.len(), 24);
+/// assert!(r.meets_slo(&SloSpec::new(0.9, 4.0, 0.25)));
+/// ```
 pub fn simulate_requests(
     plat: &Platform,
     cfg: &LlamaConfig,
@@ -556,6 +577,66 @@ pub fn simulate_requests_shared_traced(
     )
 }
 
+/// Decode-only replay for the disaggregated decode pool: identical event
+/// loop, but batched "prefill" iterations cost zero compute — the prompt
+/// KV was computed by a prefill replica and handed off over the
+/// interconnect, so admission only *loads* it (the engine's scheduling
+/// overhead still applies, and the transferred KV occupies the pool).
+/// Used by [`crate::serve::disagg`].
+pub(crate) fn simulate_decode_only_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    requests: &[Request],
+    sink: &mut dyn TraceSink,
+) -> SimResult {
+    let mut cost = IterCostCache::new();
+    run_event_loop(
+        engine,
+        *plan,
+        requests,
+        |batch, avg_ctx| cost.decode(plat, cfg, plan, batch, avg_ctx),
+        |_tokens| 0.0,
+        sink,
+    )
+}
+
+/// [`simulate_decode_only_traced`] drawing decode costs from a
+/// [`SharedCosts`] memo.  Prefill stays free, so decode replicas
+/// contribute no prefill keys to the memo; the per-run L1 map keeps the
+/// lookup counter deterministic exactly as in
+/// [`simulate_requests_shared_traced`].
+pub(crate) fn simulate_decode_only_shared_traced(
+    plat: &Platform,
+    cfg: &LlamaConfig,
+    engine: &EngineSpec,
+    plan: &DeployPlan,
+    requests: &[Request],
+    costs: &SharedCosts,
+    sink: &mut dyn TraceSink,
+) -> SimResult {
+    let mut l1_decode: HashMap<(u64, u64), f64> = HashMap::new();
+    run_event_loop(
+        engine,
+        *plan,
+        requests,
+        |batch, avg_ctx| {
+            let bucket = (batch, avg_ctx / 32);
+            match l1_decode.get(&bucket) {
+                Some(&t) => t,
+                None => {
+                    let t = costs.decode_cost(plat, cfg, plan, batch, avg_ctx);
+                    l1_decode.insert(bucket, t);
+                    t
+                }
+            }
+        },
+        |_tokens| 0.0,
+        sink,
+    )
+}
+
 /// The continuous-batching event loop shared by every serving entry
 /// point, parameterized over the two pure cost kernels (decode iteration
 /// and batched prefill) so callers choose the caching strategy without
@@ -584,6 +665,11 @@ fn run_event_loop(
     // regenerates tokens, but the client already saw the first one — TTFT
     // must keep the earliest emission (restored on re-admission)
     let mut first_tokens: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
+    // chunked prefill: prompt tokens each running sequence still has to
+    // prefill — populated at admission only when `engine.chunked_prefill`
+    // is set, so the monolithic path never touches it
+    let chunking = engine.chunked_prefill.is_some();
+    let mut prefill_left: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
     let mut clock = 0.0f64;
     let mut decode_iters = 0u64;
     let mut prefill_iters = 0u64;
@@ -646,6 +732,11 @@ fn run_event_loop(
                 break;
             }
             seq.first_token_at = first_tokens.get(&seq.id).copied();
+            if chunking {
+                // the whole prompt remains to be prefilled chunk by chunk
+                // (recompute semantics: a preempted seq starts over)
+                prefill_left.insert(seq.id, req.input_len);
+            }
             prefill_tokens += req.input_len;
             admitted += 1;
             if sink.active() {
@@ -654,7 +745,7 @@ fn run_event_loop(
             running.push(seq);
             waiting.pop_front();
         }
-        if admitted > 0 {
+        if admitted > 0 && !chunking {
             let t0 = clock;
             let t = prefill_cost(prefill_tokens) + engine.effective_overhead();
             clock += t;
@@ -697,23 +788,99 @@ fn run_event_loop(
             continue;
         }
 
-        // ---- one decode iteration over the running batch
-        let batch = running.len() as u64;
-        let avg_ctx = (running.iter().map(|s| s.context()).sum::<u64>() / batch).max(1);
+        // ---- chunked prefill: sequences whose prompt completed *before*
+        // this iteration decode; the rest consume the per-iteration chunk
+        // budget FIFO in running order.  A sequence whose last chunk
+        // completes here joins the decode batch next iteration.
+        let mut chunk_used = 0u64;
+        let mut decoding_ids: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        if let Some(chunk_tokens) = engine.chunked_prefill {
+            decoding_ids
+                .extend(running.iter().filter(|s| !prefill_left.contains_key(&s.id)).map(|s| s.id));
+            let mut budget = chunk_tokens;
+            for s in running.iter() {
+                if budget == 0 {
+                    break;
+                }
+                if let Some(left) = prefill_left.get_mut(&s.id) {
+                    let take = (*left).min(budget);
+                    *left -= take;
+                    budget -= take;
+                    chunk_used += take;
+                    let finished = *left == 0;
+                    if finished {
+                        prefill_left.remove(&s.id);
+                    }
+                }
+            }
+            if decoding_ids.is_empty() {
+                // nothing decodable yet: a pure prefill-chunk iteration
+                // (chunk_used > 0 — every running seq holds prompt tokens)
+                let t0 = clock;
+                clock += prefill_cost(chunk_used) + engine.effective_overhead();
+                prefill_iters += 1;
+                kv_used_peak =
+                    kv_used_peak.max(plan.kv_capacity_tokens.saturating_sub(kv.free_tokens()));
+                if sink.active() {
+                    sink.record(TraceEvent::Prefill {
+                        t0,
+                        t1: clock,
+                        tokens: chunk_used,
+                        admitted,
+                    });
+                }
+                continue;
+            }
+        }
+
+        // ---- one decode iteration over the running batch (in chunked
+        // mode, over the decoding subset only)
+        let (batch, avg_ctx) = if chunking {
+            let batch = decoding_ids.len() as u64;
+            let ctx = running
+                .iter()
+                .filter(|s| decoding_ids.contains(&s.id))
+                .map(|s| s.context())
+                .sum::<u64>()
+                / batch;
+            (batch, ctx.max(1))
+        } else {
+            let batch = running.len() as u64;
+            (batch, (running.iter().map(|s| s.context()).sum::<u64>() / batch).max(1))
+        };
         let t0 = clock;
-        let t = engine
+        let decode_t = engine
             .spec_decode
             .per_token_time(decode_cost(batch, avg_ctx), engine.effective_overhead());
+        // a co-scheduled prefill chunk extends the iteration; explicit
+        // branch so the monolithic path's float expression is untouched
+        let t = if chunk_used > 0 { decode_t + prefill_cost(chunk_used) } else { decode_t };
         clock += t;
         decode_iters += 1;
         iter_time_sum += t;
         batch_sum += batch;
         peak_batch = peak_batch.max(batch);
+        if chunk_used > 0 {
+            prefill_iters += 1;
+            if sink.active() {
+                sink.record(TraceEvent::Prefill {
+                    t0,
+                    t1: clock,
+                    tokens: chunk_used,
+                    admitted,
+                });
+            }
+        }
 
         // account KV growth; preempt the newest sequences on exhaustion
         let mut preempted: Vec<RunningSeq> = Vec::new();
         let mut i = 0;
         while i < running.len() {
+            if chunking && !decoding_ids.contains(&running[i].id) {
+                // still prefilling: no token generated this iteration
+                i += 1;
+                continue;
+            }
             if kv.append(&running[i]) {
                 running[i].generated += 1;
                 if running[i].first_token_at.is_none() {
@@ -760,6 +927,12 @@ fn run_event_loop(
         // ---- retire finished sequences
         let mut j = 0;
         while j < running.len() {
+            if chunking && prefill_left.contains_key(&running[j].id) {
+                // a still-prefilling sequence never retires (guards the
+                // degenerate zero-output-length request)
+                j += 1;
+                continue;
+            }
             if running[j].done() {
                 let seq = running.remove(j);
                 kv.release(seq.id);
@@ -997,6 +1170,54 @@ mod tests {
         }
         // the second replay re-asks every key the first one computed
         assert!(costs.lookups() > costs.distinct(), "replay must hit the memo");
+    }
+
+    #[test]
+    fn chunked_prefill_disabled_spellings_are_bit_for_bit_stock() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        let reqs: Vec<Request> = (0..60)
+            .map(|i| Request {
+                id: i, input_len: 400 + 8 * i, output_len: 32, arrival: 0.2 * i as f64,
+            })
+            .collect();
+        let stock = simulate_requests(&plat, &cfg, &EngineSpec::vllm(), &reqs).unwrap();
+        for off in [None, Some(0)] {
+            let e = EngineSpec::vllm().with_chunked_prefill(off);
+            let r = simulate_requests(&plat, &cfg, &e, &reqs).unwrap();
+            assert_eq!(r.makespan.to_bits(), stock.makespan.to_bits());
+            assert_eq!(r.decode_iters, stock.decode_iters);
+            assert_eq!(r.prefill_iters, stock.prefill_iters);
+            for (a, b) in r.completions.iter().zip(stock.completions.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+                assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_completes_everything_and_interleaves() {
+        let plat = Platform::get(PlatformId::A800);
+        let cfg = LlamaConfig::llama2_7b();
+        // long prompts, short outputs: the regime chunking targets
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| Request {
+                id: i, input_len: 2048, output_len: 32, arrival: 0.05 * i as f64,
+            })
+            .collect();
+        let mono = simulate_requests(&plat, &cfg, &EngineSpec::vllm(), &reqs).unwrap();
+        let e = EngineSpec::vllm().with_chunked_prefill(Some(512));
+        let r = simulate_requests(&plat, &cfg, &e, &reqs).unwrap();
+        assert_eq!(r.completions.len(), 40);
+        assert_eq!(r.output_tokens, 40 * 32);
+        // a 2048-token prompt takes >= 4 chunks, so chunking executes
+        // strictly more prefill iterations than prompt batching
+        assert!(r.prefill_iters > mono.prefill_iters,
+                "chunked {} !> monolithic {}", r.prefill_iters, mono.prefill_iters);
+        // decode cadence interleaves with prefill instead of stalling
+        // behind whole-prompt batches: TPOT must not collapse
+        assert!(r.tpot_cdf().quantile(0.5) > 0.0);
     }
 
     #[test]

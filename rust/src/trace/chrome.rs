@@ -57,6 +57,19 @@ fn instant(name: String, pid: u32, tid: u64, t: f64, args: Vec<(&str, Json)>) ->
     obj(kvs)
 }
 
+/// One counter (`ph: "C"`) sample: Perfetto renders each distinct
+/// counter name as an inline time-series track next to the lane's spans.
+fn counter(name: &str, pid: u32, t: f64, value: f64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("C".into())),
+        ("ts", us(t)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("args", obj(vec![("value", Json::Num(value))])),
+    ])
+}
+
 /// One metadata (`ph: "M"`) event naming a process or thread lane.
 fn meta(what: &str, pid: u32, tid: u64, name: String) -> Json {
     obj(vec![
@@ -120,6 +133,15 @@ pub fn chrome_trace(events: &[(u32, TraceEvent)]) -> Json {
                         ("kv_capacity_tokens", Json::Num(*kv_capacity as f64)),
                     ],
                 ));
+                // gauge samples as counter tracks, one point per tick
+                out.push(counter("batch", pid, *t1, *batch as f64));
+                out.push(counter("queue_depth", pid, *t1, *queue_depth as f64));
+                let util = if *kv_capacity > 0 {
+                    100.0 * used as f64 / *kv_capacity as f64
+                } else {
+                    0.0
+                };
+                out.push(counter("kv_util_pct", pid, *t1, util));
             }
             TraceEvent::Preempted { t, id } => {
                 out.push(instant(format!("preempted {id}"), pid, id + 1, *t, vec![]));
@@ -136,6 +158,20 @@ pub fn chrome_trace(events: &[(u32, TraceEvent)]) -> Json {
                 ));
                 out.push(span("wait+prefill".into(), pid, id + 1, *arrival, first, vec![]));
                 out.push(span("decode".into(), pid, id + 1, first, *t, vec![]));
+            }
+            TraceEvent::KvHandoff { t0, t1, id, bytes, from, to } => {
+                out.push(span(
+                    format!("kv handoff {id}"),
+                    pid,
+                    id + 1,
+                    *t0,
+                    *t1,
+                    vec![
+                        ("bytes", Json::Num(*bytes)),
+                        ("from_prefill", Json::Num(*from as f64)),
+                        ("to_decode", Json::Num(*to as f64)),
+                    ],
+                ));
             }
             TraceEvent::Dispatched { t, id, replica, retried } => {
                 out.push(instant(
@@ -258,6 +294,57 @@ mod tests {
             let cdur = c.get("dur").and_then(Json::as_f64).unwrap();
             assert!(cts >= ts - 1e-9 && cts + cdur <= ts + dur + 1e-9, "{child} escapes parent");
         }
+    }
+
+    #[test]
+    fn decode_ticks_emit_counter_samples_and_handoffs_render() {
+        let events = vec![
+            (0u32, TraceEvent::Decode {
+                t0: 0.0,
+                t1: 0.1,
+                batch: 4,
+                queue_depth: 2,
+                kv_free: 50,
+                kv_capacity: 200,
+            }),
+            (0, TraceEvent::KvHandoff {
+                t0: 0.1,
+                t1: 0.15,
+                id: 3,
+                bytes: 1e6,
+                from: 0,
+                to: 2,
+            }),
+        ];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        for name in ["batch", "queue_depth", "kv_util_pct"] {
+            let c = evs
+                .iter()
+                .find(|e| {
+                    e.get("ph").and_then(Json::as_str) == Some("C")
+                        && e.get("name").and_then(Json::as_str) == Some(name)
+                })
+                .unwrap_or_else(|| panic!("no {name} counter"));
+            let v = c.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64).unwrap();
+            assert!(v >= 0.0);
+        }
+        // kv_util_pct is used/capacity in percent
+        let util = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("kv_util_pct"))
+            .and_then(|e| e.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64))
+            .unwrap();
+        assert!((util - 75.0).abs() < 1e-9);
+        let h = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("kv handoff 3"))
+            .expect("handoff span");
+        assert_eq!(h.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(
+            h.get("args").and_then(|a| a.get("bytes")).and_then(Json::as_f64),
+            Some(1e6)
+        );
     }
 
     #[test]

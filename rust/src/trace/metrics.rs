@@ -188,6 +188,10 @@ impl MetricsRegistry {
                         m.counter("dispatch_retries", 1);
                     }
                 }
+                TraceEvent::KvHandoff { bytes, .. } => {
+                    m.counter("kv_handoffs", 1);
+                    m.counter("kv_handoff_bytes", *bytes as u64);
+                }
                 TraceEvent::Shed { .. } => m.counter("shed", 1),
                 TraceEvent::ScaleUp { .. } => m.counter("scale_up", 1),
                 TraceEvent::ScaleDown { .. } => m.counter("scale_down", 1),

@@ -102,6 +102,22 @@ pub enum TraceEvent {
         /// Output tokens generated.
         output_tokens: u64,
     },
+    /// A prompt's KV cache was handed off from a prefill replica to a
+    /// decode replica over the interconnect (disaggregated serving).
+    KvHandoff {
+        /// Transfer start (prefill finish), seconds.
+        t0: f64,
+        /// Transfer end (decode replica may admit), seconds.
+        t1: f64,
+        /// Request id.
+        id: u64,
+        /// KV bytes moved.
+        bytes: f64,
+        /// Source prefill replica lane.
+        from: u32,
+        /// Destination decode replica lane.
+        to: u32,
+    },
     /// The load balancer routed a request to a replica.
     Dispatched {
         /// Dispatch time (= arrival), seconds.

@@ -201,6 +201,7 @@ fn autotune_chooses_a_cluster_and_replay_meets_slo() {
         max_replicas: 2,
         gpu_budget: Some(16),
         balancer: Balancer::JoinShortestQueue,
+        disagg: false,
     };
     // the bracket ceiling is far above any 16-GPU fleet's capacity, so
     // no candidate saturates it (saturation would let the early-prune

@@ -1,0 +1,227 @@
+//! End-to-end tests for disaggregated prefill/decode serving (ISSUE 10):
+//! the combined-pool + chunking-off spelling is bit-for-bit the existing
+//! cluster simulator, requests are conserved across the KV handoff,
+//! handoff bytes scale with the KV precision, a seeded scenario where a
+//! disaggregated fleet dominates the chunked monolithic fleet on the
+//! TTFT tail at equal GPUs, and a pool-ratio `autotune-serve` point
+//! replayed through the disaggregated simulator meets the SLO it was
+//! selected under.
+
+use llm_perf_lab::config::{Arrival, LengthDist, LlamaConfig, SloSpec, WorkloadSpec};
+use llm_perf_lab::hw::{Platform, PlatformId};
+use llm_perf_lab::search::{autotune_serve, ReplicaSpace, SearchBudget};
+use llm_perf_lab::serve::request::Request;
+use llm_perf_lab::serve::{
+    kv_handoff_bytes_per_token, simulate_cluster, simulate_disagg, Balancer, ClusterSpec,
+    DisaggSpec, EngineSpec, KvPrecision,
+};
+
+/// Monolithic equivalence, pinned bit for bit: a `DisaggSpec` with zero
+/// prefill replicas and no chunking IS the existing replica cluster —
+/// same makespan, iteration counts, and per-request records under every
+/// balancing policy.  This is the determinism contract DESIGN.md
+/// §Disaggregation promises, so it compares raw f64 bits, not epsilons.
+#[test]
+fn combined_pool_without_chunking_is_the_cluster_simulator_bit_for_bit() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let engine = EngineSpec::vllm();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let reqs = WorkloadSpec::new(80)
+        .arrival(Arrival::Poisson { qps: 5.0 })
+        .input(LengthDist::log_normal(512.0, 0.6))
+        .output(LengthDist::log_normal(96.0, 0.8))
+        .seed(19)
+        .generate()
+        .unwrap();
+    for balancer in Balancer::ALL {
+        let cluster = ClusterSpec::new(3, plan, balancer).seed(7);
+        let mono = simulate_cluster(&plat, &cfg, &engine, &cluster, &reqs);
+        let spec = DisaggSpec::new(0, 3, plan, balancer).seed(7);
+        assert!(!spec.disaggregated());
+        assert_eq!(spec.total_gpus(), cluster.total_gpus());
+        let dis = simulate_disagg(&plat, &cfg, &engine, &spec, &reqs);
+        assert_eq!(dis.handoffs, 0, "{}", balancer.label());
+        assert!(dis.prefill.is_empty());
+        assert_eq!(dis.merged.makespan.to_bits(), mono.merged.makespan.to_bits());
+        assert_eq!(dis.merged.decode_iters, mono.merged.decode_iters);
+        assert_eq!(dis.merged.prefill_iters, mono.merged.prefill_iters);
+        assert_eq!(dis.merged.preemptions, mono.merged.preemptions);
+        assert_eq!(dis.merged.completions.len(), mono.merged.completions.len());
+        for (a, b) in dis.merged.completions.iter().zip(mono.merged.completions.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        }
+        assert_eq!(dis.decode.len(), mono.replicas.len());
+        for (a, b) in dis.decode.iter().zip(mono.replicas.iter()) {
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.completions, b.completions);
+        }
+    }
+}
+
+/// Every request is rejected exactly once or handed off exactly once
+/// and completes exactly once — the two-stage dispatcher must neither
+/// drop nor duplicate across the prefill pool, the handoff, and the
+/// decode pool, even with an unservable giant in the stream.
+#[test]
+fn requests_are_conserved_across_the_kv_handoff() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let engine = EngineSpec::vllm();
+    let plan = engine.plan(&plat, &cfg).unwrap();
+    let mut reqs = WorkloadSpec::new(90)
+        .arrival(Arrival::Poisson { qps: 6.0 })
+        .input(LengthDist::log_normal(400.0, 0.8))
+        .output(LengthDist::log_normal(64.0, 1.0))
+        .seed(13)
+        .generate()
+        .unwrap();
+    // a prompt beyond any prefill budget: rejected once, never shipped
+    reqs.push(Request { id: 1000, input_len: 1_000_000, output_len: 8, arrival: 2.0 });
+    let spec = DisaggSpec::new(2, 2, plan, Balancer::JoinShortestQueue).seed(5);
+    let r = simulate_disagg(&plat, &cfg, &engine, &spec, &reqs);
+    assert_eq!(r.merged.rejected, 1);
+    assert_eq!(r.merged.completions.len() + r.merged.rejected as usize, reqs.len());
+    assert_eq!(r.handoffs, r.merged.completions.len() as u64,
+               "one handoff per prompt that reached decode");
+    let mut ids: Vec<u64> = r.merged.completions.iter().map(|c| c.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), reqs.len() - 1, "duplicate or lost completions");
+    // stage-level bookkeeping agrees with the merged view
+    let routed: u64 = r.prefill.iter().map(|s| s.requests).sum();
+    assert_eq!(routed, reqs.len() as u64, "stage-1 dispatch covers every arrival");
+    let decoded: u64 = r.decode.iter().map(|s| s.completions).sum();
+    assert_eq!(decoded, r.merged.completions.len() as u64);
+    let prefilled: u64 = r.prefill.iter().map(|s| s.tokens).sum();
+    let expected: u64 = reqs.iter().filter(|q| q.id != 1000).map(|q| q.input_len).sum();
+    assert_eq!(prefilled, expected, "every admitted prompt token is prefilled exactly once");
+}
+
+/// The handoff is priced on the bytes the wire actually moves: int4 KV
+/// ships exactly a quarter of the fp16 bytes for the same prompts, and
+/// the per-token constant matches the config's real GQA geometry.
+#[test]
+fn handoff_bytes_scale_with_kv_precision() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let bpt16 = kv_handoff_bytes_per_token(&cfg, KvPrecision::Fp16);
+    let bpt4 = kv_handoff_bytes_per_token(&cfg, KvPrecision::Int4);
+    assert_eq!(bpt16, 4.0 * bpt4);
+    let reqs = WorkloadSpec::new(40)
+        .arrival(Arrival::Poisson { qps: 4.0 })
+        .input(LengthDist::log_normal(600.0, 0.5))
+        .seed(5)
+        .generate()
+        .unwrap();
+    let run = |engine: &EngineSpec| {
+        let plan = engine.plan(&plat, &cfg).unwrap();
+        let spec = DisaggSpec::new(1, 1, plan, Balancer::RoundRobin).seed(3);
+        simulate_disagg(&plat, &cfg, engine, &spec, &reqs)
+    };
+    let fp16 = run(&EngineSpec::vllm());
+    let int4 = run(&EngineSpec::vllm().with_kv_precision(KvPrecision::Int4));
+    assert_eq!(fp16.handoffs, int4.handoffs);
+    assert!(int4.handoff_bytes < fp16.handoff_bytes);
+    // same prompts, same token counts — the totals differ by exactly
+    // the precision ratio (summation order may differ, so allow ulps)
+    let ratio_err = (fp16.handoff_bytes - 4.0 * int4.handoff_bytes).abs();
+    assert!(ratio_err < 1e-6 * fp16.handoff_bytes,
+            "fp16 {} != 4x int4 {}", fp16.handoff_bytes, int4.handoff_bytes);
+    // a lighter handoff is also a faster one on the same fabric
+    assert!(int4.mean_handoff_time < fp16.mean_handoff_time);
+}
+
+/// Acceptance (ISSUE 10): a seeded scenario where the disaggregated
+/// fleet dominates the monolithic fleet on TTFT p99 at equal GPUs.
+///
+/// The monolithic fleet runs chunked prefill — the configuration that
+/// protects TPOT from prompt stalls — so every 2048-token prompt pays
+/// 16 iterations of (decode iteration + 128-token chunk) before its
+/// first token: the chunk scheduler's explicit TTFT↔TPOT trade.  The
+/// disaggregated fleet needs no chunking at all: its prefill pool runs
+/// pure batched prefill with zero decode co-scheduling, so per-prompt
+/// prefill service time is a fraction of the monolithic replica's
+/// chunked TTFT path, and the tail follows.  Both fleets use 4 GPUs
+/// (4×TP1 monolithic vs 3 prefill + 1 decode at TP1).
+#[test]
+fn disagg_dominates_chunked_monolithic_on_ttft_p99_at_equal_gpus() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let reqs = WorkloadSpec::new(140)
+        .arrival(Arrival::Poisson { qps: 2.0 })
+        .input(LengthDist::Fixed(2048))
+        .output(LengthDist::Fixed(256))
+        .seed(29)
+        .generate()
+        .unwrap();
+    let mono_engine = EngineSpec::vllm().with_chunked_prefill(Some(128));
+    let mono_plan = mono_engine.plan(&plat, &cfg).unwrap();
+    let cluster = ClusterSpec::new(4, mono_plan, Balancer::RoundRobin).seed(11);
+    assert_eq!(cluster.total_gpus(), 4);
+    let mono = simulate_cluster(&plat, &cfg, &mono_engine, &cluster, &reqs);
+
+    let dis_engine = EngineSpec::vllm();
+    let dis_plan = dis_engine.plan(&plat, &cfg).unwrap();
+    let spec = DisaggSpec::new(3, 1, dis_plan, Balancer::RoundRobin).seed(11);
+    assert_eq!(spec.total_gpus(), 4);
+    let dis = simulate_disagg(&plat, &cfg, &dis_engine, &spec, &reqs);
+
+    assert_eq!(mono.merged.completions.len(), reqs.len());
+    assert_eq!(dis.merged.completions.len(), reqs.len());
+    assert_eq!(dis.handoffs, reqs.len() as u64);
+    let (mono_p99, dis_p99) =
+        (mono.merged.ttft_cdf().quantile(0.99), dis.merged.ttft_cdf().quantile(0.99));
+    assert!(dis_p99 < mono_p99,
+            "disagg ttft p99 {dis_p99:.2}s !< chunked monolithic {mono_p99:.2}s at 4 GPUs");
+    // the win is the whole tail, not one quantile
+    let (mono_p90, dis_p90) =
+        (mono.merged.ttft_cdf().quantile(0.9), dis.merged.ttft_cdf().quantile(0.9));
+    assert!(dis_p90 < mono_p90,
+            "disagg ttft p90 {dis_p90:.2}s !< chunked monolithic {mono_p90:.2}s");
+}
+
+/// Acceptance (ISSUE 10): `autotune-serve` exposes the prefill:decode
+/// pool-ratio axis, and replaying a chosen pool-ratio point through the
+/// disaggregated simulator at its measured capacity meets the SLO it
+/// was selected under (the bisection's last passing probe is exactly
+/// reproducible — same seed, same re-armed workload).
+#[test]
+fn pool_ratio_autotune_point_replays_and_meets_its_slo() {
+    let plat = Platform::get(PlatformId::A800);
+    let cfg = LlamaConfig::llama2_7b();
+    let base = WorkloadSpec::new(48).seed(9);
+    let slo = SloSpec::new(0.9, 4.0, 0.25);
+    let rep = ReplicaSpace {
+        max_replicas: 2,
+        gpu_budget: Some(2),
+        balancer: Balancer::RoundRobin,
+        disagg: true,
+    };
+    // bracket ceiling far above any 2-GPU capacity so nothing saturates
+    // and the early-prune never skips the disagg candidate
+    let search = autotune_serve(&plat, &cfg, &[EngineSpec::vllm()], &base, &slo, None,
+                                (0.5, 512.0), rep, SearchBudget::default())
+        .unwrap();
+    let dis = search
+        .evals
+        .iter()
+        .find(|e| e.cand.prefill_replicas > 0)
+        .expect("--disagg must put a pool split in the costed space");
+    assert_eq!(dis.cand.label(), "vLLM TP1 1p+1d");
+    assert_eq!(dis.gpus, 2);
+    let q = dis.max_qps.expect("a 2-GPU 7B split must be servable at the bracket floor");
+    let spec = DisaggSpec::new(dis.cand.prefill_replicas, dis.cand.replicas, dis.cand.plan,
+                               rep.balancer)
+        .seed(base.seed)
+        .chunk_tokens(dis.cand.engine.chunked_prefill);
+    let reqs = base.with_offered_qps(q).unwrap().generate().unwrap();
+    let replay = simulate_disagg(&plat, &cfg, &dis.cand.engine, &spec, &reqs);
+    assert!(replay.handoffs > 0);
+    assert!(replay.merged.meets_slo(&slo),
+            "pool-ratio point {} misses the SLO it was selected under at {q:.2} QPS",
+            dis.cand.label());
+}

@@ -170,6 +170,7 @@ fn staged_search_reproduces_exhaustive_min_gpu_point_on_clusters() {
         max_replicas: 3,
         gpu_budget: Some(16),
         balancer: Balancer::JoinShortestQueue,
+        disagg: false,
     };
     let exhaustive = autotune_serve_exec(
         &plat, &cfg, &[EngineSpec::vllm()], &base, &slo, Some(target), (0.5, 512.0), rep,
